@@ -1,0 +1,116 @@
+//! Model-zoo compression: reproduce the paper's Fig 8 (FP8/BF16 whole-model
+//! table) and Fig 9 (NVFP4 scaler table) on scaled-down transformer-shaped
+//! models — plus the §3.4 negative result (raw FP4 payloads do not
+//! compress).
+//!
+//! Weights come from [`zipnn_lp::synthetic`] manifests with realistic
+//! per-layer statistics; quantization uses the same converters validated
+//! bit-for-bit against the L1 Pallas kernels in the integration tests.
+//!
+//! ```bash
+//! cargo run --release --example compress_model_zoo
+//! ```
+
+use zipnn_lp::codec::{compress_nvfp4, compress_tensor, CompressOptions};
+use zipnn_lp::formats::conv::quantize_nvfp4;
+use zipnn_lp::formats::{FloatFormat, StreamKind};
+use zipnn_lp::metrics::Table;
+use zipnn_lp::synthetic;
+use zipnn_lp::util::human_bytes;
+
+struct Zoo {
+    name: &'static str,
+    format: FloatFormat,
+    d_model: usize,
+    layers: usize,
+    vocab: usize,
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // --- Fig 8: FP8 + BF16 whole-model compression ---
+    let zoo = [
+        Zoo { name: "llama-sim-fp8 (E4M3)", format: FloatFormat::Fp8E4M3, d_model: 512, layers: 8, vocab: 4096 },
+        Zoo { name: "opt-sim-bf16", format: FloatFormat::Bf16, d_model: 384, layers: 6, vocab: 4096 },
+    ];
+    let mut fig8 = Table::new(&[
+        "model", "original", "comp exp", "comp s+m", "ratio",
+    ]);
+    for m in &zoo {
+        let manifest = synthetic::transformer_manifest(m.d_model, m.layers, m.vocab);
+        let opts = CompressOptions::for_format(m.format).with_threads(2);
+        let (mut orig, mut enc, mut exp_c, mut sm_c) = (0u64, 0u64, 0u64, 0u64);
+        for t in &manifest {
+            let bytes = synthetic::materialize_bytes(t, m.format, 1);
+            let blob = compress_tensor(&bytes, &opts)?;
+            orig += bytes.len() as u64;
+            enc += blob.encoded_len() as u64;
+            if let Some(s) = blob.stat(StreamKind::Exponent) {
+                exp_c += s.compressed_bytes;
+            }
+            if let Some(s) = blob.stat(StreamKind::SignMantissa) {
+                sm_c += s.compressed_bytes;
+            }
+        }
+        fig8.row(&[
+            m.name.to_string(),
+            human_bytes(orig),
+            human_bytes(exp_c),
+            human_bytes(sm_c),
+            format!("{:.4}", enc as f64 / orig as f64),
+        ]);
+    }
+    println!("Fig 8 — whole-model compression (scaled-down zoo):\n{}", fig8.render());
+    println!("paper: llama-3-70b-fp8 ratio 0.829; opt-1.3b-bf16 ratio 0.667.\n");
+
+    // --- Fig 9: NVFP4 — only the scalers compress ---
+    let manifest = synthetic::transformer_manifest(512, 8, 4096);
+    let opts4 = CompressOptions::for_format(FloatFormat::Fp4E2M1);
+    let (mut payload_o, mut payload_c, mut scale_o, mut scale_c) = (0u64, 0u64, 0u64, 0u64);
+    let mut total_stored = 0u64;
+    let mut total_enc = 0u64;
+    for t in &manifest {
+        let vals = synthetic::materialize(t, 2);
+        let n16 = vals.len() / 16 * 16;
+        if n16 == 0 {
+            continue;
+        }
+        let q = quantize_nvfp4(&vals[..n16]);
+        let blob = compress_nvfp4(&q, &opts4)?;
+        total_stored += q.stored_bytes() as u64;
+        total_enc += blob.encoded_len() as u64;
+        if let Some(s) = blob.stat(StreamKind::Payload) {
+            payload_o += s.original_bytes;
+            payload_c += s.compressed_bytes;
+        }
+        if let Some(s) = blob.stat(StreamKind::Scale) {
+            scale_o += s.original_bytes;
+            scale_c += s.compressed_bytes;
+        }
+    }
+    let mut fig9 = Table::new(&["component", "original", "encoded", "ratio"]);
+    fig9.row(&[
+        "FP4 payload (quantized values)".into(),
+        human_bytes(payload_o),
+        human_bytes(payload_c),
+        format!("{:.4}", payload_c as f64 / payload_o as f64),
+    ]);
+    fig9.row(&[
+        "scaling factors (E4M3 + global)".into(),
+        human_bytes(scale_o),
+        human_bytes(scale_c),
+        format!("{:.4}", scale_c as f64 / scale_o as f64),
+    ]);
+    fig9.row(&[
+        "overall".into(),
+        human_bytes(total_stored),
+        human_bytes(total_enc),
+        format!("{:.4}", total_enc as f64 / total_stored as f64),
+    ]);
+    println!("Fig 9 — NVFP4 compression (scalers-only strategy, §3.4):\n{}", fig9.render());
+    println!(
+        "scalers are {:.1}% of stored bytes — the paper's ~10% accounting → ~5% end-to-end saving.",
+        100.0 * scale_o as f64 / total_stored as f64
+    );
+    println!("negative result reproduced: payload ratio ≈ 1.0 (stored raw, as §3.4 concludes).");
+    Ok(())
+}

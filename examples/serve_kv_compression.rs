@@ -1,0 +1,79 @@
+//! Serving with a compressed K/V cache (paper §3.3/§4.3/§5.2): load the AOT
+//! model, serve batched generation requests with the cache held in
+//! entropy-coded pages, and report latency/throughput with compression ON
+//! vs OFF plus the per-stream cache ratios.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_kv_compression
+//! # flags: [requests] [new_tokens] (defaults 8 24)
+//! ```
+
+use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::metrics::{Table, Timer};
+use zipnn_lp::model::ModelRuntime;
+use zipnn_lp::util::human_bytes;
+use zipnn_lp::util::rng::Rng;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let new_tokens: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(24);
+    let dir = std::path::PathBuf::from("artifacts");
+
+    let mut rows = Table::new(&[
+        "kv format", "codec", "tok/s", "p.fill s", "decode s", "cache raw",
+        "resident", "ratio", "exp", "s+m",
+    ]);
+    let mut transparent = true;
+    for format in [FloatFormat::Bf16, FloatFormat::Fp8E4M3] {
+        let mut outputs: Vec<Vec<Vec<i32>>> = Vec::new();
+        for compression in [true, false] {
+            let model = ModelRuntime::load(&dir)?;
+            let dims = model.dims();
+            let mut server =
+                Server::new(model, format, BatchPolicy::default(), compression)?;
+            let mut rng = Rng::new(7);
+            let requests: Vec<Request> = (0..n_requests)
+                .map(|i| Request {
+                    id: i as u64,
+                    prompt: (0..(6 + rng.below(10) as usize))
+                        .map(|_| rng.below(dims.vocab as u64) as i32)
+                        .collect(),
+                    max_new_tokens: new_tokens,
+                })
+                .collect();
+            let timer = Timer::new();
+            let responses = server.run(requests)?;
+            let _total = timer.secs();
+            let stats = server.stats();
+            outputs.push(responses.iter().map(|r| r.tokens.clone()).collect());
+            rows.row(&[
+                format.name().to_string(),
+                if compression { "on".into() } else { "off".into() },
+                format!("{:.1}", stats.decode_tok_per_sec()),
+                format!("{:.2}", stats.prefill_secs),
+                format!("{:.2}", stats.decode_secs),
+                human_bytes(stats.cache.raw_bytes),
+                human_bytes(stats.cache.resident_bytes),
+                format!("{:.4}", stats.cache.ratio()),
+                format!("{:.4}", stats.cache.exp_ratio()),
+                format!("{:.4}", stats.cache.sm_ratio()),
+            ]);
+        }
+        // Lossless check: identical generations with codec on and off.
+        let same = outputs[0] == outputs[1];
+        transparent &= same;
+        println!(
+            "{}: compression transparent (same tokens on/off): {}",
+            format.name(),
+            if same { "✓" } else { "✗" }
+        );
+    }
+    println!("\nServing with compressed K/V cache (paper §4.3 / §5.2):");
+    println!("{}", rows.render());
+    println!("paper's claim: 20–30% cache memory saving without significant overhead;");
+    println!("BF16 exponent ratios < 0.5, FP8 exponent in the 0.25–0.75 band (model-dependent).");
+    assert!(transparent, "compression must never change generated tokens");
+    Ok(())
+}

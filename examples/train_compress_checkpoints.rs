@@ -1,0 +1,114 @@
+//! **End-to-end driver** (deliverable e2e): train the AOT transformer via
+//! PJRT from Rust, snapshot BF16 checkpoints, store them as compressed XOR
+//! deltas, and print the paper's Fig 6 table — loss curve included.
+//!
+//! This exercises every layer at once: L1 Pallas attention inside the
+//! train_step artifact, L2 JAX autodiff, L3 runtime + checkpoint store +
+//! codec.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_compress_checkpoints
+//! # flags: [steps] [ckpt_every] (defaults 40 10)
+//! ```
+
+use zipnn_lp::checkpoint::CheckpointStore;
+use zipnn_lp::codec::CompressOptions;
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::metrics::{Table, Timer};
+use zipnn_lp::model::ModelRuntime;
+use zipnn_lp::util::human_bytes;
+use zipnn_lp::util::rng::Rng;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(40);
+    let ckpt_every: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let dir = std::path::PathBuf::from("artifacts");
+    let ckpt_dir = std::env::temp_dir().join("zipnn_lp_example_ckpts");
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+
+    let mut model = ModelRuntime::load(&dir)?;
+    let dims = model.dims();
+    let n_params: usize = model.weights().iter().map(|w| w.len()).sum();
+    println!(
+        "model: {} params, {} layers, d_model {}, vocab {} (PJRT: {})",
+        n_params,
+        dims.n_layers,
+        dims.d_model,
+        dims.vocab,
+        model.engine().platform()
+    );
+
+    let opts = CompressOptions::for_format(FloatFormat::Bf16);
+    let mut store = CheckpointStore::create(&ckpt_dir, opts, 1000)?;
+    let mut rng = Rng::new(0);
+    let timer = Timer::new();
+    let mut losses = Vec::new();
+
+    for step in 0..steps {
+        let tokens = markov_batch(&dims, &mut rng);
+        // 1/t learning-rate decay: update magnitudes shrink as training
+        // converges, which is what makes later XOR deltas sparser (Fig 6).
+        let lr = 0.15 / (1.0 + step as f32 / 8.0);
+        let loss = model.train_step(&tokens, lr)?;
+        losses.push(loss);
+        if step % ckpt_every == 0 || step + 1 == steps {
+            let rec = store.append(&model.weights_bf16_named())?;
+            println!(
+                "step {step:4}  loss {loss:.4}  → ckpt {} [{:?}] ratio {:.4} (exp {:.4} | s+m {:.4})",
+                rec.id, rec.kind, rec.ratio(), rec.exp_ratio, rec.sm_ratio
+            );
+        } else if step % 5 == 0 {
+            println!("step {step:4}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "\ntrained {steps} steps in {:.1}s — loss {:.4} → {:.4} {}",
+        timer.secs(),
+        losses[0],
+        losses[losses.len() - 1],
+        if losses[losses.len() - 1] < losses[0] { "(learning ✓)" } else { "(NOT learning ✗)" }
+    );
+
+    // Verify the store reconstructs the live weights bit-exactly.
+    let last = store.len() - 1;
+    let ok = store.verify(last, &model.weights_bf16_named())?;
+    println!("checkpoint {last} reconstruction: {}", if ok { "bit-exact ✓" } else { "MISMATCH ✗" });
+    assert!(ok);
+
+    // The Fig 6 table.
+    let mut table = Table::new(&["ckpt", "kind", "overall", "exp", "s+m", "stored"]);
+    for r in store.records() {
+        table.row(&[
+            r.id.to_string(),
+            match r.kind {
+                zipnn_lp::checkpoint::CkptKind::Full => "full".into(),
+                zipnn_lp::checkpoint::CkptKind::Delta { base } => format!("Δ vs {base}"),
+            },
+            format!("{:.4}", r.ratio()),
+            format!("{:.4}", r.exp_ratio),
+            format!("{:.4}", r.sm_ratio),
+            human_bytes(r.encoded_bytes),
+        ]);
+    }
+    println!("\nDelta-checkpoint compression on a real training trajectory (paper Fig 6):");
+    println!("{}", table.render());
+    println!(
+        "paper's shape: exponent ≪ mantissa, overall falling toward ~0.38 as training converges."
+    );
+    Ok(())
+}
+
+fn markov_batch(dims: &zipnn_lp::runtime::ModelDims, rng: &mut Rng) -> Vec<i32> {
+    let (b, s, v) = (dims.batch, dims.max_seq, dims.vocab as u64);
+    let mut out = vec![0i32; b * s];
+    for row in 0..b {
+        let mut tok = rng.below(v);
+        out[row * s] = tok as i32;
+        for t in 1..s {
+            tok = if rng.next_f64() < 0.15 { rng.below(v) } else { (tok * 31 + 17) % v };
+            out[row * s + t] = tok as i32;
+        }
+    }
+    out
+}

@@ -1,0 +1,198 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for the Rust
+runtime.
+
+Interchange is **HLO text**, not serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects; the text parser reassigns
+ids. See /opt/xla-example/README.md.
+
+Produces in ``artifacts/``:
+
+* ``prefill.hlo.txt``      — tokens → logits + K/V caches
+* ``decode.hlo.txt``       — one decode step over an external K/V cache
+* ``train_step.hlo.txt``   — one SGD step (fwd+bwd through the Pallas vjp)
+* ``split_bf16.hlo.txt``   — L1 stream-split kernel (+ exponent histogram)
+* ``quantize_e4m3.hlo.txt``— L1 FP8 quantizer
+* ``nvfp4.hlo.txt``        — L1 NVFP4 two-level block quantizer
+* ``manifest.json``        — input/output specs in positional order, model
+  config, and the canonical weight-name list the Rust side feeds by.
+
+Run once via ``make artifacts``; Python never runs at serving time.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quantize import nvfp4_quantize, quantize_e4m3
+from .kernels.split_streams import split_bf16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr_spec):
+    return {
+        "name": name,
+        "dtype": str(arr_spec.dtype),
+        "shape": list(arr_spec.shape),
+    }
+
+
+def _shape_struct(dtype, shape):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export(cfg: M.ModelConfig, out_dir: pathlib.Path, kernel_n: int) -> dict:
+    """Lower every artifact; returns the manifest dict."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = M.weight_names(cfg)
+    shapes = M.weight_shapes(cfg)
+    wspecs = [_shape_struct(jnp.float32, shapes[n]) for n in names]
+    L, B, S, D = cfg.n_layers, cfg.batch, cfg.max_seq, cfg.d_model
+    V = cfg.vocab
+    manifest = {
+        "config": {
+            "vocab": V,
+            "d_model": D,
+            "n_layers": L,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "max_seq": S,
+            "batch": B,
+            "kernel_n": kernel_n,
+        },
+        "weight_names": names,
+        "weight_shapes": {n: list(shapes[n]) for n in names},
+        "artifacts": {},
+    }
+
+    def emit(name, fn, in_specs, in_names):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        out_shape = lowered.out_info
+        # out_info is a pytree of ShapeDtypeStruct.
+        flat, _ = jax.tree_util.tree_flatten(out_shape)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [_spec(n, s) for n, s in zip(in_names, in_specs)],
+            "outputs": [
+                {"dtype": str(s.dtype), "shape": list(s.shape)} for s in flat
+            ],
+        }
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB, "
+              f"{len(in_specs)} inputs, {len(flat)} outputs")
+
+    # --- model artifacts ---
+    tokens_spec = _shape_struct(jnp.int32, (B, S))
+    emit(
+        "prefill",
+        lambda *args: M.prefill(cfg, list(args[:-1]), args[-1]),
+        wspecs + [tokens_spec],
+        names + ["tokens"],
+    )
+
+    token_spec = _shape_struct(jnp.int32, (B,))
+    pos_spec = _shape_struct(jnp.int32, (B,))
+    kc_spec = _shape_struct(jnp.float32, (L, B, S, D))
+    emit(
+        "decode",
+        lambda *args: M.decode_step(
+            cfg, list(args[:-4]), args[-4], args[-3], args[-2], args[-1]
+        ),
+        wspecs + [token_spec, pos_spec, kc_spec, kc_spec],
+        names + ["token", "pos", "k_cache", "v_cache"],
+    )
+
+    lr_spec = _shape_struct(jnp.float32, ())
+    emit(
+        "train_step",
+        lambda *args: _train_flat(cfg, args),
+        wspecs + [tokens_spec, lr_spec],
+        names + ["tokens", "lr"],
+    )
+
+    # --- kernel artifacts ---
+    emit(
+        "split_bf16",
+        lambda w: split_bf16(w),
+        [_shape_struct(jnp.uint16, (kernel_n,))],
+        ["words"],
+    )
+    emit(
+        "quantize_e4m3",
+        lambda x: quantize_e4m3(x),
+        [_shape_struct(jnp.float32, (kernel_n,))],
+        ["x"],
+    )
+    emit(
+        "nvfp4",
+        lambda x: nvfp4_quantize(x),
+        [_shape_struct(jnp.float32, (kernel_n,))],
+        ["x"],
+    )
+
+    # Initial weights: flat little-endian f32 in manifest order, so the
+    # Rust runtime can start training/serving without Python.
+    import numpy as np
+
+    weights = M.init_weights(cfg, seed=0)
+    flat = b"".join(np.asarray(w, dtype="<f4").tobytes() for w in weights)
+    (out_dir / "weights_init.bin").write_bytes(flat)
+    manifest["weights_file"] = "weights_init.bin"
+    print(f"  weights_init.bin: {len(flat) / 1e6:.2f} MB")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"  manifest.json: {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def _train_flat(cfg, args):
+    weights = list(args[:-2])
+    tokens, lr = args[-2], args[-1]
+    new_weights, loss = M.train_step(cfg, weights, tokens, lr)
+    return (*new_weights, loss)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--vocab", type=int, default=512)
+    p.add_argument("--d-model", type=int, default=128)
+    p.add_argument("--n-layers", type=int, default=4)
+    p.add_argument("--n-heads", type=int, default=4)
+    p.add_argument("--max-seq", type=int, default=64)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--kernel-n", type=int, default=262144,
+                   help="element count for the standalone kernel artifacts")
+    args = p.parse_args()
+    cfg = M.ModelConfig(
+        vocab=args.vocab,
+        d_model=args.d_model,
+        n_layers=args.n_layers,
+        n_heads=args.n_heads,
+        max_seq=args.max_seq,
+        batch=args.batch,
+    )
+    n_params = sum(
+        int(jnp.prod(jnp.array(s))) for s in M.weight_shapes(cfg).values()
+    )
+    print(f"AOT export: {n_params / 1e6:.2f}M params, config={cfg}")
+    export(cfg, pathlib.Path(args.out_dir), args.kernel_n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""L1 Pallas kernels: fused attention (prefill + decode).
+
+These generate the K/V tensors the paper compresses (§3.3) and are the MXU
+workload of the stack. TPU mapping (DESIGN.md §Hardware-Adaptation): the
+CUDA flash-attention recipe (threadblock tiles in shared memory) becomes a
+``BlockSpec`` schedule — each grid step owns one (batch, head) and keeps its
+Q/K/V tiles in VMEM; the S×S score matrix for our sizes (≤128×128 f32 =
+64 KiB) fits VMEM outright, so no online-softmax streaming is needed at
+this scale. The matmuls are MXU-shaped (S×D · D×S with D = head_dim).
+
+Always lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref):
+    """Causal attention for one (batch, head): q,k,v [S, D] → o [S, D]."""
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s, d = q.shape
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(col <= row, scores, neg)
+    # Numerically stable softmax.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def _prefill_pallas(q, k, v, interpret: bool):
+    bh, s, d = q.shape
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _prefill_kernel,
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention_prefill(q, k, v, interpret: bool = True):
+    """Causal self-attention. q/k/v: [BH, S, D] → [BH, S, D].
+
+    Forward runs the Pallas kernel (grid over the fused batch×head axis,
+    per-step tiles in VMEM). Backward is a jnp recompute — Pallas interpret
+    mode defines no autodiff rule, and recomputation is the flash-attention
+    backward strategy anyway.
+    """
+    return _prefill_pallas(q, k, v, interpret)
+
+
+def _prefill_fwd(q, k, v, interpret: bool):
+    return _prefill_pallas(q, k, v, interpret), (q, k, v)
+
+
+def _softmax_causal(q, k):
+    s = q.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+    scores = jnp.where(mask[None], scores, jnp.finfo(jnp.float32).min)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def _prefill_bwd(interpret: bool, res, do):
+    q, k, v = res
+    d = q.shape[-1]
+    p = _softmax_causal(q, k)  # [BH, S, S]
+    dv = jnp.einsum("bqk,bqd->bkd", p, do)
+    dp = jnp.einsum("bqd,bkd->bqk", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = ds / jnp.sqrt(jnp.float32(d))
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q)
+    return dq, dk, dv
+
+
+attention_prefill.defvjp(_prefill_fwd, _prefill_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention_decode(q, k_cache, v_cache, pos, interpret: bool = True):
+    """Decode-step attention. q: [BH, 1, D]; caches: [BH, S_max, D];
+    pos: i32[BH] (valid lengths, *including* the current token, whose K/V
+    must already sit at cache row pos-1) → [BH, 1, D].
+    """
+    bh, _, d = q.shape
+    s_max = k_cache.shape[1]
+    qspec = pl.BlockSpec((1, 1, d), lambda i: (i, 0, 0))
+    cspec = pl.BlockSpec((1, s_max, d), lambda i: (i, 0, 0))
+    pspec = pl.BlockSpec((1,), lambda i: (i,))
+
+    def kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+        q1 = q_ref[0]  # [1, D]
+        k = k_ref[0]  # [S_max, D]
+        v = v_ref[0]
+        pos_v = pos_ref[0]
+        scores = jnp.dot(k, q1[0], preferred_element_type=jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(d))
+        idx = jax.lax.broadcasted_iota(jnp.int32, (s_max,), 0)
+        neg = jnp.finfo(jnp.float32).min
+        scores = jnp.where(idx < pos_v, scores, neg)
+        m = jnp.max(scores)
+        p = jnp.exp(scores - m)
+        p = p / jnp.sum(p)
+        o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)[None, :]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[qspec, cspec, cspec, pspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), jnp.float32),
+        interpret=interpret,
+    )(q, k_cache, v_cache, pos)

@@ -1,0 +1,115 @@
+"""L1 Pallas kernels: FP8 E4M3 quantization and NVFP4 block quantization.
+
+These produce the low-precision tensors the paper compresses (§3.2, §3.4):
+
+* :func:`quantize_e4m3` — f32 → E4M3 bits, round-to-nearest-even with
+  overflow→NaN (``float8_e4m3fn`` semantics, validated against the native
+  jax dtype cast in pytest).
+* :func:`nvfp4_quantize` — the Fig 3 recipe: per-16 block
+  ``scale = round_up(amax/6)`` stored in E4M3 over a global FP32 scale,
+  payload RNE onto the E2M1 grid.
+
+Everything runs ``interpret=True`` (CPU PJRT cannot execute Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+_E2M1_GRID = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], jnp.float32)
+
+
+def _e4m3_kernel(x_ref, out_ref):
+    # The native cast lowers to plain HLO convert ops under interpret mode,
+    # so the artifact stays executable on the CPU PJRT client.
+    out_ref[...] = x_ref[...].astype(jnp.float8_e4m3fn).view(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_e4m3(x: jnp.ndarray, interpret: bool = True):
+    """f32[N] → uint8[N] of E4M3 bits."""
+    n = x.shape[0]
+    block = BLOCK if n % BLOCK == 0 and n > 0 else max(n, 1)
+    grid = max(n // block, 1)
+    return pl.pallas_call(
+        _e4m3_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        interpret=interpret,
+    )(x)
+
+
+def _e2m1_encode(x):
+    """Vector E2M1 RNE encode (shared by the NVFP4 kernel).
+
+    The grid is rebuilt from iota inside the kernel — Pallas rejects
+    closure-captured constant arrays.
+    """
+    # codes 0..7 → magnitudes {0, .5, 1, 1.5, 2, 3, 4, 6}.
+    c = jax.lax.broadcasted_iota(jnp.int32, (8,), 0)
+    e = c >> 1
+    m = (c & 1).astype(jnp.float32)
+    grid = jnp.where(e == 0, m * 0.5, (1.0 + m * 0.5) * jnp.exp2((e - 1).astype(jnp.float32)))
+    sign = (x < 0) | ((x == 0) & jnp.signbit(x))
+    a = jnp.minimum(jnp.abs(x), 6.0)
+    d = jnp.abs(a[..., None] - grid)
+    even_bias = jnp.where((c & 1) == 0, 1e-7, 0.0)
+    idx = jnp.argmin(d - even_bias, axis=-1).astype(jnp.uint8)
+    return jnp.where(sign, idx | 0x8, idx).astype(jnp.uint8)
+
+
+def _nvfp4_kernel(x_ref, gscale_ref, codes_ref, scales_ref):
+    """One grid step: quantize BLOCK/16 NVFP4 blocks."""
+    x = x_ref[...]
+    g = gscale_ref[0]
+    blocks = x.reshape(-1, 16)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    want = amax / (6.0 * g)
+    s8 = want.astype(jnp.float8_e4m3fn)
+    s_back = s8.astype(jnp.float32)
+    bits = s8.view(jnp.uint8)
+    bits = jnp.where((s_back < want) & (bits < 0x7E), bits + 1, bits).astype(jnp.uint8)
+    scale = bits.view(jnp.float8_e4m3fn).astype(jnp.float32)
+    denom = jnp.where((scale == 0) | jnp.isnan(scale), 1.0, scale * g)
+    codes = _e2m1_encode(blocks / denom[:, None])
+    codes_ref[...] = codes.reshape(-1)
+    scales_ref[...] = bits
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nvfp4_quantize(x: jnp.ndarray, interpret: bool = True):
+    """f32[N] (N % 16 == 0) → (codes u8[N], scales u8[N/16], global f32[1]).
+
+    The global scale is computed in plain jnp (a full reduction does not
+    tile), then broadcast into the per-block Pallas kernel.
+    """
+    n = x.shape[0]
+    assert n % 16 == 0 and n > 0
+    amax_t = jnp.max(jnp.abs(x))
+    gscale = jnp.where(amax_t > 0, amax_t / (448.0 * 6.0), 1.0).reshape(1)
+    block = BLOCK if n % BLOCK == 0 else n
+    grid = max(n // block, 1)
+    codes, scales = pl.pallas_call(
+        _nvfp4_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block // 16,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((n // 16,), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(x, gscale)
+    return codes, scales, gscale

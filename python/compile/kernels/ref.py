@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+These are the ground truth the pytest suite checks the kernels against:
+bit-exact for the integer bit-twiddles (stream split, quantization),
+`allclose` for the floating-point attention kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def split_bf16_ref(words: jnp.ndarray):
+    """Split little-endian BF16 words (uint16[N]) into exponent bytes and
+    sign|mantissa bytes (paper Fig 5).
+
+    Returns (exp uint8[N], sm uint8[N], hist int32[256]) where
+    exp = bits 14..7 and sm = sign<<7 | mantissa.
+    """
+    words = words.astype(jnp.uint16)
+    exp = ((words >> 7) & 0xFF).astype(jnp.uint8)
+    sm = (((words >> 8) & 0x80) | (words & 0x7F)).astype(jnp.uint8)
+    hist = jnp.zeros((256,), jnp.int32).at[exp.astype(jnp.int32)].add(1)
+    return exp, sm, hist
+
+
+def merge_bf16_ref(exp: jnp.ndarray, sm: jnp.ndarray):
+    """Inverse of :func:`split_bf16_ref`."""
+    e = exp.astype(jnp.uint16)
+    s = sm.astype(jnp.uint16)
+    return (((s & 0x80) << 8) | (e << 7) | (s & 0x7F)).astype(jnp.uint16)
+
+
+def quantize_e4m3_ref(x: jnp.ndarray):
+    """f32 → FP8 E4M3 bits (uint8), RNE, overflow→NaN (float8_e4m3fn).
+
+    Uses jax's native float8 dtype as the gold standard.
+    """
+    return x.astype(jnp.float8_e4m3fn).view(jnp.uint8)
+
+
+def dequantize_e4m3_ref(b: jnp.ndarray):
+    """E4M3 bits (uint8) → f32."""
+    return b.view(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def nvfp4_quantize_ref(x: jnp.ndarray):
+    """NVFP4 two-level block quantization (paper Fig 3), reference.
+
+    x: f32[N] with N % 16 == 0.
+    Returns (codes uint8[N] with values 0..15, scales uint8[N/16] E4M3 bits,
+    global_scale f32[]).
+    """
+    n = x.shape[0]
+    assert n % 16 == 0
+    amax_t = jnp.max(jnp.abs(x))
+    global_scale = jnp.where(amax_t > 0, amax_t / (448.0 * 6.0), 1.0)
+    blocks = x.reshape(n // 16, 16)
+    amax_b = jnp.max(jnp.abs(blocks), axis=1)
+    want = amax_b / (6.0 * global_scale)
+    # round-up quantization to E4M3: cast, then bump if the cast went down.
+    s8 = want.astype(jnp.float8_e4m3fn)
+    s_back = s8.astype(jnp.float32)
+    bits = s8.view(jnp.uint8)
+    need_bump = (s_back < want) & (bits < 0x7E)
+    bits = jnp.where(need_bump, bits + 1, bits).astype(jnp.uint8)
+    scale = bits.view(jnp.float8_e4m3fn).astype(jnp.float32)
+    denom = jnp.where((scale == 0) | jnp.isnan(scale), 1.0, scale * global_scale)
+    scaled = blocks / denom[:, None]
+    codes = e2m1_encode_ref(scaled.reshape(-1))
+    return codes, bits, global_scale
+
+
+_E2M1_GRID = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], jnp.float32)
+
+
+def e2m1_encode_ref(x: jnp.ndarray):
+    """f32 → E2M1 nibble codes (uint8 0..15), RNE on the grid, saturating."""
+    sign = (x < 0) | ((x == 0) & jnp.signbit(x))
+    a = jnp.minimum(jnp.abs(x), 6.0)
+    d = jnp.abs(a[:, None] - _E2M1_GRID[None, :])  # [N, 8]
+    # RNE: even grid indices win exact ties (mantissa LSB 0).
+    even_bias = jnp.where(jnp.arange(8) % 2 == 0, 1e-7, 0.0)
+    idx = jnp.argmin(d - even_bias[None, :], axis=1).astype(jnp.uint8)
+    return jnp.where(sign, idx | 0x8, idx).astype(jnp.uint8)
+
+
+def e2m1_decode_ref(codes: jnp.ndarray):
+    """E2M1 nibble codes → f32."""
+    mag = _E2M1_GRID[(codes & 0x7).astype(jnp.int32)]
+    return jnp.where((codes & 0x8) != 0, -mag, mag)
+
+
+def attention_ref(q, k, v, causal: bool = True, length=None):
+    """Masked softmax attention, the oracle for the Pallas kernels.
+
+    q: [S_q, D], k/v: [S_k, D]. If causal, query row i attends to key j
+    with j <= i + (S_k - S_q). `length` masks key positions >= length.
+    """
+    sq, d = q.shape
+    sk = k.shape[0]
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))  # [S_q, S_k]
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        offset = sk - sq
+        mask = jnp.arange(sk)[None, :] <= (jnp.arange(sq)[:, None] + offset)
+        scores = jnp.where(mask, scores, neg)
+    if length is not None:
+        scores = jnp.where(jnp.arange(sk)[None, :] < length, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: BF16 exponent/mantissa stream separation + histogram.
+
+This is the accelerator-side half of the paper's §3 transform: a
+bandwidth-bound bit-twiddle that peels the exponent byte out of each BF16
+word and simultaneously accumulates the 256-bin exponent histogram that
+Huffman table construction needs — one pass over HBM instead of two.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles the flat
+tensor into VMEM blocks via ``BlockSpec``; each grid step processes one
+block on the VPU (no MXU involvement). The histogram uses a one-hot
+matmul-free reduction that vectorizes on the 8×128 VPU lanes.
+
+Run with ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size: 64 Ki elements = 128 KiB of u16 in VMEM (well under the ~16 MiB
+# VMEM budget; leaves room for the two u8 outputs + histogram accumulator).
+BLOCK = 65536
+
+
+def _split_kernel(words_ref, exp_ref, sm_ref, hist_ref):
+    """One grid step: split one block and accumulate its histogram."""
+    w = words_ref[...].astype(jnp.uint16)
+    exp = ((w >> 7) & 0xFF).astype(jnp.uint8)
+    sm = (((w >> 8) & 0x80) | (w & 0x7F)).astype(jnp.uint8)
+    exp_ref[...] = exp
+    sm_ref[...] = sm
+    # Histogram: one-hot compare against the 256 bin ids, summed per block.
+    # [256, BLOCK] bool → sum over axis 1. Vectorizes on the VPU; avoids
+    # scatter (which Mosaic lowers poorly).
+    bins = jax.lax.broadcasted_iota(jnp.int32, (256, 1), 0)
+    onehot = (exp.astype(jnp.int32)[None, :] == bins).astype(jnp.int32)
+    block_hist = jnp.sum(onehot, axis=1)
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += block_hist
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def split_bf16(words: jnp.ndarray, interpret: bool = True):
+    """Split uint16[N] BF16 words → (exp u8[N], sm u8[N], hist i32[256]).
+
+    N must be a multiple of :data:`BLOCK` for the tiled path; smaller inputs
+    fall back to a single-block call with ``BLOCK = N``.
+    """
+    n = words.shape[0]
+    block = BLOCK if n % BLOCK == 0 and n > 0 else max(n, 1)
+    grid = max(n // block, 1)
+    return pl.pallas_call(
+        _split_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # Histogram: every grid step maps to the same (only) block, so
+            # the accumulation in the kernel is a legal revisiting pattern.
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.uint8),
+            jax.ShapeDtypeStruct((256,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(words)
+
+
+def _merge_kernel(exp_ref, sm_ref, words_ref):
+    e = exp_ref[...].astype(jnp.uint16)
+    s = sm_ref[...].astype(jnp.uint16)
+    words_ref[...] = ((s & 0x80) << 8) | (e << 7) | (s & 0x7F)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_bf16(exp: jnp.ndarray, sm: jnp.ndarray, interpret: bool = True):
+    """Inverse of :func:`split_bf16` (exactness checked in pytest)."""
+    n = exp.shape[0]
+    block = BLOCK if n % BLOCK == 0 and n > 0 else max(n, 1)
+    grid = max(n // block, 1)
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint16),
+        interpret=interpret,
+    )(exp, sm)

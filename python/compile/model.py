@@ -1,0 +1,254 @@
+"""L2: a GPT-style transformer in JAX, built on the L1 Pallas kernels.
+
+This is the workload generator for every experiment in the paper:
+
+* ``train_step`` produces the BF16 checkpoint trajectories of §4.1,
+* the weights feed the FP8/FP4 quantizers of §4.2/§4.4,
+* ``prefill`` / ``decode_step`` produce the real K/V cache tensors of §4.3.
+
+The model is deliberately small (defaults ≈ 0.9 M parameters) so the full
+train→checkpoint→compress pipeline runs on one CPU core; DESIGN.md §4
+documents why compression *ratios* are scale-free.
+
+Weight layout: a flat ordered list (see :func:`weight_names`) — the AOT
+artifacts take weights as positional inputs and the Rust runtime feeds them
+by manifest order. All artifact I/O is f32; low-precision bytes are
+produced Rust-side (or by the quantize kernels).
+"""
+
+import dataclasses
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention_decode, attention_prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyperparameters (fixed at AOT time)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    max_seq: int = 64
+    batch: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+def weight_names(cfg: ModelConfig) -> List[str]:
+    """The canonical weight order shared with the Rust runtime."""
+    names = ["embed", "pos_embed"]
+    for layer in range(cfg.n_layers):
+        for w in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"):
+            names.append(f"layers.{layer}.{w}")
+    names.append("ln_f")
+    return names
+
+
+def weight_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Shape of every weight, keyed by name."""
+    shapes = {
+        "embed": (cfg.vocab, cfg.d_model),
+        "pos_embed": (cfg.max_seq, cfg.d_model),
+        "ln_f": (cfg.d_model,),
+    }
+    for layer in range(cfg.n_layers):
+        p = f"layers.{layer}."
+        shapes[p + "ln1"] = (cfg.d_model,)
+        shapes[p + "wq"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wk"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wv"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "wo"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "ln2"] = (cfg.d_model,)
+        shapes[p + "w1"] = (cfg.d_model, cfg.d_ff)
+        shapes[p + "w2"] = (cfg.d_ff, cfg.d_model)
+    return shapes
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Initialize weights in canonical order (scaled-normal init)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = weight_shapes(cfg)
+    out = []
+    for name in weight_names(cfg):
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name == "pos_embed":
+            out.append(0.01 * jax.random.normal(sub, shape, jnp.float32))
+        elif name.endswith("w2"):
+            std = 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def _rms_norm(x, gain):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * gain
+
+
+def _split_heads(x, cfg: ModelConfig):
+    """[B, S, D] → [B*H, S, Dh]."""
+    b, s, _ = x.shape
+    x = x.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    return x.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, s, cfg.head_dim)
+
+
+def _merge_heads(x, cfg: ModelConfig, batch: int):
+    """[B*H, S, Dh] → [B, S, D]."""
+    s = x.shape[1]
+    x = x.reshape(batch, cfg.n_heads, s, cfg.head_dim).transpose(0, 2, 1, 3)
+    return x.reshape(batch, s, cfg.d_model)
+
+
+def _as_dict(cfg: ModelConfig, weights: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return dict(zip(weight_names(cfg), weights))
+
+
+def prefill(cfg: ModelConfig, weights: List[jnp.ndarray], tokens: jnp.ndarray,
+            interpret: bool = True):
+    """Full-sequence forward pass.
+
+    tokens: i32[B, S] → (logits f32[B, S, V],
+                          k_cache f32[L, B, S, D], v_cache f32[L, B, S, D])
+
+    The K/V outputs use the seq-major layout ``[.., S, D]`` (heads folded
+    into D) so the Rust cache can treat one token's K as one contiguous row.
+    """
+    w = _as_dict(cfg, weights)
+    b, s = tokens.shape
+    x = w["embed"][tokens] + w["pos_embed"][None, :s, :]
+    k_caches, v_caches = [], []
+    for layer in range(cfg.n_layers):
+        p = f"layers.{layer}."
+        h = _rms_norm(x, w[p + "ln1"])
+        q = h @ w[p + "wq"]
+        k = h @ w[p + "wk"]
+        v = h @ w[p + "wv"]
+        k_caches.append(k)  # [B, S, D] seq-major, heads folded
+        v_caches.append(v)
+        o = attention_prefill(
+            _split_heads(q, cfg), _split_heads(k, cfg), _split_heads(v, cfg),
+            interpret=interpret,
+        )
+        x = x + _merge_heads(o, cfg, b) @ w[p + "wo"]
+        h2 = _rms_norm(x, w[p + "ln2"])
+        x = x + jax.nn.gelu(h2 @ w[p + "w1"]) @ w[p + "w2"]
+    x = _rms_norm(x, w["ln_f"])
+    logits = x @ w["embed"].T
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(cfg: ModelConfig, weights: List[jnp.ndarray], token: jnp.ndarray,
+                pos: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                interpret: bool = True):
+    """One autoregressive step over an external K/V cache.
+
+    token: i32[B]; pos: i32[B] (0-based position of this token);
+    k_cache/v_cache: f32[L, B, S_max, D] — rows >= pos[b] are ignored.
+
+    Returns (logits f32[B, V], k_new f32[L, B, D], v_new f32[L, B, D]).
+    The caller owns cache insertion: append k_new at row pos[b] (the Rust
+    coordinator stores it compressed instead).
+    """
+    w = _as_dict(cfg, weights)
+    b = token.shape[0]
+    s_max = k_cache.shape[2]
+    pos_clip = jnp.clip(pos, 0, cfg.max_seq - 1)
+    x = w["embed"][token] + w["pos_embed"][pos_clip]  # [B, D]
+    x = x[:, None, :]  # [B, 1, D]
+    k_news, v_news = [], []
+    for layer in range(cfg.n_layers):
+        p = f"layers.{layer}."
+        h = _rms_norm(x, w[p + "ln1"])
+        q = h @ w[p + "wq"]  # [B, 1, D]
+        k_new = (h @ w[p + "wk"])[:, 0, :]  # [B, D]
+        v_new = (h @ w[p + "wv"])[:, 0, :]
+        k_news.append(k_new)
+        v_news.append(v_new)
+        # Write the new K/V into the cache row pos[b] (functional update) so
+        # the kernel sees positions 0..pos inclusive.
+        bidx = jnp.arange(b)
+        kc = k_cache[layer].at[bidx, pos_clip, :].set(k_new)  # [B, S_max, D]
+        vc = v_cache[layer].at[bidx, pos_clip, :].set(v_new)
+        # Heads: [B, S, D] → [B*H, S, Dh].
+        o = attention_decode(
+            _split_heads(q, cfg),
+            _split_heads(kc, cfg),
+            _split_heads(vc, cfg),
+            jnp.repeat(pos_clip + 1, cfg.n_heads),
+            interpret=interpret,
+        )  # [B*H, 1, Dh]
+        x = x + _merge_heads(o, cfg, b) @ w[p + "wo"]
+        h2 = _rms_norm(x, w[p + "ln2"])
+        x = x + jax.nn.gelu(h2 @ w[p + "w1"]) @ w[p + "w2"]
+        _ = s_max
+    x = _rms_norm(x, w["ln_f"])
+    logits = (x @ w["embed"].T)[:, 0, :]
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def loss_fn(cfg: ModelConfig, weights: List[jnp.ndarray], tokens: jnp.ndarray,
+            interpret: bool = True):
+    """Next-token cross-entropy over the sequence."""
+    logits, _, _ = prefill(cfg, weights, tokens, interpret=interpret)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, weights: List[jnp.ndarray], tokens: jnp.ndarray,
+               lr: jnp.ndarray, interpret: bool = True):
+    """One SGD step. Returns (new_weights..., loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda ws: loss_fn(cfg, ws, tokens, interpret=interpret)
+    )(weights)
+    new_weights = [w - lr * g for w, g in zip(weights, grads)]
+    return new_weights, loss
+
+
+def sample_batch(cfg: ModelConfig, seed: int) -> jnp.ndarray:
+    """Synthetic 'language': a noisy order-2 Markov chain over the vocab,
+    giving the model something learnable (loss decreases visibly)."""
+    key = jax.random.PRNGKey(seed)
+    b, s, v = cfg.batch, cfg.max_seq, cfg.vocab
+    k1, k2, k3 = jax.random.split(key, 3)
+    start = jax.random.randint(k1, (b,), 0, v)
+
+    def step(carry, k):
+        prev = carry
+        # Deterministic skeleton + noise.
+        nxt = (prev * 31 + 17) % v
+        noise = jax.random.randint(k, (b,), 0, v)
+        use_noise = jax.random.bernoulli(k, 0.15, (b,))
+        tok = jnp.where(use_noise, noise, nxt)
+        return tok, tok
+
+    keys = jax.random.split(k2, s - 1)
+    _, rest = jax.lax.scan(step, start, keys)
+    _ = k3
+    return jnp.concatenate([start[None, :], rest], axis=0).T.astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=4)
+def jitted_train_step(cfg: ModelConfig, interpret: bool = True):
+    """Cached jitted train step for in-Python experimentation/tests."""
+    def f(weights, tokens, lr):
+        return train_step(cfg, list(weights), tokens, lr, interpret=interpret)
+    return jax.jit(f)

@@ -1,0 +1,84 @@
+"""AOT export sanity: manifest structure and HLO text well-formedness.
+
+Uses a tiny config so the test runs in seconds; the real artifacts are
+produced by ``make artifacts`` at the default config.
+"""
+
+import json
+import pathlib
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=32, d_model=16, n_layers=1, n_heads=2, max_seq=8, batch=2)
+
+
+@pytest.fixture(scope="module")
+def exported():
+    d = tempfile.mkdtemp(prefix="zipnn_aot_test_")
+    manifest = aot.export(CFG, pathlib.Path(d), kernel_n=1024)
+    return pathlib.Path(d), manifest
+
+
+def test_all_artifacts_written(exported):
+    d, manifest = exported
+    for name, art in manifest["artifacts"].items():
+        path = d / art["file"]
+        assert path.exists(), name
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_matches_disk(exported):
+    d, manifest = exported
+    disk = json.loads((d / "manifest.json").read_text())
+    assert disk["weight_names"] == manifest["weight_names"]
+    assert set(disk["artifacts"]) == {
+        "prefill", "decode", "train_step", "split_bf16", "quantize_e4m3", "nvfp4",
+    }
+
+
+def test_prefill_signature(exported):
+    _, manifest = exported
+    art = manifest["artifacts"]["prefill"]
+    n_weights = len(manifest["weight_names"])
+    assert len(art["inputs"]) == n_weights + 1
+    assert art["inputs"][-1]["name"] == "tokens"
+    assert art["inputs"][-1]["dtype"] == "int32"
+    assert art["inputs"][-1]["shape"] == [CFG.batch, CFG.max_seq]
+    # logits, k_cache, v_cache.
+    assert len(art["outputs"]) == 3
+    assert art["outputs"][0]["shape"] == [CFG.batch, CFG.max_seq, CFG.vocab]
+    assert art["outputs"][1]["shape"] == [
+        CFG.n_layers, CFG.batch, CFG.max_seq, CFG.d_model,
+    ]
+
+
+def test_decode_signature(exported):
+    _, manifest = exported
+    art = manifest["artifacts"]["decode"]
+    names = [i["name"] for i in art["inputs"]]
+    assert names[-4:] == ["token", "pos", "k_cache", "v_cache"]
+    assert art["outputs"][0]["shape"] == [CFG.batch, CFG.vocab]
+    assert art["outputs"][1]["shape"] == [CFG.n_layers, CFG.batch, CFG.d_model]
+
+
+def test_train_step_signature(exported):
+    _, manifest = exported
+    art = manifest["artifacts"]["train_step"]
+    n_weights = len(manifest["weight_names"])
+    assert len(art["inputs"]) == n_weights + 2
+    assert len(art["outputs"]) == n_weights + 1  # new weights + loss
+    assert art["outputs"][-1]["shape"] == []  # scalar loss
+
+
+def test_weight_shapes_recorded(exported):
+    _, manifest = exported
+    ws = manifest["weight_shapes"]
+    assert ws["embed"] == [CFG.vocab, CFG.d_model]
+    for n in manifest["weight_names"]:
+        assert n in ws

@@ -1,0 +1,196 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value distributions; the bit-twiddle kernels
+must match **bit-exactly**, the attention kernels to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import quantize as Q
+from compile.kernels import ref as R
+from compile.kernels import split_streams as S
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+# --- split / merge -----------------------------------------------------------
+
+@given(st.integers(1, 4096), st.integers(0, 2**32 - 1))
+def test_split_bf16_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    words = jnp.asarray(rng.integers(0, 2**16, size=n, dtype=np.uint16))
+    e, s, h = S.split_bf16(words)
+    re, rs, rh = R.split_bf16_ref(words)
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(re))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(rh))
+
+
+@given(st.integers(1, 4096), st.integers(0, 2**32 - 1))
+def test_split_merge_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    words = jnp.asarray(rng.integers(0, 2**16, size=n, dtype=np.uint16))
+    e, s, _ = S.split_bf16(words)
+    back = S.merge_bf16(e, s)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(words))
+
+
+def test_split_histogram_sums_to_n():
+    words = jnp.asarray(np.arange(1000, dtype=np.uint16))
+    _, _, h = S.split_bf16(words)
+    assert int(np.asarray(h).sum()) == 1000
+
+
+def test_split_tiled_path():
+    # Exercise the multi-block grid (n == multiple of BLOCK).
+    n = 2 * S.BLOCK
+    rng = np.random.default_rng(0)
+    words = jnp.asarray(rng.integers(0, 2**16, size=n, dtype=np.uint16))
+    e, s, h = S.split_bf16(words)
+    re, rs, rh = R.split_bf16_ref(words)
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(re))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(rh))
+
+
+# --- quantizers --------------------------------------------------------------
+
+@given(
+    st.integers(1, 2048),
+    st.integers(0, 2**32 - 1),
+    st.sampled_from([0.01, 1.0, 100.0, 1e4]),
+)
+def test_e4m3_matches_native_cast(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * scale)
+    got = Q.quantize_e4m3(x)
+    want = R.quantize_e4m3_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_e4m3_specials():
+    x = jnp.asarray(
+        np.array([0.0, -0.0, 448.0, -448.0, 1e9, np.nan, np.inf], np.float32)
+    )
+    got = np.asarray(Q.quantize_e4m3(x))
+    want = np.asarray(R.quantize_e4m3_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(1, 128), st.integers(0, 2**32 - 1))
+def test_nvfp4_matches_ref(blocks, seed):
+    n = blocks * 16
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 3.0)
+    c, s, g = Q.nvfp4_quantize(x)
+    rc, rs, rg = R.nvfp4_quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    np.testing.assert_allclose(np.asarray(g)[0], np.asarray(rg), rtol=1e-6)
+
+
+def test_nvfp4_reconstruction_error_bounded():
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(1600).astype(np.float32)
+    c, s, g = Q.nvfp4_quantize(jnp.asarray(x))
+    vals = np.asarray(R.e2m1_decode_ref(jnp.asarray(np.asarray(c))))
+    scales = np.asarray(R.dequantize_e4m3_ref(jnp.asarray(np.asarray(s))))
+    recon = vals.reshape(-1, 16) * scales[:, None] * float(np.asarray(g)[0])
+    # Relative error per block bounded by the E2M1 step (≤ 1/4 relative
+    # in the worst binade) plus scale rounding.
+    err = np.abs(recon.reshape(-1) - x)
+    block_amax = np.abs(x.reshape(-1, 16)).max(axis=1)
+    bound = 0.27 * np.repeat(block_amax, 16) + 1e-6
+    assert (err <= bound).all()
+
+
+def test_e2m1_encode_grid_exact():
+    grid = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+    codes = np.asarray(R.e2m1_encode_ref(jnp.asarray(grid)))
+    np.testing.assert_array_equal(codes, np.arange(8, dtype=np.uint8))
+    codes_neg = np.asarray(R.e2m1_encode_ref(jnp.asarray(-grid[1:])))
+    np.testing.assert_array_equal(codes_neg, (np.arange(1, 8) | 0x8).astype(np.uint8))
+
+
+# --- attention ---------------------------------------------------------------
+
+@given(
+    st.integers(1, 4),
+    st.sampled_from([2, 8, 16, 33]),
+    st.sampled_from([4, 8, 32]),
+    st.integers(0, 2**32 - 1),
+)
+def test_prefill_attention_matches_ref(bh, s, d, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((bh, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((bh, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((bh, s, d)).astype(np.float32))
+    o = A.attention_prefill(q, k, v)
+    for i in range(bh):
+        r = R.attention_ref(q[i], k[i], v[i], causal=True)
+        np.testing.assert_allclose(
+            np.asarray(o[i]), np.asarray(r), rtol=2e-5, atol=2e-5
+        )
+
+
+@given(
+    st.integers(1, 4),
+    st.sampled_from([8, 16, 64]),
+    st.sampled_from([4, 32]),
+    st.integers(0, 2**32 - 1),
+)
+def test_decode_attention_matches_ref(bh, s_max, d, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((bh, 1, d)).astype(np.float32))
+    kc = jnp.asarray(rng.standard_normal((bh, s_max, d)).astype(np.float32))
+    vc = jnp.asarray(rng.standard_normal((bh, s_max, d)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(1, s_max + 1, size=bh, dtype=np.int32))
+    o = A.attention_decode(q, kc, vc, pos)
+    for i in range(bh):
+        r = R.attention_ref(
+            q[i], kc[i], vc[i], causal=False, length=int(pos[i])
+        )
+        np.testing.assert_allclose(
+            np.asarray(o[i]), np.asarray(r), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_decode_ignores_stale_cache_rows():
+    # Rows beyond pos must not affect the output.
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 1, 8)).astype(np.float32))
+    kc = rng.standard_normal((1, 16, 8)).astype(np.float32)
+    vc = rng.standard_normal((1, 16, 8)).astype(np.float32)
+    pos = jnp.asarray(np.array([5], np.int32))
+    o1 = A.attention_decode(q, jnp.asarray(kc), jnp.asarray(vc), pos)
+    kc2 = kc.copy()
+    kc2[:, 10:, :] = 1e6
+    vc2 = vc.copy()
+    vc2[:, 10:, :] = -1e6
+    o2 = A.attention_decode(q, jnp.asarray(kc2), jnp.asarray(vc2), pos)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_prefill_vjp_matches_jnp():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((2, 8, 4)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((2, 8, 4)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((2, 8, 4)).astype(np.float32))
+
+    def f_pallas(q, k, v):
+        return jnp.sum(jnp.sin(A.attention_prefill(q, k, v)))
+
+    def f_ref(q, k, v):
+        o = jnp.stack([R.attention_ref(q[i], k[i], v[i]) for i in range(2)])
+        return jnp.sum(jnp.sin(o))
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,98 @@
+"""L2 model correctness: shapes, decode↔prefill consistency, learning."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, max_seq=16, batch=2)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights(CFG, 0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return M.sample_batch(CFG, 0)
+
+
+def test_weight_manifest_consistent():
+    names = M.weight_names(CFG)
+    shapes = M.weight_shapes(CFG)
+    assert len(names) == len(set(names))
+    assert set(names) == set(shapes)
+    # 2 + 8 per layer + 1.
+    assert len(names) == 2 + 8 * CFG.n_layers + 1
+
+
+def test_init_shapes(weights):
+    shapes = M.weight_shapes(CFG)
+    for name, w in zip(M.weight_names(CFG), weights):
+        assert tuple(w.shape) == shapes[name], name
+
+
+def test_prefill_shapes(weights, tokens):
+    logits, kc, vc = M.prefill(CFG, weights, tokens)
+    B, S = tokens.shape
+    assert logits.shape == (B, S, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, B, S, CFG.d_model)
+    assert vc.shape == (CFG.n_layers, B, S, CFG.d_model)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_matches_prefill(weights, tokens):
+    logits, kc, vc = M.prefill(CFG, weights, tokens)
+    L, B, S, D = kc.shape
+    kcache = jnp.zeros((L, B, CFG.max_seq, D))
+    vcache = jnp.zeros((L, B, CFG.max_seq, D))
+    for t in range(6):
+        lg, kn, vn = M.decode_step(
+            CFG, weights, tokens[:, t], jnp.full((B,), t, jnp.int32), kcache, vcache
+        )
+        kcache = kcache.at[:, jnp.arange(B), t, :].set(kn)
+        vcache = vcache.at[:, jnp.arange(B), t, :].set(vn)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(logits[:, t, :]), rtol=5e-4, atol=5e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(kn), np.asarray(kc[:, :, t, :]), rtol=5e-4, atol=5e-4
+        )
+
+
+def test_decode_cache_layout_is_seq_major(weights, tokens):
+    # One token's K for one layer is a contiguous [D] row — the contract the
+    # Rust paged cache relies on (manifest: k_cache[L, B, S, D]).
+    _, kc, _ = M.prefill(CFG, weights, tokens)
+    assert kc.shape[-1] == CFG.d_model
+
+
+def test_loss_finite_and_decreases(weights):
+    l0 = float(M.loss_fn(CFG, weights, M.sample_batch(CFG, 0)))
+    assert np.isfinite(l0)
+    step = M.jitted_train_step(CFG)
+    w = weights
+    loss = None
+    for i in range(40):
+        w, loss = step(tuple(w), M.sample_batch(CFG, i), jnp.float32(0.1))
+    assert float(loss) < l0 - 0.2, f"{l0} -> {float(loss)}"
+
+
+def test_train_step_preserves_shapes(weights):
+    new_w, loss = M.train_step(CFG, weights, M.sample_batch(CFG, 1), jnp.float32(0.1))
+    assert len(new_w) == len(weights)
+    for a, b in zip(new_w, weights):
+        assert a.shape == b.shape
+    assert np.isfinite(float(loss))
+
+
+def test_sample_batch_deterministic():
+    a = M.sample_batch(CFG, 5)
+    b = M.sample_batch(CFG, 5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = M.sample_batch(CFG, 6)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert int(np.asarray(a).max()) < CFG.vocab
+    assert int(np.asarray(a).min()) >= 0

@@ -1,0 +1,126 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//!  * chunk-size sweep (random-access granularity vs table overhead);
+//!  * Huffman code-length limit 8..15 (decoder LUT size vs entropy loss);
+//!  * entropy-gated mantissa coding on/off (§3.1's conditional coding);
+//!  * delta-XOR vs direct checkpoint coding (§3.1's transform);
+//!  * static vs adaptive vs per-page K/V dictionaries (§3.3).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use zipnn_lp::codec::{compress_delta, compress_tensor, CompressOptions};
+use zipnn_lp::formats::{split_streams, FloatFormat};
+use zipnn_lp::kvcache::{KvCacheConfig, PagedKvCache};
+use zipnn_lp::metrics::{bench_loop, Table};
+use zipnn_lp::synthetic;
+
+fn chunk_sweep(data: &[u8]) {
+    let mut t = Table::new(&["chunk KiB", "ratio", "enc MiB/s", "chunks"]);
+    for kib in [16usize, 64, 256, 1024, 4096] {
+        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(kib * 1024);
+        let blob = compress_tensor(data, &opts).expect("compress");
+        let b = bench_loop(3, || compress_tensor(data, &opts).unwrap());
+        t.row(&[
+            kib.to_string(),
+            format!("{:.4}", blob.ratio()),
+            format!("{:.1}", b.mib_per_sec(data.len())),
+            blob.chunks.len().to_string(),
+        ]);
+    }
+    println!("Ablation: chunk size (paper §3.1 fixed-size chunks):\n{}", t.render());
+}
+
+fn len_limit_sweep(data: &[u8]) {
+    let mut t = Table::new(&["len limit", "ratio", "dec MiB/s"]);
+    for limit in [8u8, 10, 12, 15] {
+        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_len_limit(limit);
+        let blob = compress_tensor(data, &opts).expect("compress");
+        let b = bench_loop(3, || zipnn_lp::codec::decompress_tensor(&blob).unwrap());
+        t.row(&[
+            limit.to_string(),
+            format!("{:.4}", blob.ratio()),
+            format!("{:.1}", b.mib_per_sec(data.len())),
+        ]);
+    }
+    println!("Ablation: Huffman code-length limit (decoder LUT 2^L):\n{}", t.render());
+}
+
+fn mantissa_gate(data: &[u8]) {
+    let mut t = Table::new(&["mantissa coding", "ratio", "enc MiB/s"]);
+    for (label, exponent_only, gate) in [
+        ("gated (default)", false, 0.97),
+        ("forced on", false, 1.0),
+        ("off (exp only)", true, 0.97),
+    ] {
+        let mut opts = CompressOptions::for_format(FloatFormat::Bf16);
+        opts.exponent_only = exponent_only;
+        opts.gate_threshold = gate;
+        let blob = compress_tensor(data, &opts).expect("compress");
+        let b = bench_loop(3, || compress_tensor(data, &opts).unwrap());
+        t.row(&[
+            label.to_string(),
+            format!("{:.4}", blob.ratio()),
+            format!("{:.1}", b.mib_per_sec(data.len())),
+        ]);
+    }
+    println!("Ablation: entropy-gated mantissa coding (§3.1):\n{}", t.render());
+}
+
+fn delta_vs_direct() {
+    let base = synthetic::gaussian_bf16_bytes(2 * 1024 * 1024, 0.02, 7);
+    let cur = synthetic::perturb_bf16_bytes(&base, 0.01, 0.15, 8);
+    let opts = CompressOptions::for_format(FloatFormat::Bf16);
+    let direct = compress_tensor(&cur, &opts).expect("direct");
+    let delta = compress_delta(&cur, &base, &opts).expect("delta");
+    let mut t = Table::new(&["strategy", "ratio"]);
+    t.row(&["direct (no base)".into(), format!("{:.4}", direct.ratio())]);
+    t.row(&["XOR delta vs previous".into(), format!("{:.4}", delta.ratio())]);
+    println!("Ablation: delta-XOR transform (§3.1):\n{}", t.render());
+}
+
+fn dictionary_modes() {
+    // Compare per-page tables vs a pre-trained static dictionary on K/V
+    // pages: the dictionary amortizes the 128-byte table per page.
+    let head_dim = 128usize;
+    let elem = 2usize;
+    let vals = synthetic::kv_cache_f32(4096, head_dim, 21);
+    let bytes = zipnn_lp::formats::conv::quantize_slice(&vals, FloatFormat::Bf16).unwrap();
+    let row = 2 * head_dim * elem;
+    let mut t = Table::new(&["dictionary mode", "page tokens", "exp ratio", "refreshes"]);
+    for (label, train, page_tokens) in [
+        ("per-page tables", false, 16usize),
+        ("static dict", true, 16),
+        ("per-page tables", false, 64),
+        ("static dict", true, 64),
+    ] {
+        let mut cfg = KvCacheConfig::new(1, head_dim * elem, FloatFormat::Bf16);
+        cfg.page_tokens = page_tokens;
+        let mut cache = PagedKvCache::new(cfg);
+        if train {
+            let set = split_streams(FloatFormat::Bf16, &bytes[..row * 256]).unwrap();
+            cache.dictionaries().train(0, &set.exponent().unwrap().bytes).unwrap();
+        }
+        for tk in 0..bytes.len() / row / 2 {
+            cache.append_token(1, 0, &bytes[tk * row..(tk + 1) * row]).expect("append");
+        }
+        cache.seal_all().expect("seal");
+        let s = cache.stats();
+        t.row(&[
+            label.to_string(),
+            page_tokens.to_string(),
+            format!("{:.4}", s.exp_ratio()),
+            cache.dictionary_refreshes().to_string(),
+        ]);
+    }
+    println!("Ablation: K/V dictionary modes (§3.3 precomputed dictionaries):\n{}", t.render());
+    println!("small pages make per-page tables expensive; static dictionaries amortize them.");
+}
+
+fn main() {
+    let data = synthetic::gaussian_bf16_bytes(2 * 1024 * 1024, 0.02, 42);
+    chunk_sweep(&data);
+    len_limit_sweep(&data);
+    mantissa_gate(&data);
+    delta_vs_direct();
+    dictionary_modes();
+}

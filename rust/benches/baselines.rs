@@ -1,0 +1,62 @@
+//! Bench: §2.3 comparison — exponent-separated Huffman vs generic
+//! byte-oriented compressors (own-code deflate-like, order-0 Huffman, RLE)
+//! on every tensor class the paper considers.
+//!
+//! Run: `cargo bench --bench baselines`
+
+use zipnn_lp::baselines;
+use zipnn_lp::codec::{compress_tensor, CompressOptions};
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::metrics::{bench_loop, Table};
+use zipnn_lp::synthetic;
+use zipnn_lp::util::rng::Rng;
+
+fn main() {
+    let n = 4 * 1024 * 1024; // bytes per workload
+    let workloads: Vec<(&str, FloatFormat, Vec<u8>)> = vec![
+        ("bf16 weights N(0,0.02)", FloatFormat::Bf16,
+            synthetic::gaussian_bf16_bytes(n / 2, 0.02, 1)),
+        ("bf16 kv-cache", FloatFormat::Bf16, {
+            let vals = synthetic::kv_cache_f32(n / 256, 128, 2);
+            zipnn_lp::formats::conv::quantize_slice(&vals, FloatFormat::Bf16).unwrap()
+        }),
+        ("fp8 e4m3 weights", FloatFormat::Fp8E4M3, {
+            let vals = synthetic::gaussian_f32(n, 0.02, 3);
+            zipnn_lp::formats::conv::quantize_slice(&vals, FloatFormat::Fp8E4M3).unwrap()
+        }),
+        ("bf16 sparse delta", FloatFormat::Bf16, {
+            let base = synthetic::gaussian_bf16_bytes(n / 2, 0.02, 4);
+            let cur = synthetic::perturb_bf16_bytes(&base, 0.01, 0.1, 5);
+            zipnn_lp::codec::xor_buffers(&cur, &base).unwrap()
+        }),
+        ("random noise (control)", FloatFormat::Bf16, {
+            let mut rng = Rng::new(6);
+            let mut v = vec![0u8; n];
+            rng.fill_bytes(&mut v);
+            v
+        }),
+    ];
+
+    let mut table = Table::new(&[
+        "workload", "zipnn-lp", "byte-huffman", "lzss-huffman", "rle", "zlp enc MiB/s",
+    ]);
+    for (name, format, data) in &workloads {
+        let opts = CompressOptions::for_format(*format).with_threads(2);
+        let blob = compress_tensor(data, &opts).expect("compress");
+        let bh = baselines::byte_huffman(data).expect("bh");
+        let lz = baselines::lzss_huffman(data).expect("lz");
+        let rl = baselines::rle(data);
+        let bench = bench_loop(3, || compress_tensor(data, &opts).unwrap());
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", blob.ratio()),
+            format!("{:.4}", bh.ratio()),
+            format!("{:.4}", lz.ratio()),
+            format!("{:.4}", rl.ratio()),
+            format!("{:.1}", bench.mib_per_sec(data.len())),
+        ]);
+    }
+    println!("§2.3 — exponent-separated Huffman vs byte-oriented baselines:\n{}", table.render());
+    println!("paper's argument: generic LZ/byte coders miss float structure; the split wins");
+    println!("on every NN tensor class while RLE only wins on degenerate (constant) data.");
+}

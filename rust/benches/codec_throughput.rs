@@ -1,0 +1,66 @@
+//! Bench: codec throughput — the §Perf harness.
+//!
+//! Measures encode/decode MiB/s per layer of the stack: histogram, Huffman
+//! encode, Huffman decode, stream split/merge, full codec (1/2/4 threads),
+//! CRC32. These are the numbers tracked in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench codec_throughput`
+
+use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions};
+use zipnn_lp::entropy::Histogram;
+use zipnn_lp::formats::{merge_streams, split_streams, FloatFormat};
+use zipnn_lp::huffman::{CodeTable, HuffmanDecoder, HuffmanEncoder};
+use zipnn_lp::metrics::{bench_loop, Table};
+use zipnn_lp::synthetic;
+use zipnn_lp::util::crc32::crc32;
+
+fn main() {
+    let mib = 8;
+    let n_bytes = mib * 1024 * 1024;
+    let data = synthetic::gaussian_bf16_bytes(n_bytes / 2, 0.02, 99);
+    let set = split_streams(FloatFormat::Bf16, &data).expect("split");
+    let exp = &set.exponent().unwrap().bytes;
+    let iters = 5;
+
+    let mut t = Table::new(&["stage", "MiB/s", "notes"]);
+
+    let b = bench_loop(iters, || Histogram::from_bytes(exp));
+    t.row(&["histogram".into(), format!("{:.0}", b.mib_per_sec(exp.len())), "4-way unrolled".into()]);
+
+    let hist = Histogram::from_bytes(exp);
+    let table = CodeTable::build(&hist, 12).unwrap();
+    let b = bench_loop(iters, || HuffmanEncoder::new(&table).encode(exp));
+    t.row(&["huffman encode (exp)".into(), format!("{:.0}", b.mib_per_sec(exp.len())), "12-bit limit".into()]);
+
+    let payload = HuffmanEncoder::new(&table).encode(exp);
+    let dec = HuffmanDecoder::new(&table).unwrap();
+    let mut out = vec![0u8; exp.len()];
+    let b = bench_loop(iters, || dec.decode_into(&payload, &mut out).unwrap());
+    t.row(&["huffman decode (exp)".into(), format!("{:.0}", b.mib_per_sec(exp.len())), "8 KiB LUT".into()]);
+
+    let b = bench_loop(iters, || split_streams(FloatFormat::Bf16, &data).unwrap());
+    t.row(&["stream split (bf16)".into(), format!("{:.0}", b.mib_per_sec(data.len())), String::new()]);
+
+    let b = bench_loop(iters, || merge_streams(FloatFormat::Bf16, &set).unwrap());
+    t.row(&["stream merge (bf16)".into(), format!("{:.0}", b.mib_per_sec(data.len())), String::new()]);
+
+    let b = bench_loop(iters, || crc32(&data));
+    t.row(&["crc32".into(), format!("{:.0}", b.mib_per_sec(data.len())), "slice-by-8".into()]);
+
+    for threads in [1usize, 2, 4] {
+        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_threads(threads);
+        let b = bench_loop(iters, || compress_tensor(&data, &opts).unwrap());
+        t.row(&[
+            format!("full encode ({threads}t)"),
+            format!("{:.0}", b.mib_per_sec(data.len())),
+            "split+gate+huffman+crc".into(),
+        ]);
+    }
+    let opts = CompressOptions::for_format(FloatFormat::Bf16);
+    let blob = compress_tensor(&data, &opts).unwrap();
+    let b = bench_loop(iters, || decompress_tensor(&blob).unwrap());
+    t.row(&["full decode (1t)".into(), format!("{:.0}", b.mib_per_sec(data.len())), "decode+merge+crc".into()]);
+
+    println!("Codec throughput on {mib} MiB of BF16 weights:\n{}", t.render());
+    println!("§Perf targets: ≥200 MiB/s encode, ≥400 MiB/s decode per core on exponent streams.");
+}

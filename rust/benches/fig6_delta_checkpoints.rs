@@ -1,0 +1,52 @@
+//! Bench: paper Fig 6 — delta compression of consecutive BF16 checkpoints.
+//!
+//! Regenerates the figure's series (per-checkpoint-pair exponent, mantissa,
+//! and overall ratios) on a synthetic converging training trajectory, and
+//! reports codec throughput. The paper's absolute dataset (LLM360 Amber,
+//! 6.74B params) is substituted per DESIGN.md §4; the trend — exponent ≪
+//! mantissa, overall ratio falling toward ~0.38 as training converges — is
+//! the reproduced claim.
+//!
+//! Run: `cargo bench --bench fig6_delta_checkpoints`
+
+use zipnn_lp::codec::{compress_delta, CompressOptions};
+use zipnn_lp::formats::{FloatFormat, StreamKind};
+use zipnn_lp::metrics::{Table, Timer};
+use zipnn_lp::synthetic;
+
+fn main() {
+    // ~8M params of BF16 (16 MiB per checkpoint) — large enough for stable
+    // ratios, small enough to iterate.
+    let n_params = 8 * 1024 * 1024;
+    let n_pairs = 4; // the paper evaluates 4 consecutive pairs
+    let opts = CompressOptions::for_format(FloatFormat::Bf16).with_threads(2);
+
+    println!("Fig 6 — delta checkpoint compression ({n_params} BF16 params/ckpt)");
+    let mut table = Table::new(&["pair", "exp ratio", "s+m ratio", "overall", "enc MiB/s"]);
+
+    let mut prev = synthetic::gaussian_bf16_bytes(n_params, 0.02, 100);
+    for pair in 0..n_pairs {
+        // Convergence: later steps touch fewer weights with smaller updates.
+        let p_change = 0.6 / (pair as f64 + 1.0);
+        let rel = 0.02 / (pair as f64 + 1.0);
+        let cur = synthetic::perturb_bf16_bytes(&prev, rel, p_change, 200 + pair as u64);
+
+        let timer = Timer::new();
+        let blob = compress_delta(&cur, &prev, &opts).expect("compress");
+        let secs = timer.secs();
+
+        let exp = blob.stat(StreamKind::Exponent).map(|s| s.ratio()).unwrap_or(1.0);
+        let sm = blob.stat(StreamKind::SignMantissa).map(|s| s.ratio()).unwrap_or(1.0);
+        table.row(&[
+            format!("{} → {}", pair, pair + 1),
+            format!("{exp:.4}"),
+            format!("{sm:.4}"),
+            format!("{:.4}", blob.ratio()),
+            format!("{:.1}", cur.len() as f64 / (1024.0 * 1024.0) / secs),
+        ]);
+        prev = cur;
+    }
+    println!("{}", table.render());
+    println!("paper: exponent stream strongly compressible (→0.07 late in training),");
+    println!("mantissa 0.69–0.92, overall reaching ~0.38 of the original delta size.");
+}

@@ -1,0 +1,114 @@
+//! Bench: paper §4.3 + §5.2 — K/V cache compression ratios and the
+//! serving-latency overhead of on-the-fly compression.
+//!
+//! Two parts:
+//!  1. Ratio sweep on synthetic K/V tensors (BF16 and FP8 E4M3; per-channel
+//!     structured + peaked distributions) — the §4.3 bands.
+//!  2. End-to-end serving latency with the real AOT model, codec ON vs OFF
+//!     — the §5.2 "without significant overhead" claim. Skipped when
+//!     artifacts/ is missing.
+//!
+//! Run: `cargo bench --bench kv_cache`
+
+use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
+use zipnn_lp::formats::conv::quantize_slice;
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::kvcache::{KvCacheConfig, PagedKvCache};
+use zipnn_lp::metrics::Table;
+use zipnn_lp::model::ModelRuntime;
+use zipnn_lp::synthetic;
+use zipnn_lp::util::human_bytes;
+use zipnn_lp::util::rng::Rng;
+
+fn ratio_sweep() {
+    println!("§4.3 — K/V cache compression ratio sweep (synthetic tensors)");
+    let mut table = Table::new(&["format", "distribution", "exp ratio", "s+m ratio", "overall"]);
+    let head_dim = 128usize;
+    let tokens = 2048usize;
+    for format in [FloatFormat::Bf16, FloatFormat::Fp8E4M3] {
+        for dist in ["channel-structured", "peaked"] {
+            let vals = match dist {
+                "channel-structured" => synthetic::kv_cache_f32(tokens, head_dim, 11),
+                _ => {
+                    let mut rng = Rng::new(13);
+                    (0..tokens * head_dim).map(|_| rng.normal_ms(0.0, 0.8) as f32).collect()
+                }
+            };
+            let bytes = quantize_slice(&vals, format).expect("quantize");
+            let elem = if format == FloatFormat::Bf16 { 2 } else { 1 };
+            let mut cfg = KvCacheConfig::new(1, head_dim * elem, format);
+            cfg.page_tokens = 64;
+            let mut cache = PagedKvCache::new(cfg);
+            let row = 2 * head_dim * elem;
+            for t in 0..tokens / 2 {
+                cache.append_token(1, 0, &bytes[t * row..(t + 1) * row]).expect("append");
+            }
+            cache.seal_all().expect("seal");
+            let s = cache.stats();
+            table.row(&[
+                format.name().to_string(),
+                dist.to_string(),
+                format!("{:.4}", s.exp_ratio()),
+                format!("{:.4}", s.sm_ratio()),
+                format!("{:.4}", s.ratio()),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("paper bands: FP8 exp 0.25–0.45; BF16 exp often < 0.20 (real traces);");
+    println!("mantissa ≈ raw; overall saving 20–30% with static dictionaries.\n");
+}
+
+fn serving_overhead() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("§5.2 serving-overhead bench skipped: run `make artifacts` first.");
+        return;
+    }
+    println!("§5.2 — serving latency with compression ON vs OFF (real AOT model)");
+    let mut table = Table::new(&[
+        "kv", "codec", "decode tok/s", "decode s", "resident", "ratio", "overhead %",
+    ]);
+    for format in [FloatFormat::Bf16, FloatFormat::Fp8E4M3] {
+        let mut decode_secs = [0f64; 2];
+        for (i, compression) in [true, false].into_iter().enumerate() {
+            let model = ModelRuntime::load(&dir).expect("model");
+            let dims = model.dims();
+            let mut server =
+                Server::new(model, format, BatchPolicy::default(), compression).expect("server");
+            let mut rng = Rng::new(5);
+            let requests: Vec<Request> = (0..8)
+                .map(|id| Request {
+                    id,
+                    prompt: (0..12).map(|_| rng.below(dims.vocab as u64) as i32).collect(),
+                    max_new_tokens: 32,
+                })
+                .collect();
+            let _ = server.run(requests).expect("serve");
+            let stats = server.stats();
+            decode_secs[i] = stats.decode_secs;
+            table.row(&[
+                format.name().to_string(),
+                if compression { "on".into() } else { "off".into() },
+                format!("{:.1}", stats.decode_tok_per_sec()),
+                format!("{:.3}", stats.decode_secs),
+                human_bytes(stats.cache.resident_bytes),
+                format!("{:.4}", stats.cache.ratio()),
+                if compression {
+                    String::new() // filled after both runs
+                } else {
+                    "baseline".into()
+                },
+            ]);
+        }
+        let overhead = (decode_secs[0] / decode_secs[1] - 1.0) * 100.0;
+        println!("  {}: codec decode-time overhead {overhead:+.1}%", format.name());
+    }
+    println!("{}", table.render());
+    println!("paper §5.2: static-dict compression reduces memory 20–30% without significant overhead.");
+}
+
+fn main() {
+    ratio_sweep();
+    serving_overhead();
+}

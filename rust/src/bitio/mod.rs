@@ -1,0 +1,122 @@
+//! Bit-level I/O: the substrate under every Huffman stream in the codec.
+//!
+//! * [`BitWriter`] packs variable-length codes LSB-first into a byte vector.
+//! * [`BitReader`] reads them back, with a buffered 64-bit window so the
+//!   Huffman fast-decode loop can `peek` up to 32 bits without bounds checks
+//!   per bit.
+//!
+//! Bit order is **LSB-first within each byte** (the zlib/DEFLATE convention):
+//! the first bit written is the least-significant bit of byte 0. This allows
+//! table-driven decoding by masking the low bits of the peek window.
+
+mod reader;
+mod writer;
+
+pub use reader::BitReader;
+pub use writer::BitWriter;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0b1, 1);
+        w.write_bits(0xFFFF, 16);
+        w.write_bits(0, 4);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(1).unwrap(), 0b1);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        assert_eq!(r.read_bits(4).unwrap(), 0);
+    }
+
+    #[test]
+    fn lsb_first_layout() {
+        let mut w = BitWriter::new();
+        w.write_bits(1, 1); // bit 0 of byte 0
+        w.write_bits(0, 1);
+        w.write_bits(1, 1); // bit 2
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b0000_0101]);
+    }
+
+    #[test]
+    fn roundtrip_random_codes() {
+        let mut rng = Rng::new(99);
+        let items: Vec<(u32, u32)> = (0..10_000)
+            .map(|_| {
+                let n = 1 + (rng.below(32) as u32);
+                let v = (rng.next_u64() as u32) & ((1u64 << n) - 1) as u32;
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn peek_consume_matches_read() {
+        let mut w = BitWriter::new();
+        for i in 0..100u32 {
+            w.write_bits(i & 0x3F, 6);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..100u32 {
+            let peeked = r.peek_bits(6);
+            r.consume(6).unwrap();
+            assert_eq!(peeked, i & 0x3F);
+        }
+    }
+
+    #[test]
+    fn peek_past_end_zero_padded() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        // Peek longer than available: upper bits must read as 0, not garbage.
+        assert_eq!(r.peek_bits(16) & 0b11, 0b11);
+    }
+
+    #[test]
+    fn read_past_end_errors() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xAB, 8);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bits(8).is_ok());
+        assert!(r.read_bits(1).is_err());
+    }
+
+    #[test]
+    fn bits_written_tracks() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bits_written(), 0);
+        w.write_bits(0, 5);
+        w.write_bits(0, 9);
+        assert_eq!(w.bits_written(), 14);
+        assert_eq!(w.finish().len(), 2); // ceil(14/8)
+    }
+
+    #[test]
+    fn zero_width_write_is_noop() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xFFFF_FFFF, 0);
+        w.write_bits(1, 1);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![1]);
+    }
+}

@@ -1,0 +1,93 @@
+//! LSB-first bit reader with a buffered peek window.
+
+use crate::error::{Error, Result};
+
+/// Reads LSB-first bit streams produced by [`super::BitWriter`].
+///
+/// Maintains a 64-bit refill window so the Huffman decode loop can
+/// `peek_bits(MAX_CODE_LEN)` + `consume(len)` without per-bit branching.
+/// Peeking past the end of the stream yields zero bits (the decoder's
+/// symbol-count bound prevents over-reads from being interpreted).
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next byte index to refill from.
+    pos: usize,
+    /// Bit window; low `avail` bits are valid.
+    window: u64,
+    avail: u32,
+}
+
+impl<'a> BitReader<'a> {
+    /// Wrap a byte slice.
+    pub fn new(data: &'a [u8]) -> Self {
+        let mut r = BitReader { data, pos: 0, window: 0, avail: 0 };
+        r.refill();
+        r
+    }
+
+    /// Top up the window to >= 56 valid bits (or until input exhausted).
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path: pull 8 bytes at once when possible.
+        if self.avail <= 32 && self.pos + 8 <= self.data.len() {
+            let chunk = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            self.window |= chunk << self.avail;
+            let take = (63 - self.avail) / 8; // whole bytes that fit
+            self.pos += take as usize;
+            self.avail += take * 8;
+            return;
+        }
+        while self.avail <= 56 && self.pos < self.data.len() {
+            self.window |= (self.data[self.pos] as u64) << self.avail;
+            self.pos += 1;
+            self.avail += 8;
+        }
+    }
+
+    /// Peek the next `n <= 32` bits without consuming. Bits past the end of
+    /// the stream read as zero.
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        if self.avail < n {
+            self.refill();
+        }
+        (self.window & ((1u64 << n) - 1)) as u32
+    }
+
+    /// Consume `n` bits previously peeked. Errors if the stream has fewer
+    /// than `n` bits remaining.
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> Result<()> {
+        if self.avail < n {
+            self.refill();
+            if self.avail < n {
+                return Err(Error::Corrupt("bitstream exhausted".into()));
+            }
+        }
+        self.window >>= n;
+        self.avail -= n;
+        Ok(())
+    }
+
+    /// Read and consume `n <= 32` bits.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u32> {
+        if n == 0 {
+            return Ok(0);
+        }
+        let v = self.peek_bits(n);
+        if self.avail < n {
+            return Err(Error::Corrupt("bitstream exhausted".into()));
+        }
+        self.window >>= n;
+        self.avail -= n;
+        Ok(v)
+    }
+
+    /// Number of bits still readable (valid window + unread bytes).
+    pub fn bits_remaining(&self) -> u64 {
+        self.avail as u64 + 8 * (self.data.len() - self.pos) as u64
+    }
+}

@@ -1,0 +1,71 @@
+//! LSB-first bit writer.
+
+/// Packs variable-width codes into bytes, LSB-first (DEFLATE bit order).
+///
+/// The writer accumulates bits in a 64-bit register and spills whole bytes,
+/// so a `write_bits` call is branch-light; this is on the codec encode hot
+/// path (one call per symbol).
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    /// Bit accumulator; low `nbits` bits are pending.
+    acc: u64,
+    /// Number of pending bits in `acc` (always < 8 after `flush_bytes`).
+    nbits: u32,
+    total_bits: u64,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New writer with reserved output capacity (in bytes).
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { out: Vec::with_capacity(bytes), acc: 0, nbits: 0, total_bits: 0 }
+    }
+
+    /// Write the low `n` bits of `value` (`n <= 32`). Bits above `n` in
+    /// `value` are ignored.
+    #[inline]
+    pub fn write_bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 32);
+        if n == 0 {
+            return;
+        }
+        let v = (value as u64) & ((1u64 << n) - 1);
+        self.acc |= v << self.nbits;
+        self.nbits += n;
+        self.total_bits += n as u64;
+        // Spill whole 32-bit words (one capacity check per ~4 symbols
+        // instead of per byte — §Perf encode hot path). nbits stays < 32,
+        // so acc never overflows (32 + 32 ≤ 64).
+        if self.nbits >= 32 {
+            self.out.extend_from_slice(&(self.acc as u32).to_le_bytes());
+            self.acc >>= 32;
+            self.nbits -= 32;
+        }
+    }
+
+    /// Total number of bits written so far.
+    #[inline]
+    pub fn bits_written(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Current output length in whole bytes once finished.
+    pub fn byte_len(&self) -> usize {
+        self.out.len() + (self.nbits as usize).div_ceil(8)
+    }
+
+    /// Flush trailing bytes (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits = self.nbits.saturating_sub(8);
+        }
+        self.out
+    }
+}

@@ -1,0 +1,436 @@
+//! Delta-checkpoint store (paper §3.1 / §4.1).
+//!
+//! Checkpoints arrive as named tensor sets. The first checkpoint (and every
+//! `anchor_interval`-th) is stored **full**; the rest are stored as XOR
+//! deltas against their predecessor, compressed with the exponent/mantissa
+//! codec. Reconstruction walks the chain from the nearest anchor — exactly
+//! how the Amber-checkpoint experiment of Fig 6 consumes the format.
+//!
+//! Storage is a directory of `.zlp` archives plus a plain-text manifest, so
+//! the store is inspectable with a text editor and robust to partial state.
+
+use crate::codec::{
+    compress_delta, compress_tensor, decompress_delta, decompress_tensor, CompressOptions,
+};
+use crate::container::{Archive, TensorMeta};
+use crate::error::{Error, Result};
+use crate::formats::StreamKind;
+use std::path::{Path, PathBuf};
+
+/// How a checkpoint is stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptKind {
+    /// Self-contained.
+    Full,
+    /// XOR delta against checkpoint `base`.
+    Delta {
+        /// Id of the checkpoint this delta is relative to.
+        base: usize,
+    },
+}
+
+/// Manifest entry for one stored checkpoint.
+#[derive(Clone, Debug)]
+pub struct CkptRecord {
+    /// Sequential checkpoint id (0-based).
+    pub id: usize,
+    /// Full or delta.
+    pub kind: CkptKind,
+    /// Archive file name within the store directory.
+    pub file: String,
+    /// Original byte size across tensors.
+    pub original_bytes: u64,
+    /// Encoded byte size across tensors.
+    pub encoded_bytes: u64,
+    /// Aggregate exponent-stream ratio.
+    pub exp_ratio: f64,
+    /// Aggregate sign|mantissa-stream ratio.
+    pub sm_ratio: f64,
+}
+
+impl CkptRecord {
+    /// Overall ratio.
+    pub fn ratio(&self) -> f64 {
+        if self.original_bytes == 0 {
+            1.0
+        } else {
+            self.encoded_bytes as f64 / self.original_bytes as f64
+        }
+    }
+}
+
+/// A named tensor: (name, little-endian bytes).
+pub type NamedTensor = (String, Vec<u8>);
+
+/// Directory-backed delta-checkpoint store.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    opts: CompressOptions,
+    /// Store a full checkpoint every N appends (anchors bound chain length).
+    anchor_interval: usize,
+    records: Vec<CkptRecord>,
+}
+
+impl CheckpointStore {
+    /// Create (or reuse) a store at `dir`.
+    pub fn create(dir: &Path, opts: CompressOptions, anchor_interval: usize) -> Result<Self> {
+        if anchor_interval == 0 {
+            return Err(Error::Checkpoint("anchor_interval must be >= 1".into()));
+        }
+        std::fs::create_dir_all(dir)?;
+        Ok(CheckpointStore { dir: dir.to_path_buf(), opts, anchor_interval, records: Vec::new() })
+    }
+
+    /// Number of checkpoints stored.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True if no checkpoints stored.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Manifest records (Fig 6 rows come from these).
+    pub fn records(&self) -> &[CkptRecord] {
+        &self.records
+    }
+
+    /// Append a checkpoint; returns its manifest record.
+    ///
+    /// Tensor names/lengths must match the previous checkpoint exactly for
+    /// delta storage; mismatches force a full checkpoint.
+    pub fn append(&mut self, tensors: &[NamedTensor]) -> Result<&CkptRecord> {
+        let id = self.records.len();
+        let make_full = id % self.anchor_interval == 0
+            || self.records.is_empty()
+            || !self.shapes_match(tensors);
+
+        let mut archive = Archive::new();
+        let mut exp = (0u64, 0u64);
+        let mut sm = (0u64, 0u64);
+        let kind = if make_full {
+            for (name, data) in tensors {
+                let blob = compress_tensor(data, &self.opts)?;
+                accumulate(&blob, &mut exp, &mut sm);
+                archive
+                    .insert(TensorMeta { name: clean(name), shape: vec![data.len() as u64] }, blob);
+            }
+            CkptKind::Full
+        } else {
+            let base_id = id - 1;
+            let mut base = self.load(base_id)?;
+            base.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut sorted: Vec<&NamedTensor> = tensors.iter().collect();
+            sorted.sort_by(|a, b| clean(&a.0).cmp(&clean(&b.0)));
+            for ((name, data), (bname, bdata)) in sorted.iter().map(|t| (&t.0, &t.1)).zip(&base) {
+                if &clean(name) != bname {
+                    return Err(Error::Checkpoint(format!(
+                        "tensor name mismatch: {name} vs {bname}"
+                    )));
+                }
+                let blob = compress_delta(data, bdata, &self.opts)?;
+                accumulate(&blob, &mut exp, &mut sm);
+                archive
+                    .insert(TensorMeta { name: clean(name), shape: vec![data.len() as u64] }, blob);
+            }
+            CkptKind::Delta { base: base_id }
+        };
+
+        let file = format!("ckpt_{id:05}.zlp");
+        archive.save(&self.dir.join(&file))?;
+        let record = CkptRecord {
+            id,
+            kind,
+            file,
+            original_bytes: archive.total_original(),
+            encoded_bytes: archive.total_encoded(),
+            exp_ratio: ratio(exp),
+            sm_ratio: ratio(sm),
+        };
+        self.records.push(record);
+        self.save_manifest()?;
+        Ok(self.records.last().unwrap())
+    }
+
+    /// Load checkpoint `id`, reconstructing through the delta chain.
+    /// Returned tensors are sorted by name.
+    pub fn load(&self, id: usize) -> Result<Vec<NamedTensor>> {
+        let rec = self
+            .records
+            .get(id)
+            .ok_or_else(|| Error::Checkpoint(format!("unknown checkpoint {id}")))?;
+        let archive = Archive::load(&self.dir.join(&rec.file))?;
+        match rec.kind {
+            CkptKind::Full => {
+                let mut out = Vec::new();
+                for (meta, blob) in archive.iter() {
+                    out.push((meta.name.clone(), decompress_tensor(blob)?));
+                }
+                Ok(out)
+            }
+            CkptKind::Delta { base } => {
+                if base >= id {
+                    return Err(Error::Checkpoint("delta chain loops forward".into()));
+                }
+                let base_tensors = self.load(base)?;
+                let mut out = Vec::new();
+                for ((meta, blob), (bname, bdata)) in archive.iter().zip(&base_tensors) {
+                    if &meta.name != bname {
+                        return Err(Error::Checkpoint(format!(
+                            "chain tensor mismatch: {} vs {}",
+                            meta.name, bname
+                        )));
+                    }
+                    out.push((meta.name.clone(), decompress_delta(blob, bdata)?));
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Verify that checkpoint `id` reconstructs to exactly `tensors`.
+    pub fn verify(&self, id: usize, tensors: &[NamedTensor]) -> Result<bool> {
+        let loaded = self.load(id)?;
+        if loaded.len() != tensors.len() {
+            return Ok(false);
+        }
+        let mut sorted: Vec<(String, &Vec<u8>)> =
+            tensors.iter().map(|(n, d)| (clean(n), d)).collect();
+        sorted.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(loaded.iter().zip(&sorted).all(|((ln, ld), (rn, rd))| ln == rn && &ld == rd))
+    }
+
+    fn shapes_match(&self, tensors: &[NamedTensor]) -> bool {
+        match self.records.last() {
+            None => false,
+            Some(rec) => match Archive::load(&self.dir.join(&rec.file)) {
+                Ok(a) => {
+                    a.len() == tensors.len()
+                        && tensors.iter().all(|(name, data)| {
+                            a.get(&clean(name))
+                                .map(|(_, b)| b.original_len == data.len())
+                                .unwrap_or(false)
+                        })
+                }
+                Err(_) => false,
+            },
+        }
+    }
+
+    fn save_manifest(&self) -> Result<()> {
+        let mut text = String::from("# zipnn-lp checkpoint manifest v1\n");
+        for r in &self.records {
+            let kind = match r.kind {
+                CkptKind::Full => "full -".to_string(),
+                CkptKind::Delta { base } => format!("delta {base}"),
+            };
+            text.push_str(&format!(
+                "{} {kind} {} {} {} {:.6} {:.6}\n",
+                r.id, r.file, r.original_bytes, r.encoded_bytes, r.exp_ratio, r.sm_ratio
+            ));
+        }
+        std::fs::write(self.dir.join("manifest.txt"), text)?;
+        Ok(())
+    }
+
+    /// Re-open an existing store from its manifest.
+    pub fn open(dir: &Path, opts: CompressOptions, anchor_interval: usize) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let mut store = Self::create(dir, opts, anchor_interval)?;
+        if !manifest.exists() {
+            return Ok(store);
+        }
+        let text = std::fs::read_to_string(manifest)?;
+        for line in text.lines().skip(1) {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 8 {
+                return Err(bad(line));
+            }
+            let id: usize = parts[0].parse().map_err(|_| bad(line))?;
+            let kind = match parts[1] {
+                "full" => CkptKind::Full,
+                "delta" => CkptKind::Delta { base: parts[2].parse().map_err(|_| bad(line))? },
+                _ => return Err(bad(line)),
+            };
+            store.records.push(CkptRecord {
+                id,
+                kind,
+                file: parts[3].to_string(),
+                original_bytes: parts[4].parse().map_err(|_| bad(line))?,
+                encoded_bytes: parts[5].parse().map_err(|_| bad(line))?,
+                exp_ratio: parts[6].parse().map_err(|_| bad(line))?,
+                sm_ratio: parts[7].parse().map_err(|_| bad(line))?,
+            });
+        }
+        Ok(store)
+    }
+}
+
+fn bad(line: &str) -> Error {
+    Error::Checkpoint(format!("bad manifest line: {line}"))
+}
+
+fn clean(name: &str) -> String {
+    name.split_whitespace().collect::<Vec<_>>().join("_")
+}
+
+fn ratio(acc: (u64, u64)) -> f64 {
+    if acc.0 == 0 {
+        1.0
+    } else {
+        acc.1 as f64 / acc.0 as f64
+    }
+}
+
+fn accumulate(blob: &crate::codec::CompressedBlob, exp: &mut (u64, u64), sm: &mut (u64, u64)) {
+    if let Some(s) = blob.stat(StreamKind::Exponent) {
+        exp.0 += s.original_bytes;
+        exp.1 += s.compressed_bytes;
+    }
+    if let Some(s) = blob.stat(StreamKind::SignMantissa) {
+        sm.0 += s.original_bytes;
+        sm.1 += s.compressed_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FloatFormat;
+    use crate::synthetic;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("zipnn_lp_ckpt_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn opts() -> CompressOptions {
+        CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(8192)
+    }
+
+    fn training_run(n_ckpts: usize, n_params: usize, seed: u64) -> Vec<Vec<NamedTensor>> {
+        let mut out = Vec::new();
+        let mut w1 = synthetic::gaussian_bf16_bytes(n_params, 0.02, seed);
+        let mut w2 = synthetic::gaussian_bf16_bytes(n_params / 2, 0.05, seed + 1);
+        for step in 0..n_ckpts {
+            // Shrinking update magnitude = convergence.
+            let p = 0.5 / (step as f64 + 1.0);
+            w1 = synthetic::perturb_bf16_bytes(&w1, 0.02, p, seed + 10 + step as u64);
+            w2 = synthetic::perturb_bf16_bytes(&w2, 0.02, p, seed + 20 + step as u64);
+            out.push(vec![
+                ("layer.w1".to_string(), w1.clone()),
+                ("layer.w2".to_string(), w2.clone()),
+            ]);
+        }
+        out
+    }
+
+    #[test]
+    fn append_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let mut store = CheckpointStore::create(&dir, opts(), 100).unwrap();
+        let ckpts = training_run(4, 4000, 1);
+        for c in &ckpts {
+            store.append(c).unwrap();
+        }
+        for (i, c) in ckpts.iter().enumerate() {
+            assert!(store.verify(i, c).unwrap(), "ckpt {i}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn first_is_full_rest_are_deltas() {
+        let dir = tmpdir("kinds");
+        let mut store = CheckpointStore::create(&dir, opts(), 100).unwrap();
+        for c in training_run(3, 2000, 2) {
+            store.append(&c).unwrap();
+        }
+        assert_eq!(store.records()[0].kind, CkptKind::Full);
+        assert_eq!(store.records()[1].kind, CkptKind::Delta { base: 0 });
+        assert_eq!(store.records()[2].kind, CkptKind::Delta { base: 1 });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn anchor_interval_breaks_chains() {
+        let dir = tmpdir("anchor");
+        let mut store = CheckpointStore::create(&dir, opts(), 2).unwrap();
+        let ckpts = training_run(5, 1000, 3);
+        for c in &ckpts {
+            store.append(c).unwrap();
+        }
+        assert_eq!(store.records()[0].kind, CkptKind::Full);
+        assert_eq!(store.records()[1].kind, CkptKind::Delta { base: 0 });
+        assert_eq!(store.records()[2].kind, CkptKind::Full);
+        assert_eq!(store.records()[3].kind, CkptKind::Delta { base: 2 });
+        assert!(store.verify(4, &ckpts[4]).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_ratios_improve_as_training_converges() {
+        let dir = tmpdir("converge");
+        let mut store = CheckpointStore::create(&dir, opts(), 100).unwrap();
+        for c in training_run(6, 20_000, 4) {
+            store.append(&c).unwrap();
+        }
+        let recs = store.records();
+        // Later deltas must compress better than early ones (Fig 6 trend).
+        let early = recs[1].ratio();
+        let late = recs[5].ratio();
+        assert!(late < early, "late {late} !< early {early}");
+        // Exponent always compresses much better than mantissa on deltas.
+        for r in &recs[1..] {
+            assert!(r.exp_ratio < r.sm_ratio, "{r:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_change_forces_full() {
+        let dir = tmpdir("shapes");
+        let mut store = CheckpointStore::create(&dir, opts(), 100).unwrap();
+        store
+            .append(&[("w".to_string(), synthetic::gaussian_bf16_bytes(1000, 0.02, 5))])
+            .unwrap();
+        store
+            .append(&[("w".to_string(), synthetic::gaussian_bf16_bytes(2000, 0.02, 6))])
+            .unwrap();
+        assert_eq!(store.records()[1].kind, CkptKind::Full);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_from_manifest() {
+        let dir = tmpdir("reopen");
+        let ckpts = training_run(3, 1500, 7);
+        {
+            let mut store = CheckpointStore::create(&dir, opts(), 100).unwrap();
+            for c in &ckpts {
+                store.append(c).unwrap();
+            }
+        }
+        let store = CheckpointStore::open(&dir, opts(), 100).unwrap();
+        assert_eq!(store.len(), 3);
+        assert!(store.verify(2, &ckpts[2]).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        let dir = tmpdir("unknown");
+        let store = CheckpointStore::create(&dir, opts(), 10).unwrap();
+        assert!(store.load(0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_anchor_interval_rejected() {
+        let dir = tmpdir("zero");
+        assert!(CheckpointStore::create(&dir, opts(), 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

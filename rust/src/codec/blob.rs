@@ -1,0 +1,237 @@
+//! The serialized form of one compressed tensor and its statistics.
+
+use super::Strategy;
+use crate::error::{Error, Result};
+use crate::formats::{FloatFormat, StreamKind};
+use crate::util::varint;
+
+/// Magic prefix of a compressed-tensor blob.
+pub const BLOB_MAGIC: &[u8; 4] = b"ZLPT";
+/// Blob wire version.
+pub const BLOB_VERSION: u16 = 1;
+
+/// Per-chunk directory entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkInfo {
+    /// Original (raw) byte length of the chunk.
+    pub raw_len: usize,
+    /// Encoded byte length (framing included).
+    pub enc_len: usize,
+    /// CRC32 of the raw chunk bytes.
+    pub crc32: u32,
+}
+
+/// Per-component-stream aggregate statistics, for the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamStat {
+    /// Component kind.
+    pub kind: StreamKind,
+    /// Bytes this component occupies in the original tensor.
+    pub original_bytes: u64,
+    /// Encoded bytes (tables + payloads).
+    pub compressed_bytes: u64,
+}
+
+impl StreamStat {
+    /// compressed / original (1.0 when original is empty).
+    pub fn ratio(&self) -> f64 {
+        if self.original_bytes == 0 {
+            1.0
+        } else {
+            self.compressed_bytes as f64 / self.original_bytes as f64
+        }
+    }
+}
+
+/// A compressed tensor: header + chunk directory + chunk payloads.
+///
+/// The directory enables the paper's §3.1 requirements: random access
+/// (chunk offsets are the running sum of `enc_len`) and parallel decode.
+#[derive(Clone, Debug)]
+pub struct CompressedBlob {
+    /// Strategy used.
+    pub strategy: Strategy,
+    /// Element format.
+    pub format: FloatFormat,
+    /// Original tensor length in bytes.
+    pub original_len: usize,
+    /// Chunk size used at compression time.
+    pub chunk_size: usize,
+    /// Chunk directory.
+    pub chunks: Vec<ChunkInfo>,
+    /// Concatenated encoded chunks.
+    pub data: Vec<u8>,
+    /// Per-stream statistics (not serialized; recomputed on demand).
+    pub stats: Vec<StreamStat>,
+}
+
+impl CompressedBlob {
+    /// Total encoded length: header + directory + data.
+    pub fn encoded_len(&self) -> usize {
+        self.serialize_header().len() + self.data.len()
+    }
+
+    /// Compression ratio (encoded / original).
+    pub fn ratio(&self) -> f64 {
+        if self.original_len == 0 {
+            1.0
+        } else {
+            self.encoded_len() as f64 / self.original_len as f64
+        }
+    }
+
+    /// Stat for one component, if present.
+    pub fn stat(&self, kind: StreamKind) -> Option<&StreamStat> {
+        self.stats.iter().find(|s| s.kind == kind)
+    }
+
+    /// Byte offset of chunk `i` within `data`.
+    pub fn chunk_offset(&self, i: usize) -> usize {
+        self.chunks[..i].iter().map(|c| c.enc_len).sum()
+    }
+
+    fn serialize_header(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.chunks.len() * 12);
+        out.extend_from_slice(BLOB_MAGIC);
+        out.extend_from_slice(&BLOB_VERSION.to_le_bytes());
+        out.push(self.strategy.wire_id());
+        out.push(self.format.wire_id());
+        varint::write_usize(&mut out, self.original_len);
+        varint::write_usize(&mut out, self.chunk_size);
+        varint::write_usize(&mut out, self.chunks.len());
+        for c in &self.chunks {
+            varint::write_usize(&mut out, c.raw_len);
+            varint::write_usize(&mut out, c.enc_len);
+            out.extend_from_slice(&c.crc32.to_le_bytes());
+        }
+        out
+    }
+
+    /// Serialize the full blob (header + data).
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = self.serialize_header();
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    /// Parse a blob from bytes.
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 8 || &buf[..4] != BLOB_MAGIC {
+            return Err(Error::Corrupt("bad blob magic".into()));
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != BLOB_VERSION {
+            return Err(Error::Corrupt(format!("unsupported blob version {version}")));
+        }
+        let strategy = Strategy::from_wire_id(buf[6])
+            .ok_or_else(|| Error::Corrupt(format!("unknown strategy {}", buf[6])))?;
+        let format = FloatFormat::from_wire_id(buf[7])?;
+        let mut pos = 8;
+        let original_len = varint::read_usize(buf, &mut pos)?;
+        let chunk_size = varint::read_usize(buf, &mut pos)?;
+        let n_chunks = varint::read_usize(buf, &mut pos)?;
+        // Defensive bound: a chunk directory cannot be larger than the blob.
+        if n_chunks > buf.len() {
+            return Err(Error::Corrupt("chunk count exceeds blob size".into()));
+        }
+        let mut chunks = Vec::with_capacity(n_chunks);
+        let mut total_enc = 0usize;
+        for _ in 0..n_chunks {
+            let raw_len = varint::read_usize(buf, &mut pos)?;
+            let enc_len = varint::read_usize(buf, &mut pos)?;
+            if pos + 4 > buf.len() {
+                return Err(Error::Corrupt("chunk directory truncated".into()));
+            }
+            let crc32 = u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]);
+            pos += 4;
+            total_enc += enc_len;
+            chunks.push(ChunkInfo { raw_len, enc_len, crc32 });
+        }
+        if pos + total_enc != buf.len() {
+            return Err(Error::Corrupt(format!(
+                "blob size mismatch: directory says {} data bytes, have {}",
+                total_enc,
+                buf.len() - pos
+            )));
+        }
+        Ok(CompressedBlob {
+            strategy,
+            format,
+            original_len,
+            chunk_size,
+            chunks,
+            data: buf[pos..].to_vec(),
+            stats: Vec::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_blob() -> CompressedBlob {
+        CompressedBlob {
+            strategy: Strategy::ExpMantissa,
+            format: FloatFormat::Bf16,
+            original_len: 1000,
+            chunk_size: 512,
+            chunks: vec![
+                ChunkInfo { raw_len: 512, enc_len: 3, crc32: 0xAABBCCDD },
+                ChunkInfo { raw_len: 488, enc_len: 2, crc32: 0x11223344 },
+            ],
+            data: vec![1, 2, 3, 4, 5],
+            stats: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let b = sample_blob();
+        let ser = b.serialize();
+        let d = CompressedBlob::deserialize(&ser).unwrap();
+        assert_eq!(d.strategy, b.strategy);
+        assert_eq!(d.format, b.format);
+        assert_eq!(d.original_len, b.original_len);
+        assert_eq!(d.chunks, b.chunks);
+        assert_eq!(d.data, b.data);
+    }
+
+    #[test]
+    fn blob_rejects_bad_magic() {
+        let mut ser = sample_blob().serialize();
+        ser[0] = b'X';
+        assert!(CompressedBlob::deserialize(&ser).is_err());
+    }
+
+    #[test]
+    fn blob_rejects_size_mismatch() {
+        let mut ser = sample_blob().serialize();
+        ser.push(0); // extra trailing byte
+        assert!(CompressedBlob::deserialize(&ser).is_err());
+        let ser2 = sample_blob().serialize();
+        assert!(CompressedBlob::deserialize(&ser2[..ser2.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn blob_rejects_bad_version() {
+        let mut ser = sample_blob().serialize();
+        ser[4] = 0xFF;
+        assert!(CompressedBlob::deserialize(&ser).is_err());
+    }
+
+    #[test]
+    fn chunk_offsets() {
+        let b = sample_blob();
+        assert_eq!(b.chunk_offset(0), 0);
+        assert_eq!(b.chunk_offset(1), 3);
+    }
+
+    #[test]
+    fn stream_stat_ratio() {
+        let s = StreamStat { kind: StreamKind::Exponent, original_bytes: 100, compressed_bytes: 25 };
+        assert_eq!(s.ratio(), 0.25);
+        let z = StreamStat { kind: StreamKind::Exponent, original_bytes: 0, compressed_bytes: 0 };
+        assert_eq!(z.ratio(), 1.0);
+    }
+}

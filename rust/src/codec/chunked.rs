@@ -1,0 +1,397 @@
+//! Chunked tensor compression: the public `compress_tensor` /
+//! `decompress_tensor` entry points.
+//!
+//! Chunks are independent (own Huffman tables, own CRC), which provides the
+//! paper's §3.1 "random access and parallel decoding". Encoding fans out
+//! over `opts.threads` std threads; chunk outputs are stitched in order.
+
+use super::blob::{ChunkInfo, CompressedBlob, StreamStat};
+use super::stream_codec::{decode_stream, encode_stream, EncodedStream};
+use super::{CompressOptions, Strategy};
+use crate::error::{Error, Result};
+use crate::formats::{merge_streams, split_streams, FloatFormat, StreamKind};
+use crate::util::crc32::crc32;
+
+/// Element alignment required so chunk boundaries never split an element
+/// (or an element pair for E4M3 / a 4-element FP4 group).
+fn chunk_alignment(format: FloatFormat) -> usize {
+    match format {
+        FloatFormat::Fp32 => 4,
+        FloatFormat::Fp16 | FloatFormat::Bf16 => 2,
+        FloatFormat::Fp8E4M3 => 2, // keep Fig 7 pairs intact
+        FloatFormat::Fp8E5M2 => 1,
+        FloatFormat::Fp4E2M1 => 2, // 4 elements = 2 bytes per regroup unit
+    }
+}
+
+/// Encode one chunk: split → per-stream encode → frame.
+fn encode_chunk(raw: &[u8], opts: &CompressOptions) -> Result<(Vec<u8>, Vec<StreamStat>)> {
+    let set = split_streams(opts.format, raw)?;
+    let mut out = Vec::with_capacity(raw.len() / 2);
+    out.push(set.streams.len() as u8);
+    let mut stats = Vec::with_capacity(set.streams.len());
+    for stream in &set.streams {
+        let gate = if opts.exponent_only && stream.kind != StreamKind::Exponent {
+            0.0 // force raw
+        } else {
+            opts.gate_threshold
+        };
+        let enc = encode_stream(stream, opts.len_limit, gate, None)?;
+        stats.push(StreamStat {
+            kind: stream.kind,
+            original_bytes: stream.native_size_bits().div_ceil(8),
+            compressed_bytes: enc.encoded_len() as u64,
+        });
+        enc.write_to(&mut out);
+    }
+    Ok((out, stats))
+}
+
+/// Decode one encoded chunk back to raw bytes.
+pub(crate) fn decode_chunk_bytes(
+    enc: &[u8],
+    raw_len: usize,
+    format: FloatFormat,
+) -> Result<Vec<u8>> {
+    let mut pos = 0usize;
+    if enc.is_empty() {
+        return Err(Error::Corrupt("empty chunk".into()));
+    }
+    let n_streams = enc[pos] as usize;
+    pos += 1;
+    let mut set = crate::formats::StreamSet {
+        streams: Vec::with_capacity(n_streams),
+        n_elements: 0,
+        original_bytes: raw_len,
+    };
+    for _ in 0..n_streams {
+        let frame = EncodedStream::read_from(enc, &mut pos)?;
+        let kind = StreamKind::from_wire_id(frame.kind_id)
+            .ok_or_else(|| Error::Corrupt(format!("unknown stream kind {}", frame.kind_id)))?;
+        let bytes = decode_stream(&frame, None)?;
+        set.streams.push(crate::formats::Stream::new(kind, bytes, frame.native_bits));
+    }
+    if pos != enc.len() {
+        return Err(Error::Corrupt("trailing bytes after chunk streams".into()));
+    }
+    // Element count from raw_len (alignment guarantees exactness).
+    set.n_elements = match format {
+        FloatFormat::Fp32 => raw_len / 4,
+        FloatFormat::Fp16 | FloatFormat::Bf16 => raw_len / 2,
+        FloatFormat::Fp8E4M3 | FloatFormat::Fp8E5M2 => raw_len,
+        FloatFormat::Fp4E2M1 => raw_len * 2,
+    };
+    merge_streams(format, &set)
+}
+
+/// Compress a tensor byte buffer (strategy [`Strategy::ExpMantissa`]).
+pub fn compress_tensor(data: &[u8], opts: &CompressOptions) -> Result<CompressedBlob> {
+    compress_with_strategy(data, opts, Strategy::ExpMantissa)
+}
+
+/// Internal: compress with an explicit strategy tag (delta reuses this).
+pub(crate) fn compress_with_strategy(
+    data: &[u8],
+    opts: &CompressOptions,
+    strategy: Strategy,
+) -> Result<CompressedBlob> {
+    let align = chunk_alignment(opts.format);
+    if opts.chunk_size == 0 {
+        return Err(Error::InvalidInput("chunk_size must be positive".into()));
+    }
+    let chunk_size = opts.chunk_size.div_ceil(align) * align;
+    let ranges: Vec<(usize, usize)> = (0..data.len())
+        .step_by(chunk_size.max(1))
+        .map(|start| (start, (start + chunk_size).min(data.len())))
+        .collect();
+
+    let n_threads = opts.threads.max(1).min(ranges.len().max(1));
+    let results: Vec<Result<(Vec<u8>, Vec<StreamStat>)>> = if n_threads <= 1 || ranges.len() <= 1 {
+        ranges.iter().map(|&(s, e)| encode_chunk(&data[s..e], opts)).collect()
+    } else {
+        // Static round-robin split across scoped threads.
+        let mut slots: Vec<Option<Result<(Vec<u8>, Vec<StreamStat>)>>> =
+            (0..ranges.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let chunks_of_work: Vec<Vec<usize>> = (0..n_threads)
+                .map(|t| (t..ranges.len()).step_by(n_threads).collect())
+                .collect();
+            let mut handles = Vec::new();
+            for work in chunks_of_work {
+                let ranges = &ranges;
+                let data = &data;
+                handles.push(scope.spawn(move || {
+                    work.into_iter()
+                        .map(|i| {
+                            let (s, e) = ranges[i];
+                            (i, encode_chunk(&data[s..e], opts))
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, r) in h.join().expect("encode worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|s| s.expect("chunk not encoded")).collect()
+    };
+
+    let mut chunks = Vec::with_capacity(ranges.len());
+    let mut blob_data = Vec::new();
+    let mut agg: Vec<StreamStat> = Vec::new();
+    for (&(s, e), res) in ranges.iter().zip(results) {
+        let (enc, stats) = res?;
+        chunks.push(ChunkInfo { raw_len: e - s, enc_len: enc.len(), crc32: crc32(&data[s..e]) });
+        blob_data.extend_from_slice(&enc);
+        for st in stats {
+            match agg.iter_mut().find(|a| a.kind == st.kind) {
+                Some(a) => {
+                    a.original_bytes += st.original_bytes;
+                    a.compressed_bytes += st.compressed_bytes;
+                }
+                None => agg.push(st),
+            }
+        }
+    }
+    Ok(CompressedBlob {
+        strategy,
+        format: opts.format,
+        original_len: data.len(),
+        chunk_size,
+        chunks,
+        data: blob_data,
+        stats: agg,
+    })
+}
+
+/// Decompress a blob produced by [`compress_tensor`]. Verifies every
+/// chunk's CRC32.
+pub fn decompress_tensor(blob: &CompressedBlob) -> Result<Vec<u8>> {
+    decompress_tensor_threads(blob, 1)
+}
+
+/// Chunk-parallel decompression (the paper's §3.1 "parallel decoding").
+/// `threads = 1` is the serial path; outputs are identical either way.
+pub fn decompress_tensor_threads(blob: &CompressedBlob, threads: usize) -> Result<Vec<u8>> {
+    if blob.strategy == Strategy::Delta {
+        return Err(Error::InvalidInput(
+            "delta blob requires a base: use decompress_delta".into(),
+        ));
+    }
+    // Precompute chunk extents.
+    let mut extents = Vec::with_capacity(blob.chunks.len());
+    let mut off = 0usize;
+    for c in &blob.chunks {
+        if off + c.enc_len > blob.data.len() {
+            return Err(Error::Corrupt("chunk data truncated".into()));
+        }
+        extents.push((off, c.enc_len, c.raw_len, c.crc32));
+        off += c.enc_len;
+    }
+
+    let decode_one = |i: usize| -> Result<Vec<u8>> {
+        let (off, enc_len, raw_len, crc) = extents[i];
+        let raw = decode_chunk_bytes(&blob.data[off..off + enc_len], raw_len, blob.format)?;
+        let actual = crc32(&raw);
+        if actual != crc {
+            return Err(Error::ChecksumMismatch { chunk: i, expected: crc, actual });
+        }
+        Ok(raw)
+    };
+
+    let n_threads = threads.max(1).min(extents.len().max(1));
+    let mut out = Vec::with_capacity(blob.original_len);
+    if n_threads <= 1 || extents.len() <= 1 {
+        for i in 0..extents.len() {
+            out.extend_from_slice(&decode_one(i)?);
+        }
+    } else {
+        let mut slots: Vec<Option<Result<Vec<u8>>>> =
+            (0..extents.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..n_threads {
+                let work: Vec<usize> = (t..extents.len()).step_by(n_threads).collect();
+                let decode_one = &decode_one;
+                handles.push(scope.spawn(move || {
+                    work.into_iter().map(|i| (i, decode_one(i))).collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, r) in h.join().expect("decode worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        for s in slots {
+            out.extend_from_slice(&s.expect("chunk not decoded")?);
+        }
+    }
+    if out.len() != blob.original_len {
+        return Err(Error::Corrupt(format!(
+            "decompressed {} bytes, expected {}",
+            out.len(),
+            blob.original_len
+        )));
+    }
+    Ok(out)
+}
+
+/// Random access: decompress only chunk `index` (§3.1).
+pub fn decompress_chunk(blob: &CompressedBlob, index: usize) -> Result<Vec<u8>> {
+    let c = blob
+        .chunks
+        .get(index)
+        .ok_or_else(|| Error::InvalidInput(format!("chunk {index} out of range")))?;
+    let off = blob.chunk_offset(index);
+    let raw = decode_chunk_bytes(&blob.data[off..off + c.enc_len], c.raw_len, blob.format)?;
+    let actual = crc32(&raw);
+    if actual != c.crc32 {
+        return Err(Error::ChecksumMismatch { chunk: index, expected: c.crc32, actual });
+    }
+    Ok(raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synthetic;
+
+    fn opts(format: FloatFormat) -> CompressOptions {
+        CompressOptions::for_format(format).with_chunk_size(4096)
+    }
+
+    #[test]
+    fn roundtrip_bf16_gaussian() {
+        let data = synthetic::gaussian_bf16_bytes(10_000, 0.02, 42);
+        let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        assert!(blob.ratio() < 0.8, "ratio={}", blob.ratio());
+        assert_eq!(decompress_tensor(&blob).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_all_formats_random() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for format in [
+            FloatFormat::Fp32,
+            FloatFormat::Fp16,
+            FloatFormat::Bf16,
+            FloatFormat::Fp8E4M3,
+            FloatFormat::Fp8E5M2,
+            FloatFormat::Fp4E2M1,
+        ] {
+            let align = chunk_alignment(format);
+            let mut data = vec![0u8; 10_000 / align * align];
+            rng.fill_bytes(&mut data);
+            let blob = compress_tensor(&data, &opts(format)).unwrap();
+            assert_eq!(decompress_tensor(&blob).unwrap(), data, "{format:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        for len in [0usize, 2, 4, 8] {
+            let data = vec![0x3Fu8; len];
+            let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+            assert_eq!(decompress_tensor(&blob).unwrap(), data, "len={len}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let data = synthetic::gaussian_bf16_bytes(50_000, 0.05, 7);
+        let serial = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        let par =
+            compress_tensor(&data, &opts(FloatFormat::Bf16).with_threads(4)).unwrap();
+        assert_eq!(serial.serialize(), par.serialize());
+        assert_eq!(decompress_tensor(&par).unwrap(), data);
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial() {
+        let data = synthetic::gaussian_bf16_bytes(60_000, 0.02, 8);
+        let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        for threads in [1usize, 2, 3, 8] {
+            assert_eq!(
+                decompress_tensor_threads(&blob, threads).unwrap(),
+                data,
+                "threads={threads}"
+            );
+        }
+        // Corruption still detected on the parallel path.
+        let mut bad = blob.clone();
+        let n = bad.data.len();
+        bad.data[n / 3] ^= 0x40;
+        assert!(decompress_tensor_threads(&bad, 4).is_err());
+    }
+
+    #[test]
+    fn random_access_chunk() {
+        let data = synthetic::gaussian_bf16_bytes(20_000, 0.02, 3);
+        let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        assert!(blob.chunks.len() > 3);
+        for i in [0usize, 1, blob.chunks.len() - 1] {
+            let chunk = decompress_chunk(&blob, i).unwrap();
+            let start: usize = blob.chunks[..i].iter().map(|c| c.raw_len).sum();
+            assert_eq!(chunk, &data[start..start + blob.chunks[i].raw_len], "chunk {i}");
+        }
+        assert!(decompress_chunk(&blob, blob.chunks.len()).is_err());
+    }
+
+    #[test]
+    fn corruption_detected_by_crc() {
+        let data = synthetic::gaussian_bf16_bytes(10_000, 0.02, 4);
+        let mut blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        // Flip a bit somewhere in a Huffman payload (skip the first stream
+        // frame header region to ensure we corrupt data, not framing that
+        // would fail differently — either way must error).
+        let n = blob.data.len();
+        blob.data[n / 2] ^= 0x10;
+        assert!(decompress_tensor(&blob).is_err());
+    }
+
+    #[test]
+    fn serialized_blob_roundtrip() {
+        let data = synthetic::gaussian_bf16_bytes(5_000, 0.02, 5);
+        let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        let ser = blob.serialize();
+        let blob2 = CompressedBlob::deserialize(&ser).unwrap();
+        assert_eq!(decompress_tensor(&blob2).unwrap(), data);
+    }
+
+    #[test]
+    fn stats_sum_to_original() {
+        let data = synthetic::gaussian_bf16_bytes(8_192, 0.02, 6);
+        let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        let orig: u64 = blob.stats.iter().map(|s| s.original_bytes).sum();
+        assert_eq!(orig, data.len() as u64);
+        // Exponent must compress far better than sign+mantissa on Gaussians.
+        let exp = blob.stat(StreamKind::Exponent).unwrap().ratio();
+        let sm = blob.stat(StreamKind::SignMantissa).unwrap().ratio();
+        assert!(exp < 0.5, "exp ratio {exp}");
+        assert!(sm > exp, "sm {sm} vs exp {exp}");
+    }
+
+    #[test]
+    fn exponent_only_mode_stores_mantissa_raw() {
+        let data = synthetic::gaussian_bf16_bytes(8_192, 0.02, 6);
+        let mut o = opts(FloatFormat::Bf16);
+        o.exponent_only = true;
+        let blob = compress_tensor(&data, &o).unwrap();
+        let sm = blob.stat(StreamKind::SignMantissa).unwrap();
+        assert_eq!(sm.compressed_bytes, sm.original_bytes);
+        assert_eq!(decompress_tensor(&blob).unwrap(), data);
+    }
+
+    #[test]
+    fn store_strategy_error_paths() {
+        let data = vec![1u8, 2, 3, 4];
+        let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        // Mangle into a Delta blob: decompress_tensor must refuse.
+        let mut delta = blob.clone();
+        delta.strategy = Strategy::Delta;
+        assert!(decompress_tensor(&delta).is_err());
+    }
+}

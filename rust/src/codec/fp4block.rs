@@ -1,0 +1,299 @@
+//! FP4 block-format compression (paper §3.4, Fig 9).
+//!
+//! "Our FP4 compression strategy targets only the scaling factors and
+//! stores the quantized values uncompressed."
+//!
+//! * NVFP4: payload nibbles stored raw; the E4M3 block-scale stream is
+//!   split (Fig 7 pairing) and entropy-coded.
+//! * MXFP4: payload raw; FP16/FP32 scale stream split and entropy-coded.
+//!
+//! The blob layout reuses the chunked stream framing with kind
+//! [`StreamKind::Payload`] (raw) and [`StreamKind::Scale`]-derived streams.
+
+use super::blob::{ChunkInfo, CompressedBlob, StreamStat};
+use super::stream_codec::{decode_stream, encode_stream, EncodedStream};
+use super::{CompressOptions, Strategy};
+use crate::error::{Error, Result};
+use crate::formats::fp4::{Mxfp4Tensor, Nvfp4Tensor};
+use crate::formats::streams::{Stream, StreamKind};
+use crate::formats::{split_streams, merge_streams, FloatFormat};
+use crate::util::crc32::crc32;
+use crate::util::varint;
+
+/// Compress an NVFP4 tensor: raw payload + Huffman-coded scale streams.
+pub fn compress_nvfp4(t: &Nvfp4Tensor, opts: &CompressOptions) -> Result<CompressedBlob> {
+    // Scale stream: E4M3 bytes → Fig 7 split → exponent + s|m sub-streams.
+    let scale_set = split_streams(FloatFormat::Fp8E4M3, &t.block_scales)?;
+    let mut data = Vec::new();
+    // Frame: [n_elements][global_scale][n_scales][payload frame][scale frames...]
+    varint::write_usize(&mut data, t.n_elements);
+    data.extend_from_slice(&t.global_scale.to_le_bytes());
+    varint::write_usize(&mut data, t.block_scales.len());
+    let n_streams = 1 + scale_set.streams.len();
+    data.push(n_streams as u8);
+
+    let payload_stream = Stream::new(StreamKind::Payload, t.payload.clone(), 8);
+    // Payload: stored raw per the paper (incompressible; gate forced off).
+    let enc_payload = encode_stream(&payload_stream, opts.len_limit, 0.0, None)?;
+    let mut stats = vec![StreamStat {
+        kind: StreamKind::Payload,
+        original_bytes: t.payload.len() as u64,
+        compressed_bytes: enc_payload.encoded_len() as u64,
+    }];
+    enc_payload.write_to(&mut data);
+
+    let mut scale_orig = 0u64;
+    let mut scale_comp = 0u64;
+    for s in &scale_set.streams {
+        let enc = encode_stream(s, opts.len_limit, opts.gate_threshold, None)?;
+        scale_orig += s.native_size_bits().div_ceil(8);
+        scale_comp += enc.encoded_len() as u64;
+        enc.write_to(&mut data);
+    }
+    stats.push(StreamStat {
+        kind: StreamKind::Scale,
+        original_bytes: scale_orig,
+        compressed_bytes: scale_comp,
+    });
+
+    let original_len = t.stored_bytes();
+    let mut raw_all = Vec::with_capacity(original_len);
+    raw_all.extend_from_slice(&t.payload);
+    raw_all.extend_from_slice(&t.block_scales);
+    raw_all.extend_from_slice(&t.global_scale.to_le_bytes());
+    Ok(CompressedBlob {
+        strategy: Strategy::Fp4Block,
+        format: FloatFormat::Fp4E2M1,
+        original_len,
+        chunk_size: original_len,
+        chunks: vec![ChunkInfo { raw_len: original_len, enc_len: data.len(), crc32: crc32(&raw_all) }],
+        data,
+        stats,
+    })
+}
+
+/// Inverse of [`compress_nvfp4`].
+pub fn decompress_nvfp4(blob: &CompressedBlob) -> Result<Nvfp4Tensor> {
+    if blob.strategy != Strategy::Fp4Block {
+        return Err(Error::InvalidInput("blob is not an FP4 block".into()));
+    }
+    let buf = &blob.data;
+    let mut pos = 0usize;
+    let n_elements = varint::read_usize(buf, &mut pos)?;
+    if pos + 4 > buf.len() {
+        return Err(Error::Corrupt("nvfp4 header truncated".into()));
+    }
+    let global_scale = f32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]);
+    pos += 4;
+    let n_scales = varint::read_usize(buf, &mut pos)?;
+    if pos >= buf.len() {
+        return Err(Error::Corrupt("nvfp4 frame truncated".into()));
+    }
+    let n_streams = buf[pos] as usize;
+    pos += 1;
+    if n_streams < 2 {
+        return Err(Error::Corrupt("nvfp4 needs payload + scale streams".into()));
+    }
+    let payload_frame = EncodedStream::read_from(buf, &mut pos)?;
+    let payload = decode_stream(&payload_frame, None)?;
+    let mut scale_streams = Vec::new();
+    for _ in 1..n_streams {
+        let frame = EncodedStream::read_from(buf, &mut pos)?;
+        let kind = StreamKind::from_wire_id(frame.kind_id)
+            .ok_or_else(|| Error::Corrupt("bad scale stream kind".into()))?;
+        let bytes = decode_stream(&frame, None)?;
+        scale_streams.push(Stream::new(kind, bytes, frame.native_bits));
+    }
+    let scale_set = crate::formats::StreamSet {
+        streams: scale_streams,
+        n_elements: n_scales,
+        original_bytes: n_scales,
+    };
+    let block_scales = merge_streams(FloatFormat::Fp8E4M3, &scale_set)?;
+    let t = Nvfp4Tensor { payload, block_scales, global_scale, n_elements };
+    // Integrity check against the recorded CRC.
+    let mut raw_all = Vec::with_capacity(t.stored_bytes());
+    raw_all.extend_from_slice(&t.payload);
+    raw_all.extend_from_slice(&t.block_scales);
+    raw_all.extend_from_slice(&t.global_scale.to_le_bytes());
+    let actual = crc32(&raw_all);
+    if actual != blob.chunks[0].crc32 {
+        return Err(Error::ChecksumMismatch { chunk: 0, expected: blob.chunks[0].crc32, actual });
+    }
+    Ok(t)
+}
+
+/// Compress an MXFP4 tensor: raw payload + coded scale streams.
+pub fn compress_mxfp4(t: &Mxfp4Tensor, opts: &CompressOptions) -> Result<CompressedBlob> {
+    let scale_set = split_streams(t.scale_format, &t.scales)?;
+    let mut data = Vec::new();
+    varint::write_usize(&mut data, t.n_elements);
+    data.push(t.scale_format.wire_id());
+    varint::write_usize(&mut data, t.group_size);
+    varint::write_usize(&mut data, t.scales.len());
+    data.push((1 + scale_set.streams.len()) as u8);
+
+    let payload_stream = Stream::new(StreamKind::Payload, t.payload.clone(), 8);
+    let enc_payload = encode_stream(&payload_stream, opts.len_limit, 0.0, None)?;
+    let mut stats = vec![StreamStat {
+        kind: StreamKind::Payload,
+        original_bytes: t.payload.len() as u64,
+        compressed_bytes: enc_payload.encoded_len() as u64,
+    }];
+    enc_payload.write_to(&mut data);
+
+    let mut scale_orig = 0u64;
+    let mut scale_comp = 0u64;
+    for s in &scale_set.streams {
+        let enc = encode_stream(s, opts.len_limit, opts.gate_threshold, None)?;
+        scale_orig += s.native_size_bits().div_ceil(8);
+        scale_comp += enc.encoded_len() as u64;
+        enc.write_to(&mut data);
+    }
+    stats.push(StreamStat {
+        kind: StreamKind::Scale,
+        original_bytes: scale_orig,
+        compressed_bytes: scale_comp,
+    });
+
+    let original_len = t.stored_bytes();
+    let mut raw_all = Vec::with_capacity(original_len);
+    raw_all.extend_from_slice(&t.payload);
+    raw_all.extend_from_slice(&t.scales);
+    Ok(CompressedBlob {
+        strategy: Strategy::Fp4Block,
+        format: FloatFormat::Fp4E2M1,
+        original_len,
+        chunk_size: original_len,
+        chunks: vec![ChunkInfo { raw_len: original_len, enc_len: data.len(), crc32: crc32(&raw_all) }],
+        data,
+        stats,
+    })
+}
+
+/// Inverse of [`compress_mxfp4`].
+pub fn decompress_mxfp4(blob: &CompressedBlob) -> Result<Mxfp4Tensor> {
+    if blob.strategy != Strategy::Fp4Block {
+        return Err(Error::InvalidInput("blob is not an FP4 block".into()));
+    }
+    let buf = &blob.data;
+    let mut pos = 0usize;
+    let n_elements = varint::read_usize(buf, &mut pos)?;
+    if pos >= buf.len() {
+        return Err(Error::Corrupt("mxfp4 header truncated".into()));
+    }
+    let scale_format = FloatFormat::from_wire_id(buf[pos])?;
+    pos += 1;
+    let group_size = varint::read_usize(buf, &mut pos)?;
+    let n_scale_bytes = varint::read_usize(buf, &mut pos)?;
+    if pos >= buf.len() {
+        return Err(Error::Corrupt("mxfp4 frame truncated".into()));
+    }
+    let n_streams = buf[pos] as usize;
+    pos += 1;
+    if n_streams < 2 {
+        return Err(Error::Corrupt("mxfp4 needs payload + scale streams".into()));
+    }
+    let payload_frame = EncodedStream::read_from(buf, &mut pos)?;
+    let payload = decode_stream(&payload_frame, None)?;
+    let mut scale_streams = Vec::new();
+    for _ in 1..n_streams {
+        let frame = EncodedStream::read_from(buf, &mut pos)?;
+        let kind = StreamKind::from_wire_id(frame.kind_id)
+            .ok_or_else(|| Error::Corrupt("bad scale stream kind".into()))?;
+        let bytes = decode_stream(&frame, None)?;
+        scale_streams.push(Stream::new(kind, bytes, frame.native_bits));
+    }
+    let n_scale_elems = match scale_format {
+        FloatFormat::Fp16 => n_scale_bytes / 2,
+        _ => n_scale_bytes / 4,
+    };
+    let scale_set = crate::formats::StreamSet {
+        streams: scale_streams,
+        n_elements: n_scale_elems,
+        original_bytes: n_scale_bytes,
+    };
+    let scales = merge_streams(scale_format, &scale_set)?;
+    Ok(Mxfp4Tensor { payload, scales, scale_format, group_size, n_elements })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::conv::{quantize_mxfp4, quantize_nvfp4};
+    use crate::synthetic;
+
+    fn opts() -> CompressOptions {
+        CompressOptions::for_format(FloatFormat::Fp4E2M1)
+    }
+
+    fn sample_values(n: usize, seed: u64) -> Vec<f32> {
+        synthetic::gaussian_f32(n, 0.02, seed)
+    }
+
+    #[test]
+    fn nvfp4_roundtrip() {
+        let vals = sample_values(10_000, 1);
+        let t = quantize_nvfp4(&vals);
+        let blob = compress_nvfp4(&t, &opts()).unwrap();
+        let back = decompress_nvfp4(&blob).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn nvfp4_payload_stored_raw_scales_compress() {
+        let vals = sample_values(100_000, 2);
+        let t = quantize_nvfp4(&vals);
+        let blob = compress_nvfp4(&t, &opts()).unwrap();
+        let payload = blob.stat(StreamKind::Payload).unwrap();
+        assert_eq!(payload.compressed_bytes, payload.original_bytes);
+        let scale = blob.stat(StreamKind::Scale).unwrap();
+        assert!(scale.ratio() < 0.8, "scale ratio {}", scale.ratio());
+    }
+
+    #[test]
+    fn nvfp4_corruption_detected() {
+        let vals = sample_values(5_000, 3);
+        let t = quantize_nvfp4(&vals);
+        let mut blob = compress_nvfp4(&t, &opts()).unwrap();
+        blob.chunks[0].crc32 ^= 1;
+        assert!(decompress_nvfp4(&blob).is_err());
+    }
+
+    #[test]
+    fn mxfp4_roundtrip_fp16_and_fp32_scales() {
+        let vals = sample_values(8_192, 4);
+        for sf in [FloatFormat::Fp16, FloatFormat::Fp32] {
+            let t = quantize_mxfp4(&vals, 32, sf).unwrap();
+            let blob = compress_mxfp4(&t, &opts()).unwrap();
+            let back = decompress_mxfp4(&blob).unwrap();
+            assert_eq!(back, t, "{sf:?}");
+        }
+    }
+
+    #[test]
+    fn wrong_strategy_rejected() {
+        let data = synthetic::gaussian_bf16_bytes(1000, 0.02, 5);
+        let blob = crate::codec::compress_tensor(
+            &data,
+            &CompressOptions::for_format(FloatFormat::Bf16),
+        )
+        .unwrap();
+        assert!(decompress_nvfp4(&blob).is_err());
+        assert!(decompress_mxfp4(&blob).is_err());
+    }
+
+    #[test]
+    fn fig9_style_accounting() {
+        // Scalers ≈ 1/9 of stored bytes; payload incompressible; overall
+        // saving ≈ scale_fraction × (1 - scale_ratio): the Fig 9 "5%".
+        let vals = sample_values(160_000, 6);
+        let t = quantize_nvfp4(&vals);
+        let blob = compress_nvfp4(&t, &opts()).unwrap();
+        let frac = t.scale_fraction();
+        assert!((0.08..0.14).contains(&frac), "{frac}");
+        let overall = blob.encoded_len() as f64 / t.stored_bytes() as f64;
+        assert!(overall < 1.0, "overall {overall}");
+        assert!(overall > 0.85, "overall {overall} (payload must dominate)");
+    }
+}

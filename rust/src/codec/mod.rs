@@ -1,0 +1,147 @@
+//! The tensor codec: chunked, stream-separated, entropy-gated lossless
+//! compression (paper §3).
+//!
+//! Pipeline per tensor:
+//!
+//! 1. (Delta strategy only) XOR against a base tensor (§3.1).
+//! 2. Chunk the byte buffer into fixed-size chunks (default 256 KiB) — the
+//!    paper's unit of random access and parallel decode.
+//! 3. Per chunk: split into component streams ([`crate::formats`]), then per
+//!    stream: build a canonical Huffman table and code it, **unless** the
+//!    entropy gate says the stream is incompressible, in which case it is
+//!    stored raw at native bit density.
+//! 4. Frame everything with lightweight metadata + CRC32 per chunk.
+//!
+//! The FP4 block strategy (§3.4) stores payload nibbles raw by construction
+//! and compresses only the scaling-factor streams.
+
+mod blob;
+mod chunked;
+mod delta;
+mod fp4block;
+mod stream_codec;
+
+pub use blob::{ChunkInfo, CompressedBlob, StreamStat};
+pub use chunked::{compress_tensor, decompress_tensor, decompress_chunk};
+pub use delta::{compress_delta, decompress_delta, xor_buffers, xor_into};
+pub use fp4block::{compress_mxfp4, compress_nvfp4, decompress_mxfp4, decompress_nvfp4};
+pub use stream_codec::{encode_stream, decode_stream, EncodedStream, StreamEncoding};
+
+use crate::formats::FloatFormat;
+use crate::huffman::DEFAULT_CODE_LEN_LIMIT;
+
+/// Compression strategy identifier (serialized in blob headers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Exponent/mantissa separation + entropy-gated Huffman (§3.2/§3.3).
+    ExpMantissa,
+    /// XOR-delta against a base, then ExpMantissa (§3.1). Decompression
+    /// requires the same base.
+    Delta,
+    /// FP4 block format: raw payload + compressed scaler streams (§3.4).
+    Fp4Block,
+    /// Store chunks uncompressed (baseline / incompressible fallback).
+    Store,
+}
+
+impl Strategy {
+    /// Wire id.
+    pub fn wire_id(self) -> u8 {
+        match self {
+            Strategy::ExpMantissa => 0,
+            Strategy::Delta => 1,
+            Strategy::Fp4Block => 2,
+            Strategy::Store => 3,
+        }
+    }
+
+    /// Inverse of [`wire_id`](Self::wire_id).
+    pub fn from_wire_id(id: u8) -> Option<Self> {
+        match id {
+            0 => Some(Strategy::ExpMantissa),
+            1 => Some(Strategy::Delta),
+            2 => Some(Strategy::Fp4Block),
+            3 => Some(Strategy::Store),
+            _ => None,
+        }
+    }
+}
+
+/// Default chunk size: 256 KiB of original tensor bytes — large enough for
+/// stable per-chunk histograms, small enough for random access (§3.1).
+pub const DEFAULT_CHUNK_SIZE: usize = 256 * 1024;
+
+/// Tuning knobs for [`compress_tensor`].
+#[derive(Clone, Debug)]
+pub struct CompressOptions {
+    /// Element format of the tensor bytes.
+    pub format: FloatFormat,
+    /// Chunk size in original-tensor bytes.
+    pub chunk_size: usize,
+    /// Huffman code length limit (2..=15).
+    pub len_limit: u8,
+    /// Entropy-gate threshold: streams with expected ratio above this are
+    /// stored raw. 1.0 disables the gate benefit check.
+    pub gate_threshold: f64,
+    /// Worker threads for chunk-parallel encode/decode (1 = serial).
+    pub threads: usize,
+    /// Force-disable mantissa coding (ablation: exponent-only mode).
+    pub exponent_only: bool,
+}
+
+impl CompressOptions {
+    /// Sensible defaults for a format.
+    pub fn for_format(format: FloatFormat) -> Self {
+        CompressOptions {
+            format,
+            chunk_size: DEFAULT_CHUNK_SIZE,
+            len_limit: DEFAULT_CODE_LEN_LIMIT,
+            gate_threshold: crate::entropy::DEFAULT_GATE_THRESHOLD,
+            threads: 1,
+            exponent_only: false,
+        }
+    }
+
+    /// Builder-style chunk size override.
+    pub fn with_chunk_size(mut self, bytes: usize) -> Self {
+        self.chunk_size = bytes;
+        self
+    }
+
+    /// Builder-style thread count override.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Builder-style Huffman length limit override.
+    pub fn with_len_limit(mut self, limit: u8) -> Self {
+        self.len_limit = limit;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_wire_roundtrip() {
+        for s in [Strategy::ExpMantissa, Strategy::Delta, Strategy::Fp4Block, Strategy::Store] {
+            assert_eq!(Strategy::from_wire_id(s.wire_id()), Some(s));
+        }
+        assert_eq!(Strategy::from_wire_id(200), None);
+    }
+
+    #[test]
+    fn options_builders() {
+        let o = CompressOptions::for_format(FloatFormat::Bf16)
+            .with_chunk_size(1024)
+            .with_threads(4)
+            .with_len_limit(10);
+        assert_eq!(o.chunk_size, 1024);
+        assert_eq!(o.threads, 4);
+        assert_eq!(o.len_limit, 10);
+        assert_eq!(CompressOptions::for_format(FloatFormat::Bf16).with_threads(0).threads, 1);
+    }
+}

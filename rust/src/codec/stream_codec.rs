@@ -1,0 +1,375 @@
+//! Per-stream encode/decode: the entropy gate + Huffman/raw decision.
+
+use crate::entropy::{decide, Histogram};
+use crate::error::{Error, Result};
+use crate::formats::packing;
+use crate::formats::streams::Stream;
+use crate::huffman::{CodeTable, HuffmanDecoder, HuffmanEncoder};
+use crate::util::varint;
+
+/// How a stream ended up encoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamEncoding {
+    /// Canonical Huffman with an embedded per-chunk table.
+    Huffman,
+    /// Huffman against an external (dictionary) table — no table embedded.
+    /// Used for K/V cache pages with precomputed dictionaries (§3.3).
+    HuffmanDict,
+    /// Raw, bit-packed at native symbol width.
+    Raw,
+    /// Every symbol identical: payload is the single symbol byte. This is
+    /// what lets converged delta-checkpoint exponent streams reach the
+    /// paper's sub-0.125 ratios (abstract: "as low as 0.07") — fully-zero
+    /// chunks cost ~6 bytes instead of 1 bit/symbol.
+    Constant,
+}
+
+impl StreamEncoding {
+    pub(crate) fn wire_id(self) -> u8 {
+        match self {
+            StreamEncoding::Huffman => 0,
+            StreamEncoding::HuffmanDict => 1,
+            StreamEncoding::Raw => 2,
+            StreamEncoding::Constant => 3,
+        }
+    }
+
+    pub(crate) fn from_wire_id(id: u8) -> Option<Self> {
+        match id {
+            0 => Some(StreamEncoding::Huffman),
+            1 => Some(StreamEncoding::HuffmanDict),
+            2 => Some(StreamEncoding::Raw),
+            3 => Some(StreamEncoding::Constant),
+            _ => None,
+        }
+    }
+}
+
+/// An encoded component stream plus its framing metadata.
+#[derive(Clone, Debug)]
+pub struct EncodedStream {
+    /// Component kind (wire id of [`crate::formats::StreamKind`]).
+    pub kind_id: u8,
+    /// How the payload is encoded.
+    pub encoding: StreamEncoding,
+    /// Bits per symbol in the original format.
+    pub native_bits: u8,
+    /// Number of symbols.
+    pub n_symbols: usize,
+    /// Serialized Huffman table (empty for Raw / HuffmanDict).
+    pub table: Vec<u8>,
+    /// The coded payload.
+    pub payload: Vec<u8>,
+}
+
+impl EncodedStream {
+    /// Total encoded size (metadata-free): table + payload.
+    pub fn encoded_len(&self) -> usize {
+        self.table.len() + self.payload.len()
+    }
+
+    /// Size the symbols occupied in the original tensor (bits→bytes,
+    /// fractional bits accounted at stream granularity).
+    pub fn native_len(&self) -> usize {
+        (self.n_symbols * self.native_bits as usize).div_ceil(8)
+    }
+
+    /// Serialize framing + data into `out`.
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        out.push(self.kind_id);
+        out.push(self.encoding.wire_id());
+        out.push(self.native_bits);
+        varint::write_usize(out, self.n_symbols);
+        if self.encoding == StreamEncoding::Huffman {
+            debug_assert_eq!(self.table.len(), crate::huffman::table_serialized_len());
+            out.extend_from_slice(&self.table);
+        }
+        varint::write_usize(out, self.payload.len());
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Parse framing + data from `buf` at `*pos`.
+    pub fn read_from(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let take = |buf: &[u8], pos: &mut usize, n: usize| -> Result<Vec<u8>> {
+            if *pos + n > buf.len() {
+                return Err(Error::Corrupt("stream frame truncated".into()));
+            }
+            let v = buf[*pos..*pos + n].to_vec();
+            *pos += n;
+            Ok(v)
+        };
+        let hdr = take(buf, pos, 3)?;
+        let encoding = StreamEncoding::from_wire_id(hdr[1])
+            .ok_or_else(|| Error::Corrupt(format!("unknown stream encoding {}", hdr[1])))?;
+        let n_symbols = varint::read_usize(buf, pos)?;
+        let table = if encoding == StreamEncoding::Huffman {
+            take(buf, pos, crate::huffman::table_serialized_len())?
+        } else {
+            Vec::new()
+        };
+        let payload_len = varint::read_usize(buf, pos)?;
+        let payload = take(buf, pos, payload_len)?;
+        Ok(EncodedStream {
+            kind_id: hdr[0],
+            encoding,
+            native_bits: hdr[2],
+            n_symbols,
+            table,
+            payload,
+        })
+    }
+}
+
+/// Encode one component stream.
+///
+/// * With `dictionary = Some(table)`, the stream is coded against the shared
+///   table when it covers the data and beats raw (no embedded table); used
+///   by the K/V dictionary manager.
+/// * Otherwise a per-stream table is built and embedded, gated on entropy.
+/// * `gate_threshold > = 1.0` forces Huffman whenever it is valid (used for
+///   ablations); `0.0` forces raw.
+pub fn encode_stream(
+    stream: &Stream,
+    len_limit: u8,
+    gate_threshold: f64,
+    dictionary: Option<&CodeTable>,
+) -> Result<EncodedStream> {
+    let kind_id = stream.kind.wire_id();
+    let native_bits = stream.native_bits;
+    let n_symbols = stream.len();
+
+    let raw = |_: &Stream| -> EncodedStream {
+        EncodedStream {
+            kind_id,
+            encoding: StreamEncoding::Raw,
+            native_bits,
+            n_symbols,
+            table: Vec::new(),
+            payload: packing::pack(&stream.bytes, native_bits),
+        }
+    };
+
+    if n_symbols == 0 {
+        return Ok(raw(stream));
+    }
+
+    let hist = Histogram::from_bytes(&stream.bytes);
+
+    // Constant stream: one symbol byte beats any entropy code.
+    if hist.distinct() == 1 && gate_threshold > 0.0 {
+        return Ok(EncodedStream {
+            kind_id,
+            encoding: StreamEncoding::Constant,
+            native_bits,
+            n_symbols,
+            table: Vec::new(),
+            payload: vec![stream.bytes[0]],
+        });
+    }
+
+    if let Some(dict) = dictionary {
+        if dict.covers(&hist) {
+            let cost_bits = dict.cost_bits(&hist);
+            let raw_bits = stream.native_size_bits();
+            if cost_bits < raw_bits {
+                let payload = HuffmanEncoder::new(dict).encode(&stream.bytes);
+                return Ok(EncodedStream {
+                    kind_id,
+                    encoding: StreamEncoding::HuffmanDict,
+                    native_bits,
+                    n_symbols,
+                    table: Vec::new(),
+                    payload,
+                });
+            }
+        }
+        // Dictionary miss → fall through to per-stream coding (the caller's
+        // adaptive-refresh policy observes this through the encoding field).
+    }
+
+    // Entropy gate, measured against the stream's NATIVE density: a 4-bit
+    // exponent stream stored raw costs 4 bits/symbol, so Huffman must beat
+    // that, not 8.
+    let d = decide(&hist, f64::INFINITY); // get expected ratio only
+    let expected_bits_per_sym = d.expected_ratio * 8.0;
+    let gate_ok = expected_bits_per_sym < gate_threshold * native_bits as f64;
+    if !gate_ok {
+        return Ok(raw(stream));
+    }
+    let table = CodeTable::build(&hist, len_limit)?;
+    let enc = HuffmanEncoder::new(&table);
+    // Final sanity: if the real coded size (incl. table) loses to raw,
+    // store raw. Cost comes from the histogram — no extra data pass.
+    let coded_bytes = (table.cost_bits(&hist) as usize).div_ceil(8)
+        + crate::huffman::table_serialized_len();
+    let raw_bytes = packing::packed_len(n_symbols, native_bits);
+    if coded_bytes >= raw_bytes && gate_threshold <= 1.0 {
+        return Ok(raw(stream));
+    }
+    Ok(EncodedStream {
+        kind_id,
+        encoding: StreamEncoding::Huffman,
+        native_bits,
+        n_symbols,
+        table: table.serialize(),
+        payload: enc.encode(&stream.bytes),
+    })
+}
+
+/// Decode one component stream back to symbol bytes.
+///
+/// `dictionary` must be provided iff the stream was coded with
+/// [`StreamEncoding::HuffmanDict`].
+pub fn decode_stream(enc: &EncodedStream, dictionary: Option<&CodeTable>) -> Result<Vec<u8>> {
+    match enc.encoding {
+        StreamEncoding::Constant => {
+            if enc.payload.len() != 1 {
+                return Err(Error::Corrupt("constant stream needs 1 payload byte".into()));
+            }
+            Ok(vec![enc.payload[0]; enc.n_symbols])
+        }
+        StreamEncoding::Raw => packing::unpack(&enc.payload, enc.native_bits, enc.n_symbols),
+        StreamEncoding::Huffman => {
+            let table = CodeTable::deserialize(&enc.table)?;
+            HuffmanDecoder::new(&table)?.decode(&enc.payload, enc.n_symbols)
+        }
+        StreamEncoding::HuffmanDict => {
+            let dict = dictionary.ok_or_else(|| {
+                Error::Corrupt("stream needs dictionary but none provided".into())
+            })?;
+            HuffmanDecoder::new(dict)?.decode(&enc.payload, enc.n_symbols)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::streams::StreamKind;
+    use crate::util::rng::Rng;
+
+    fn mk(bytes: Vec<u8>, native_bits: u8) -> Stream {
+        Stream::new(StreamKind::Exponent, bytes, native_bits)
+    }
+
+    #[test]
+    fn skewed_stream_gets_huffman() {
+        let mut rng = Rng::new(1);
+        let bytes: Vec<u8> =
+            (0..10_000).map(|_| if rng.next_f64() < 0.85 { 120 } else { rng.below(256) as u8 }).collect();
+        let s = mk(bytes.clone(), 8);
+        let e = encode_stream(&s, 12, 0.97, None).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::Huffman);
+        assert!(e.encoded_len() < bytes.len() / 2);
+        assert_eq!(decode_stream(&e, None).unwrap(), bytes);
+    }
+
+    #[test]
+    fn random_stream_stays_raw() {
+        let mut rng = Rng::new(2);
+        let mut bytes = vec![0u8; 8192];
+        rng.fill_bytes(&mut bytes);
+        let s = mk(bytes.clone(), 8);
+        let e = encode_stream(&s, 12, 0.97, None).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::Raw);
+        assert_eq!(e.encoded_len(), bytes.len());
+        assert_eq!(decode_stream(&e, None).unwrap(), bytes);
+    }
+
+    #[test]
+    fn sub_byte_stream_raw_packs_densely() {
+        // 4-bit symbols, uniform: raw must cost n/2 bytes, not n.
+        let mut rng = Rng::new(3);
+        let bytes: Vec<u8> = (0..1000).map(|_| (rng.next_u32() & 0xF) as u8).collect();
+        let s = mk(bytes.clone(), 4);
+        let e = encode_stream(&s, 12, 0.97, None).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::Raw);
+        assert_eq!(e.payload.len(), 500);
+        assert_eq!(decode_stream(&e, None).unwrap(), bytes);
+    }
+
+    #[test]
+    fn sub_byte_gate_uses_native_width() {
+        // 4-bit symbols with ~3.9 bits of entropy: Huffman over bytes would
+        // "compress" 8→4 bits but cannot beat the 4-bit native packing.
+        let mut rng = Rng::new(4);
+        let bytes: Vec<u8> = (0..20_000).map(|_| (rng.next_u32() & 0xF) as u8).collect();
+        let e = encode_stream(&mk(bytes, 4), 12, 0.97, None).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::Raw);
+    }
+
+    #[test]
+    fn skewed_sub_byte_still_compresses() {
+        let mut rng = Rng::new(5);
+        let bytes: Vec<u8> =
+            (0..20_000).map(|_| if rng.next_f64() < 0.9 { 7u8 } else { (rng.next_u32() & 0xF) as u8 }).collect();
+        let e = encode_stream(&mk(bytes.clone(), 4), 12, 0.97, None).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::Huffman);
+        // Must beat the 10,000-byte native packing.
+        assert!(e.encoded_len() < 10_000);
+        assert_eq!(decode_stream(&e, None).unwrap(), bytes);
+    }
+
+    #[test]
+    fn dictionary_hit_and_miss() {
+        let mut rng = Rng::new(6);
+        let train: Vec<u8> = (0..50_000).map(|_| (rng.below(8) + 120) as u8).collect();
+        let dict = CodeTable::build(&Histogram::from_bytes(&train), 12).unwrap();
+
+        // Hit: same distribution.
+        let data: Vec<u8> = (0..5000).map(|_| (rng.below(8) + 120) as u8).collect();
+        let e = encode_stream(&mk(data.clone(), 8), 12, 0.97, Some(&dict)).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::HuffmanDict);
+        assert!(e.table.is_empty());
+        assert_eq!(decode_stream(&e, Some(&dict)).unwrap(), data);
+
+        // Miss: contains symbols outside the dictionary.
+        let data2 = vec![5u8; 4000];
+        let e2 = encode_stream(&mk(data2.clone(), 8), 12, 0.97, Some(&dict)).unwrap();
+        assert_ne!(e2.encoding, StreamEncoding::HuffmanDict);
+        assert_eq!(decode_stream(&e2, None).unwrap(), data2);
+    }
+
+    #[test]
+    fn dict_decode_without_dict_errors() {
+        let mut rng = Rng::new(8);
+        let train: Vec<u8> = (0..10_000).map(|_| rng.below(4) as u8).collect();
+        let dict = CodeTable::build(&Histogram::from_bytes(&train), 12).unwrap();
+        let e = encode_stream(&mk(train.clone(), 8), 12, 0.97, Some(&dict)).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::HuffmanDict);
+        assert!(decode_stream(&e, None).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut rng = Rng::new(7);
+        let bytes: Vec<u8> = (0..3000).map(|_| if rng.next_f64() < 0.7 { 1 } else { 2 }).collect();
+        let e = encode_stream(&mk(bytes.clone(), 8), 12, 0.97, None).unwrap();
+        let mut buf = Vec::new();
+        e.write_to(&mut buf);
+        let mut pos = 0;
+        let e2 = EncodedStream::read_from(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(e2.encoding, e.encoding);
+        assert_eq!(e2.n_symbols, e.n_symbols);
+        assert_eq!(decode_stream(&e2, None).unwrap(), bytes);
+    }
+
+    #[test]
+    fn frame_truncation_detected() {
+        let e = encode_stream(&mk(vec![1u8; 100], 8), 12, 0.97, None).unwrap();
+        let mut buf = Vec::new();
+        e.write_to(&mut buf);
+        for cut in [0, 1, 2, buf.len() - 1] {
+            let mut pos = 0;
+            assert!(EncodedStream::read_from(&buf[..cut], &mut pos).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn empty_stream() {
+        let e = encode_stream(&mk(vec![], 8), 12, 0.97, None).unwrap();
+        assert_eq!(e.encoding, StreamEncoding::Raw);
+        assert_eq!(decode_stream(&e, None).unwrap(), Vec::<u8>::new());
+    }
+}

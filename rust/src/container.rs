@@ -1,0 +1,256 @@
+//! The `zlp` archive: many named compressed tensors in one file.
+//!
+//! Layout (all integers varint unless noted):
+//!
+//! ```text
+//! magic "ZLPC" | version u16 | flags u16 | tensor_count
+//! per tensor:  name_len | name | shape_rank | shape... | blob_len | blob
+//! ```
+//!
+//! Each blob is a [`CompressedBlob`] (self-describing: format, strategy,
+//! chunk directory, CRCs). The archive keeps an in-memory index so tensors
+//! decode independently — model loaders can stream tensor-by-tensor.
+
+use crate::codec::CompressedBlob;
+use crate::error::{Error, Result};
+use crate::util::varint;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Archive magic.
+pub const ARCHIVE_MAGIC: &[u8; 4] = b"ZLPC";
+/// Archive wire version.
+pub const ARCHIVE_VERSION: u16 = 1;
+
+/// Metadata of one archived tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorMeta {
+    /// Unique tensor name.
+    pub name: String,
+    /// Logical shape (element counts per dim).
+    pub shape: Vec<u64>,
+}
+
+/// An in-memory `zlp` archive.
+#[derive(Debug, Default)]
+pub struct Archive {
+    entries: BTreeMap<String, (TensorMeta, CompressedBlob)>,
+}
+
+impl Archive {
+    /// Empty archive.
+    pub fn new() -> Self {
+        Archive { entries: BTreeMap::new() }
+    }
+
+    /// Add a tensor; replaces any previous entry with the same name.
+    pub fn insert(&mut self, meta: TensorMeta, blob: CompressedBlob) {
+        self.entries.insert(meta.name.clone(), (meta, blob));
+    }
+
+    /// Look up a tensor.
+    pub fn get(&self, name: &str) -> Option<(&TensorMeta, &CompressedBlob)> {
+        self.entries.get(name).map(|(m, b)| (m, b))
+    }
+
+    /// Iterate entries in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&TensorMeta, &CompressedBlob)> {
+        self.entries.values().map(|(m, b)| (m, b))
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the archive holds no tensors.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sum of original tensor sizes.
+    pub fn total_original(&self) -> u64 {
+        self.entries.values().map(|(_, b)| b.original_len as u64).sum()
+    }
+
+    /// Sum of encoded sizes (blob framing included).
+    pub fn total_encoded(&self) -> u64 {
+        self.entries.values().map(|(_, b)| b.encoded_len() as u64).sum()
+    }
+
+    /// Overall ratio (encoded / original).
+    pub fn ratio(&self) -> f64 {
+        let orig = self.total_original();
+        if orig == 0 {
+            1.0
+        } else {
+            self.total_encoded() as f64 / orig as f64
+        }
+    }
+
+    /// Serialize the archive.
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(ARCHIVE_MAGIC);
+        out.extend_from_slice(&ARCHIVE_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags
+        varint::write_usize(&mut out, self.entries.len());
+        for (meta, blob) in self.entries.values() {
+            varint::write_usize(&mut out, meta.name.len());
+            out.extend_from_slice(meta.name.as_bytes());
+            varint::write_usize(&mut out, meta.shape.len());
+            for &d in &meta.shape {
+                varint::write_u64(&mut out, d);
+            }
+            let ser = blob.serialize();
+            varint::write_usize(&mut out, ser.len());
+            out.extend_from_slice(&ser);
+        }
+        out
+    }
+
+    /// Parse an archive from bytes.
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 8 || &buf[..4] != ARCHIVE_MAGIC {
+            return Err(Error::Container("bad archive magic".into()));
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != ARCHIVE_VERSION {
+            return Err(Error::Container(format!("unsupported archive version {version}")));
+        }
+        let mut pos = 8;
+        let count = varint::read_usize(buf, &mut pos)?;
+        let mut archive = Archive::new();
+        for _ in 0..count {
+            let name_len = varint::read_usize(buf, &mut pos)?;
+            if pos + name_len > buf.len() {
+                return Err(Error::Container("name truncated".into()));
+            }
+            let name = std::str::from_utf8(&buf[pos..pos + name_len])
+                .map_err(|_| Error::Container("name not utf-8".into()))?
+                .to_string();
+            pos += name_len;
+            let rank = varint::read_usize(buf, &mut pos)?;
+            if rank > 16 {
+                return Err(Error::Container(format!("implausible rank {rank}")));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(varint::read_u64(buf, &mut pos)?);
+            }
+            let blob_len = varint::read_usize(buf, &mut pos)?;
+            if pos + blob_len > buf.len() {
+                return Err(Error::Container("blob truncated".into()));
+            }
+            let blob = CompressedBlob::deserialize(&buf[pos..pos + blob_len])?;
+            pos += blob_len;
+            archive.insert(TensorMeta { name, shape }, blob);
+        }
+        if pos != buf.len() {
+            return Err(Error::Container("trailing archive bytes".into()));
+        }
+        Ok(archive)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.serialize())?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        Self::deserialize(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{compress_tensor, decompress_tensor, CompressOptions};
+    use crate::formats::FloatFormat;
+    use crate::synthetic;
+
+    fn sample_archive() -> (Archive, Vec<(String, Vec<u8>)>) {
+        let mut archive = Archive::new();
+        let mut raw = Vec::new();
+        for (i, name) in ["layers.0.wq", "layers.0.wk", "embed"].iter().enumerate() {
+            let data = synthetic::gaussian_bf16_bytes(4000 + i * 512, 0.02, i as u64);
+            let blob =
+                compress_tensor(&data, &CompressOptions::for_format(FloatFormat::Bf16)).unwrap();
+            archive.insert(
+                TensorMeta { name: name.to_string(), shape: vec![(4000 + i * 512) as u64] },
+                blob,
+            );
+            raw.push((name.to_string(), data));
+        }
+        (archive, raw)
+    }
+
+    #[test]
+    fn archive_roundtrip_memory() {
+        let (archive, raw) = sample_archive();
+        let ser = archive.serialize();
+        let back = Archive::deserialize(&ser).unwrap();
+        assert_eq!(back.len(), 3);
+        for (name, data) in &raw {
+            let (meta, blob) = back.get(name).unwrap();
+            assert_eq!(&meta.name, name);
+            assert_eq!(decompress_tensor(blob).unwrap(), *data);
+        }
+    }
+
+    #[test]
+    fn archive_roundtrip_file() {
+        let (archive, raw) = sample_archive();
+        let dir = std::env::temp_dir().join("zipnn_lp_test_archive");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.zlp");
+        archive.save(&path).unwrap();
+        let back = Archive::load(&path).unwrap();
+        for (name, data) in &raw {
+            let (_, blob) = back.get(name).unwrap();
+            assert_eq!(decompress_tensor(blob).unwrap(), *data);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn archive_rejects_corruption() {
+        let (archive, _) = sample_archive();
+        let mut ser = archive.serialize();
+        ser[0] = b'X';
+        assert!(Archive::deserialize(&ser).is_err());
+        let ser2 = archive.serialize();
+        assert!(Archive::deserialize(&ser2[..ser2.len() - 1]).is_err());
+        let mut ser3 = archive.serialize();
+        ser3.push(0);
+        assert!(Archive::deserialize(&ser3).is_err());
+    }
+
+    #[test]
+    fn insert_replaces() {
+        let mut archive = Archive::new();
+        let data = synthetic::gaussian_bf16_bytes(100, 0.02, 1);
+        let blob =
+            compress_tensor(&data, &CompressOptions::for_format(FloatFormat::Bf16)).unwrap();
+        archive.insert(TensorMeta { name: "t".into(), shape: vec![100] }, blob.clone());
+        archive.insert(TensorMeta { name: "t".into(), shape: vec![50, 2] }, blob);
+        assert_eq!(archive.len(), 1);
+        assert_eq!(archive.get("t").unwrap().0.shape, vec![50, 2]);
+    }
+
+    #[test]
+    fn totals_and_ratio() {
+        let (archive, raw) = sample_archive();
+        let orig: u64 = raw.iter().map(|(_, d)| d.len() as u64).sum();
+        assert_eq!(archive.total_original(), orig);
+        assert!(archive.ratio() < 1.0);
+        assert!(Archive::new().is_empty());
+        assert_eq!(Archive::new().ratio(), 1.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! The wave scheduler: dynamic batching + prefill/decode state machine over
+//! the compressed K/V cache.
+
+use super::{dequantize_row, quantize_row, DecoderModel, Request, Response, ServerStats};
+use crate::error::{Error, Result};
+use crate::kvcache::PagedKvCache;
+use crate::metrics::Timer;
+use std::collections::VecDeque;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Tokens per K/V cache page.
+    pub page_tokens: usize,
+    /// Maximum decode steps per request (hard cap besides max_seq).
+    pub max_steps: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { page_tokens: 16, max_steps: 1 << 20 }
+    }
+}
+
+/// Per-wave accounting (observability + benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WaveStats {
+    /// Sequences in the wave.
+    pub n_seqs: usize,
+    /// Prefill wall seconds.
+    pub prefill_secs: f64,
+    /// Decode wall seconds (whole wave).
+    pub decode_secs: f64,
+    /// Decode steps executed.
+    pub steps: usize,
+}
+
+struct LiveSeq {
+    request: Request,
+    seq_id: u64,
+    /// Tokens so far (prompt + generated).
+    tokens: Vec<i32>,
+    /// Generated tokens only.
+    generated: Vec<i32>,
+    done: bool,
+}
+
+/// The scheduler: drains a queue in waves of ≤ `dims.batch` sequences.
+pub struct Scheduler<M: DecoderModel> {
+    model: M,
+    cache: PagedKvCache,
+    policy: BatchPolicy,
+    next_seq_id: u64,
+    stats: ServerStats,
+}
+
+impl<M: DecoderModel> Scheduler<M> {
+    /// New scheduler.
+    pub fn new(model: M, cache: PagedKvCache, policy: BatchPolicy) -> Self {
+        Scheduler { model, cache, policy, next_seq_id: 1, stats: ServerStats::default() }
+    }
+
+    /// Aggregate stats. Cache stats are snapshotted at the end of each wave
+    /// *before* sequence eviction, so raw/resident reflect steady state.
+    pub fn stats(&self) -> ServerStats {
+        self.stats
+    }
+
+    /// Train per-layer K/V dictionaries (paper §3.3 "precomputed").
+    pub fn train_dictionaries(&mut self, per_layer_exponents: &[Vec<u8>]) -> Result<()> {
+        for (layer, bytes) in per_layer_exponents.iter().enumerate() {
+            self.cache.dictionaries().train(layer, bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Run every request to completion, in FIFO waves.
+    pub fn run_all(&mut self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        let b = self.model.dims().batch;
+        let mut queue: VecDeque<Request> = requests.into();
+        let mut out = Vec::new();
+        while !queue.is_empty() {
+            let wave: Vec<Request> = (0..b).filter_map(|_| queue.pop_front()).collect();
+            out.extend(self.run_wave(wave)?);
+        }
+        Ok(out)
+    }
+
+    /// Run one wave (≤ batch requests) to completion.
+    pub fn run_wave(&mut self, wave: Vec<Request>) -> Result<Vec<Response>> {
+        let dims = self.model.dims();
+        let (b, s_max, l, d) = (dims.batch, dims.max_seq, dims.n_layers, dims.d_model);
+        if wave.is_empty() {
+            return Ok(Vec::new());
+        }
+        if wave.len() > b {
+            return Err(Error::Coordinator(format!(
+                "wave of {} exceeds batch {b}",
+                wave.len()
+            )));
+        }
+        for r in &wave {
+            if r.prompt.is_empty() || r.prompt.len() >= s_max {
+                return Err(Error::Coordinator(format!(
+                    "request {}: prompt length must be in 1..{s_max}",
+                    r.id
+                )));
+            }
+        }
+
+        // --- Prefill (one shared call; sequences padded to S_max) ---
+        let timer = Timer::new();
+        let mut seqs: Vec<LiveSeq> = wave
+            .into_iter()
+            .map(|request| {
+                let seq_id = self.next_seq_id;
+                self.next_seq_id += 1;
+                LiveSeq {
+                    tokens: request.prompt.clone(),
+                    generated: Vec::new(),
+                    done: request.max_new_tokens == 0,
+                    seq_id,
+                    request,
+                }
+            })
+            .collect();
+        let mut tokens = vec![0i32; b * s_max];
+        for (slot, seq) in seqs.iter().enumerate() {
+            tokens[slot * s_max..slot * s_max + seq.tokens.len()].copy_from_slice(&seq.tokens);
+        }
+        let pre = self.model.prefill(&tokens)?;
+        let prefill_secs = timer.secs();
+
+        // Store prompt K/V rows into the compressed cache.
+        let fmt = self.cache.config().format;
+        let bpt = self.cache.config().bytes_per_token;
+        for (slot, seq) in seqs.iter().enumerate() {
+            for t in 0..seq.tokens.len() {
+                for layer in 0..l {
+                    let base = ((layer * b + slot) * s_max + t) * d;
+                    let k_row = &pre.k_cache[base..base + d];
+                    let v_row = &pre.v_cache[base..base + d];
+                    let mut kv = quantize_row(k_row, fmt);
+                    kv.extend(quantize_row(v_row, fmt));
+                    debug_assert_eq!(kv.len(), 2 * bpt);
+                    self.cache.append_token(seq.seq_id, layer, &kv)?;
+                }
+            }
+        }
+
+        // First generated token: argmax of the last prompt position.
+        let v = dims.vocab;
+        for (slot, seq) in seqs.iter_mut().enumerate() {
+            if seq.done {
+                continue;
+            }
+            let last = seq.tokens.len() - 1;
+            let row = &pre.logits[(slot * s_max + last) * v..(slot * s_max + last + 1) * v];
+            let tok = argmax(row);
+            seq.tokens.push(tok);
+            seq.generated.push(tok);
+        }
+
+        // --- Decode loop over the compressed cache ---
+        let decode_timer = Timer::new();
+        let mut steps = 0usize;
+        let mut k_slab = vec![0f32; l * b * s_max * d];
+        let mut v_slab = vec![0f32; l * b * s_max * d];
+        loop {
+            // A sequence is live if it still needs tokens and has room.
+            let live: Vec<usize> = seqs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    !s.done
+                        && s.generated.len() < s.request.max_new_tokens
+                        && s.tokens.len() < s_max
+                        && steps < self.policy.max_steps
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if live.is_empty() {
+                break;
+            }
+
+            // Assemble the f32 cache slabs from compressed pages. The new
+            // token's K/V row is NOT in the cache yet — decode_step computes
+            // and returns it; its cache row is written by the jax side
+            // internally for attention.
+            k_slab.iter_mut().for_each(|x| *x = 0.0);
+            v_slab.iter_mut().for_each(|x| *x = 0.0);
+            for &slot in &live {
+                let seq = &seqs[slot];
+                let n_cached = seq.tokens.len() - 1; // all but current token
+                for layer in 0..l {
+                    let bytes = self.cache.read(seq.seq_id, layer)?;
+                    debug_assert_eq!(bytes.len(), n_cached * 2 * bpt);
+                    for t in 0..n_cached {
+                        let row = &bytes[t * 2 * bpt..(t + 1) * 2 * bpt];
+                        let base = ((layer * b + slot) * s_max + t) * d;
+                        dequantize_row(&row[..bpt], fmt, &mut k_slab[base..base + d]);
+                        dequantize_row(&row[bpt..], fmt, &mut v_slab[base..base + d]);
+                    }
+                }
+            }
+
+            // Current token + its position per batch slot (idle slots padded).
+            let mut token = vec![0i32; b];
+            let mut pos = vec![0i32; b];
+            for &slot in &live {
+                let seq = &seqs[slot];
+                token[slot] = *seq.tokens.last().unwrap();
+                pos[slot] = (seq.tokens.len() - 1) as i32;
+            }
+            let out = self.model.decode_step(&token, &pos, &k_slab, &v_slab)?;
+            steps += 1;
+
+            // Append the new K/V rows for live sequences; sample next token.
+            for &slot in &live {
+                let seq = &mut seqs[slot];
+                let t_pos = seq.tokens.len() - 1;
+                for layer in 0..l {
+                    let base = (layer * b + slot) * d;
+                    let mut kv = quantize_row(&out.k_new[base..base + d], fmt);
+                    kv.extend(quantize_row(&out.v_new[base..base + d], fmt));
+                    self.cache.append_token(seq.seq_id, layer, &kv)?;
+                }
+                let _ = t_pos;
+                let row = &out.logits[slot * v..(slot + 1) * v];
+                let tok = argmax(row);
+                if seq.generated.len() < seq.request.max_new_tokens
+                    && seq.tokens.len() < s_max
+                {
+                    seq.tokens.push(tok);
+                    seq.generated.push(tok);
+                } else {
+                    seq.done = true;
+                }
+                self.stats.tokens_generated += 1;
+            }
+        }
+        let decode_secs = decode_timer.secs();
+
+        // Seal remaining pages so stats reflect steady state, then evict.
+        self.cache.seal_all()?;
+        self.stats.cache = self.cache.stats();
+        let mut responses = Vec::with_capacity(seqs.len());
+        for seq in seqs {
+            self.cache.evict_sequence(seq.seq_id);
+            self.stats.completed += 1;
+            responses.push(Response {
+                id: seq.request.id,
+                tokens: seq.generated,
+                prefill_secs,
+                decode_secs,
+            });
+        }
+        self.stats.prefill_secs += prefill_secs;
+        self.stats.decode_secs += decode_secs;
+        Ok(responses)
+    }
+
+    /// Direct cache access (integration tests assert compression stats).
+    pub fn cache(&self) -> &PagedKvCache {
+        &self.cache
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_handles_ties_and_nan() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 2); // max_by: last max wins (deterministic)
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn default_policy_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.page_tokens > 0);
+        assert!(p.max_steps > 1000);
+    }
+}

@@ -1,0 +1,243 @@
+//! Histograms, Shannon entropy, and the compressibility gate.
+//!
+//! The paper's strategy (§3.1) compresses the exponent stream always, but the
+//! mantissa stream only "if compressibility is high"; otherwise it is stored
+//! raw. This module provides the measurement behind that decision: a byte
+//! histogram, the order-0 Shannon entropy, and [`CompressDecision`], the gate
+//! used by the codec.
+
+/// 256-bin byte histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; 256],
+    total: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram { counts: [0; 256], total: 0 }
+    }
+
+    /// Build from a byte slice (4-way unrolled; this is on the encode path).
+    pub fn from_bytes(data: &[u8]) -> Self {
+        // Four sub-histograms avoid store-to-load forwarding stalls on the
+        // same counter when adjacent bytes are equal (common for exponents).
+        let mut c0 = [0u64; 256];
+        let mut c1 = [0u64; 256];
+        let mut c2 = [0u64; 256];
+        let mut c3 = [0u64; 256];
+        let mut chunks = data.chunks_exact(4);
+        for ch in &mut chunks {
+            c0[ch[0] as usize] += 1;
+            c1[ch[1] as usize] += 1;
+            c2[ch[2] as usize] += 1;
+            c3[ch[3] as usize] += 1;
+        }
+        for &b in chunks.remainder() {
+            c0[b as usize] += 1;
+        }
+        let mut counts = [0u64; 256];
+        for i in 0..256 {
+            counts[i] = c0[i] + c1[i] + c2[i] + c3[i];
+        }
+        Histogram { counts, total: data.len() as u64 }
+    }
+
+    /// Build from raw counts (e.g. a histogram emitted by the Pallas
+    /// stream-split kernel).
+    pub fn from_counts(counts: [u64; 256]) -> Self {
+        let total = counts.iter().sum();
+        Histogram { counts, total }
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn add(&mut self, byte: u8) {
+        self.counts[byte as usize] += 1;
+        self.total += 1;
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..256 {
+            self.counts[i] += other.counts[i];
+        }
+        self.total += other.total;
+    }
+
+    /// Raw counts.
+    pub fn counts(&self) -> &[u64; 256] {
+        &self.counts
+    }
+
+    /// Total number of observations.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Number of distinct symbols observed.
+    pub fn distinct(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Order-0 Shannon entropy in bits/byte. Zero for empty input.
+    pub fn entropy_bits(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let n = self.total as f64;
+        let mut h = 0.0;
+        for &c in &self.counts {
+            if c > 0 {
+                let p = c as f64 / n;
+                h -= p * p.log2();
+            }
+        }
+        h
+    }
+
+    /// Ideal compression ratio under an order-0 entropy coder
+    /// (compressed/original; 1.0 = incompressible).
+    pub fn ideal_ratio(&self) -> f64 {
+        self.entropy_bits() / 8.0
+    }
+
+    /// Probability mass of the single most frequent symbol.
+    pub fn max_p(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        *self.counts.iter().max().unwrap() as f64 / self.total as f64
+    }
+}
+
+/// The codec's gate: compress a stream only if entropy coding is expected to
+/// pay for its table overhead. (Paper §3.1: "The mantissa stream is evaluated
+/// for entropy; if compressibility is high, we apply Huffman encoding,
+/// otherwise it is stored uncompressed.")
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressDecision {
+    /// Expected ratio (including table overhead) if we do compress.
+    pub expected_ratio: f64,
+    /// Whether to entropy-code the stream.
+    pub compress: bool,
+}
+
+/// Estimated serialized Huffman table cost in bytes (256 × 4-bit lengths +
+/// framing). Conservative constant used by the gate.
+pub const TABLE_OVERHEAD_BYTES: f64 = 160.0;
+
+/// Decide whether to Huffman-code a stream with histogram `h`.
+///
+/// `threshold` is the maximum acceptable expected ratio (the paper stores
+/// streams raw when compression gains are marginal; we default to 0.97 so a
+/// stream must save at least ~3% to be worth a table + decode pass).
+pub fn decide(h: &Histogram, threshold: f64) -> CompressDecision {
+    if h.total() == 0 {
+        return CompressDecision { expected_ratio: 1.0, compress: false };
+    }
+    let ideal = h.ideal_ratio();
+    let with_overhead = ideal + TABLE_OVERHEAD_BYTES / h.total() as f64;
+    CompressDecision { expected_ratio: with_overhead, compress: with_overhead < threshold }
+}
+
+/// Default mantissa gate threshold.
+pub const DEFAULT_GATE_THRESHOLD: f64 = 0.97;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn entropy_of_constant_is_zero() {
+        let h = Histogram::from_bytes(&[42u8; 1000]);
+        assert_eq!(h.entropy_bits(), 0.0);
+        assert_eq!(h.distinct(), 1);
+        assert_eq!(h.max_p(), 1.0);
+    }
+
+    #[test]
+    fn entropy_of_uniform_is_eight() {
+        let mut counts = [0u64; 256];
+        counts.iter_mut().for_each(|c| *c = 100);
+        let h = Histogram::from_counts(counts);
+        assert!((h.entropy_bits() - 8.0).abs() < 1e-12);
+        assert!((h.ideal_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_of_two_symbols() {
+        let mut data = vec![0u8; 500];
+        data.extend(vec![255u8; 500]);
+        let h = Histogram::from_bytes(&data);
+        assert!((h.entropy_bits() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::from_bytes(&[]);
+        assert_eq!(h.entropy_bits(), 0.0);
+        assert_eq!(h.total(), 0);
+        let d = decide(&h, DEFAULT_GATE_THRESHOLD);
+        assert!(!d.compress);
+    }
+
+    #[test]
+    fn unrolled_histogram_matches_naive() {
+        let mut rng = Rng::new(17);
+        let mut data = vec![0u8; 4097];
+        rng.fill_bytes(&mut data);
+        let h = Histogram::from_bytes(&data);
+        let mut naive = [0u64; 256];
+        for &b in &data {
+            naive[b as usize] += 1;
+        }
+        assert_eq!(h.counts(), &naive);
+        assert_eq!(h.total(), data.len() as u64);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let a = Histogram::from_bytes(&[1, 1, 2]);
+        let mut b = Histogram::from_bytes(&[2, 3]);
+        b.merge(&a);
+        assert_eq!(b.total(), 5);
+        assert_eq!(b.counts()[1], 2);
+        assert_eq!(b.counts()[2], 2);
+        assert_eq!(b.counts()[3], 1);
+    }
+
+    #[test]
+    fn gate_compresses_skewed_not_uniform() {
+        // Skewed: 90% one symbol.
+        let mut data = vec![7u8; 9000];
+        data.extend((0..1000u32).map(|i| (i % 255) as u8 + 1));
+        let h = Histogram::from_bytes(&data);
+        assert!(decide(&h, DEFAULT_GATE_THRESHOLD).compress);
+
+        // Uniform random: incompressible.
+        let mut rng = Rng::new(3);
+        let mut noise = vec![0u8; 10_000];
+        rng.fill_bytes(&mut noise);
+        let h2 = Histogram::from_bytes(&noise);
+        assert!(!decide(&h2, DEFAULT_GATE_THRESHOLD).compress);
+    }
+
+    #[test]
+    fn gate_rejects_tiny_streams() {
+        // 64 bytes of skewed data: table overhead dominates.
+        let data = vec![1u8; 64];
+        let h = Histogram::from_bytes(&data);
+        let d = decide(&h, DEFAULT_GATE_THRESHOLD);
+        assert!(d.expected_ratio > 1.0);
+        assert!(!d.compress);
+    }
+}

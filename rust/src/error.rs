@@ -1,0 +1,89 @@
+//! Crate-wide error type.
+//!
+//! A single enum keeps the public API surface small; variants are grouped by
+//! subsystem. All fallible public functions return [`Result`].
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors produced by zipnn-lp.
+#[derive(Debug)]
+pub enum Error {
+    /// Input does not satisfy a size / alignment precondition.
+    InvalidInput(String),
+    /// A compressed stream failed to parse (truncated, bad magic, …).
+    Corrupt(String),
+    /// CRC mismatch while decoding a chunk: data was damaged in transit.
+    ChecksumMismatch { chunk: usize, expected: u32, actual: u32 },
+    /// Huffman table construction or decoding failure.
+    Huffman(String),
+    /// Container-format violation (bad header, unknown strategy id, …).
+    Container(String),
+    /// Checkpoint-store consistency failure (missing base, broken chain, …).
+    Checkpoint(String),
+    /// K/V cache manager failure (unknown page, dictionary mismatch, …).
+    KvCache(String),
+    /// Serving-coordinator failure (queue closed, session unknown, …).
+    Coordinator(String),
+    /// PJRT runtime failure (artifact missing, XLA error, shape mismatch).
+    Runtime(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            Error::Corrupt(m) => write!(f, "corrupt stream: {m}"),
+            Error::ChecksumMismatch { chunk, expected, actual } => write!(
+                f,
+                "checksum mismatch in chunk {chunk}: expected {expected:#010x}, got {actual:#010x}"
+            ),
+            Error::Huffman(m) => write!(f, "huffman: {m}"),
+            Error::Container(m) => write!(f, "container: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint: {m}"),
+            Error::KvCache(m) => write!(f, "kvcache: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = Error::ChecksumMismatch { chunk: 3, expected: 0xdeadbeef, actual: 0x1 };
+        let s = e.to_string();
+        assert!(s.contains("chunk 3"));
+        assert!(s.contains("0xdeadbeef"));
+    }
+
+    #[test]
+    fn io_error_roundtrips_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("nope"));
+    }
+}

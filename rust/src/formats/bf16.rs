@@ -1,0 +1,140 @@
+//! BF16 stream separation (paper Fig 5).
+//!
+//! bfloat16 layout (little-endian u16): `[s:15][eeeeeeee:14..7][mmmmmmm:6..0]`.
+//! The split groups all 8-bit exponents into one stream and `sign<<7 |
+//! mantissa` bytes into the other — exactly the Fig 5 transform.
+
+use super::streams::{Stream, StreamKind, StreamSet};
+use crate::error::{Error, Result};
+
+/// Split little-endian BF16 bytes into exponent and sign|mantissa streams.
+pub fn split(data: &[u8]) -> Result<StreamSet> {
+    if data.len() % 2 != 0 {
+        return Err(Error::InvalidInput(format!(
+            "BF16 buffer length {} is not a multiple of 2",
+            data.len()
+        )));
+    }
+    let n = data.len() / 2;
+    // Direct-indexed writes (no per-element push/capacity checks): this
+    // transform is on the codec hot path (§Perf).
+    let mut exp = vec![0u8; n];
+    let mut sm = vec![0u8; n];
+    for (i, pair) in data.chunks_exact(2).enumerate() {
+        let w = u16::from_le_bytes([pair[0], pair[1]]);
+        exp[i] = ((w >> 7) & 0xFF) as u8;
+        sm[i] = (((w >> 8) & 0x80) | (w & 0x7F)) as u8;
+    }
+    Ok(StreamSet {
+        streams: vec![
+            Stream::new(StreamKind::Exponent, exp, 8),
+            Stream::new(StreamKind::SignMantissa, sm, 8),
+        ],
+        n_elements: n,
+        original_bytes: data.len(),
+    })
+}
+
+/// Inverse of [`split`].
+pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
+    let exp = set
+        .exponent()
+        .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
+    let sm = set
+        .sign_mantissa()
+        .ok_or_else(|| Error::InvalidInput("missing sign|mantissa stream".into()))?;
+    if exp.len() != set.n_elements || sm.len() != set.n_elements {
+        return Err(Error::Corrupt("BF16 stream length mismatch".into()));
+    }
+    let mut out = vec![0u8; set.n_elements * 2];
+    for ((o, &e8), &s8) in
+        out.chunks_exact_mut(2).zip(&exp.bytes).zip(&sm.bytes)
+    {
+        let e = e8 as u16;
+        let s = s8 as u16;
+        let w = ((s & 0x80) << 8) | (e << 7) | (s & 0x7F);
+        o.copy_from_slice(&w.to_le_bytes());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bf16_bits(f: f32) -> u16 {
+        // Truncation is fine for test vectors.
+        (f.to_bits() >> 16) as u16
+    }
+
+    #[test]
+    fn split_known_values() {
+        // 1.0f32 = 0x3F80_0000 → bf16 0x3F80: s=0 e=0x7F m=0.
+        let w = bf16_bits(1.0);
+        let set = split(&w.to_le_bytes()).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![0x7F]);
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0x00]);
+
+        // -1.5 → s=1 e=0x7F m=0x40.
+        let w = bf16_bits(-1.5);
+        let set = split(&w.to_le_bytes()).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![0x7F]);
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0x80 | 0x40]);
+    }
+
+    #[test]
+    fn zero_and_specials() {
+        for (f, e, s) in [
+            (0.0f32, 0x00u8, 0x00u8),
+            (-0.0, 0x00, 0x80),
+            (f32::INFINITY, 0xFF, 0x00),
+            (f32::NEG_INFINITY, 0xFF, 0x80),
+        ] {
+            let w = bf16_bits(f);
+            let set = split(&w.to_le_bytes()).unwrap();
+            assert_eq!(set.exponent().unwrap().bytes, vec![e], "{f}");
+            assert_eq!(set.sign_mantissa().unwrap().bytes, vec![s], "{f}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(33);
+        let mut data = vec![0u8; 4096];
+        rng.fill_bytes(&mut data);
+        let set = split(&data).unwrap();
+        assert_eq!(merge(&set).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let set = split(&[]).unwrap();
+        assert_eq!(set.n_elements, 0);
+        assert_eq!(merge(&set).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn odd_length_rejected() {
+        assert!(split(&[1u8, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn gaussian_weights_have_skewed_exponents() {
+        // The paper's core observation: exponents of N(0, 0.02) weights
+        // concentrate on a handful of values.
+        let mut rng = Rng::new(7);
+        let mut data = Vec::new();
+        for _ in 0..10_000 {
+            let v = rng.normal_ms(0.0, 0.02) as f32;
+            data.extend_from_slice(&bf16_bits(v).to_le_bytes());
+        }
+        let set = split(&data).unwrap();
+        let h = crate::entropy::Histogram::from_bytes(&set.exponent().unwrap().bytes);
+        // 8-bit exponent entropy must be far below 8 bits.
+        assert!(h.entropy_bits() < 4.0, "H={}", h.entropy_bits());
+        // And sign|mantissa close to uniform-ish (> 6 bits).
+        let h2 = crate::entropy::Histogram::from_bytes(&set.sign_mantissa().unwrap().bytes);
+        assert!(h2.entropy_bits() > 6.0, "H={}", h2.entropy_bits());
+    }
+}

@@ -1,0 +1,578 @@
+//! Value-level conversions between f32 and the low-precision formats, plus
+//! the MXFP4/NVFP4 block quantizers.
+//!
+//! These conversions feed the synthetic-workload generators and the model
+//! quantizer driver. They are *not* on the lossless path (the codec is
+//! bit-exact whatever produced the bits), but their rounding matches the
+//! reference semantics so exponent distributions are realistic:
+//!
+//! * BF16 / FP16: IEEE round-to-nearest-even.
+//! * FP8 E4M3 (`float8_e4m3fn`): RNE, overflow → NaN (no inf exists).
+//! * FP8 E5M2: RNE, overflow → ±inf.
+//! * FP4 E2M1: RNE on the 16-value grid, saturating (no specials).
+//! * NVFP4: per-16 block `scale = round_up(amax/6)` in E4M3 over a global
+//!   FP32 scale; payload RNE — the recipe in the paper's Fig 3.
+//! * MXFP4: per-group (default 32) FP16/FP32 scale (paper Fig 4 row).
+
+use super::fp4::{Mxfp4Tensor, Nvfp4Tensor};
+use super::FloatFormat;
+use crate::error::{Error, Result};
+
+// --- BF16 ----------------------------------------------------------------
+
+/// f32 → BF16 bits with round-to-nearest-even.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // Preserve a quiet NaN.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE: add 0x7FFF plus the LSB of the kept part, then truncate.
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+/// BF16 bits → f32 (exact).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// --- FP16 ----------------------------------------------------------------
+
+/// f32 → FP16 bits with RNE, overflow → inf, subnormal support.
+pub fn f32_to_fp16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // Inf or NaN.
+        return if abs > 0x7F80_0000 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let e = ((abs >> 23) as i32) - 127;
+    if e >= 16 {
+        // |v| >= 65536: beyond the halfway-to-overflow point → inf.
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // Normal half.
+        let m = abs & 0x7F_FFFF;
+        let he = (e + 15) as u32;
+        let mut out = (he << 10) | (m >> 13);
+        // RNE on the dropped 13 bits.
+        let rem = m & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+            out += 1; // may carry into exponent — that is correct rounding
+        }
+        if out >= 0x7C00 {
+            return sign | 0x7C00;
+        }
+        sign | out as u16
+    } else if e >= -25 {
+        // Subnormal half: value = m_total * 2^(e-23), quantum 2^-24.
+        let m_total = (abs & 0x7F_FFFF) | 0x80_0000;
+        let shift = (-14 - e) as u32 + 13;
+        let mut out = m_total >> shift;
+        let rem_mask = (1u32 << shift) - 1;
+        let rem = m_total & rem_mask;
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (out & 1) == 1) {
+            out += 1;
+        }
+        sign | out as u16
+    } else {
+        sign // underflow to zero
+    }
+}
+
+/// FP16 bits → f32 (exact).
+pub fn fp16_to_f32(h: u16) -> f32 {
+    let sign = ((h >> 15) & 1) as u32;
+    let e = ((h >> 10) & 0x1F) as i32;
+    let m = (h & 0x3FF) as u32;
+    if e == 0x1F {
+        return if m == 0 {
+            if sign == 1 { f32::NEG_INFINITY } else { f32::INFINITY }
+        } else {
+            f32::NAN
+        };
+    }
+    if e == 0 {
+        let v = m as f32 * 2f32.powi(-24);
+        return if sign == 1 { -v } else { v };
+    }
+    let bits = (sign << 31) | (((e - 15 + 127) as u32) << 23) | (m << 13);
+    f32::from_bits(bits)
+}
+
+// --- FP8 via enumeration ---------------------------------------------------
+
+/// Decode an E4M3 byte to f32 (exact; NaN for S.1111.111).
+pub fn e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0x0F) as i32;
+    let m = (b & 0x07) as f32;
+    if e == 0x0F && (b & 0x07) == 0x07 {
+        return f32::NAN;
+    }
+    let v = if e == 0 {
+        m * 2f32.powi(-6 - 3) // subnormal: m/8 * 2^-6
+    } else {
+        (1.0 + m / 8.0) * 2f32.powi(e - 7)
+    };
+    sign * v
+}
+
+/// Decode an E5M2 byte to f32 (exact; IEEE-like inf/NaN).
+pub fn e5m2_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 2) & 0x1F) as i32;
+    let m = (b & 0x03) as f32;
+    if e == 0x1F {
+        return if m == 0.0 { sign * f32::INFINITY } else { f32::NAN };
+    }
+    let v = if e == 0 {
+        m * 2f32.powi(-14 - 2)
+    } else {
+        (1.0 + m / 4.0) * 2f32.powi(e - 15)
+    };
+    sign * v
+}
+
+/// Decode an E2M1 nibble to f32 (exact; grid {0,.5,1,1.5,2,3,4,6}).
+pub fn e2m1_to_f32(nib: u8) -> f32 {
+    let sign = if nib & 0x8 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((nib >> 1) & 0x3) as i32;
+    let m = (nib & 0x1) as f32;
+    let v = if e == 0 { m * 0.5 } else { (1.0 + m * 0.5) * 2f32.powi(e - 1) };
+    sign * v
+}
+
+/// Round `v` to the nearest value on a sorted positive `grid` (RNE: ties go
+/// to the grid point with an even index, which corresponds to mantissa LSB 0
+/// for the formats used here).
+fn round_on_grid(a: f32, grid: &[f32]) -> usize {
+    debug_assert!(a >= 0.0);
+    // Binary search for the insertion point.
+    let mut lo = 0usize;
+    let mut hi = grid.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if grid[mid] < a {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    if lo == 0 {
+        return 0;
+    }
+    if lo >= grid.len() {
+        return grid.len() - 1;
+    }
+    // Distances in f64: f64 subtraction of f32 values is exact, so the
+    // halfway comparison is true RNE (f32 subtraction here produced
+    // off-by-one codes vs the IEEE cast on ~0.4% of Gaussian inputs).
+    let below = grid[lo - 1] as f64;
+    let above = grid[lo] as f64;
+    let x = a as f64;
+    let d_lo = x - below;
+    let d_hi = above - x;
+    if d_lo < d_hi {
+        lo - 1
+    } else if d_hi < d_lo {
+        lo
+    } else {
+        // Tie: even index (mantissa LSB 0 on these grids).
+        if (lo - 1) % 2 == 0 {
+            lo - 1
+        } else {
+            lo
+        }
+    }
+}
+
+/// E4M3 positive finite grid (bits 0x00..=0x7E decoded), index == bit value.
+fn e4m3_grid() -> &'static [f32] {
+    use std::sync::OnceLock;
+    static GRID: OnceLock<Vec<f32>> = OnceLock::new();
+    GRID.get_or_init(|| (0u8..=0x7E).map(e4m3_to_f32).collect())
+}
+
+/// f32 → E4M3 byte: RNE, overflow → NaN (float8_e4m3fn semantics).
+pub fn f32_to_e4m3(v: f32) -> u8 {
+    let sign = if v.is_sign_negative() { 0x80u8 } else { 0 };
+    if v.is_nan() {
+        return sign | 0x7F;
+    }
+    let a = v.abs();
+    let grid = e4m3_grid();
+    let max = grid[grid.len() - 1]; // 448
+    if a > max {
+        // Halfway-to-overflow rounds down to max; beyond → NaN.
+        return if a <= max * (1.0 + 1.0 / 32.0) { sign | 0x7E } else { sign | 0x7F };
+    }
+    sign | round_on_grid(a, grid) as u8
+}
+
+/// E5M2 positive finite grid.
+fn e5m2_grid() -> &'static [f32] {
+    use std::sync::OnceLock;
+    static GRID: OnceLock<Vec<f32>> = OnceLock::new();
+    GRID.get_or_init(|| (0u8..=0x7B).map(e5m2_to_f32).collect())
+}
+
+/// f32 → E5M2 byte: RNE, overflow → ±inf.
+pub fn f32_to_e5m2(v: f32) -> u8 {
+    let sign = if v.is_sign_negative() { 0x80u8 } else { 0 };
+    if v.is_nan() {
+        return sign | 0x7E;
+    }
+    let a = v.abs();
+    let grid = e5m2_grid();
+    let max = grid[grid.len() - 1]; // 57344
+    if a > max {
+        return if a < max * 1.25 { sign | 0x7B } else { sign | 0x7C };
+    }
+    sign | round_on_grid(a, grid) as u8
+}
+
+/// f32 → E2M1 nibble: RNE, saturating at ±6 (NVFP4 payload semantics).
+pub fn f32_to_e2m1(v: f32) -> u8 {
+    const GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+    let sign = if v.is_sign_negative() { 0x8u8 } else { 0 };
+    if v.is_nan() {
+        return sign | 0x7; // saturate; E2M1 has no NaN
+    }
+    let a = v.abs().min(6.0);
+    sign | round_on_grid(a, &GRID) as u8
+}
+
+// --- Bulk helpers ----------------------------------------------------------
+
+/// Quantize a f32 slice to little-endian bytes of `format` (scalar formats
+/// only; FP4 packs two nibbles per byte).
+pub fn quantize_slice(values: &[f32], format: FloatFormat) -> Result<Vec<u8>> {
+    match format {
+        FloatFormat::Fp32 => {
+            Ok(values.iter().flat_map(|v| v.to_le_bytes()).collect())
+        }
+        FloatFormat::Bf16 => {
+            Ok(values.iter().flat_map(|&v| f32_to_bf16(v).to_le_bytes()).collect())
+        }
+        FloatFormat::Fp16 => {
+            Ok(values.iter().flat_map(|&v| f32_to_fp16(v).to_le_bytes()).collect())
+        }
+        FloatFormat::Fp8E4M3 => Ok(values.iter().map(|&v| f32_to_e4m3(v)).collect()),
+        FloatFormat::Fp8E5M2 => Ok(values.iter().map(|&v| f32_to_e5m2(v)).collect()),
+        FloatFormat::Fp4E2M1 => {
+            let mut out = Vec::with_capacity(values.len().div_ceil(2));
+            for pair in values.chunks(2) {
+                let lo = f32_to_e2m1(pair[0]);
+                let hi = if pair.len() == 2 { f32_to_e2m1(pair[1]) } else { 0 };
+                out.push(lo | (hi << 4));
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Dequantize little-endian bytes of `format` back to f32 values.
+pub fn dequantize_slice(data: &[u8], format: FloatFormat, n_elements: usize) -> Result<Vec<f32>> {
+    let out: Vec<f32> = match format {
+        FloatFormat::Fp32 => data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        FloatFormat::Bf16 => data
+            .chunks_exact(2)
+            .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+        FloatFormat::Fp16 => data
+            .chunks_exact(2)
+            .map(|c| fp16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+        FloatFormat::Fp8E4M3 => data.iter().map(|&b| e4m3_to_f32(b)).collect(),
+        FloatFormat::Fp8E5M2 => data.iter().map(|&b| e5m2_to_f32(b)).collect(),
+        FloatFormat::Fp4E2M1 => {
+            let mut v = Vec::with_capacity(data.len() * 2);
+            for &b in data {
+                v.push(e2m1_to_f32(b & 0x0F));
+                v.push(e2m1_to_f32(b >> 4));
+            }
+            v.truncate(n_elements);
+            v
+        }
+    };
+    if out.len() < n_elements {
+        return Err(Error::InvalidInput("buffer too short for n_elements".into()));
+    }
+    let mut out = out;
+    out.truncate(n_elements);
+    Ok(out)
+}
+
+// --- Block quantizers --------------------------------------------------------
+
+/// NVFP4 quantization (paper Fig 3): per-16 block
+/// `scale = round_up(amax/6)` stored in E4M3 over a global FP32 scale;
+/// payload is RNE E2M1 of `v / (global*block_scale)`.
+pub fn quantize_nvfp4(values: &[f32]) -> Nvfp4Tensor {
+    let n = values.len();
+    let amax_t = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    // Global scale puts the largest block scale at the top of E4M3 range.
+    let global = if amax_t > 0.0 { amax_t / (448.0 * 6.0) } else { 1.0 };
+    let n_blocks = n.div_ceil(Nvfp4Tensor::BLOCK);
+    let mut block_scales = Vec::with_capacity(n_blocks);
+    let mut nibbles: Vec<u8> = Vec::with_capacity(n);
+    for block in values.chunks(Nvfp4Tensor::BLOCK) {
+        let amax = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        // quantize_round_up: smallest E4M3 value >= amax/(6*global).
+        let want = amax / (6.0 * global);
+        let mut sbits = f32_to_e4m3(want);
+        if !e4m3_to_f32(sbits).is_nan() && e4m3_to_f32(sbits) < want {
+            // Bump to next representable (round *up* per the recipe).
+            if (sbits & 0x7F) < 0x7E {
+                sbits += 1;
+            }
+        }
+        let s = e4m3_to_f32(sbits);
+        let denom = if s.is_nan() || s == 0.0 { 1.0 } else { s * global };
+        block_scales.push(sbits);
+        for &v in block {
+            nibbles.push(f32_to_e2m1(v / denom));
+        }
+    }
+    // Pack nibbles.
+    let mut payload = Vec::with_capacity(n.div_ceil(2));
+    for pair in nibbles.chunks(2) {
+        let lo = pair[0];
+        let hi = if pair.len() == 2 { pair[1] } else { 0 };
+        payload.push(lo | (hi << 4));
+    }
+    Nvfp4Tensor { payload, block_scales, global_scale: global, n_elements: n }
+}
+
+/// Dequantize an NVFP4 tensor back to f32 (lossy inverse, for model use).
+pub fn dequantize_nvfp4(t: &Nvfp4Tensor) -> Vec<f32> {
+    let mut out = Vec::with_capacity(t.n_elements);
+    for i in 0..t.n_elements {
+        let byte = t.payload[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        let s = e4m3_to_f32(t.block_scales[i / Nvfp4Tensor::BLOCK]);
+        let s = if s.is_nan() || s == 0.0 { 1.0 } else { s };
+        out.push(e2m1_to_f32(nib) * s * t.global_scale);
+    }
+    out
+}
+
+/// MXFP4 quantization: one FP16/FP32 scale per `group_size` elements
+/// (paper Fig 4 row: "Single scale (fp16/fp32)", group 32–64).
+pub fn quantize_mxfp4(values: &[f32], group_size: usize, scale_format: FloatFormat) -> Result<Mxfp4Tensor> {
+    if !matches!(scale_format, FloatFormat::Fp16 | FloatFormat::Fp32) {
+        return Err(Error::InvalidInput("MXFP4 scale must be fp16 or fp32".into()));
+    }
+    if group_size == 0 {
+        return Err(Error::InvalidInput("group_size must be positive".into()));
+    }
+    let n = values.len();
+    let mut scales = Vec::new();
+    let mut nibbles: Vec<u8> = Vec::with_capacity(n);
+    for group in values.chunks(group_size) {
+        let amax = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if amax > 0.0 { amax / 6.0 } else { 1.0 };
+        // Store the scale in its format, then use the *stored* value so
+        // dequantization matches exactly what a reader would compute.
+        let stored = match scale_format {
+            FloatFormat::Fp16 => {
+                let h = f32_to_fp16(scale);
+                scales.extend_from_slice(&h.to_le_bytes());
+                fp16_to_f32(h)
+            }
+            _ => {
+                scales.extend_from_slice(&scale.to_le_bytes());
+                scale
+            }
+        };
+        let denom = if stored == 0.0 { 1.0 } else { stored };
+        for &v in group {
+            nibbles.push(f32_to_e2m1(v / denom));
+        }
+    }
+    let mut payload = Vec::with_capacity(n.div_ceil(2));
+    for pair in nibbles.chunks(2) {
+        let lo = pair[0];
+        let hi = if pair.len() == 2 { pair[1] } else { 0 };
+        payload.push(lo | (hi << 4));
+    }
+    Ok(Mxfp4Tensor { payload, scales, scale_format, group_size, n_elements: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_rne() {
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(bf16_to_f32(0x3F80), 1.0);
+        // 1.00390625 = 0x3F808000 is exactly halfway between 0x3F80 and
+        // 0x3F81 → RNE picks even (0x3F80).
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // Just above halfway rounds up.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // 0x3F818000 halfway → odd → rounds up to 0x3F82.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+    }
+
+    #[test]
+    fn fp16_known_values() {
+        assert_eq!(f32_to_fp16(1.0), 0x3C00);
+        assert_eq!(f32_to_fp16(-2.0), 0xC000);
+        assert_eq!(f32_to_fp16(65504.0), 0x7BFF);
+        assert_eq!(f32_to_fp16(100000.0), 0x7C00); // inf
+        assert_eq!(f32_to_fp16(0.0), 0x0000);
+        assert_eq!(fp16_to_f32(0x3C00), 1.0);
+        assert_eq!(fp16_to_f32(0x0001), 2f32.powi(-24)); // smallest subnormal
+        assert!(fp16_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn fp16_roundtrip_representables() {
+        // Every finite FP16 value must roundtrip f16→f32→f16.
+        for bits in 0..0x7C00u16 {
+            let f = fp16_to_f32(bits);
+            assert_eq!(f32_to_fp16(f), bits, "bits={bits:#06x} f={f}");
+        }
+        for bits in 0x8000..0xFC00u16 {
+            let f = fp16_to_f32(bits);
+            assert_eq!(f32_to_fp16(f), bits, "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_decode_known() {
+        assert_eq!(e4m3_to_f32(0x38), 1.0); // e=7 m=0
+        assert_eq!(e4m3_to_f32(0x3C), 1.5);
+        assert_eq!(e4m3_to_f32(0x7E), 448.0); // max finite
+        assert_eq!(e4m3_to_f32(0x00), 0.0);
+        assert_eq!(e4m3_to_f32(0x01), 2f32.powi(-9)); // min subnormal
+        assert!(e4m3_to_f32(0x7F).is_nan());
+        assert_eq!(e4m3_to_f32(0xBC), -1.5);
+    }
+
+    #[test]
+    fn e4m3_roundtrip_representables() {
+        for bits in 0u8..=0x7E {
+            let f = e4m3_to_f32(bits);
+            assert_eq!(f32_to_e4m3(f), bits, "bits={bits:#04x} f={f}");
+        }
+        for bits in 0x80u8..=0xFE {
+            let f = e4m3_to_f32(bits);
+            // -0.0 encodes back with the sign preserved.
+            assert_eq!(f32_to_e4m3(f), bits, "bits={bits:#04x} f={f}");
+        }
+    }
+
+    #[test]
+    fn e4m3_overflow_is_nan() {
+        assert_eq!(f32_to_e4m3(1e6) & 0x7F, 0x7F);
+        assert_eq!(f32_to_e4m3(-1e6), 0xFF);
+        // 448..=462 rounds down to 448 (halfway at 464 with stride 32).
+        assert_eq!(f32_to_e4m3(460.0), 0x7E);
+    }
+
+    #[test]
+    fn e5m2_decode_known() {
+        assert_eq!(e5m2_to_f32(0x3C), 1.0); // e=15 m=0
+        assert_eq!(e5m2_to_f32(0x7B), 57344.0); // max finite
+        assert!(e5m2_to_f32(0x7C).is_infinite());
+        assert!(e5m2_to_f32(0x7D).is_nan());
+        assert_eq!(e5m2_to_f32(0x01), 2f32.powi(-16));
+    }
+
+    #[test]
+    fn e5m2_roundtrip_representables() {
+        for bits in 0u8..=0x7B {
+            let f = e5m2_to_f32(bits);
+            assert_eq!(f32_to_e5m2(f), bits, "bits={bits:#04x} f={f}");
+        }
+    }
+
+    #[test]
+    fn e2m1_grid() {
+        let expect = [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        for (i, &v) in expect.iter().enumerate() {
+            assert_eq!(e2m1_to_f32(i as u8), v);
+            assert_eq!(f32_to_e2m1(v), i as u8);
+            assert_eq!(e2m1_to_f32(i as u8 | 0x8), -v);
+        }
+        assert_eq!(f32_to_e2m1(100.0), 0x7); // saturate
+        assert_eq!(f32_to_e2m1(-100.0), 0xF);
+        // RNE: 2.5 is halfway between 2 (idx 4, even) and 3 → picks 2.
+        assert_eq!(f32_to_e2m1(2.5), 4);
+        // 1.25 halfway between 1.0 (idx 2, even) and 1.5 → picks 1.0.
+        assert_eq!(f32_to_e2m1(1.25), 2);
+        // 0.75 halfway between 0.5 (idx1) and 1.0 (idx2, even) → 1.0.
+        assert_eq!(f32_to_e2m1(0.75), 2);
+    }
+
+    #[test]
+    fn quantize_slice_roundtrip_sizes() {
+        let vals = vec![0.1f32, -0.2, 0.3, 1.5, -3.0];
+        assert_eq!(quantize_slice(&vals, FloatFormat::Bf16).unwrap().len(), 10);
+        assert_eq!(quantize_slice(&vals, FloatFormat::Fp8E4M3).unwrap().len(), 5);
+        assert_eq!(quantize_slice(&vals, FloatFormat::Fp4E2M1).unwrap().len(), 3);
+        let d = dequantize_slice(
+            &quantize_slice(&vals, FloatFormat::Fp32).unwrap(),
+            FloatFormat::Fp32,
+            5,
+        )
+        .unwrap();
+        assert_eq!(d, vals);
+    }
+
+    #[test]
+    fn nvfp4_structure() {
+        let vals: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.01).collect();
+        let t = quantize_nvfp4(&vals);
+        assert_eq!(t.n_elements, 64);
+        assert_eq!(t.block_scales.len(), 4);
+        assert_eq!(t.payload.len(), 32);
+        // Reconstruction error bounded by half an E2M1 step at block scale.
+        let back = dequantize_nvfp4(&t);
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.35 * 0.32 + 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn nvfp4_odd_length() {
+        let vals = vec![1.0f32; 17];
+        let t = quantize_nvfp4(&vals);
+        assert_eq!(t.block_scales.len(), 2);
+        assert_eq!(t.payload.len(), 9);
+        let back = dequantize_nvfp4(&t);
+        assert_eq!(back.len(), 17);
+    }
+
+    #[test]
+    fn mxfp4_structure() {
+        let vals: Vec<f32> = (0..96).map(|i| ((i * 37) % 13) as f32 * 0.05 - 0.3).collect();
+        let t = quantize_mxfp4(&vals, 32, FloatFormat::Fp16).unwrap();
+        assert_eq!(t.scales.len(), 3 * 2); // 3 groups × fp16
+        assert_eq!(t.payload.len(), 48);
+        let t32 = quantize_mxfp4(&vals, 32, FloatFormat::Fp32).unwrap();
+        assert_eq!(t32.scales.len(), 3 * 4);
+        assert!(quantize_mxfp4(&vals, 32, FloatFormat::Bf16).is_err());
+        assert!(quantize_mxfp4(&vals, 0, FloatFormat::Fp16).is_err());
+    }
+
+    #[test]
+    fn all_zero_input_nvfp4() {
+        let t = quantize_nvfp4(&[0.0f32; 32]);
+        let back = dequantize_nvfp4(&t);
+        assert!(back.iter().all(|&v| v == 0.0));
+    }
+}

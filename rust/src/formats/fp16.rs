@@ -1,0 +1,132 @@
+//! FP16 (binary16) stream separation.
+//!
+//! Layout (little-endian u16): `[s:15][eeeee:14..10][m:9..0]`. The 5-bit
+//! exponent gets one *symbol byte* per element (native width 5 → the raw
+//! fallback re-packs densely); sign + 10 mantissa bits form an 11-bit symbol
+//! that is carried as a little-endian byte pair for Huffman purposes but
+//! natively occupies 11 bits.
+//!
+//! For simplicity and byte-alignment of the Huffman alphabet the 11-bit
+//! sign|mantissa is split further: low 8 mantissa bits in one stream symbol,
+//! `sign<<2 | mantissa[9:8]` (3 bits, native) in the other — mirroring the
+//! paper's byte-grouping approach for E4M3 (§4.2).
+
+use super::packing;
+use super::streams::{Stream, StreamKind, StreamSet};
+use crate::error::{Error, Result};
+
+/// Split little-endian FP16 bytes into exponent / mantissa-low /
+/// sign+mantissa-high streams.
+///
+/// Stream order: `[Exponent(5b), SignMantissa(8b low), Payload(3b high)]` —
+/// `Payload` is reused for the 3-bit tail to keep [`StreamKind`] closed.
+pub fn split(data: &[u8]) -> Result<StreamSet> {
+    if data.len() % 2 != 0 {
+        return Err(Error::InvalidInput(format!(
+            "FP16 buffer length {} is not a multiple of 2",
+            data.len()
+        )));
+    }
+    let n = data.len() / 2;
+    let mut exp = Vec::with_capacity(n);
+    let mut mlo = Vec::with_capacity(n);
+    let mut smh = Vec::with_capacity(n);
+    for pair in data.chunks_exact(2) {
+        let w = u16::from_le_bytes([pair[0], pair[1]]);
+        exp.push(((w >> 10) & 0x1F) as u8);
+        mlo.push((w & 0xFF) as u8);
+        smh.push((((w >> 15) << 2) | ((w >> 8) & 0x3)) as u8);
+    }
+    Ok(StreamSet {
+        streams: vec![
+            Stream::new(StreamKind::Exponent, exp, 5),
+            Stream::new(StreamKind::SignMantissa, mlo, 8),
+            Stream::new(StreamKind::Payload, smh, 3),
+        ],
+        n_elements: n,
+        original_bytes: data.len(),
+    })
+}
+
+/// Inverse of [`split`].
+pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
+    let exp = set
+        .exponent()
+        .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
+    let mlo = set
+        .sign_mantissa()
+        .ok_or_else(|| Error::InvalidInput("missing mantissa-low stream".into()))?;
+    let smh = set
+        .get(StreamKind::Payload)
+        .ok_or_else(|| Error::InvalidInput("missing sign|mantissa-high stream".into()))?;
+    let n = set.n_elements;
+    if exp.len() != n || mlo.len() != n || smh.len() != n {
+        return Err(Error::Corrupt("FP16 stream length mismatch".into()));
+    }
+    let mut out = Vec::with_capacity(n * 2);
+    for i in 0..n {
+        let e = (exp.bytes[i] & 0x1F) as u16;
+        let lo = mlo.bytes[i] as u16;
+        let h = smh.bytes[i] as u16;
+        let w = ((h >> 2) << 15) | (e << 10) | ((h & 0x3) << 8) | lo;
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Densely packed native size check helper (used by ratio accounting tests).
+pub fn native_bits_total(n_elements: usize) -> u64 {
+    (packing::packed_len(n_elements, 5)
+        + n_elements
+        + packing::packed_len(n_elements, 3)) as u64
+        * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn f16_bits(f: f32) -> u16 {
+        // Minimal f32→f16 for test vectors (normal range only).
+        let b = f.to_bits();
+        let s = (b >> 31) as u16;
+        let e = ((b >> 23) & 0xFF) as i32 - 127 + 15;
+        let m = ((b >> 13) & 0x3FF) as u16;
+        (s << 15) | ((e as u16) << 10) | m
+    }
+
+    #[test]
+    fn split_known() {
+        let w = f16_bits(1.0); // 0x3C00
+        assert_eq!(w, 0x3C00);
+        let set = split(&w.to_le_bytes()).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![15]);
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0]);
+        assert_eq!(set.get(StreamKind::Payload).unwrap().bytes, vec![0]);
+    }
+
+    #[test]
+    fn sign_lands_in_high_stream() {
+        let w = f16_bits(-1.0);
+        let set = split(&w.to_le_bytes()).unwrap();
+        assert_eq!(set.get(StreamKind::Payload).unwrap().bytes, vec![0b100]);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(55);
+        let mut data = vec![0u8; 2048];
+        rng.fill_bytes(&mut data);
+        let set = split(&data).unwrap();
+        assert_eq!(merge(&set).unwrap(), data);
+    }
+
+    #[test]
+    fn native_bits_sum_to_16_per_element() {
+        // 5 + 8 + 3 = 16 bits/element.
+        let set = split(&[0u8; 200]).unwrap();
+        let total: u64 = set.streams.iter().map(|s| s.native_size_bits()).sum();
+        assert_eq!(total, 100 * 16);
+    }
+}

@@ -1,0 +1,105 @@
+//! FP32 stream separation (the original ZipNN layout).
+//!
+//! binary32 (little-endian u32): `[s:31][e:30..23][m:22..0]`. The exponent
+//! byte goes to one stream; sign + 23 mantissa bits re-pack into exactly
+//! three bytes per element in the other.
+
+use super::streams::{Stream, StreamKind, StreamSet};
+use crate::error::{Error, Result};
+
+/// Split little-endian FP32 bytes.
+pub fn split(data: &[u8]) -> Result<StreamSet> {
+    if data.len() % 4 != 0 {
+        return Err(Error::InvalidInput(format!(
+            "FP32 buffer length {} is not a multiple of 4",
+            data.len()
+        )));
+    }
+    let n = data.len() / 4;
+    let mut exp = Vec::with_capacity(n);
+    let mut sm = Vec::with_capacity(n * 3);
+    for q in data.chunks_exact(4) {
+        let w = u32::from_le_bytes([q[0], q[1], q[2], q[3]]);
+        exp.push(((w >> 23) & 0xFF) as u8);
+        // sign(1) + mantissa(23) = 24 bits, little-endian.
+        let sm24 = ((w >> 31) << 23) | (w & 0x7F_FFFF);
+        sm.push((sm24 & 0xFF) as u8);
+        sm.push(((sm24 >> 8) & 0xFF) as u8);
+        sm.push(((sm24 >> 16) & 0xFF) as u8);
+    }
+    Ok(StreamSet {
+        streams: vec![
+            Stream::new(StreamKind::Exponent, exp, 8),
+            Stream::new(StreamKind::SignMantissa, sm, 8),
+        ],
+        n_elements: n,
+        original_bytes: data.len(),
+    })
+}
+
+/// Inverse of [`split`].
+pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
+    let exp = set
+        .exponent()
+        .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
+    let sm = set
+        .sign_mantissa()
+        .ok_or_else(|| Error::InvalidInput("missing sign|mantissa stream".into()))?;
+    if exp.len() != set.n_elements || sm.len() != set.n_elements * 3 {
+        return Err(Error::Corrupt("FP32 stream length mismatch".into()));
+    }
+    let mut out = Vec::with_capacity(set.n_elements * 4);
+    for i in 0..set.n_elements {
+        let sm24 = sm.bytes[3 * i] as u32
+            | (sm.bytes[3 * i + 1] as u32) << 8
+            | (sm.bytes[3 * i + 2] as u32) << 16;
+        let w = ((sm24 >> 23) << 31) | ((exp.bytes[i] as u32) << 23) | (sm24 & 0x7F_FFFF);
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn split_known_values() {
+        let set = split(&1.0f32.to_le_bytes()).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![127]);
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0, 0, 0]);
+
+        let set = split(&(-2.5f32).to_le_bytes()).unwrap();
+        // -2.5 = s=1, e=128, m=0x200000.
+        assert_eq!(set.exponent().unwrap().bytes, vec![128]);
+        let sm = &set.sign_mantissa().unwrap().bytes;
+        let sm24 = sm[0] as u32 | (sm[1] as u32) << 8 | (sm[2] as u32) << 16;
+        assert_eq!(sm24, (1 << 23) | 0x20_0000);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(44);
+        let mut data = vec![0u8; 4000];
+        rng.fill_bytes(&mut data);
+        let set = split(&data).unwrap();
+        assert_eq!(merge(&set).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_specials() {
+        let vals = [0.0f32, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, f32::MIN_POSITIVE];
+        let mut data = Vec::new();
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        let set = split(&data).unwrap();
+        assert_eq!(merge(&set).unwrap(), data);
+    }
+
+    #[test]
+    fn bad_length_rejected() {
+        assert!(split(&[0u8; 6]).is_err());
+    }
+}

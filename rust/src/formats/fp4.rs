@@ -1,0 +1,229 @@
+//! FP4 E2M1: nibble payloads and the MXFP4 / NVFP4 block formats (§3.4).
+//!
+//! An FP4 element is a nibble `[s:3][ee:2..1][m:0]` (bias 1): the eight
+//! magnitudes {0, 0.5, 1, 1.5, 2, 3, 4, 6}. Two elements pack per byte, low
+//! nibble first.
+//!
+//! The paper's §3.4 experiment rebuilds byte-aligned streams from FP4 bits —
+//! "2 bits from each of 4 consecutive FP4 values to build an 8-bit stream" —
+//! and finds them incompressible. [`split_nibbles`] reproduces exactly that
+//! transform (exponent pairs → one byte per 4 elements, sign|mantissa pairs
+//! → one byte per 4 elements) so the negative result is reproducible.
+//!
+//! Block formats store payload nibbles plus higher-precision scaling
+//! factors; per the paper only the **scaler stream** compresses:
+//!
+//! * [`Mxfp4Tensor`] — one FP16/FP32 scale per group of 32 (OCP MX).
+//! * [`Nvfp4Tensor`] — one FP8 E4M3 scale per 16 elements plus a global
+//!   FP32 scale (two-level NVFP4 recipe).
+
+use super::streams::{Stream, StreamKind, StreamSet};
+use crate::error::{Error, Result};
+
+/// Extract the exponent bits (bits 2..1) of a nibble.
+#[inline]
+pub fn nibble_exp(nib: u8) -> u8 {
+    (nib >> 1) & 0x3
+}
+
+/// Extract sign (bit 3) and mantissa (bit 0) as `s<<1 | m`.
+#[inline]
+pub fn nibble_sm(nib: u8) -> u8 {
+    ((nib >> 2) & 0x2) | (nib & 0x1)
+}
+
+/// Rebuild a nibble from its exponent and sign|mantissa parts.
+#[inline]
+pub fn nibble_from_parts(exp2: u8, sm2: u8) -> u8 {
+    ((sm2 & 0x2) << 2) | ((exp2 & 0x3) << 1) | (sm2 & 0x1)
+}
+
+/// Split packed FP4 data (two nibbles per byte, low first) into the paper's
+/// §3.4 byte-aligned streams: 4 consecutive elements' 2-bit exponents per
+/// exponent byte; 4 consecutive elements' 2-bit sign|mantissa per s+m byte.
+pub fn split_nibbles(data: &[u8]) -> Result<StreamSet> {
+    let n = data.len() * 2; // elements
+    let mut exp = Vec::with_capacity(n.div_ceil(4));
+    let mut sm = Vec::with_capacity(n.div_ceil(4));
+    let mut eacc = 0u8;
+    let mut sacc = 0u8;
+    let mut cnt = 0u32;
+    for &byte in data {
+        for nib in [byte & 0x0F, byte >> 4] {
+            eacc |= nibble_exp(nib) << (2 * cnt);
+            sacc |= nibble_sm(nib) << (2 * cnt);
+            cnt += 1;
+            if cnt == 4 {
+                exp.push(eacc);
+                sm.push(sacc);
+                eacc = 0;
+                sacc = 0;
+                cnt = 0;
+            }
+        }
+    }
+    if cnt > 0 {
+        exp.push(eacc);
+        sm.push(sacc);
+    }
+    Ok(StreamSet {
+        streams: vec![
+            Stream::new(StreamKind::Exponent, exp, 8),
+            Stream::new(StreamKind::SignMantissa, sm, 8),
+        ],
+        n_elements: n,
+        original_bytes: data.len(),
+    })
+}
+
+/// Inverse of [`split_nibbles`].
+pub fn merge_nibbles(set: &StreamSet) -> Result<Vec<u8>> {
+    let exp = set
+        .exponent()
+        .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
+    let sm = set
+        .sign_mantissa()
+        .ok_or_else(|| Error::InvalidInput("missing sign|mantissa stream".into()))?;
+    let n = set.n_elements;
+    let expect = n.div_ceil(4);
+    if exp.len() != expect || sm.len() != expect {
+        return Err(Error::Corrupt("FP4 stream length mismatch".into()));
+    }
+    let mut out = Vec::with_capacity(set.original_bytes);
+    let mut cur = 0u8;
+    for i in 0..n {
+        let byte_i = i / 4;
+        let sh = 2 * (i % 4) as u32;
+        let e = (exp.bytes[byte_i] >> sh) & 0x3;
+        let s = (sm.bytes[byte_i] >> sh) & 0x3;
+        let nib = nibble_from_parts(e, s);
+        if i % 2 == 0 {
+            cur = nib;
+        } else {
+            out.push(cur | (nib << 4));
+        }
+    }
+    if n % 2 == 1 {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+/// An MXFP4-quantized tensor: packed E2M1 payload + one scale per group.
+///
+/// Per the paper's Fig 4 simplification, MXFP4 carries a *single* FP16/FP32
+/// scale per group of 32–64 elements; we store scales as little-endian
+/// FP16 or FP32 bytes (`scale_format`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mxfp4Tensor {
+    /// Packed nibbles, low nibble = even element.
+    pub payload: Vec<u8>,
+    /// Scale bytes (little-endian, `scale_format`-typed, one per group).
+    pub scales: Vec<u8>,
+    /// FP16 or FP32.
+    pub scale_format: super::FloatFormat,
+    /// Elements per scale group (32–64 per OCP).
+    pub group_size: usize,
+    /// Total element count (payload may have a pad nibble).
+    pub n_elements: usize,
+}
+
+impl Mxfp4Tensor {
+    /// Total stored size in bytes (payload + scales).
+    pub fn stored_bytes(&self) -> usize {
+        self.payload.len() + self.scales.len()
+    }
+}
+
+/// An NVFP4-quantized tensor: 16-element E2M1 blocks, one E4M3 scale per
+/// block, plus a second-level global FP32 scale (the "2 optimized scales"
+/// of the paper's Fig 4 table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Nvfp4Tensor {
+    /// Packed nibbles, low nibble = even element.
+    pub payload: Vec<u8>,
+    /// One E4M3 byte per 16-element block.
+    pub block_scales: Vec<u8>,
+    /// Global scale applied on top of block scales.
+    pub global_scale: f32,
+    /// Total element count.
+    pub n_elements: usize,
+}
+
+impl Nvfp4Tensor {
+    /// Block size fixed by the NVFP4 recipe.
+    pub const BLOCK: usize = 16;
+
+    /// Total stored size in bytes (payload + block scales + global scale).
+    pub fn stored_bytes(&self) -> usize {
+        self.payload.len() + self.block_scales.len() + 4
+    }
+
+    /// Fraction of stored bytes occupied by scaling factors (the Fig 9
+    /// "10% of the overall dataset" accounting).
+    pub fn scale_fraction(&self) -> f64 {
+        (self.block_scales.len() + 4) as f64 / self.stored_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nibble_part_roundtrip() {
+        for nib in 0..16u8 {
+            let e = nibble_exp(nib);
+            let s = nibble_sm(nib);
+            assert_eq!(nibble_from_parts(e, s), nib);
+        }
+    }
+
+    #[test]
+    fn split_merge_roundtrip_various_lengths() {
+        let mut rng = Rng::new(77);
+        for len in [0usize, 1, 2, 3, 4, 5, 100, 1001] {
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            let set = split_nibbles(&data).unwrap();
+            assert_eq!(merge_nibbles(&set).unwrap(), data, "len={len}");
+        }
+    }
+
+    #[test]
+    fn stream_packing_density() {
+        // 8 elements (4 bytes) → 2 exponent bytes + 2 s+m bytes.
+        let set = split_nibbles(&[0xFF; 4]).unwrap();
+        assert_eq!(set.n_elements, 8);
+        assert_eq!(set.exponent().unwrap().len(), 2);
+        assert_eq!(set.sign_mantissa().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn exponent_grouping_matches_paper_description() {
+        // Elements with exponents 0,1,2,3 → exp byte 0b11_10_01_00 = 0xE4.
+        // nibble with exp e: e<<1. Elements: 0b000,0b010,0b100,0b110.
+        let e0 = nibble_from_parts(0, 0);
+        let e1 = nibble_from_parts(1, 0);
+        let e2 = nibble_from_parts(2, 0);
+        let e3 = nibble_from_parts(3, 0);
+        let data = [e0 | (e1 << 4), e2 | (e3 << 4)];
+        let set = split_nibbles(&data).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![0xE4]);
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0x00]);
+    }
+
+    #[test]
+    fn nvfp4_scale_fraction() {
+        let t = Nvfp4Tensor {
+            payload: vec![0; 8 * 1024],      // 16 Ki elements
+            block_scales: vec![0; 1024],     // one per 16
+            global_scale: 1.0,
+            n_elements: 16 * 1024,
+        };
+        // 1028 / 9220 ≈ 11.1% — matches the paper's ~10% accounting.
+        let f = t.scale_fraction();
+        assert!((0.09..0.13).contains(&f), "{f}");
+    }
+}

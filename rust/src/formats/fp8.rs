@@ -1,0 +1,176 @@
+//! FP8 stream separation: E4M3 (paper Fig 7) and E5M2.
+//!
+//! **E4M3** (`[s:7][eeee:6..3][mmm:2..0]`, bias 7, no inf, NaN=S.1111.111):
+//! the paper pairs *two consecutive elements* so each stream stays
+//! byte-aligned — exponents of elements 2i and 2i+1 form one exponent byte,
+//! their `sign<<3|mantissa` nibbles form one sign|mantissa byte. This is the
+//! exact Fig 7 transform and the reason the paper evaluates E4M3 only.
+//!
+//! **E5M2** (`[s:7][eeeee:6..2][mm:1..0]`, bias 15, IEEE specials): no clean
+//! byte pairing exists; we emit one 5-bit exponent symbol and one 3-bit
+//! sign|mantissa symbol per element (both re-packed densely when stored raw).
+
+use super::streams::{Stream, StreamKind, StreamSet};
+use crate::error::{Error, Result};
+
+// --- E4M3 ---------------------------------------------------------------
+
+/// Split E4M3 bytes with the Fig 7 pairing. Odd tails pad with a zero
+/// nibble; `n_elements` disambiguates on merge.
+pub fn split_e4m3(data: &[u8]) -> Result<StreamSet> {
+    let n = data.len();
+    let mut exp = Vec::with_capacity(n.div_ceil(2));
+    let mut sm = Vec::with_capacity(n.div_ceil(2));
+    let mut pairs = data.chunks_exact(2);
+    for p in &mut pairs {
+        let (a, b) = (p[0], p[1]);
+        let ea = (a >> 3) & 0x0F;
+        let eb = (b >> 3) & 0x0F;
+        exp.push(ea | (eb << 4));
+        let sma = ((a >> 7) << 3) | (a & 0x07);
+        let smb = ((b >> 7) << 3) | (b & 0x07);
+        sm.push(sma | (smb << 4));
+    }
+    if let [last] = pairs.remainder() {
+        exp.push((last >> 3) & 0x0F);
+        sm.push(((last >> 7) << 3) | (last & 0x07));
+    }
+    Ok(StreamSet {
+        streams: vec![
+            Stream::new(StreamKind::Exponent, exp, 8),
+            Stream::new(StreamKind::SignMantissa, sm, 8),
+        ],
+        n_elements: n,
+        original_bytes: n,
+    })
+}
+
+/// Inverse of [`split_e4m3`].
+pub fn merge_e4m3(set: &StreamSet) -> Result<Vec<u8>> {
+    let exp = set
+        .exponent()
+        .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
+    let sm = set
+        .sign_mantissa()
+        .ok_or_else(|| Error::InvalidInput("missing sign|mantissa stream".into()))?;
+    let n = set.n_elements;
+    let expect = n.div_ceil(2);
+    if exp.len() != expect || sm.len() != expect {
+        return Err(Error::Corrupt("E4M3 stream length mismatch".into()));
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte_i = i / 2;
+        let hi = (i % 2) as u32 * 4;
+        let e = (exp.bytes[byte_i] >> hi) & 0x0F;
+        let s = (sm.bytes[byte_i] >> hi) & 0x0F;
+        out.push(((s >> 3) << 7) | (e << 3) | (s & 0x07));
+    }
+    Ok(out)
+}
+
+// --- E5M2 ---------------------------------------------------------------
+
+/// Split E5M2 bytes: 5-bit exponent symbols + 3-bit sign|mantissa symbols.
+pub fn split_e5m2(data: &[u8]) -> Result<StreamSet> {
+    let n = data.len();
+    let mut exp = Vec::with_capacity(n);
+    let mut sm = Vec::with_capacity(n);
+    for &b in data {
+        exp.push((b >> 2) & 0x1F);
+        sm.push(((b >> 7) << 2) | (b & 0x03));
+    }
+    Ok(StreamSet {
+        streams: vec![
+            Stream::new(StreamKind::Exponent, exp, 5),
+            Stream::new(StreamKind::SignMantissa, sm, 3),
+        ],
+        n_elements: n,
+        original_bytes: n,
+    })
+}
+
+/// Inverse of [`split_e5m2`].
+pub fn merge_e5m2(set: &StreamSet) -> Result<Vec<u8>> {
+    let exp = set
+        .exponent()
+        .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
+    let sm = set
+        .sign_mantissa()
+        .ok_or_else(|| Error::InvalidInput("missing sign|mantissa stream".into()))?;
+    let n = set.n_elements;
+    if exp.len() != n || sm.len() != n {
+        return Err(Error::Corrupt("E5M2 stream length mismatch".into()));
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let e = exp.bytes[i] & 0x1F;
+        let s = sm.bytes[i];
+        out.push(((s >> 2) << 7) | (e << 2) | (s & 0x03));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn e4m3_known_values() {
+        // 1.0 in E4M3: e=7 (bias 7), m=0 → 0b0_0111_000 = 0x38.
+        let set = split_e4m3(&[0x38, 0x38]).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![0x77]);
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0x00]);
+        // -1.5: s=1 e=7 m=4 → 0b1_0111_100 = 0xBC. Paired with +1.5 (0x3C).
+        let set = split_e4m3(&[0xBC, 0x3C]).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![0x77]);
+        // sm(a) = 1<<3 | 4 = 0xC; sm(b) = 0x4 → byte 0x4C.
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0x4C]);
+    }
+
+    #[test]
+    fn e4m3_roundtrip_even_odd() {
+        let mut rng = Rng::new(66);
+        for len in [0usize, 1, 2, 3, 100, 101, 4096] {
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            let set = split_e4m3(&data).unwrap();
+            assert_eq!(merge_e4m3(&set).unwrap(), data, "len={len}");
+        }
+    }
+
+    #[test]
+    fn e4m3_stream_sizes_halve() {
+        let set = split_e4m3(&[0u8; 1000]).unwrap();
+        assert_eq!(set.exponent().unwrap().len(), 500);
+        assert_eq!(set.sign_mantissa().unwrap().len(), 500);
+        let native: u64 = set.streams.iter().map(|s| s.native_size_bits()).sum();
+        assert_eq!(native, 1000 * 8);
+    }
+
+    #[test]
+    fn e5m2_roundtrip() {
+        let mut rng = Rng::new(67);
+        let mut data = vec![0u8; 777];
+        rng.fill_bytes(&mut data);
+        let set = split_e5m2(&data).unwrap();
+        assert_eq!(merge_e5m2(&set).unwrap(), data);
+    }
+
+    #[test]
+    fn e5m2_fields() {
+        // 0b1_10110_01: s=1 e=0b10110=22 sm=1.
+        let set = split_e5m2(&[0b1101_1001]).unwrap();
+        assert_eq!(set.exponent().unwrap().bytes, vec![22]);
+        assert_eq!(set.sign_mantissa().unwrap().bytes, vec![0b101]);
+    }
+
+    #[test]
+    fn e4m3_nan_and_max() {
+        // NaN = S.1111.111 = 0x7F / 0xFF; max finite 448 = 0_1111_110.
+        let data = [0x7Fu8, 0xFF, 0x7E, 0xFE];
+        let set = split_e4m3(&data).unwrap();
+        assert_eq!(merge_e4m3(&set).unwrap().to_vec(), data.to_vec());
+    }
+}

@@ -1,0 +1,214 @@
+//! Low-precision floating-point formats: bit layouts, exponent/mantissa
+//! stream separation, and value-level conversions.
+//!
+//! This module implements the paper's §3 transforms:
+//!
+//! * **BF16** (1s/8e/7m): exponent byte stream + sign|mantissa byte stream
+//!   (Fig 5).
+//! * **FP32** (1s/8e/23m): exponent byte stream + 3-byte sign|mantissa
+//!   stream (the original ZipNN layout).
+//! * **FP16** (1s/5e/10m): byte-per-exponent stream + bit-packed 11-bit
+//!   sign|mantissa stream.
+//! * **FP8 E4M3** (1s/4e/3m): *two* elements' exponents per byte and two
+//!   elements' sign|mantissa per byte (Fig 7 — the byte-alignment trick that
+//!   made E4M3 the paper's evaluation format).
+//! * **FP8 E5M2** (1s/5e/2m): byte-per-exponent + bit-packed 3-bit
+//!   sign|mantissa.
+//! * **FP4 E2M1** (1s/2e/1m): nibble payloads; includes the paper's §3.4
+//!   "2 bits from each of 4 consecutive values" byte-building transform
+//!   (reproduced as a *negative result*: it does not compress).
+//! * **MXFP4 / NVFP4** block formats: payload nibbles + scaling-factor
+//!   streams (the only compressible component per §3.4/Fig 9).
+//!
+//! All stream transforms are exact bijections: `merge(split(x)) == x`
+//! bit-for-bit, property-tested in `rust/tests/proptest_formats.rs`.
+
+pub mod bf16;
+pub mod conv;
+pub mod fp16;
+pub mod fp32;
+pub mod fp4;
+pub mod fp8;
+pub mod packing;
+pub mod safetensors;
+pub mod streams;
+
+pub use streams::{Stream, StreamKind, StreamSet};
+
+use crate::error::{Error, Result};
+
+/// Scalar floating-point formats understood by the codec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FloatFormat {
+    /// IEEE-754 binary32.
+    Fp32,
+    /// IEEE-754 binary16.
+    Fp16,
+    /// bfloat16 (1s/8e/7m).
+    Bf16,
+    /// FP8 E4M3 (OCP OFP8): 1s/4e/3m, no inf, NaN = S.1111.111.
+    Fp8E4M3,
+    /// FP8 E5M2 (OCP OFP8): 1s/5e/2m, IEEE-like specials.
+    Fp8E5M2,
+    /// FP4 E2M1: 1s/2e/1m nibble.
+    Fp4E2M1,
+}
+
+impl FloatFormat {
+    /// Total bits per element.
+    pub fn bits(self) -> u8 {
+        match self {
+            FloatFormat::Fp32 => 32,
+            FloatFormat::Fp16 | FloatFormat::Bf16 => 16,
+            FloatFormat::Fp8E4M3 | FloatFormat::Fp8E5M2 => 8,
+            FloatFormat::Fp4E2M1 => 4,
+        }
+    }
+
+    /// Exponent field width in bits.
+    pub fn exp_bits(self) -> u8 {
+        match self {
+            FloatFormat::Fp32 | FloatFormat::Bf16 => 8,
+            FloatFormat::Fp16 | FloatFormat::Fp8E5M2 => 5,
+            FloatFormat::Fp8E4M3 => 4,
+            FloatFormat::Fp4E2M1 => 2,
+        }
+    }
+
+    /// Mantissa field width in bits.
+    pub fn mantissa_bits(self) -> u8 {
+        self.bits() - self.exp_bits() - 1
+    }
+
+    /// Exponent bias.
+    pub fn bias(self) -> i32 {
+        match self {
+            FloatFormat::Fp32 | FloatFormat::Bf16 => 127,
+            FloatFormat::Fp16 | FloatFormat::Fp8E5M2 => 15,
+            FloatFormat::Fp8E4M3 => 7,
+            FloatFormat::Fp4E2M1 => 1,
+        }
+    }
+
+    /// Bytes per element for byte-aligned formats; `None` for FP4.
+    pub fn byte_width(self) -> Option<usize> {
+        match self {
+            FloatFormat::Fp4E2M1 => None,
+            f => Some(f.bits() as usize / 8),
+        }
+    }
+
+    /// Parse from a CLI / manifest string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" | "float32" => Ok(FloatFormat::Fp32),
+            "fp16" | "f16" | "float16" => Ok(FloatFormat::Fp16),
+            "bf16" | "bfloat16" => Ok(FloatFormat::Bf16),
+            "fp8" | "fp8_e4m3" | "e4m3" => Ok(FloatFormat::Fp8E4M3),
+            "fp8_e5m2" | "e5m2" => Ok(FloatFormat::Fp8E5M2),
+            "fp4" | "fp4_e2m1" | "e2m1" => Ok(FloatFormat::Fp4E2M1),
+            other => Err(Error::InvalidInput(format!("unknown float format '{other}'"))),
+        }
+    }
+
+    /// Canonical name (inverse of [`parse`](Self::parse)).
+    pub fn name(self) -> &'static str {
+        match self {
+            FloatFormat::Fp32 => "fp32",
+            FloatFormat::Fp16 => "fp16",
+            FloatFormat::Bf16 => "bf16",
+            FloatFormat::Fp8E4M3 => "fp8_e4m3",
+            FloatFormat::Fp8E5M2 => "fp8_e5m2",
+            FloatFormat::Fp4E2M1 => "fp4_e2m1",
+        }
+    }
+
+    /// Wire id for container serialization.
+    pub fn wire_id(self) -> u8 {
+        match self {
+            FloatFormat::Fp32 => 0,
+            FloatFormat::Fp16 => 1,
+            FloatFormat::Bf16 => 2,
+            FloatFormat::Fp8E4M3 => 3,
+            FloatFormat::Fp8E5M2 => 4,
+            FloatFormat::Fp4E2M1 => 5,
+        }
+    }
+
+    /// Inverse of [`wire_id`](Self::wire_id).
+    pub fn from_wire_id(id: u8) -> Result<Self> {
+        Ok(match id {
+            0 => FloatFormat::Fp32,
+            1 => FloatFormat::Fp16,
+            2 => FloatFormat::Bf16,
+            3 => FloatFormat::Fp8E4M3,
+            4 => FloatFormat::Fp8E5M2,
+            5 => FloatFormat::Fp4E2M1,
+            other => return Err(Error::Container(format!("unknown format id {other}"))),
+        })
+    }
+}
+
+/// Split a raw little-endian tensor byte buffer into exponent and
+/// sign|mantissa streams according to `format`.
+///
+/// For FP4 the buffer is interpreted as packed nibbles (low nibble first);
+/// `data.len()*2` elements.
+pub fn split_streams(format: FloatFormat, data: &[u8]) -> Result<StreamSet> {
+    match format {
+        FloatFormat::Bf16 => bf16::split(data),
+        FloatFormat::Fp32 => fp32::split(data),
+        FloatFormat::Fp16 => fp16::split(data),
+        FloatFormat::Fp8E4M3 => fp8::split_e4m3(data),
+        FloatFormat::Fp8E5M2 => fp8::split_e5m2(data),
+        FloatFormat::Fp4E2M1 => fp4::split_nibbles(data),
+    }
+}
+
+/// Inverse of [`split_streams`]: reconstruct the original byte buffer.
+pub fn merge_streams(format: FloatFormat, streams: &StreamSet) -> Result<Vec<u8>> {
+    match format {
+        FloatFormat::Bf16 => bf16::merge(streams),
+        FloatFormat::Fp32 => fp32::merge(streams),
+        FloatFormat::Fp16 => fp16::merge(streams),
+        FloatFormat::Fp8E4M3 => fp8::merge_e4m3(streams),
+        FloatFormat::Fp8E5M2 => fp8::merge_e5m2(streams),
+        FloatFormat::Fp4E2M1 => fp4::merge_nibbles(streams),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_metadata_consistent() {
+        for f in [
+            FloatFormat::Fp32,
+            FloatFormat::Fp16,
+            FloatFormat::Bf16,
+            FloatFormat::Fp8E4M3,
+            FloatFormat::Fp8E5M2,
+            FloatFormat::Fp4E2M1,
+        ] {
+            assert_eq!(f.bits(), 1 + f.exp_bits() + f.mantissa_bits(), "{f:?}");
+            assert_eq!(FloatFormat::parse(f.name()).unwrap(), f);
+            assert_eq!(FloatFormat::from_wire_id(f.wire_id()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(FloatFormat::parse("E4M3").unwrap(), FloatFormat::Fp8E4M3);
+        assert_eq!(FloatFormat::parse("bfloat16").unwrap(), FloatFormat::Bf16);
+        assert!(FloatFormat::parse("fp12").is_err());
+    }
+
+    #[test]
+    fn biases_match_ieee() {
+        assert_eq!(FloatFormat::Fp32.bias(), 127);
+        assert_eq!(FloatFormat::Fp16.bias(), 15);
+        assert_eq!(FloatFormat::Fp8E4M3.bias(), 7);
+        assert_eq!(FloatFormat::Fp4E2M1.bias(), 1);
+    }
+}

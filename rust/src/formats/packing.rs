@@ -1,0 +1,82 @@
+//! Sub-byte symbol packing.
+//!
+//! Raw (uncompressed) storage of a sub-byte stream must not inflate it back
+//! to one byte per symbol — a 5-bit FP16 exponent stored raw costs 5 bits,
+//! not 8. These helpers pack/unpack `n`-bit symbols densely, LSB-first.
+
+use crate::bitio::{BitReader, BitWriter};
+use crate::error::Result;
+
+/// Pack `symbols` (each < 2^bits) into a dense LSB-first byte buffer.
+pub fn pack(symbols: &[u8], bits: u8) -> Vec<u8> {
+    debug_assert!((1..=8).contains(&bits));
+    if bits == 8 {
+        return symbols.to_vec();
+    }
+    let mut w = BitWriter::with_capacity((symbols.len() * bits as usize).div_ceil(8));
+    for &s in symbols {
+        w.write_bits(s as u32, bits as u32);
+    }
+    w.finish()
+}
+
+/// Unpack `count` symbols of width `bits` from `data`.
+pub fn unpack(data: &[u8], bits: u8, count: usize) -> Result<Vec<u8>> {
+    debug_assert!((1..=8).contains(&bits));
+    if bits == 8 {
+        if data.len() < count {
+            return Err(crate::error::Error::Corrupt("raw stream truncated".into()));
+        }
+        return Ok(data[..count].to_vec());
+    }
+    let mut r = BitReader::new(data);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(r.read_bits(bits as u32)? as u8);
+    }
+    Ok(out)
+}
+
+/// Packed size in bytes of `count` symbols at `bits` width.
+pub fn packed_len(count: usize, bits: u8) -> usize {
+    (count * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(21);
+        for bits in 1..=8u8 {
+            let mask = if bits == 8 { 0xFF } else { (1u16 << bits) as u8 - 1 };
+            let syms: Vec<u8> = (0..1000).map(|_| (rng.next_u32() as u8) & mask).collect();
+            let packed = pack(&syms, bits);
+            assert_eq!(packed.len(), packed_len(syms.len(), bits));
+            let back = unpack(&packed, bits, syms.len()).unwrap();
+            assert_eq!(back, syms, "width {bits}");
+        }
+    }
+
+    #[test]
+    fn density() {
+        let syms = vec![1u8; 8];
+        assert_eq!(pack(&syms, 1).len(), 1);
+        assert_eq!(pack(&syms, 4).len(), 4);
+        assert_eq!(pack(&syms, 5).len(), 5);
+    }
+
+    #[test]
+    fn truncated_unpack_fails() {
+        let packed = pack(&[7u8; 16], 5);
+        assert!(unpack(&packed[..packed.len() - 1], 5, 16).is_err());
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        assert!(pack(&[], 3).is_empty());
+        assert!(unpack(&[], 3, 0).unwrap().is_empty());
+    }
+}

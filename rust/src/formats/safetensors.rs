@@ -1,0 +1,276 @@
+//! Reader/writer for the Hugging Face `safetensors` format.
+//!
+//! This is the on-disk format real checkpoints ship in (the paper's
+//! evaluation compresses HF models), so the CLI can compress actual model
+//! files tensor-by-tensor: `zipnn-lp compress-model --input model.safetensors`.
+//!
+//! Layout: `u64 header_len | header JSON | raw tensor data`. The header
+//! maps tensor names to `{"dtype", "shape", "data_offsets": [begin, end]}`
+//! (offsets relative to the data section), plus an optional `__metadata__`
+//! string map. We support the dtypes the codec handles (F32/F16/BF16/F8_E4M3
+//! /F8_E5M2/U8/I8) and pass others through as opaque bytes.
+
+use super::FloatFormat;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One tensor slice of a safetensors file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StTensor {
+    /// Tensor name.
+    pub name: String,
+    /// safetensors dtype string ("BF16", "F8_E4M3", …).
+    pub dtype: String,
+    /// Shape.
+    pub shape: Vec<u64>,
+    /// Raw little-endian bytes.
+    pub data: Vec<u8>,
+}
+
+impl StTensor {
+    /// Map the dtype to a codec [`FloatFormat`] when supported.
+    pub fn float_format(&self) -> Option<FloatFormat> {
+        match self.dtype.as_str() {
+            "F32" => Some(FloatFormat::Fp32),
+            "F16" => Some(FloatFormat::Fp16),
+            "BF16" => Some(FloatFormat::Bf16),
+            "F8_E4M3" => Some(FloatFormat::Fp8E4M3),
+            "F8_E5M2" => Some(FloatFormat::Fp8E5M2),
+            _ => None,
+        }
+    }
+}
+
+/// Bytes per element for a safetensors dtype (None = unknown).
+fn dtype_size(dtype: &str) -> Option<usize> {
+    match dtype {
+        "F64" | "I64" | "U64" => Some(8),
+        "F32" | "I32" | "U32" => Some(4),
+        "F16" | "BF16" | "I16" | "U16" => Some(2),
+        "F8_E4M3" | "F8_E5M2" | "I8" | "U8" | "BOOL" => Some(1),
+        _ => None,
+    }
+}
+
+/// Parse a safetensors byte buffer.
+pub fn read(buf: &[u8]) -> Result<Vec<StTensor>> {
+    if buf.len() < 8 {
+        return Err(Error::Corrupt("safetensors: too short".into()));
+    }
+    let header_len = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+    if header_len > buf.len().saturating_sub(8) {
+        return Err(Error::Corrupt("safetensors: header exceeds file".into()));
+    }
+    let header = std::str::from_utf8(&buf[8..8 + header_len])
+        .map_err(|_| Error::Corrupt("safetensors: header not utf-8".into()))?;
+    let j = Json::parse(header.trim_end())?;
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| Error::Corrupt("safetensors: header not an object".into()))?;
+    let data = &buf[8 + header_len..];
+    let mut out = Vec::new();
+    for (name, entry) in obj {
+        if name == "__metadata__" {
+            continue;
+        }
+        let dtype = entry
+            .field("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Corrupt("safetensors: dtype not a string".into()))?
+            .to_string();
+        let shape: Vec<u64> = entry
+            .field("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Corrupt("safetensors: shape not an array".into()))?
+            .iter()
+            .map(|d| d.as_f64().unwrap_or(-1.0) as u64)
+            .collect();
+        let offs = entry
+            .field("data_offsets")?
+            .as_arr()
+            .ok_or_else(|| Error::Corrupt("safetensors: bad data_offsets".into()))?;
+        if offs.len() != 2 {
+            return Err(Error::Corrupt("safetensors: data_offsets arity".into()));
+        }
+        let begin = offs[0].as_usize().ok_or_else(|| bad_off(name))?;
+        let end = offs[1].as_usize().ok_or_else(|| bad_off(name))?;
+        if begin > end || end > data.len() {
+            return Err(Error::Corrupt(format!(
+                "safetensors: tensor '{name}' offsets [{begin}, {end}) out of range"
+            )));
+        }
+        // Validate size against dtype × shape when the dtype is known.
+        if let Some(esz) = dtype_size(&dtype) {
+            let expect: u64 = shape.iter().product::<u64>() * esz as u64;
+            if expect != (end - begin) as u64 {
+                return Err(Error::Corrupt(format!(
+                    "safetensors: tensor '{name}' size {} != shape × dtype {}",
+                    end - begin,
+                    expect
+                )));
+            }
+        }
+        out.push(StTensor { name: name.clone(), dtype, shape, data: data[begin..end].to_vec() });
+    }
+    Ok(out)
+}
+
+/// Serialize tensors into a safetensors byte buffer.
+pub fn write(tensors: &[StTensor]) -> Result<Vec<u8>> {
+    // Build the header with running offsets (name order as given).
+    let mut header = String::from("{");
+    let mut offset = 0usize;
+    let mut first = true;
+    let mut total = 0usize;
+    let mut sorted: Vec<&StTensor> = tensors.iter().collect();
+    sorted.sort_by(|a, b| a.name.cmp(&b.name));
+    for t in &sorted {
+        if !first {
+            header.push(',');
+        }
+        first = false;
+        let end = offset + t.data.len();
+        header.push_str(&format!(
+            r#""{}":{{"dtype":"{}","shape":[{}],"data_offsets":[{},{}]}}"#,
+            t.name,
+            t.dtype,
+            t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","),
+            offset,
+            end
+        ));
+        offset = end;
+        total = end;
+    }
+    header.push('}');
+    let mut out = Vec::with_capacity(8 + header.len() + total);
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for t in &sorted {
+        out.extend_from_slice(&t.data);
+    }
+    Ok(out)
+}
+
+fn bad_off(name: &str) -> Error {
+    Error::Corrupt(format!("safetensors: tensor '{name}' bad offset"))
+}
+
+/// Convenience: read a safetensors file from disk.
+pub fn read_file(path: &std::path::Path) -> Result<Vec<StTensor>> {
+    read(&std::fs::read(path)?)
+}
+
+/// Group tensors by dtype, for compression reports.
+pub fn by_dtype(tensors: &[StTensor]) -> BTreeMap<String, Vec<&StTensor>> {
+    let mut m: BTreeMap<String, Vec<&StTensor>> = BTreeMap::new();
+    for t in tensors {
+        m.entry(t.dtype.clone()).or_default().push(t);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<StTensor> {
+        vec![
+            StTensor {
+                name: "model.embed".into(),
+                dtype: "BF16".into(),
+                shape: vec![4, 3],
+                data: (0..24u8).collect(),
+            },
+            StTensor {
+                name: "model.norm".into(),
+                dtype: "F32".into(),
+                shape: vec![2],
+                data: 1.5f32.to_le_bytes().iter().chain(&(-2.0f32).to_le_bytes()).copied().collect(),
+            },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ts = sample();
+        let buf = write(&ts).unwrap();
+        let back = read(&buf).unwrap();
+        assert_eq!(back.len(), 2);
+        // read returns in name (BTreeMap) order; sample is already sorted.
+        assert_eq!(back[0], ts[0]);
+        assert_eq!(back[1], ts[1]);
+    }
+
+    #[test]
+    fn float_format_mapping() {
+        let ts = sample();
+        assert_eq!(ts[0].float_format(), Some(FloatFormat::Bf16));
+        assert_eq!(ts[1].float_format(), Some(FloatFormat::Fp32));
+        let t = StTensor { name: "x".into(), dtype: "I64".into(), shape: vec![1], data: vec![0; 8] };
+        assert_eq!(t.float_format(), None);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let ts = sample();
+        let buf = write(&ts).unwrap();
+        assert!(read(&buf[..4]).is_err());
+        // Header length pointing past EOF.
+        let mut bad = buf.clone();
+        bad[0..8].copy_from_slice(&(u64::MAX).to_le_bytes());
+        assert!(read(&bad).is_err());
+        // Size mismatch: flip a shape digit in the header (4,3 -> 4,4).
+        let s = String::from_utf8(buf.clone()).unwrap_or_default();
+        let _ = s;
+        let mut txt = buf.clone();
+        let pos = txt.windows(5).position(|w| w == b"[4,3]").unwrap();
+        txt[pos + 3] = b'4';
+        assert!(read(&txt).is_err());
+    }
+
+    #[test]
+    fn metadata_skipped() {
+        let inner = r#"{"__metadata__":{"format":"pt"},"t":{"dtype":"U8","shape":[2],"data_offsets":[0,2]}}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(inner.len() as u64).to_le_bytes());
+        buf.extend_from_slice(inner.as_bytes());
+        buf.extend_from_slice(&[9, 8]);
+        let ts = read(&buf).unwrap();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].data, vec![9, 8]);
+    }
+
+    #[test]
+    fn by_dtype_groups() {
+        let ts = sample();
+        let g = by_dtype(&ts);
+        assert_eq!(g["BF16"].len(), 1);
+        assert_eq!(g["F32"].len(), 1);
+    }
+
+    #[test]
+    fn compress_real_safetensors_flow() {
+        // End-to-end: synthesize a model file, compress every float tensor,
+        // rebuild the file bit-exactly.
+        use crate::codec::{compress_tensor, decompress_tensor, CompressOptions};
+        let mut ts = Vec::new();
+        let w = crate::synthetic::gaussian_bf16_bytes(2048, 0.02, 5);
+        ts.push(StTensor { name: "w".into(), dtype: "BF16".into(), shape: vec![2048], data: w });
+        let buf = write(&ts).unwrap();
+        let parsed = read(&buf).unwrap();
+        let mut rebuilt = Vec::new();
+        for t in &parsed {
+            let fmt = t.float_format().unwrap();
+            let blob = compress_tensor(&t.data, &CompressOptions::for_format(fmt)).unwrap();
+            assert!(blob.ratio() < 1.0);
+            rebuilt.push(StTensor {
+                name: t.name.clone(),
+                dtype: t.dtype.clone(),
+                shape: t.shape.clone(),
+                data: decompress_tensor(&blob).unwrap(),
+            });
+        }
+        assert_eq!(write(&rebuilt).unwrap(), buf);
+    }
+}

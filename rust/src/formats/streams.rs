@@ -1,0 +1,139 @@
+//! Stream containers produced by exponent/mantissa separation.
+
+/// Which component of the float a stream carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKind {
+    /// Exponent bits (the compressible component).
+    Exponent,
+    /// Sign + mantissa bits.
+    SignMantissa,
+    /// FP4 block payload nibbles (incompressible per §3.4).
+    Payload,
+    /// FP4 block scaling factors.
+    Scale,
+}
+
+impl StreamKind {
+    /// Wire id for container serialization.
+    pub fn wire_id(self) -> u8 {
+        match self {
+            StreamKind::Exponent => 0,
+            StreamKind::SignMantissa => 1,
+            StreamKind::Payload => 2,
+            StreamKind::Scale => 3,
+        }
+    }
+
+    /// Inverse of [`wire_id`](Self::wire_id).
+    pub fn from_wire_id(id: u8) -> Option<Self> {
+        match id {
+            0 => Some(StreamKind::Exponent),
+            1 => Some(StreamKind::SignMantissa),
+            2 => Some(StreamKind::Payload),
+            3 => Some(StreamKind::Scale),
+            _ => None,
+        }
+    }
+
+    /// Short label used in reports ("exp", "s+m", …).
+    pub fn label(self) -> &'static str {
+        match self {
+            StreamKind::Exponent => "exp",
+            StreamKind::SignMantissa => "s+m",
+            StreamKind::Payload => "payload",
+            StreamKind::Scale => "scale",
+        }
+    }
+}
+
+/// One separated component stream.
+///
+/// `bytes` holds one *symbol* per byte (the unit Huffman codes over);
+/// `native_bits` is the number of bits each symbol occupies in the original
+/// format, so the raw-fallback path can re-pack at native density instead of
+/// inflating sub-byte symbols to 8 bits.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Stream {
+    /// Component identity.
+    pub kind: StreamKind,
+    /// One symbol per byte.
+    pub bytes: Vec<u8>,
+    /// Bits per symbol in the original representation (1..=8).
+    pub native_bits: u8,
+}
+
+impl Stream {
+    /// Construct a stream.
+    pub fn new(kind: StreamKind, bytes: Vec<u8>, native_bits: u8) -> Self {
+        debug_assert!((1..=8).contains(&native_bits));
+        Stream { kind, bytes, native_bits }
+    }
+
+    /// Number of symbols.
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// True if the stream has no symbols.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Size this stream occupies in the *original* tensor, in bits.
+    pub fn native_size_bits(&self) -> u64 {
+        self.bytes.len() as u64 * self.native_bits as u64
+    }
+}
+
+/// The output of splitting one tensor: an ordered set of component streams
+/// plus the element count needed to undo padding on merge.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamSet {
+    /// Component streams in a format-defined order.
+    pub streams: Vec<Stream>,
+    /// Number of elements in the original tensor.
+    pub n_elements: usize,
+    /// Original tensor size in bytes.
+    pub original_bytes: usize,
+}
+
+impl StreamSet {
+    /// Find a stream by kind.
+    pub fn get(&self, kind: StreamKind) -> Option<&Stream> {
+        self.streams.iter().find(|s| s.kind == kind)
+    }
+
+    /// The exponent stream (present for all scalar formats).
+    pub fn exponent(&self) -> Option<&Stream> {
+        self.get(StreamKind::Exponent)
+    }
+
+    /// The sign+mantissa stream.
+    pub fn sign_mantissa(&self) -> Option<&Stream> {
+        self.get(StreamKind::SignMantissa)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_wire_roundtrip() {
+        for k in [
+            StreamKind::Exponent,
+            StreamKind::SignMantissa,
+            StreamKind::Payload,
+            StreamKind::Scale,
+        ] {
+            assert_eq!(StreamKind::from_wire_id(k.wire_id()), Some(k));
+        }
+        assert_eq!(StreamKind::from_wire_id(99), None);
+    }
+
+    #[test]
+    fn native_size_accounts_bits() {
+        let s = Stream::new(StreamKind::Exponent, vec![0; 10], 4);
+        assert_eq!(s.native_size_bits(), 40);
+    }
+}

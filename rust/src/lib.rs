@@ -1,0 +1,59 @@
+//! # zipnn-lp — Lossless Compression of Neural Network Components in Low-Precision Formats
+//!
+//! Reproduction of Heilper & Singer (Intel, 2025): lossless compression of
+//! neural-network weights, training checkpoints, and K/V cache tensors stored
+//! in low-precision floating-point formats (BF16, FP8 E4M3/E5M2, FP4
+//! MXFP4/NVFP4), built on *exponent–mantissa separation* followed by
+//! canonical Huffman entropy coding (the ZipNN insight, extended downward in
+//! bit width).
+//!
+//! ## Architecture
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1 (Pallas, build time)** — bit-twiddle kernels (stream split,
+//!   FP8/NVFP4 quantization) and a fused attention kernel that *generates*
+//!   real K/V cache tensors.
+//! * **L2 (JAX, build time)** — a small GPT whose forward/backward and
+//!   decode steps are AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate, runtime)** — the compression system itself plus a
+//!   serving coordinator that runs the artifacts via PJRT and keeps the K/V
+//!   cache in compressed pages.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions};
+//! use zipnn_lp::formats::FloatFormat;
+//!
+//! // 1 KiB of BF16 weights (little-endian byte pairs).
+//! let weights: Vec<u8> = zipnn_lp::synthetic::gaussian_bf16_bytes(512, 0.02, 1);
+//! let opts = CompressOptions::for_format(FloatFormat::Bf16);
+//! let blob = compress_tensor(&weights, &opts).unwrap();
+//! let restored = decompress_tensor(&blob).unwrap();
+//! assert_eq!(weights, restored); // bit-exact, always
+//! assert!(blob.encoded_len() < weights.len());
+//! ```
+
+pub mod baselines;
+pub mod bitio;
+pub mod checkpoint;
+pub mod codec;
+pub mod container;
+pub mod coordinator;
+pub mod entropy;
+pub mod error;
+pub mod formats;
+pub mod huffman;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod synthetic;
+pub mod util;
+
+pub use error::{Error, Result};

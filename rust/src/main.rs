@@ -1,0 +1,352 @@
+//! `zipnn-lp` CLI — the L3 leader binary.
+//!
+//! Subcommands:
+//!
+//! * `compress` / `decompress` / `inspect` — offline tensor-file codec.
+//! * `train` — train the AOT model via PJRT, writing compressed delta
+//!   checkpoints (the §4.1 pipeline).
+//! * `serve` — run the batching server over a compressed K/V cache on
+//!   synthetic requests (the §4.3/§5.2 pipeline).
+//! * `info` — load the engine and print platform + artifact inventory.
+//!
+//! Arg parsing is hand-rolled (the offline registry has no clap); flags are
+//! `--key value` pairs after the subcommand.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use zipnn_lp::checkpoint::CheckpointStore;
+use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions, CompressedBlob};
+use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::metrics::Table;
+use zipnn_lp::model::ModelRuntime;
+use zipnn_lp::util::human_bytes;
+use zipnn_lp::util::rng::Rng;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(rest)?;
+    match cmd.as_str() {
+        "compress" => cmd_compress(&flags),
+        "compress-model" => cmd_compress_model(&flags),
+        "decompress" => cmd_decompress(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "train" => cmd_train(&flags),
+        "serve" => cmd_serve(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}' (try 'help')").into()),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "zipnn-lp — lossless compression for low-precision NN components
+
+USAGE: zipnn-lp <SUBCOMMAND> [--flag value ...]
+
+SUBCOMMANDS:
+  compress    --input FILE --format bf16|fp8|fp4|fp32|fp16 [--output FILE]
+              [--chunk-kib 256] [--threads 1] [--exponent-only]
+  compress-model --input model.safetensors [--output model.zlpc]
+              [--threads 1]   (per-tensor, HF safetensors)
+  decompress  --input FILE.zlpt [--output FILE]
+  inspect     --input FILE.zlpt
+  train       --artifacts DIR [--steps 40] [--ckpt-every 10]
+              [--ckpt-dir DIR] [--lr 0.1] [--seed 0]
+  serve       --artifacts DIR [--requests 8] [--new-tokens 24]
+              [--kv-format bf16|fp8|e5m2] [--no-compression] [--seed 0]
+  info        --artifacts DIR"
+    );
+}
+
+fn parse_flags(rest: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut map = HashMap::new();
+    let mut it = rest.iter();
+    while let Some(k) = it.next() {
+        let Some(key) = k.strip_prefix("--") else {
+            return Err(format!("expected --flag, got '{k}'"));
+        };
+        // Boolean flags.
+        if matches!(key, "exponent-only" | "no-compression") {
+            map.insert(key.to_string(), "true".to_string());
+            continue;
+        }
+        let v = it.next().ok_or_else(|| format!("--{key} needs a value"))?;
+        map.insert(key.to_string(), v.clone());
+    }
+    Ok(map)
+}
+
+fn get<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str, String> {
+    flags.get(key).map(|s| s.as_str()).ok_or_else(|| format!("missing --{key}"))
+}
+
+fn get_or<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let input = get(flags, "input")?;
+    let format = FloatFormat::parse(get_or(flags, "format", "bf16"))?;
+    let data = std::fs::read(input)?;
+    let chunk_kib: usize = get_or(flags, "chunk-kib", "256").parse()?;
+    let threads: usize = get_or(flags, "threads", "1").parse()?;
+    let mut opts = CompressOptions::for_format(format)
+        .with_chunk_size(chunk_kib * 1024)
+        .with_threads(threads);
+    opts.exponent_only = flags.contains_key("exponent-only");
+    let t = zipnn_lp::metrics::Timer::new();
+    let blob = compress_tensor(&data, &opts)?;
+    let secs = t.secs();
+    let out_path = flags
+        .get("output")
+        .cloned()
+        .unwrap_or_else(|| format!("{input}.zlpt"));
+    std::fs::write(&out_path, blob.serialize())?;
+    println!(
+        "{} -> {} ({} -> {}, ratio {:.4}, {:.1} MiB/s)",
+        input,
+        out_path,
+        human_bytes(data.len() as u64),
+        human_bytes(blob.encoded_len() as u64),
+        blob.ratio(),
+        data.len() as f64 / (1024.0 * 1024.0) / secs
+    );
+    for s in &blob.stats {
+        println!(
+            "  {:8} {:>12} -> {:>12}  ratio {:.4}",
+            s.kind.label(),
+            human_bytes(s.original_bytes),
+            human_bytes(s.compressed_bytes),
+            s.ratio()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compress_model(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::container::{Archive, TensorMeta};
+    use zipnn_lp::formats::safetensors;
+    let input = get(flags, "input")?;
+    let threads: usize = get_or(flags, "threads", "1").parse()?;
+    let tensors = safetensors::read_file(std::path::Path::new(input))?;
+    let mut archive = Archive::new();
+    let mut table = Table::new(&["tensor", "dtype", "original", "ratio"]);
+    let mut skipped = 0usize;
+    for t in &tensors {
+        let Some(format) = t.float_format() else {
+            skipped += 1;
+            continue;
+        };
+        let opts = CompressOptions::for_format(format).with_threads(threads);
+        let blob = compress_tensor(&t.data, &opts)?;
+        table.row(&[
+            t.name.clone(),
+            t.dtype.clone(),
+            human_bytes(t.data.len() as u64),
+            format!("{:.4}", blob.ratio()),
+        ]);
+        archive.insert(TensorMeta { name: t.name.clone(), shape: t.shape.clone() }, blob);
+    }
+    let out_path = flags
+        .get("output")
+        .cloned()
+        .unwrap_or_else(|| format!("{}.zlpc", input.trim_end_matches(".safetensors")));
+    archive.save(std::path::Path::new(&out_path))?;
+    println!("{}", table.render());
+    println!(
+        "{input} -> {out_path}: {} tensors ({skipped} non-float skipped), {} -> {} (ratio {:.4})",
+        archive.len(),
+        human_bytes(archive.total_original()),
+        human_bytes(archive.total_encoded()),
+        archive.ratio()
+    );
+    Ok(())
+}
+
+fn cmd_decompress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let input = get(flags, "input")?;
+    let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
+    let t = zipnn_lp::metrics::Timer::new();
+    let data = decompress_tensor(&blob)?;
+    let secs = t.secs();
+    let out_path = flags
+        .get("output")
+        .cloned()
+        .unwrap_or_else(|| input.trim_end_matches(".zlpt").to_string() + ".raw");
+    std::fs::write(&out_path, &data)?;
+    println!(
+        "{} -> {} ({}, {:.1} MiB/s)",
+        input,
+        out_path,
+        human_bytes(data.len() as u64),
+        data.len() as f64 / (1024.0 * 1024.0) / secs
+    );
+    Ok(())
+}
+
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let input = get(flags, "input")?;
+    let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
+    println!("strategy:  {:?}", blob.strategy);
+    println!("format:    {}", blob.format.name());
+    println!("original:  {}", human_bytes(blob.original_len as u64));
+    println!("encoded:   {}", human_bytes(blob.encoded_len() as u64));
+    println!("ratio:     {:.4}", blob.ratio());
+    println!("chunks:    {} x {}", blob.chunks.len(), human_bytes(blob.chunk_size as u64));
+    Ok(())
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let dir = PathBuf::from(get(flags, "artifacts")?);
+    let steps: usize = get_or(flags, "steps", "40").parse()?;
+    let ckpt_every: usize = get_or(flags, "ckpt-every", "10").parse()?;
+    let lr: f32 = get_or(flags, "lr", "0.1").parse()?;
+    let seed: u64 = get_or(flags, "seed", "0").parse()?;
+    let ckpt_dir = PathBuf::from(get_or(flags, "ckpt-dir", "/tmp/zipnn_lp_ckpts"));
+
+    let mut model = ModelRuntime::load(&dir)?;
+    let dims = model.dims();
+    println!("loaded model: {dims:?}");
+    let opts = CompressOptions::for_format(FloatFormat::Bf16);
+    let mut store = CheckpointStore::create(&ckpt_dir, opts, 1000)?;
+    let mut rng = Rng::new(seed);
+    for step in 0..steps {
+        let tokens = markov_batch(&dims, &mut rng);
+        let loss = model.train_step(&tokens, lr)?;
+        if step % ckpt_every == 0 || step + 1 == steps {
+            let rec = store.append(&model.weights_bf16_named())?;
+            println!(
+                "step {step:4}  loss {loss:.4}  ckpt {} ({:?})  ratio {:.4}  exp {:.4}  s+m {:.4}",
+                rec.id,
+                rec.kind,
+                rec.ratio(),
+                rec.exp_ratio,
+                rec.sm_ratio
+            );
+        } else {
+            println!("step {step:4}  loss {loss:.4}");
+        }
+    }
+    let mut table = Table::new(&["ckpt", "kind", "overall", "exp", "s+m"]);
+    for r in store.records() {
+        table.row(&[
+            r.id.to_string(),
+            format!("{:?}", r.kind),
+            format!("{:.4}", r.ratio()),
+            format!("{:.4}", r.exp_ratio),
+            format!("{:.4}", r.sm_ratio),
+        ]);
+    }
+    println!("\nDelta-checkpoint compression (paper Fig 6 analogue):\n{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let dir = PathBuf::from(get(flags, "artifacts")?);
+    let n_requests: usize = get_or(flags, "requests", "8").parse()?;
+    let new_tokens: usize = get_or(flags, "new-tokens", "24").parse()?;
+    let kv_format = match get_or(flags, "kv-format", "bf16") {
+        "bf16" => FloatFormat::Bf16,
+        "fp8" => FloatFormat::Fp8E4M3,
+        "e5m2" | "fp8_e5m2" => FloatFormat::Fp8E5M2,
+        other => return Err(format!("bad --kv-format '{other}'").into()),
+    };
+    let compression = !flags.contains_key("no-compression");
+    let seed: u64 = get_or(flags, "seed", "0").parse()?;
+
+    let model = ModelRuntime::load(&dir)?;
+    let dims = model.dims();
+    println!(
+        "serving: kv={} compression={} batch={} max_seq={}",
+        kv_format.name(),
+        compression,
+        dims.batch,
+        dims.max_seq
+    );
+    let mut server = Server::new(model, kv_format, BatchPolicy::default(), compression)?;
+    let mut rng = Rng::new(seed);
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..(8 + rng.below(16) as usize))
+                .map(|_| rng.below(dims.vocab as u64) as i32)
+                .collect(),
+            max_new_tokens: new_tokens,
+        })
+        .collect();
+    let t = zipnn_lp::metrics::Timer::new();
+    let responses = server.run(requests)?;
+    let total = t.secs();
+    let stats = server.stats();
+    println!("completed {} requests in {total:.2}s", responses.len());
+    println!(
+        "decode throughput: {:.1} tok/s   prefill {:.2}s   decode {:.2}s",
+        stats.decode_tok_per_sec(),
+        stats.prefill_secs,
+        stats.decode_secs
+    );
+    let c = stats.cache;
+    println!(
+        "kv cache: raw {} resident {} ratio {:.4} (exp {:.4}, s+m {:.4}, {} sealed pages)",
+        human_bytes(c.raw_bytes),
+        human_bytes(c.resident_bytes),
+        c.ratio(),
+        c.exp_ratio(),
+        c.sm_ratio(),
+        c.sealed_pages
+    );
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let dir = PathBuf::from(get(flags, "artifacts")?);
+    let model = ModelRuntime::load(&dir)?;
+    println!("platform: {}", model.engine().platform());
+    println!("dims: {:?}", model.dims());
+    let mut names = model.engine().artifact_names();
+    names.sort();
+    println!("artifacts: {names:?}");
+    println!("weights: {} tensors", model.weights().len());
+    Ok(())
+}
+
+/// Same synthetic "language" as `python/compile/model.py::sample_batch`
+/// (noisy affine Markov chain) so Rust-side training sees the same task.
+fn markov_batch(dims: &zipnn_lp::runtime::ModelDims, rng: &mut Rng) -> Vec<i32> {
+    let (b, s, v) = (dims.batch, dims.max_seq, dims.vocab as u64);
+    let mut out = vec![0i32; b * s];
+    for row in 0..b {
+        let mut tok = rng.below(v);
+        out[row * s] = tok as i32;
+        for t in 1..s {
+            tok = if rng.next_f64() < 0.15 {
+                rng.below(v)
+            } else {
+                (tok * 31 + 17) % v
+            };
+            out[row * s + t] = tok as i32;
+        }
+    }
+    out
+}

@@ -1,0 +1,157 @@
+//! Measurement and reporting: timers, throughput, and the ASCII tables the
+//! benches print (mirroring the paper's figures).
+
+use std::time::{Duration, Instant};
+
+/// A simple wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn new() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed time.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Measure a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::new();
+    let r = f();
+    (r, t.secs())
+}
+
+/// Repeat a measurement and report the minimum (noise-robust for
+/// single-core benches) plus the mean.
+pub fn bench_loop<T>(iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::new();
+        let r = f();
+        times.push(t.secs());
+        std::hint::black_box(&r);
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult { min_secs: min, mean_secs: mean, iters }
+}
+
+/// Result of [`bench_loop`].
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    /// Fastest iteration (seconds).
+    pub min_secs: f64,
+    /// Mean over iterations (seconds).
+    pub mean_secs: f64,
+    /// Iteration count.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Throughput given a per-iteration byte count.
+    pub fn mib_per_sec(&self, bytes: usize) -> f64 {
+        bytes as f64 / (1024.0 * 1024.0) / self.min_secs
+    }
+}
+
+/// Pretty ASCII table used by the bench binaries to print paper-style rows.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (stringify everything).
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (i, w) in widths.iter().enumerate() {
+                let empty = String::new();
+                let c = cells.get(i).unwrap_or(&empty);
+                line.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        ));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.secs() >= 0.002);
+    }
+
+    #[test]
+    fn bench_loop_collects() {
+        let r = bench_loop(3, || 1 + 1);
+        assert_eq!(r.iters, 3);
+        assert!(r.min_secs <= r.mean_secs);
+        assert!(r.mib_per_sec(1024 * 1024) > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "ratio"]);
+        t.row(&["llama-sim".into(), "0.83".into()]);
+        t.row(&["opt".into(), "0.667".into()]);
+        let s = t.render();
+        assert!(s.contains("| model"));
+        assert!(s.contains("| llama-sim | 0.83"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,271 @@
+//! Parsing of the AOT `manifest.json` emitted by `python/compile/aot.py`.
+
+use super::DType;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One input/output slot in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    /// Slot name ("tokens", "k_cache", weight names, …; outputs unnamed).
+    pub name: String,
+    /// Element dtype.
+    pub dtype: DType,
+    /// Static shape.
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True when the slot is zero-sized.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One artifact's file + signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// HLO text file name within the artifact directory.
+    pub file: String,
+    /// Positional inputs.
+    pub inputs: Vec<IoSpec>,
+    /// Tuple outputs, in order.
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Model dimensions recorded by the exporter.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Hidden width.
+    pub d_model: usize,
+    /// Transformer layer count.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Per-head width.
+    pub head_dim: usize,
+    /// Max sequence length (cache rows).
+    pub max_seq: usize,
+    /// Batch size baked into the artifacts.
+    pub batch: usize,
+    /// Element count of the standalone kernel artifacts.
+    pub kernel_n: usize,
+}
+
+/// The full parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Model dimensions.
+    pub dims: ModelDims,
+    /// Weight names in canonical (positional) order.
+    pub weight_names: Vec<String>,
+    /// Weight shapes keyed by name.
+    pub weight_shapes: BTreeMap<String, Vec<usize>>,
+    /// Artifacts keyed by name.
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Initial-weights file name (flat f32, manifest order), if exported.
+    pub weights_file: Option<String>,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| Error::Runtime(format!("manifest.json: {e}")))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let cfg = j.field("config")?;
+        let u = |k: &str| -> Result<usize> {
+            cfg.field(k)?
+                .as_usize()
+                .ok_or_else(|| Error::Runtime(format!("config.{k} not a usize")))
+        };
+        let dims = ModelDims {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            max_seq: u("max_seq")?,
+            batch: u("batch")?,
+            kernel_n: u("kernel_n")?,
+        };
+        let weight_names: Vec<String> = j
+            .field("weight_names")?
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("weight_names not an array".into()))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let mut weight_shapes = BTreeMap::new();
+        for (name, shape) in j
+            .field("weight_shapes")?
+            .as_obj()
+            .ok_or_else(|| Error::Runtime("weight_shapes not an object".into()))?
+        {
+            weight_shapes.insert(name.clone(), parse_shape(shape)?);
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j
+            .field("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Runtime("artifacts not an object".into()))?
+        {
+            artifacts.insert(name.clone(), parse_artifact(art)?);
+        }
+        let weights_file = j.get("weights_file").and_then(|v| v.as_str()).map(String::from);
+        Ok(Manifest { dims, weight_names, weight_shapes, artifacts, weights_file })
+    }
+
+    /// Load the initial weights file as per-weight f32 vectors in canonical
+    /// order.
+    pub fn load_initial_weights(&self, dir: &Path) -> Result<Vec<Vec<f32>>> {
+        let file = self
+            .weights_file
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("manifest has no weights_file".into()))?;
+        let bytes = std::fs::read(dir.join(file))?;
+        let mut out = Vec::with_capacity(self.weight_names.len());
+        let mut off = 0usize;
+        for name in &self.weight_names {
+            let shape = self
+                .weight_shapes
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("no shape for weight {name}")))?;
+            let n: usize = shape.iter().product();
+            let end = off + n * 4;
+            if end > bytes.len() {
+                return Err(Error::Runtime("weights file truncated".into()));
+            }
+            out.push(
+                bytes[off..end]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+            off = end;
+        }
+        if off != bytes.len() {
+            return Err(Error::Runtime("weights file has trailing bytes".into()));
+        }
+        Ok(out)
+    }
+}
+
+fn parse_shape(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Runtime("shape not an array".into()))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| Error::Runtime("bad shape dim".into())))
+        .collect()
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    let name = v.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+    let dtype = DType::parse(
+        v.field("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Runtime("dtype not a string".into()))?,
+    )?;
+    let shape = parse_shape(v.field("shape")?)?;
+    Ok(IoSpec { name, dtype, shape })
+}
+
+fn parse_artifact(v: &Json) -> Result<ArtifactSpec> {
+    let file = v
+        .field("file")?
+        .as_str()
+        .ok_or_else(|| Error::Runtime("file not a string".into()))?
+        .to_string();
+    let inputs = v
+        .field("inputs")?
+        .as_arr()
+        .ok_or_else(|| Error::Runtime("inputs not an array".into()))?
+        .iter()
+        .map(parse_io)
+        .collect::<Result<_>>()?;
+    let outputs = v
+        .field("outputs")?
+        .as_arr()
+        .ok_or_else(|| Error::Runtime("outputs not an array".into()))?
+        .iter()
+        .map(parse_io)
+        .collect::<Result<_>>()?;
+    Ok(ArtifactSpec { file, inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"vocab": 32, "d_model": 16, "n_layers": 1, "n_heads": 2,
+                 "head_dim": 8, "max_seq": 8, "batch": 2, "kernel_n": 1024},
+      "weight_names": ["embed", "ln_f"],
+      "weight_shapes": {"embed": [32, 16], "ln_f": [16]},
+      "artifacts": {
+        "prefill": {
+          "file": "prefill.hlo.txt",
+          "inputs": [
+            {"name": "embed", "dtype": "float32", "shape": [32, 16]},
+            {"name": "tokens", "dtype": "int32", "shape": [2, 8]}
+          ],
+          "outputs": [{"dtype": "float32", "shape": [2, 8, 32]}]
+        }
+      },
+      "weights_file": "weights_init.bin"
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dims.vocab, 32);
+        assert_eq!(m.dims.head_dim, 8);
+        assert_eq!(m.weight_names, vec!["embed", "ln_f"]);
+        assert_eq!(m.weight_shapes["embed"], vec![32, 16]);
+        let art = &m.artifacts["prefill"];
+        assert_eq!(art.inputs[1].dtype, DType::I32);
+        assert_eq!(art.outputs[0].shape, vec![2, 8, 32]);
+        assert_eq!(m.weights_file.as_deref(), Some("weights_init.bin"));
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"config": {}}"#).is_err());
+    }
+
+    #[test]
+    fn initial_weights_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("zipnn_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        // 32*16 + 16 floats.
+        let total = 32 * 16 + 16;
+        let vals: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights_init.bin"), &bytes).unwrap();
+        let w = m.load_initial_weights(&dir).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].len(), 512);
+        assert_eq!(w[1][15], 527.0);
+        // Truncated file errors.
+        std::fs::write(dir.join("weights_init.bin"), &bytes[..100]).unwrap();
+        assert!(m.load_initial_weights(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,295 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU client. The only bridge between the Rust coordinator and the
+//! JAX/Pallas compute — Python never runs here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`, with the
+//! jax side having lowered everything `return_tuple=True` so every artifact
+//! yields one tuple literal.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelDims};
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Element dtypes appearing in artifact signatures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed int.
+    I32,
+    /// Unsigned byte.
+    U8,
+    /// Unsigned 16-bit (BF16 carrier for the split kernel).
+    U16,
+}
+
+impl DType {
+    /// Parse the manifest's numpy dtype string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "uint8" => Ok(DType::U8),
+            "uint16" => Ok(DType::U16),
+            other => Err(Error::Runtime(format!("unsupported dtype '{other}'"))),
+        }
+    }
+
+    fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U8 => xla::ElementType::U8,
+            DType::U16 => xla::ElementType::U16,
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U16 => 2,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    /// Element type.
+    pub dtype: DType,
+    /// Shape.
+    pub shape: Vec<usize>,
+    /// Little-endian raw bytes, C-contiguous.
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    /// From f32 values.
+    pub fn f32(values: &[f32], shape: &[usize]) -> Self {
+        let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        HostTensor { dtype: DType::F32, shape: shape.to_vec(), data }
+    }
+
+    /// From i32 values.
+    pub fn i32(values: &[i32], shape: &[usize]) -> Self {
+        let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        HostTensor { dtype: DType::I32, shape: shape.to_vec(), data }
+    }
+
+    /// From raw u8 bytes.
+    pub fn u8(values: &[u8], shape: &[usize]) -> Self {
+        HostTensor { dtype: DType::U8, shape: shape.to_vec(), data: values.to_vec() }
+    }
+
+    /// From u16 values.
+    pub fn u16(values: &[u16], shape: &[usize]) -> Self {
+        let data = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        HostTensor { dtype: DType::U16, shape: shape.to_vec(), data }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32 values (dtype must be F32).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::Runtime(format!("tensor is {:?}, not F32", self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// View as i32 values.
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::Runtime(format!("tensor is {:?}, not I32", self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )
+        .map_err(|e| Error::Runtime(format!("literal creation failed: {e}")))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| Error::Runtime(format!("literal shape: {e}")))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let dtype = match shape.ty() {
+            xla::ElementType::F32 => DType::F32,
+            xla::ElementType::S32 => DType::I32,
+            xla::ElementType::U8 => DType::U8,
+            xla::ElementType::U16 => DType::U16,
+            other => return Err(Error::Runtime(format!("unsupported output type {other:?}"))),
+        };
+        // copy_raw_to is typed, so dispatch per dtype and re-serialize LE.
+        let data: Vec<u8> = match dtype {
+            DType::F32 => lit
+                .to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("literal copy: {e}")))?
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect(),
+            DType::I32 => lit
+                .to_vec::<i32>()
+                .map_err(|e| Error::Runtime(format!("literal copy: {e}")))?
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect(),
+            DType::U16 => lit
+                .to_vec::<u16>()
+                .map_err(|e| Error::Runtime(format!("literal copy: {e}")))?
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect(),
+            DType::U8 => lit
+                .to_vec::<u8>()
+                .map_err(|e| Error::Runtime(format!("literal copy: {e}")))?,
+        };
+        Ok(HostTensor { dtype, shape: dims, data })
+    }
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    /// Signature from the manifest.
+    pub spec: ArtifactSpec,
+}
+
+/// The PJRT engine: one CPU client + every compiled artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    /// Parsed manifest (model dims, weight names).
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on a fresh CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
+        let mut artifacts = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", spec.file)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", spec.file)))?;
+            artifacts.insert(name.clone(), Artifact { exe, spec: spec.clone() });
+        }
+        Ok(Engine { client, artifacts, manifest })
+    }
+
+    /// PJRT platform name (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute `name` with positional inputs; returns the flattened tuple
+    /// outputs. Validates shapes/dtypes against the manifest signature.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?;
+        if inputs.len() != art.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                art.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&art.spec.inputs).enumerate() {
+            if t.shape != spec.shape || t.dtype != spec.dtype {
+                return Err(Error::Runtime(format!(
+                    "{name} input {i} ('{}'): expected {:?}{:?}, got {:?}{:?}",
+                    spec.name, spec.dtype, spec.shape, t.dtype, t.shape
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("{name} execute: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{name} fetch: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("{name} untuple: {e}")))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for (s, d) in [
+            ("float32", DType::F32),
+            ("int32", DType::I32),
+            ("uint8", DType::U8),
+            ("uint16", DType::U16),
+        ] {
+            assert_eq!(DType::parse(s).unwrap(), d);
+        }
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn host_tensor_roundtrips() {
+        let t = HostTensor::f32(&[1.0, -2.5, 3.25], &[3]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(t.as_i32().is_err());
+        let t = HostTensor::i32(&[1, -2], &[2]);
+        assert_eq!(t.as_i32().unwrap(), vec![1, -2]);
+        let t = HostTensor::u8(&[7, 8], &[2]);
+        assert_eq!(t.data, vec![7, 8]);
+        assert_eq!(t.len(), 2);
+    }
+}

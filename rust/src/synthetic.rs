@@ -1,0 +1,245 @@
+//! Synthetic neural-network workload generators.
+//!
+//! These replay the *distributional* properties the paper's compression
+//! exploits — near-Gaussian weights whose exponents concentrate on a few
+//! values, converging checkpoint trajectories, transformer-shaped tensor
+//! manifests — at any scale, so the model-zoo experiments (Fig 8, Fig 9)
+//! run on this machine. See DESIGN.md §4 for the substitution argument.
+//!
+//! Everything is seeded and bit-reproducible.
+
+use crate::formats::conv::{f32_to_bf16, quantize_slice};
+use crate::formats::FloatFormat;
+use crate::util::rng::Rng;
+
+/// Gaussian f32 samples, mean 0, std `std`.
+pub fn gaussian_f32(n: usize, std: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_ms(0.0, std) as f32).collect()
+}
+
+/// Gaussian weights quantized to little-endian BF16 bytes.
+pub fn gaussian_bf16_bytes(n: usize, std: f64, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n * 2);
+    for _ in 0..n {
+        let v = rng.normal_ms(0.0, std) as f32;
+        out.extend_from_slice(&f32_to_bf16(v).to_le_bytes());
+    }
+    out
+}
+
+/// Perturb a BF16 byte buffer like one optimizer step: with probability
+/// `p_change`, add N(0, rel_std·|w|+1e-8) to the weight. Models the
+/// "converging fine-tune" that makes XOR deltas sparse (§3.1).
+pub fn perturb_bf16_bytes(base: &[u8], rel_std: f64, p_change: f64, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(base.len());
+    for pair in base.chunks_exact(2) {
+        let w = u16::from_le_bytes([pair[0], pair[1]]);
+        let v = crate::formats::conv::bf16_to_f32(w);
+        let nv = if rng.next_f64() < p_change {
+            let scale = (v.abs() as f64) * rel_std + 1e-8;
+            v + rng.normal_ms(0.0, scale) as f32
+        } else {
+            v
+        };
+        out.extend_from_slice(&f32_to_bf16(nv).to_le_bytes());
+    }
+    out
+}
+
+/// One named tensor of a synthetic model manifest.
+#[derive(Clone, Debug)]
+pub struct SyntheticTensor {
+    /// Layer-qualified name (`layers.3.attn.wq` …).
+    pub name: String,
+    /// Element count.
+    pub n_elements: usize,
+    /// Per-tensor weight std (layer-dependent, like real inits).
+    pub std: f64,
+}
+
+/// A transformer-shaped model manifest: the tensor list of a GPT-style
+/// model with `layers` blocks of width `d_model`, as real checkpoints have.
+pub fn transformer_manifest(d_model: usize, layers: usize, vocab: usize) -> Vec<SyntheticTensor> {
+    let mut ts = Vec::new();
+    let d = d_model;
+    ts.push(SyntheticTensor {
+        name: "tok_embeddings.weight".into(),
+        n_elements: vocab * d,
+        std: 0.02,
+    });
+    for l in 0..layers {
+        // Attention projections: Xavier-ish std 1/sqrt(d).
+        let attn_std = 1.0 / (d as f64).sqrt();
+        for proj in ["wq", "wk", "wv", "wo"] {
+            ts.push(SyntheticTensor {
+                name: format!("layers.{l}.attention.{proj}.weight"),
+                n_elements: d * d,
+                std: attn_std,
+            });
+        }
+        // MLP: 4× expansion; second projection scaled down with depth.
+        ts.push(SyntheticTensor {
+            name: format!("layers.{l}.feed_forward.w1.weight"),
+            n_elements: d * 4 * d,
+            std: attn_std,
+        });
+        ts.push(SyntheticTensor {
+            name: format!("layers.{l}.feed_forward.w2.weight"),
+            n_elements: 4 * d * d,
+            std: attn_std / (2.0 * (l + 1) as f64).sqrt(),
+        });
+        // LayerNorm gains: near 1.0, tiny variance — very compressible.
+        ts.push(SyntheticTensor {
+            name: format!("layers.{l}.attention_norm.weight"),
+            n_elements: d,
+            std: 0.01,
+        });
+        ts.push(SyntheticTensor {
+            name: format!("layers.{l}.ffn_norm.weight"),
+            n_elements: d,
+            std: 0.01,
+        });
+    }
+    ts.push(SyntheticTensor { name: "norm.weight".into(), n_elements: d, std: 0.01 });
+    ts.push(SyntheticTensor { name: "output.weight".into(), n_elements: vocab * d, std: 0.02 });
+    ts
+}
+
+/// Materialize one manifest tensor's values. LayerNorm-ish tensors
+/// (name contains "norm") center at 1.0, everything else at 0.
+pub fn materialize(t: &SyntheticTensor, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ fnv1a(&t.name));
+    let mean = if t.name.contains("norm") { 1.0 } else { 0.0 };
+    (0..t.n_elements).map(|_| rng.normal_ms(mean, t.std) as f32).collect()
+}
+
+/// Materialize and quantize a manifest tensor to `format` bytes.
+pub fn materialize_bytes(t: &SyntheticTensor, format: FloatFormat, seed: u64) -> Vec<u8> {
+    let vals = materialize(t, seed);
+    quantize_slice(&vals, format).expect("quantize")
+}
+
+/// Synthetic K/V-cache-like tensor: attention keys/values have per-channel
+/// structure (RMS-normalized activations → exponents cluster) plus a few
+/// high-magnitude outlier channels, matching published K/V statistics.
+pub fn kv_cache_f32(n_tokens: usize, head_dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    // Per-channel scales: log-normal, a few outliers.
+    let scales: Vec<f64> = (0..head_dim)
+        .map(|_| {
+            let base = (rng.normal_ms(0.0, 0.6)).exp() * 0.3;
+            if rng.next_f64() < 0.03 {
+                base * 8.0
+            } else {
+                base
+            }
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n_tokens * head_dim);
+    for _t in 0..n_tokens {
+        for c in 0..head_dim {
+            out.push(rng.normal_ms(0.0, scales[c]) as f32);
+        }
+    }
+    out
+}
+
+/// FNV-1a hash for stable per-name seeds.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Total parameter count of a manifest.
+pub fn manifest_params(ts: &[SyntheticTensor]) -> usize {
+    ts.iter().map(|t| t.n_elements).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::Histogram;
+    use crate::formats::split_streams;
+
+    #[test]
+    fn gaussian_bf16_exponents_are_skewed() {
+        let data = gaussian_bf16_bytes(20_000, 0.02, 1);
+        let set = split_streams(FloatFormat::Bf16, &data).unwrap();
+        let h = Histogram::from_bytes(&set.exponent().unwrap().bytes);
+        assert!(h.entropy_bits() < 4.0, "H={}", h.entropy_bits());
+    }
+
+    #[test]
+    fn perturb_changes_subset() {
+        let base = gaussian_bf16_bytes(10_000, 0.02, 2);
+        let p = perturb_bf16_bytes(&base, 0.01, 0.3, 3);
+        assert_eq!(p.len(), base.len());
+        let changed = base
+            .chunks_exact(2)
+            .zip(p.chunks_exact(2))
+            .filter(|(a, b)| a != b)
+            .count();
+        // ~30% of elements change (quantization may hide tiny deltas).
+        assert!(changed > 1_000 && changed < 4_000, "changed={changed}");
+    }
+
+    #[test]
+    fn perturb_is_deterministic() {
+        let base = gaussian_bf16_bytes(1_000, 0.02, 4);
+        assert_eq!(
+            perturb_bf16_bytes(&base, 0.01, 0.5, 5),
+            perturb_bf16_bytes(&base, 0.01, 0.5, 5)
+        );
+    }
+
+    #[test]
+    fn manifest_shape() {
+        let m = transformer_manifest(256, 4, 1024);
+        let params = manifest_params(&m);
+        assert!(params > 2 * 1024 * 256);
+        assert!(m.iter().any(|t| t.name.contains("attention.wq")));
+        assert!(m.iter().any(|t| t.name.contains("norm")));
+    }
+
+    #[test]
+    fn materialize_stable_per_name() {
+        let m = transformer_manifest(64, 1, 128);
+        let a = materialize(&m[0], 7);
+        let b = materialize(&m[0], 7);
+        assert_eq!(a, b);
+        let c = materialize(&m[1], 7);
+        assert_ne!(a[..8], c[..8]);
+    }
+
+    #[test]
+    fn norm_tensors_center_at_one() {
+        let m = transformer_manifest(512, 1, 64);
+        let norm = m.iter().find(|t| t.name.contains("attention_norm")).unwrap();
+        let vals = materialize(norm, 9);
+        let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn kv_cache_has_outlier_channels() {
+        let kv = kv_cache_f32(256, 64, 11);
+        assert_eq!(kv.len(), 256 * 64);
+        let mut rms = vec![0f64; 64];
+        for t in 0..256 {
+            for c in 0..64 {
+                rms[c] += (kv[t * 64 + c] as f64).powi(2);
+            }
+        }
+        let rms: Vec<f64> = rms.iter().map(|s| (s / 256.0).sqrt()).collect();
+        let max = rms.iter().cloned().fold(0.0, f64::max);
+        let min = rms.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 3.0, "spread {}", max / min);
+    }
+}

@@ -1,0 +1,58 @@
+//! Small shared utilities: deterministic PRNG, CRC32, varint encoding,
+//! human-readable byte formatting.
+//!
+//! The crate deliberately implements these in-house: reproducibility of the
+//! paper's experiments requires a *seeded, stable* random source, and the
+//! container format freezes the CRC32 polynomial as part of its spec.
+
+pub mod crc32;
+pub mod json;
+pub mod rng;
+pub mod varint;
+
+/// Format a byte count as a human-readable string (binary units).
+///
+/// ```
+/// assert_eq!(zipnn_lp::util::human_bytes(1536), "1.50 KiB");
+/// ```
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    format!("{v:.2} {}", UNITS[unit])
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1024), "1.00 KiB");
+        assert_eq!(human_bytes(1024 * 1024), "1.00 MiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+}

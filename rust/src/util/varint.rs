@@ -1,0 +1,115 @@
+//! LEB128-style unsigned varint encoding used by container metadata.
+//!
+//! Chunk metadata is small but numerous (one record per 256 KiB chunk); the
+//! varint keeps per-chunk overhead to a few bytes, which matters for the
+//! paper's "lightweight metadata stored per block" requirement (§3.1).
+
+use crate::error::{Error, Result};
+
+/// Append `value` to `out` as a varint. Returns the number of bytes written.
+pub fn write_u64(out: &mut Vec<u8>, mut value: u64) -> usize {
+    let mut n = 0;
+    loop {
+        let byte = (value & 0x7F) as u8;
+        value >>= 7;
+        n += 1;
+        if value == 0 {
+            out.push(byte);
+            return n;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read a varint from `buf` starting at `*pos`, advancing `*pos`.
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut value: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Corrupt("varint truncated".into()))?;
+        *pos += 1;
+        if shift == 63 && byte > 1 {
+            return Err(Error::Corrupt("varint overflows u64".into()));
+        }
+        value |= u64::from(byte & 0x7F) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(value);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(Error::Corrupt("varint too long".into()));
+        }
+    }
+}
+
+/// Convenience: write a `usize`.
+pub fn write_usize(out: &mut Vec<u8>, value: usize) -> usize {
+    write_u64(out, value as u64)
+}
+
+/// Convenience: read a `usize`, failing if it does not fit.
+pub fn read_usize(buf: &[u8], pos: &mut usize) -> Result<usize> {
+    let v = read_u64(buf, pos)?;
+    usize::try_from(v).map_err(|_| Error::Corrupt("varint exceeds usize".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_edge_values() {
+        for v in [0u64, 1, 127, 128, 129, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn encoding_lengths() {
+        let len = |v: u64| {
+            let mut b = Vec::new();
+            write_u64(&mut b, v)
+        };
+        assert_eq!(len(0), 1);
+        assert_eq!(len(127), 1);
+        assert_eq!(len(128), 2);
+        assert_eq!(len(u64::MAX), 10);
+    }
+
+    #[test]
+    fn truncated_fails() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 300);
+        buf.pop();
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn overlong_fails() {
+        // 11 continuation bytes is always invalid for u64.
+        let buf = vec![0x80u8; 10];
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn sequence_roundtrip() {
+        let values = [5u64, 0, 1 << 40, 77, 128];
+        let mut buf = Vec::new();
+        for &v in &values {
+            write_u64(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &values {
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+}

@@ -1,0 +1,237 @@
+//! Integration tests over the real PJRT engine + AOT artifacts.
+//!
+//! These need `artifacts/` (built by `make artifacts`); they skip (with a
+//! message) when it is absent so `cargo test` stays green on a fresh clone.
+//! One PJRT client per process: tests share a lazily-initialized runtime.
+
+use std::path::PathBuf;
+
+use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
+use zipnn_lp::formats::conv::f32_to_e4m3;
+use zipnn_lp::formats::{split_streams, FloatFormat};
+use zipnn_lp::model::ModelRuntime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    candidates.into_iter().find(|p| p.join("manifest.json").exists())
+}
+
+/// PJRT clients are not Sync, so each test loads its own runtime.
+/// Returns None (test skips) when artifacts/ has not been built.
+fn load_model() -> Option<ModelRuntime> {
+    let dir = artifacts_dir()?;
+    match ModelRuntime::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping PJRT test: {e}");
+            None
+        }
+    }
+}
+
+macro_rules! require_model {
+    () => {
+        match load_model() {
+            Some(m) => m,
+            None => {
+                eprintln!("artifacts/ missing — run `make artifacts`; skipping");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let m = require_model!();
+    let mut names = m.engine().artifact_names();
+    names.sort();
+    assert_eq!(
+        names,
+        vec!["decode", "nvfp4", "prefill", "quantize_e4m3", "split_bf16", "train_step"]
+    );
+    assert_eq!(m.weights().len(), m.engine().manifest.weight_names.len());
+}
+
+#[test]
+fn split_kernel_matches_native_split() {
+    let m = require_model!();
+    let data = zipnn_lp::synthetic::gaussian_bf16_bytes(5_000, 0.02, 42);
+    let words: Vec<u16> = data
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect();
+    let (exp, sm, hist) = m.split_bf16_xla(&words).unwrap();
+    let set = split_streams(FloatFormat::Bf16, &data).unwrap();
+    assert_eq!(exp, set.exponent().unwrap().bytes, "XLA exp == native exp");
+    assert_eq!(sm, set.sign_mantissa().unwrap().bytes, "XLA s+m == native s+m");
+    let native_hist = zipnn_lp::entropy::Histogram::from_bytes(&exp);
+    assert_eq!(&hist[..], &native_hist.counts()[..], "histogram agrees");
+}
+
+#[test]
+fn quantize_kernel_matches_native_conv() {
+    let m = require_model!();
+    let vals = zipnn_lp::synthetic::gaussian_f32(4_096, 0.5, 7);
+    let xla = m.quantize_e4m3_xla(&vals).unwrap();
+    // Quirk of this runtime: xla_extension 0.5.1's CPU backend converts
+    // f32→f8e4m3fn THROUGH f16 (double rounding), so inputs that land
+    // exactly on an E4M3 tie after the f16 step can differ by one code
+    // from direct RNE (jax ≥0.5's own CPU backend, which the pytest suite
+    // validates, rounds directly). Accept either the direct-RNE code or
+    // the via-f16 double-rounded code; anything else is a real bug.
+    let mut double_rounded = 0usize;
+    for (i, (&got, &v)) in xla.iter().zip(&vals).enumerate() {
+        let direct = f32_to_e4m3(v);
+        if got == direct {
+            continue;
+        }
+        let via_f16 = f32_to_e4m3(zipnn_lp::formats::conv::fp16_to_f32(
+            zipnn_lp::formats::conv::f32_to_fp16(v),
+        ));
+        assert_eq!(got, via_f16, "idx {i}: v={v:e} not direct ({direct:#04x}) nor via-f16");
+        double_rounded += 1;
+    }
+    // Double-rounding boundary hits are rare (<2% of Gaussian inputs).
+    assert!(double_rounded < vals.len() / 50, "{double_rounded} double-rounded codes");
+}
+
+#[test]
+fn nvfp4_kernel_matches_native_quantizer() {
+    let m = require_model!();
+    let n = m.dims().kernel_n; // exact fit avoids padding distortion
+    let vals = zipnn_lp::synthetic::gaussian_f32(n, 0.3, 9);
+    let xla = m.quantize_nvfp4_xla(&vals).unwrap();
+    let native = zipnn_lp::formats::conv::quantize_nvfp4(&vals);
+    assert_eq!(xla.payload, native.payload);
+    assert_eq!(xla.block_scales, native.block_scales);
+    assert!((xla.global_scale - native.global_scale).abs() <= native.global_scale * 1e-6);
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let mut m = require_model!();
+    let dims = m.dims();
+    let mut rng = zipnn_lp::util::rng::Rng::new(0);
+    let mk = |rng: &mut zipnn_lp::util::rng::Rng| -> Vec<i32> {
+        let (b, s, v) = (dims.batch, dims.max_seq, dims.vocab as u64);
+        let mut out = vec![0i32; b * s];
+        for row in 0..b {
+            let mut tok = rng.below(v);
+            out[row * s] = tok as i32;
+            for t in 1..s {
+                tok = if rng.next_f64() < 0.15 { rng.below(v) } else { (tok * 31 + 17) % v };
+                out[row * s + t] = tok as i32;
+            }
+        }
+        out
+    };
+    let first = m.train_step(&mk(&mut rng), 0.1).unwrap();
+    let mut last = first;
+    for _ in 0..8 {
+        last = m.train_step(&mk(&mut rng), 0.1).unwrap();
+    }
+    assert!(last.is_finite());
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn decode_is_consistent_with_prefill() {
+    let m = require_model!();
+    let dims = m.dims();
+    let (b, s, l, d, v) = (dims.batch, dims.max_seq, dims.n_layers, dims.d_model, dims.vocab);
+    let mut rng = zipnn_lp::util::rng::Rng::new(11);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(v as u64) as i32).collect();
+    let pre = m.prefill(&tokens).unwrap();
+
+    // Replay the first few positions through decode over an f32 cache.
+    let mut k_slab = vec![0f32; l * b * s * d];
+    let mut v_slab = vec![0f32; l * b * s * d];
+    for t in 0..4usize {
+        let token: Vec<i32> = (0..b).map(|slot| tokens[slot * s + t]).collect();
+        let pos = vec![t as i32; b];
+        let out = m.decode_step(&token, &pos, &k_slab, &v_slab).unwrap();
+        // Logits must match the prefill logits at position t.
+        for slot in 0..b {
+            let dec = &out.logits[slot * v..(slot + 1) * v];
+            let pre_row = &pre.logits[(slot * s + t) * v..(slot * s + t + 1) * v];
+            for (a, bb) in dec.iter().zip(pre_row) {
+                assert!(
+                    (a - bb).abs() <= 2e-3 + a.abs().max(bb.abs()) * 2e-3,
+                    "slot {slot} t {t}: {a} vs {bb}"
+                );
+            }
+        }
+        // Write the new K/V rows into the slab for the next step.
+        for layer in 0..l {
+            for slot in 0..b {
+                let src = (layer * b + slot) * d;
+                let dst = ((layer * b + slot) * s + t) * d;
+                k_slab[dst..dst + d].copy_from_slice(&out.k_new[src..src + d]);
+                v_slab[dst..dst + d].copy_from_slice(&out.v_new[src..src + d]);
+            }
+        }
+    }
+}
+
+#[test]
+fn serving_compression_is_transparent_on_real_model() {
+    let dir = match artifacts_dir() {
+        Some(d) => d,
+        None => {
+            eprintln!("artifacts/ missing; skipping");
+            return;
+        }
+    };
+    // Each server needs its own ModelRuntime (Server consumes the model);
+    // load two fresh ones from the same artifacts.
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![(i as i32 * 7 + 3) % 512, 5, 9, 2 + i as i32],
+            max_new_tokens: 6,
+        })
+        .collect();
+    let run = |compression: bool, format: FloatFormat| {
+        let model = ModelRuntime::load(&dir).unwrap();
+        let mut server =
+            Server::new(model, format, BatchPolicy::default(), compression).unwrap();
+        server.run(reqs.clone()).unwrap()
+    };
+    for format in [FloatFormat::Bf16, FloatFormat::Fp8E4M3] {
+        let on = run(true, format);
+        let off = run(false, format);
+        for (a, b) in on.iter().zip(&off) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "{format:?}");
+            assert!(!a.tokens.is_empty());
+        }
+    }
+}
+
+#[test]
+fn serving_reports_kv_compression() {
+    let dir = match artifacts_dir() {
+        Some(d) => d,
+        None => {
+            eprintln!("artifacts/ missing; skipping");
+            return;
+        }
+    };
+    let model = ModelRuntime::load(&dir).unwrap();
+    let mut server =
+        Server::new(model, FloatFormat::Bf16, BatchPolicy::default(), true).unwrap();
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request { id: i, prompt: vec![1, 2, 3 + i as i32], max_new_tokens: 20 })
+        .collect();
+    let _ = server.run(reqs).unwrap();
+    let stats = server.stats();
+    assert!(stats.cache.sealed_pages > 0);
+    // Real-model BF16 K/V exponents must compress well (§4.3).
+    assert!(stats.cache.exp_ratio() < 0.6, "exp ratio {}", stats.cache.exp_ratio());
+    assert!(stats.cache.ratio() < 1.0);
+    assert_eq!(stats.completed, 4);
+}

@@ -1,0 +1,224 @@
+//! Property tests: lossless round-trip of every codec path under randomized
+//! inputs.
+//!
+//! The baked registry has no proptest crate, so this file uses an in-house
+//! harness: seeded generation via `zipnn_lp::util::rng::Rng` over many
+//! cases per property. Failures print the seed so cases replay exactly.
+
+use zipnn_lp::baselines;
+use zipnn_lp::codec::{
+    compress_delta, compress_mxfp4, compress_nvfp4, compress_tensor, decompress_chunk,
+    decompress_delta, decompress_mxfp4, decompress_nvfp4, decompress_tensor, CompressOptions,
+};
+use zipnn_lp::formats::conv::{quantize_mxfp4, quantize_nvfp4};
+use zipnn_lp::formats::{merge_streams, split_streams, FloatFormat};
+use zipnn_lp::util::rng::Rng;
+
+const FORMATS: [FloatFormat; 6] = [
+    FloatFormat::Fp32,
+    FloatFormat::Fp16,
+    FloatFormat::Bf16,
+    FloatFormat::Fp8E4M3,
+    FloatFormat::Fp8E5M2,
+    FloatFormat::Fp4E2M1,
+];
+
+fn align(format: FloatFormat) -> usize {
+    match format {
+        FloatFormat::Fp32 => 4,
+        FloatFormat::Fp16 | FloatFormat::Bf16 | FloatFormat::Fp8E4M3 | FloatFormat::Fp4E2M1 => 2,
+        FloatFormat::Fp8E5M2 => 1,
+    }
+}
+
+/// Byte buffers spanning the interesting distributions: uniform noise,
+/// constant, skewed symbols, Gaussian-weight-like, sparse-delta-like.
+fn gen_case(rng: &mut Rng, format: FloatFormat) -> Vec<u8> {
+    let a = align(format);
+    let len = (rng.below(40_000) as usize + 1) / a * a;
+    match rng.below(5) {
+        0 => {
+            let mut v = vec![0u8; len];
+            rng.fill_bytes(&mut v);
+            v
+        }
+        1 => vec![(rng.below(256)) as u8; len],
+        2 => (0..len)
+            .map(|_| if rng.next_f64() < 0.9 { 0x3F } else { rng.below(256) as u8 })
+            .collect(),
+        3 => zipnn_lp::synthetic::gaussian_bf16_bytes(len / 2, 0.05, rng.next_u64())
+            .into_iter()
+            .take(len / a * a)
+            .collect(),
+        _ => {
+            // Sparse: mostly zero with random islands (XOR-delta-like).
+            let mut v = vec![0u8; len];
+            for _ in 0..len / 50 {
+                let i = rng.below(len.max(1) as u64) as usize;
+                v[i] = rng.below(256) as u8;
+            }
+            v
+        }
+    }
+}
+
+#[test]
+fn prop_split_merge_is_bijective() {
+    let mut rng = Rng::new(0xABCD);
+    for case in 0..200 {
+        let format = FORMATS[(case % FORMATS.len()) as usize];
+        let data = gen_case(&mut rng, format);
+        let set = split_streams(format, &data)
+            .unwrap_or_else(|e| panic!("case {case} {format:?}: split failed: {e}"));
+        let native: u64 = set.streams.iter().map(|s| s.native_size_bits()).sum();
+        assert_eq!(native, data.len() as u64 * 8, "case {case} {format:?}: bits conserved");
+        let back = merge_streams(format, &set).unwrap();
+        assert_eq!(back, data, "case {case} {format:?}");
+    }
+}
+
+#[test]
+fn prop_compress_roundtrip_all_formats() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..150 {
+        let format = FORMATS[(case % FORMATS.len()) as usize];
+        let data = gen_case(&mut rng, format);
+        let chunk = 512 + rng.below(8192) as usize;
+        let mut opts = CompressOptions::for_format(format).with_chunk_size(chunk);
+        opts.len_limit = 8 + (rng.below(8)) as u8;
+        let blob = compress_tensor(&data, &opts)
+            .unwrap_or_else(|e| panic!("case {case} {format:?}: {e}"));
+        let back = decompress_tensor(&blob).unwrap();
+        assert_eq!(back, data, "case {case} {format:?} chunk={chunk}");
+        // Serialized form round-trips too.
+        let blob2 =
+            zipnn_lp::codec::CompressedBlob::deserialize(&blob.serialize()).unwrap();
+        assert_eq!(decompress_tensor(&blob2).unwrap(), data, "case {case} serialized");
+    }
+}
+
+#[test]
+fn prop_random_access_equals_full_decode() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..50 {
+        let data = gen_case(&mut rng, FloatFormat::Bf16);
+        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(2048);
+        let blob = compress_tensor(&data, &opts).unwrap();
+        let full = decompress_tensor(&blob).unwrap();
+        let mut stitched = Vec::new();
+        for i in 0..blob.chunks.len() {
+            stitched.extend(decompress_chunk(&blob, i).unwrap());
+        }
+        assert_eq!(stitched, full, "case {case}");
+    }
+}
+
+#[test]
+fn prop_delta_roundtrip() {
+    let mut rng = Rng::new(0xD417A);
+    for case in 0..60 {
+        let n = (rng.below(30_000) as usize + 2) / 2 * 2;
+        let base = gen_case(&mut rng, FloatFormat::Bf16)
+            .into_iter()
+            .take(n)
+            .chain(std::iter::repeat(0))
+            .take(n)
+            .collect::<Vec<u8>>();
+        let current = zipnn_lp::synthetic::perturb_bf16_bytes(
+            &base,
+            0.01,
+            rng.next_f64(),
+            rng.next_u64(),
+        );
+        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(4096);
+        let blob = compress_delta(&current, &base, &opts).unwrap();
+        assert_eq!(decompress_delta(&blob, &base).unwrap(), current, "case {case}");
+    }
+}
+
+#[test]
+fn prop_corruption_never_passes_silently() {
+    // Flip one random payload bit: decode must error or differ — never
+    // return the original data claiming success with a valid CRC.
+    let mut rng = Rng::new(0x0BAD);
+    let mut detected = 0;
+    let cases = 60;
+    for case in 0..cases {
+        let data = gen_case(&mut rng, FloatFormat::Bf16);
+        if data.is_empty() {
+            continue;
+        }
+        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(4096);
+        let mut blob = compress_tensor(&data, &opts).unwrap();
+        if blob.data.is_empty() {
+            continue;
+        }
+        let byte = rng.below(blob.data.len() as u64) as usize;
+        let bit = 1u8 << rng.below(8);
+        blob.data[byte] ^= bit;
+        match decompress_tensor(&blob) {
+            Err(_) => detected += 1,
+            Ok(out) => {
+                assert_ne!(out, data, "case {case}: corrupt chunk returned original data");
+            }
+        }
+    }
+    // CRC32 + framing should catch essentially all flips.
+    assert!(detected >= cases * 9 / 10, "only {detected}/{cases} detected");
+}
+
+#[test]
+fn prop_nvfp4_block_roundtrip() {
+    let mut rng = Rng::new(0xF4);
+    for case in 0..40 {
+        let n = (rng.below(5_000) as usize + 16) / 16 * 16;
+        let vals: Vec<f32> = (0..n)
+            .map(|_| (rng.normal_ms(0.0, 0.5)) as f32)
+            .collect();
+        let t = quantize_nvfp4(&vals);
+        let opts = CompressOptions::for_format(FloatFormat::Fp4E2M1);
+        let blob = compress_nvfp4(&t, &opts).unwrap();
+        assert_eq!(decompress_nvfp4(&blob).unwrap(), t, "case {case}");
+    }
+}
+
+#[test]
+fn prop_mxfp4_block_roundtrip() {
+    let mut rng = Rng::new(0xF5);
+    for case in 0..40 {
+        let n = rng.below(5_000) as usize + 1;
+        let group = [32usize, 48, 64][(case % 3) as usize];
+        let sf = if case % 2 == 0 { FloatFormat::Fp16 } else { FloatFormat::Fp32 };
+        let vals: Vec<f32> = (0..n).map(|_| (rng.normal_ms(0.0, 2.0)) as f32).collect();
+        let t = quantize_mxfp4(&vals, group, sf).unwrap();
+        let opts = CompressOptions::for_format(FloatFormat::Fp4E2M1);
+        let blob = compress_mxfp4(&t, &opts).unwrap();
+        assert_eq!(decompress_mxfp4(&blob).unwrap(), t, "case {case}");
+    }
+}
+
+#[test]
+fn prop_baselines_roundtrip() {
+    let mut rng = Rng::new(0xBA5E);
+    for case in 0..60 {
+        let data = gen_case(&mut rng, FloatFormat::Bf16);
+        let b = baselines::byte_huffman(&data).unwrap();
+        assert_eq!(baselines::byte_huffman_decode(&b).unwrap(), data, "bh case {case}");
+        let r = baselines::rle(&data);
+        assert_eq!(baselines::rle_decode(&r).unwrap(), data, "rle case {case}");
+        let l = baselines::lzss_huffman(&data).unwrap();
+        assert_eq!(baselines::lzss_huffman_decode(&l).unwrap(), data, "lzss case {case}");
+    }
+}
+
+#[test]
+fn prop_threads_do_not_change_output() {
+    let mut rng = Rng::new(0x7124D5);
+    for case in 0..20 {
+        let data = gen_case(&mut rng, FloatFormat::Fp8E4M3);
+        let base = CompressOptions::for_format(FloatFormat::Fp8E4M3).with_chunk_size(1024);
+        let a = compress_tensor(&data, &base).unwrap();
+        let b = compress_tensor(&data, &base.clone().with_threads(3)).unwrap();
+        assert_eq!(a.serialize(), b.serialize(), "case {case}");
+    }
+}
