@@ -1,0 +1,34 @@
+# zipnn-lp build entry points.
+#
+# `make artifacts` is the ONLY Python invocation in the project: it AOT-lowers
+# the L1 Pallas kernels and the L2 JAX model to HLO text + manifest.json,
+# which the Rust (L3) runtime executes via PJRT. Everything else is cargo.
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: build test bench doc artifacts clean
+
+# Tier-1 verify: release build + full test suite (hermetic, no artifacts).
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench
+
+doc:
+	$(CARGO) doc --no-deps
+
+# Build the AOT artifacts (requires jax + the Pallas kernels; run once).
+# The Rust side only ever reads $(ARTIFACTS_DIR)/; Python never runs at
+# serving time.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR)

@@ -10,13 +10,16 @@
 //!
 //! Run: `cargo bench --bench kv_cache`
 
+#[cfg(feature = "pjrt")]
 use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
 use zipnn_lp::formats::conv::quantize_slice;
 use zipnn_lp::formats::FloatFormat;
 use zipnn_lp::kvcache::{KvCacheConfig, PagedKvCache};
 use zipnn_lp::metrics::Table;
+#[cfg(feature = "pjrt")]
 use zipnn_lp::model::ModelRuntime;
 use zipnn_lp::synthetic;
+#[cfg(feature = "pjrt")]
 use zipnn_lp::util::human_bytes;
 use zipnn_lp::util::rng::Rng;
 
@@ -59,6 +62,12 @@ fn ratio_sweep() {
     println!("mantissa ≈ raw; overall saving 20–30% with static dictionaries.\n");
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn serving_overhead() {
+    println!("§5.2 serving-overhead bench skipped: built without the 'pjrt' feature.");
+}
+
+#[cfg(feature = "pjrt")]
 fn serving_overhead() {
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {

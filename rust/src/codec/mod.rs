@@ -22,7 +22,9 @@ mod fp4block;
 mod stream_codec;
 
 pub use blob::{ChunkInfo, CompressedBlob, StreamStat};
-pub use chunked::{compress_tensor, decompress_tensor, decompress_chunk};
+pub use chunked::{
+    compress_tensor, decompress_chunk, decompress_tensor, decompress_tensor_threads,
+};
 pub use delta::{compress_delta, decompress_delta, xor_buffers, xor_into};
 pub use fp4block::{compress_mxfp4, compress_nvfp4, decompress_mxfp4, decompress_nvfp4};
 pub use stream_codec::{encode_stream, decode_stream, EncodedStream, StreamEncoding};
@@ -90,7 +92,19 @@ pub struct CompressOptions {
 }
 
 impl CompressOptions {
-    /// Sensible defaults for a format.
+    /// Sensible defaults for a format: 256 KiB chunks, 12-bit Huffman
+    /// limit, entropy gate at the paper's threshold, serial encode.
+    ///
+    /// ```
+    /// use zipnn_lp::codec::{CompressOptions, DEFAULT_CHUNK_SIZE};
+    /// use zipnn_lp::formats::FloatFormat;
+    ///
+    /// let opts = CompressOptions::for_format(FloatFormat::Fp8E4M3);
+    /// assert_eq!(opts.format, FloatFormat::Fp8E4M3);
+    /// assert_eq!(opts.chunk_size, DEFAULT_CHUNK_SIZE);
+    /// assert_eq!(opts.threads, 1);
+    /// assert!(!opts.exponent_only);
+    /// ```
     pub fn for_format(format: FloatFormat) -> Self {
         CompressOptions {
             format,
@@ -102,19 +116,52 @@ impl CompressOptions {
         }
     }
 
-    /// Builder-style chunk size override.
+    /// Builder-style chunk size override, in original-tensor bytes.
+    ///
+    /// Smaller chunks mean finer random access but more per-chunk table
+    /// overhead; the value is rounded up to the format's element alignment
+    /// at compression time.
+    ///
+    /// ```
+    /// use zipnn_lp::codec::CompressOptions;
+    /// use zipnn_lp::formats::FloatFormat;
+    ///
+    /// let opts = CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(64 * 1024);
+    /// assert_eq!(opts.chunk_size, 64 * 1024);
+    /// ```
     pub fn with_chunk_size(mut self, bytes: usize) -> Self {
         self.chunk_size = bytes;
         self
     }
 
-    /// Builder-style thread count override.
+    /// Builder-style thread count override for chunk-parallel encode.
+    /// Values below 1 are clamped to 1 (serial); outputs are identical at
+    /// any thread count.
+    ///
+    /// ```
+    /// use zipnn_lp::codec::CompressOptions;
+    /// use zipnn_lp::formats::FloatFormat;
+    ///
+    /// let opts = CompressOptions::for_format(FloatFormat::Bf16).with_threads(4);
+    /// assert_eq!(opts.threads, 4);
+    /// assert_eq!(CompressOptions::for_format(FloatFormat::Bf16).with_threads(0).threads, 1);
+    /// ```
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
     }
 
-    /// Builder-style Huffman length limit override.
+    /// Builder-style Huffman code-length limit override (2..=15). Lower
+    /// limits shrink the decoder lookup table (2^limit entries) at a small
+    /// entropy cost; see `benches/ablations.rs` for the measured trade-off.
+    ///
+    /// ```
+    /// use zipnn_lp::codec::CompressOptions;
+    /// use zipnn_lp::formats::FloatFormat;
+    ///
+    /// let opts = CompressOptions::for_format(FloatFormat::Bf16).with_len_limit(10);
+    /// assert_eq!(opts.len_limit, 10);
+    /// ```
     pub fn with_len_limit(mut self, limit: u8) -> Self {
         self.len_limit = limit;
         self

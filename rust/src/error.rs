@@ -16,7 +16,14 @@ pub enum Error {
     /// A compressed stream failed to parse (truncated, bad magic, …).
     Corrupt(String),
     /// CRC mismatch while decoding a chunk: data was damaged in transit.
-    ChecksumMismatch { chunk: usize, expected: u32, actual: u32 },
+    ChecksumMismatch {
+        /// Index of the damaged chunk within the blob.
+        chunk: usize,
+        /// CRC32 recorded in the chunk directory at compression time.
+        expected: u32,
+        /// CRC32 computed over the decoded bytes.
+        actual: u32,
+    },
     /// Huffman table construction or decoding failure.
     Huffman(String),
     /// Container-format violation (bad header, unknown strategy id, …).

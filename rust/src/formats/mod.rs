@@ -21,7 +21,7 @@
 //!   streams (the only compressible component per §3.4/Fig 9).
 //!
 //! All stream transforms are exact bijections: `merge(split(x)) == x`
-//! bit-for-bit, property-tested in `rust/tests/proptest_formats.rs`.
+//! bit-for-bit, property-tested in `rust/tests/proptest_roundtrip.rs`.
 
 pub mod bf16;
 pub mod conv;
@@ -210,5 +210,35 @@ mod tests {
         assert_eq!(FloatFormat::Fp16.bias(), 15);
         assert_eq!(FloatFormat::Fp8E4M3.bias(), 7);
         assert_eq!(FloatFormat::Fp4E2M1.bias(), 1);
+    }
+
+    const ALL: [FloatFormat; 6] = [
+        FloatFormat::Fp32,
+        FloatFormat::Fp16,
+        FloatFormat::Bf16,
+        FloatFormat::Fp8E4M3,
+        FloatFormat::Fp8E5M2,
+        FloatFormat::Fp4E2M1,
+    ];
+
+    #[test]
+    fn wire_id_roundtrip_all_variants() {
+        for f in ALL {
+            assert_eq!(FloatFormat::from_wire_id(f.wire_id()).unwrap(), f, "{f:?}");
+        }
+        // Wire ids are dense, unique, and frozen: serialized blobs depend
+        // on this exact numbering.
+        let mut ids: Vec<u8> = ALL.iter().map(|f| f.wire_id()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn wire_id_unknown_ids_rejected() {
+        // Every id outside the assigned range must fail to parse, never
+        // alias onto a valid format.
+        for id in 6..=u8::MAX {
+            assert!(FloatFormat::from_wire_id(id).is_err(), "id {id} must be rejected");
+        }
     }
 }

@@ -24,6 +24,12 @@
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation.
 //!
+//! The compression stack (codec, container, checkpoint store, K/V cache,
+//! coordinator scheduling) is dependency-free and always builds; only the
+//! PJRT execution half (`runtime::Engine`, `model::ModelRuntime`) needs the
+//! `xla` binding crate and is gated behind the optional **`pjrt`** cargo
+//! feature.
+//!
 //! ## Quick start
 //!
 //! ```
@@ -38,6 +44,8 @@
 //! assert_eq!(weights, restored); // bit-exact, always
 //! assert!(blob.encoded_len() < weights.len());
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod bitio;

@@ -13,16 +13,21 @@
 //! `--key value` pairs after the subcommand.
 
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+#[cfg(feature = "pjrt")]
 use zipnn_lp::checkpoint::CheckpointStore;
 use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions, CompressedBlob};
+#[cfg(feature = "pjrt")]
 use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
 use zipnn_lp::formats::FloatFormat;
 use zipnn_lp::metrics::Table;
+#[cfg(feature = "pjrt")]
 use zipnn_lp::model::ModelRuntime;
 use zipnn_lp::util::human_bytes;
+#[cfg(feature = "pjrt")]
 use zipnn_lp::util::rng::Rng;
 
 fn main() -> ExitCode {
@@ -217,6 +222,32 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> Result<(), Box<dyn std::error::Error>> {
+    Err(format!(
+        "'{cmd}' needs the PJRT runtime, which is not compiled in. Add the `xla` binding \
+         crate as a dependency (see the commented block in rust/Cargo.toml and the README), \
+         then rebuild with `cargo build --release --features pjrt`"
+    )
+    .into())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    pjrt_unavailable("train")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    pjrt_unavailable("serve")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info(_flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    pjrt_unavailable("info")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let dir = PathBuf::from(get(flags, "artifacts")?);
     let steps: usize = get_or(flags, "steps", "40").parse()?;
@@ -262,6 +293,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let dir = PathBuf::from(get(flags, "artifacts")?);
     let n_requests: usize = get_or(flags, "requests", "8").parse()?;
@@ -319,6 +351,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_info(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let dir = PathBuf::from(get(flags, "artifacts")?);
     let model = ModelRuntime::load(&dir)?;
@@ -333,6 +366,7 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::E
 
 /// Same synthetic "language" as `python/compile/model.py::sample_batch`
 /// (noisy affine Markov chain) so Rust-side training sees the same task.
+#[cfg(feature = "pjrt")]
 fn markov_batch(dims: &zipnn_lp::runtime::ModelDims, rng: &mut Rng) -> Vec<i32> {
     let (b, s, v) = (dims.batch, dims.max_seq, dims.vocab as u64);
     let mut out = vec![0i32; b * s];

@@ -1,5 +1,18 @@
 //! Measurement and reporting: timers, throughput, and the ASCII tables the
 //! benches print (mirroring the paper's figures).
+//!
+//! [`Timer`] / [`time_it`] give wall-clock measurements; [`bench_loop`]
+//! repeats a closure and reports the minimum (noise-robust on shared
+//! machines) alongside the mean; [`Table`] renders the aligned
+//! paper-figure-style rows every bench binary prints.
+//!
+//! ```
+//! use zipnn_lp::metrics::Table;
+//!
+//! let mut t = Table::new(&["stream", "ratio"]);
+//! t.row(&["exponent".into(), "0.31".into()]);
+//! assert!(t.render().contains("| exponent | 0.31"));
+//! ```
 
 use std::time::{Duration, Instant};
 

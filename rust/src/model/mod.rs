@@ -1,11 +1,22 @@
 //! Model driver: owns the weights and wraps the AOT artifacts with a typed
 //! API (train / prefill / decode / quantize). This is what the examples,
 //! the coordinator, and the checkpoint pipeline program against.
+//!
+//! `ModelRuntime` executes via PJRT and therefore requires the **`pjrt`**
+//! cargo feature. [`PrefillOut`] / [`DecodeOut`] are plain data and always
+//! available — they define the [`crate::coordinator::DecoderModel`] contract
+//! that mock models implement in the hermetic property tests.
 
+#[cfg(feature = "pjrt")]
 use crate::error::{Error, Result};
+#[cfg(feature = "pjrt")]
 use crate::formats::conv::f32_to_bf16;
+#[cfg(feature = "pjrt")]
 use crate::formats::fp4::Nvfp4Tensor;
-use crate::runtime::{DType, Engine, HostTensor};
+use crate::runtime::DType;
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Engine, HostTensor};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 /// Output of one prefill call.
@@ -29,11 +40,13 @@ pub struct DecodeOut {
 }
 
 /// The runtime model: engine + resident weights (canonical order).
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     engine: Engine,
     weights: Vec<Vec<f32>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Load artifacts from `dir` and the initial weights.
     pub fn load(dir: &Path) -> Result<Self> {

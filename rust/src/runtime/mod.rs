@@ -6,13 +6,22 @@
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`, with the
 //! jax side having lowered everything `return_tuple=True` so every artifact
 //! yields one tuple literal.
+//!
+//! The execution half (`Engine` and the literal conversions) needs the
+//! `xla` binding crate and is gated behind the **`pjrt`** cargo feature so
+//! the compression stack builds with no GPU runtime and no external
+//! dependencies. The manifest parser, [`DType`], and [`HostTensor`] are
+//! always available — the coordinator's batching logic and the mock-model
+//! property tests use them without PJRT.
 
 mod manifest;
 
 pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelDims};
 
 use crate::error::{Error, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 /// Element dtypes appearing in artifact signatures.
@@ -40,6 +49,7 @@ impl DType {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn element_type(self) -> xla::ElementType {
         match self {
             DType::F32 => xla::ElementType::F32,
@@ -128,6 +138,7 @@ impl HostTensor {
             .collect())
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         xla::Literal::create_from_shape_and_untyped_data(
             self.dtype.element_type(),
@@ -137,6 +148,7 @@ impl HostTensor {
         .map_err(|e| Error::Runtime(format!("literal creation failed: {e}")))
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit
             .array_shape()
@@ -178,6 +190,7 @@ impl HostTensor {
 }
 
 /// A compiled artifact plus its manifest spec.
+#[cfg(feature = "pjrt")]
 pub struct Artifact {
     exe: xla::PjRtLoadedExecutable,
     /// Signature from the manifest.
@@ -185,6 +198,7 @@ pub struct Artifact {
 }
 
 /// The PJRT engine: one CPU client + every compiled artifact.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts: HashMap<String, Artifact>,
@@ -192,6 +206,7 @@ pub struct Engine {
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load every artifact listed in `<dir>/manifest.json` and compile it
     /// on a fresh CPU PJRT client.

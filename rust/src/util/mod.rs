@@ -1,9 +1,18 @@
 //! Small shared utilities: deterministic PRNG, CRC32, varint encoding,
-//! human-readable byte formatting.
+//! minimal JSON, human-readable byte formatting.
 //!
-//! The crate deliberately implements these in-house: reproducibility of the
-//! paper's experiments requires a *seeded, stable* random source, and the
-//! container format freezes the CRC32 polynomial as part of its spec.
+//! The crate deliberately implements these in-house rather than pulling
+//! dependencies: reproducibility of the paper's experiments requires a
+//! *seeded, stable* random source, and the container format freezes the
+//! CRC32 polynomial as part of its spec. Submodules:
+//!
+//! * [`rng`] — xoshiro256** seeded via SplitMix64; every synthetic
+//!   workload in the benches and tests replays bit-exactly from a `u64`.
+//! * [`crc32`] — CRC-32/ISO-HDLC with a slice-by-8 kernel; the per-chunk
+//!   integrity check of the `zlp` container.
+//! * [`varint`] — LEB128-style unsigned varints for container metadata.
+//! * [`json`] — recursive-descent JSON used by the AOT manifest reader and
+//!   the safetensors header parser.
 
 pub mod crc32;
 pub mod json;

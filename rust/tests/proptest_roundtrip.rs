@@ -138,8 +138,11 @@ fn prop_delta_roundtrip() {
 
 #[test]
 fn prop_corruption_never_passes_silently() {
-    // Flip one random payload bit: decode must error or differ — never
-    // return the original data claiming success with a valid CRC.
+    // Flip one random payload bit: decode must either error (framing / CRC)
+    // or — when the flip lands in dead bits such as the zero padding of a
+    // Huffman payload's final byte — still reproduce the original data
+    // exactly. What must NEVER happen is a successful decode of *different*
+    // data: that would be silent corruption slipping through a valid CRC.
     let mut rng = Rng::new(0x0BAD);
     let mut detected = 0;
     let cases = 60;
@@ -159,11 +162,12 @@ fn prop_corruption_never_passes_silently() {
         match decompress_tensor(&blob) {
             Err(_) => detected += 1,
             Ok(out) => {
-                assert_ne!(out, data, "case {case}: corrupt chunk returned original data");
+                assert_eq!(out, data, "case {case}: silent corruption passed the CRC");
             }
         }
     }
-    // CRC32 + framing should catch essentially all flips.
+    // CRC32 + framing catch essentially every flip; only dead-padding hits
+    // (a handful of bits per stream) can decode cleanly.
     assert!(detected >= cases * 9 / 10, "only {detected}/{cases} detected");
 }
 
