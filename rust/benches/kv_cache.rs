@@ -1,25 +1,33 @@
-//! Bench: paper §4.3 + §5.2 — K/V cache compression ratios and the
-//! serving-latency overhead of on-the-fly compression.
+//! Bench: paper §4.3 + §5.2 — K/V cache compression ratios, the
+//! serving-latency overhead of on-the-fly compression, and budgeted
+//! multi-sequence serving through the shared K/V pool.
 //!
-//! Two parts:
+//! Three parts:
 //!  1. Ratio sweep on synthetic K/V tensors (BF16 and FP8 E4M3; per-channel
 //!     structured + peaked distributions) — the §4.3 bands.
-//!  2. End-to-end serving latency with the real AOT model, codec ON vs OFF
+//!  2. Budgeted multi-sequence serving: ≥ 8 concurrent sequences appending
+//!     and reading through a `SharedKvPool` whose byte budget undercuts the
+//!     raw cache footprint, forcing LRU spills to disk. Asserts zero budget
+//!     violations (in-memory high-water mark ≤ budget) and bit-exact reads
+//!     after every spill → reload round trip.
+//!  3. End-to-end serving latency with the real AOT model, codec ON vs OFF
 //!     — the §5.2 "without significant overhead" claim. Skipped when
 //!     artifacts/ is missing.
 //!
 //! Run: `cargo bench --bench kv_cache`
+//! Knobs: `cargo bench --bench kv_cache -- --kv-budget-mib 1.5
+//!         --pool-workers 4 --seqs 8`
 
 #[cfg(feature = "pjrt")]
 use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
 use zipnn_lp::formats::conv::quantize_slice;
 use zipnn_lp::formats::FloatFormat;
 use zipnn_lp::kvcache::{KvCacheConfig, PagedKvCache};
-use zipnn_lp::metrics::Table;
+use zipnn_lp::metrics::{Table, Timer};
 #[cfg(feature = "pjrt")]
 use zipnn_lp::model::ModelRuntime;
+use zipnn_lp::pool::{PoolConfig, SharedKvPool};
 use zipnn_lp::synthetic;
-#[cfg(feature = "pjrt")]
 use zipnn_lp::util::human_bytes;
 use zipnn_lp::util::rng::Rng;
 
@@ -60,6 +68,127 @@ fn ratio_sweep() {
     println!("{}", table.render());
     println!("paper bands: FP8 exp 0.25–0.45; BF16 exp often < 0.20 (real traces);");
     println!("mantissa ≈ raw; overall saving 20–30% with static dictionaries.\n");
+}
+
+/// CLI knobs for the budgeted-pool scenario (ignore unknown flags: cargo
+/// bench passes its own).
+struct PoolBenchArgs {
+    budget_mib: Option<f64>,
+    workers: usize,
+    seqs: usize,
+}
+
+fn parse_pool_args() -> PoolBenchArgs {
+    let mut out = PoolBenchArgs { budget_mib: None, workers: 4, seqs: 8 };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--kv-budget-mib" => {
+                if let Some(v) = args.next() {
+                    out.budget_mib = v.parse().ok();
+                }
+            }
+            "--pool-workers" => {
+                if let Some(v) = args.next().and_then(|v| v.parse().ok()) {
+                    out.workers = v;
+                }
+            }
+            "--seqs" => {
+                if let Some(v) = args.next().and_then(|v| v.parse().ok()) {
+                    out.seqs = v;
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Part 2: ≥ 8 concurrent sequences served under a byte budget below the
+/// raw cache footprint. Every read is checked bit-exact against a shadow
+/// uncompressed cache, and the pool's high-water mark proves the budget was
+/// never violated — not even transiently.
+fn budgeted_pool(args: &PoolBenchArgs) {
+    let n_seqs = args.seqs.max(8);
+    let workers = args.workers.clamp(1, n_seqs);
+    let n_layers = 2usize;
+    let head_dim = 64usize;
+    let tokens_per_seq = 512usize;
+    let mut cfg = KvCacheConfig::new(n_layers, head_dim * 2, FloatFormat::Bf16);
+    cfg.page_tokens = 32;
+    let row = 2 * cfg.bytes_per_token; // K+V bytes per token per layer
+    let raw_total = (n_seqs * n_layers * tokens_per_seq * row) as u64;
+    let budget = match args.budget_mib {
+        Some(m) if m > 0.0 => (m * 1024.0 * 1024.0) as u64,
+        _ => raw_total * 5 / 8,
+    };
+    assert!(
+        budget < raw_total,
+        "budget {budget} must undercut the raw footprint {raw_total}"
+    );
+    println!(
+        "budgeted pool — {n_seqs} seqs x {tokens_per_seq} tokens x {n_layers} layers \
+         ({} raw), budget {}, {workers} worker threads",
+        human_bytes(raw_total),
+        human_bytes(budget)
+    );
+    let pool =
+        SharedKvPool::new(PoolConfig::new(cfg.clone()).with_budget(budget)).expect("pool");
+    let timer = Timer::new();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let pool = &pool;
+            let cfg = &cfg;
+            scope.spawn(move || {
+                // Worker w owns sequences w, w+workers, …; all its
+                // sequences advance in lockstep so the whole population
+                // stays live (and evictable) together.
+                let mine: Vec<u64> = (w..n_seqs).step_by(workers).map(|s| s as u64).collect();
+                let mut shadows: std::collections::BTreeMap<(u64, usize), Vec<u8>> =
+                    std::collections::BTreeMap::new();
+                for t in 0..tokens_per_seq {
+                    for &seq in &mine {
+                        for layer in 0..n_layers {
+                            let seed = seq * 1_000_003 + (t as u64) * 131 + layer as u64;
+                            let kv = synthetic::kv_token_bytes(cfg, seed);
+                            pool.append_token(seq, layer, &kv).expect("append");
+                            shadows.entry((seq, layer)).or_default().extend_from_slice(&kv);
+                        }
+                    }
+                    // Periodic reads force spill → reload round trips and
+                    // verify them bit-exactly.
+                    if t % 64 == 63 {
+                        for (&(seq, layer), shadow) in &shadows {
+                            let got = pool.read(seq, layer).expect("read");
+                            assert_eq!(&got, shadow, "seq {seq} layer {layer} t {t}");
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let secs = timer.secs();
+    let c = pool.counters();
+    let stats = pool.stats();
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["sequences".into(), n_seqs.to_string()]);
+    table.row(&["raw footprint".into(), human_bytes(stats.raw_bytes)]);
+    table.row(&["budget".into(), human_bytes(budget)]);
+    table.row(&["in-memory high water".into(), human_bytes(c.high_water_bytes)]);
+    table.row(&["spilled (on disk)".into(), human_bytes(c.spilled_bytes)]);
+    table.row(&["evictions".into(), c.evictions.to_string()]);
+    table.row(&["spill writes".into(), c.spills.to_string()]);
+    table.row(&["reloads".into(), c.reloads.to_string()]);
+    table.row(&["wall seconds".into(), format!("{secs:.2}")]);
+    println!("{}", table.render());
+    assert!(c.within_budget(), "budget violated: {c}");
+    assert!(c.spills > 0, "budget never forced a spill — scenario too small: {c}");
+    assert!(c.reloads > 0, "reads never reloaded a spilled page: {c}");
+    println!(
+        "zero budget violations: high water {} <= budget {}\n",
+        human_bytes(c.high_water_bytes),
+        human_bytes(budget)
+    );
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -119,5 +248,6 @@ fn serving_overhead() {
 
 fn main() {
     ratio_sweep();
+    budgeted_pool(&parse_pool_args());
     serving_overhead();
 }

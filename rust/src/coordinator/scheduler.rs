@@ -1,11 +1,20 @@
 //! The wave scheduler: dynamic batching + prefill/decode state machine over
-//! the compressed K/V cache.
+//! the shared, budgeted K/V pool.
+//!
+//! Cache traffic — quantize + append after prefill and each decode step,
+//! page reads + Huffman decode before each decode step — fans out over
+//! `BatchPolicy::workers` std threads, one slice of the wave's live
+//! sequences per worker. The model call itself stays on the scheduler
+//! thread (PJRT executables are driven single-threaded here); what the
+//! workers parallelize is exactly the codec work the pool serializes only
+//! per sequence.
 
 use super::{dequantize_row, quantize_row, DecoderModel, Request, Response, ServerStats};
 use crate::error::{Error, Result};
-use crate::kvcache::PagedKvCache;
 use crate::metrics::Timer;
+use crate::pool::SharedKvPool;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -14,11 +23,23 @@ pub struct BatchPolicy {
     pub page_tokens: usize,
     /// Maximum decode steps per request (hard cap besides max_seq).
     pub max_steps: usize,
+    /// Worker threads for per-sequence cache reads/appends (1 = serial).
+    pub workers: usize,
+    /// Global in-memory K/V budget in bytes (`None` = unbounded). Cold
+    /// sealed pages beyond the budget spill to disk and reload on demand.
+    /// Requires compression: with the codec off nothing is evictable, so
+    /// [`super::Server::new`] rejects the combination.
+    pub kv_budget_bytes: Option<u64>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { page_tokens: 16, max_steps: 1 << 20 }
+        BatchPolicy {
+            page_tokens: 16,
+            max_steps: 1 << 20,
+            workers: 1,
+            kv_budget_bytes: None,
+        }
     }
 }
 
@@ -45,19 +66,49 @@ struct LiveSeq {
     done: bool,
 }
 
+/// Run `f` over `jobs` on up to `workers` scoped threads. Results come back
+/// in job order (chunks are concatenated in spawn order).
+fn fan_out<T, R, F>(jobs: &[T], workers: usize, f: F) -> Result<Vec<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> Result<R> + Sync,
+{
+    let workers = workers.clamp(1, jobs.len().max(1));
+    if workers <= 1 {
+        return jobs.iter().map(&f).collect();
+    }
+    let chunk = jobs.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for part in jobs.chunks(chunk) {
+            let f = &f;
+            handles.push(scope.spawn(move || part.iter().map(f).collect::<Result<Vec<R>>>()));
+        }
+        let mut out = Vec::with_capacity(jobs.len());
+        for h in handles {
+            let part = h
+                .join()
+                .map_err(|_| Error::Coordinator("cache worker thread panicked".into()))??;
+            out.extend(part);
+        }
+        Ok(out)
+    })
+}
+
 /// The scheduler: drains a queue in waves of ≤ `dims.batch` sequences.
 pub struct Scheduler<M: DecoderModel> {
     model: M,
-    cache: PagedKvCache,
+    pool: Arc<SharedKvPool>,
     policy: BatchPolicy,
     next_seq_id: u64,
     stats: ServerStats,
 }
 
 impl<M: DecoderModel> Scheduler<M> {
-    /// New scheduler.
-    pub fn new(model: M, cache: PagedKvCache, policy: BatchPolicy) -> Self {
-        Scheduler { model, cache, policy, next_seq_id: 1, stats: ServerStats::default() }
+    /// New scheduler over a shared pool.
+    pub fn new(model: M, pool: Arc<SharedKvPool>, policy: BatchPolicy) -> Self {
+        Scheduler { model, pool, policy, next_seq_id: 1, stats: ServerStats::default() }
     }
 
     /// Aggregate stats. Cache stats are snapshotted at the end of each wave
@@ -68,10 +119,7 @@ impl<M: DecoderModel> Scheduler<M> {
 
     /// Train per-layer K/V dictionaries (paper §3.3 "precomputed").
     pub fn train_dictionaries(&mut self, per_layer_exponents: &[Vec<u8>]) -> Result<()> {
-        for (layer, bytes) in per_layer_exponents.iter().enumerate() {
-            self.cache.dictionaries().train(layer, bytes)?;
-        }
-        Ok(())
+        self.pool.train_dictionaries(per_layer_exponents)
     }
 
     /// Run every request to completion, in FIFO waves.
@@ -131,21 +179,32 @@ impl<M: DecoderModel> Scheduler<M> {
         let pre = self.model.prefill(&tokens)?;
         let prefill_secs = timer.secs();
 
-        // Store prompt K/V rows into the compressed cache.
-        let fmt = self.cache.config().format;
-        let bpt = self.cache.config().bytes_per_token;
-        for (slot, seq) in seqs.iter().enumerate() {
-            for t in 0..seq.tokens.len() {
-                for layer in 0..l {
-                    let base = ((layer * b + slot) * s_max + t) * d;
-                    let k_row = &pre.k_cache[base..base + d];
-                    let v_row = &pre.v_cache[base..base + d];
-                    let mut kv = quantize_row(k_row, fmt);
-                    kv.extend(quantize_row(v_row, fmt));
-                    debug_assert_eq!(kv.len(), 2 * bpt);
-                    self.cache.append_token(seq.seq_id, layer, &kv)?;
+        // Store prompt K/V rows into the shared pool, one worker per slice
+        // of the wave.
+        let fmt = self.pool.config().format;
+        let bpt = self.pool.config().bytes_per_token;
+        let workers = self.policy.workers;
+        {
+            let pool = &self.pool;
+            let jobs: Vec<(usize, u64, usize)> = seqs
+                .iter()
+                .enumerate()
+                .map(|(slot, s)| (slot, s.seq_id, s.tokens.len()))
+                .collect();
+            fan_out(&jobs, workers, |&(slot, seq_id, n_tokens)| {
+                for t in 0..n_tokens {
+                    for layer in 0..l {
+                        let base = ((layer * b + slot) * s_max + t) * d;
+                        let k_row = &pre.k_cache[base..base + d];
+                        let v_row = &pre.v_cache[base..base + d];
+                        let mut kv = quantize_row(k_row, fmt);
+                        kv.extend(quantize_row(v_row, fmt));
+                        debug_assert_eq!(kv.len(), 2 * bpt);
+                        pool.append_token(seq_id, layer, &kv)?;
+                    }
                 }
-            }
+                Ok(())
+            })?;
         }
 
         // First generated token: argmax of the last prompt position.
@@ -161,7 +220,7 @@ impl<M: DecoderModel> Scheduler<M> {
             seq.generated.push(tok);
         }
 
-        // --- Decode loop over the compressed cache ---
+        // --- Decode loop over the shared pool ---
         let decode_timer = Timer::new();
         let mut steps = 0usize;
         let mut k_slab = vec![0f32; l * b * s_max * d];
@@ -183,23 +242,44 @@ impl<M: DecoderModel> Scheduler<M> {
                 break;
             }
 
-            // Assemble the f32 cache slabs from compressed pages. The new
+            // Assemble the f32 cache slabs from compressed pages: workers
+            // read + Huffman-decode per (sequence, layer) in parallel, the
+            // scheduler thread scatters rows into the padded slabs. The new
             // token's K/V row is NOT in the cache yet — decode_step computes
             // and returns it; its cache row is written by the jax side
             // internally for attention.
             k_slab.iter_mut().for_each(|x| *x = 0.0);
             v_slab.iter_mut().for_each(|x| *x = 0.0);
-            for &slot in &live {
-                let seq = &seqs[slot];
-                let n_cached = seq.tokens.len() - 1; // all but current token
-                for layer in 0..l {
-                    let bytes = self.cache.read(seq.seq_id, layer)?;
-                    debug_assert_eq!(bytes.len(), n_cached * 2 * bpt);
+            let rows = {
+                let pool = &self.pool;
+                let jobs: Vec<(usize, u64, usize)> = live
+                    .iter()
+                    .map(|&slot| (slot, seqs[slot].seq_id, seqs[slot].tokens.len() - 1))
+                    .collect();
+                fan_out(&jobs, workers, |&(slot, seq_id, n_cached)| {
+                    let mut per_layer = Vec::with_capacity(l);
+                    for layer in 0..l {
+                        let bytes = pool.read(seq_id, layer)?;
+                        debug_assert_eq!(bytes.len(), n_cached * 2 * bpt);
+                        let mut k_rows = vec![0f32; n_cached * d];
+                        let mut v_rows = vec![0f32; n_cached * d];
+                        for t in 0..n_cached {
+                            let row = &bytes[t * 2 * bpt..(t + 1) * 2 * bpt];
+                            dequantize_row(&row[..bpt], fmt, &mut k_rows[t * d..(t + 1) * d]);
+                            dequantize_row(&row[bpt..], fmt, &mut v_rows[t * d..(t + 1) * d]);
+                        }
+                        per_layer.push((slot, layer, k_rows, v_rows));
+                    }
+                    Ok(per_layer)
+                })?
+            };
+            for per_layer in rows {
+                for (slot, layer, k_rows, v_rows) in per_layer {
+                    let n_cached = k_rows.len() / d;
                     for t in 0..n_cached {
-                        let row = &bytes[t * 2 * bpt..(t + 1) * 2 * bpt];
                         let base = ((layer * b + slot) * s_max + t) * d;
-                        dequantize_row(&row[..bpt], fmt, &mut k_slab[base..base + d]);
-                        dequantize_row(&row[bpt..], fmt, &mut v_slab[base..base + d]);
+                        k_slab[base..base + d].copy_from_slice(&k_rows[t * d..(t + 1) * d]);
+                        v_slab[base..base + d].copy_from_slice(&v_rows[t * d..(t + 1) * d]);
                     }
                 }
             }
@@ -215,17 +295,25 @@ impl<M: DecoderModel> Scheduler<M> {
             let out = self.model.decode_step(&token, &pos, &k_slab, &v_slab)?;
             steps += 1;
 
-            // Append the new K/V rows for live sequences; sample next token.
+            // Append the new K/V rows for live sequences (workers again);
+            // then sample next tokens on the scheduler thread.
+            {
+                let pool = &self.pool;
+                let out_ref = &out;
+                let jobs: Vec<(usize, u64)> =
+                    live.iter().map(|&slot| (slot, seqs[slot].seq_id)).collect();
+                fan_out(&jobs, workers, |&(slot, seq_id)| {
+                    for layer in 0..l {
+                        let base = (layer * b + slot) * d;
+                        let mut kv = quantize_row(&out_ref.k_new[base..base + d], fmt);
+                        kv.extend(quantize_row(&out_ref.v_new[base..base + d], fmt));
+                        pool.append_token(seq_id, layer, &kv)?;
+                    }
+                    Ok(())
+                })?;
+            }
             for &slot in &live {
                 let seq = &mut seqs[slot];
-                let t_pos = seq.tokens.len() - 1;
-                for layer in 0..l {
-                    let base = (layer * b + slot) * d;
-                    let mut kv = quantize_row(&out.k_new[base..base + d], fmt);
-                    kv.extend(quantize_row(&out.v_new[base..base + d], fmt));
-                    self.cache.append_token(seq.seq_id, layer, &kv)?;
-                }
-                let _ = t_pos;
                 let row = &out.logits[slot * v..(slot + 1) * v];
                 let tok = argmax(row);
                 if seq.generated.len() < seq.request.max_new_tokens
@@ -242,11 +330,12 @@ impl<M: DecoderModel> Scheduler<M> {
         let decode_secs = decode_timer.secs();
 
         // Seal remaining pages so stats reflect steady state, then evict.
-        self.cache.seal_all()?;
-        self.stats.cache = self.cache.stats();
+        self.pool.seal_all()?;
+        self.stats.cache = self.pool.stats();
+        self.stats.pool = self.pool.counters();
         let mut responses = Vec::with_capacity(seqs.len());
         for seq in seqs {
-            self.cache.evict_sequence(seq.seq_id);
+            self.pool.evict_sequence(seq.seq_id);
             self.stats.completed += 1;
             responses.push(Response {
                 id: seq.request.id,
@@ -260,9 +349,10 @@ impl<M: DecoderModel> Scheduler<M> {
         Ok(responses)
     }
 
-    /// Direct cache access (integration tests assert compression stats).
-    pub fn cache(&self) -> &PagedKvCache {
-        &self.cache
+    /// The shared pool (integration tests assert compression + budget
+    /// behaviour through it).
+    pub fn pool(&self) -> &Arc<SharedKvPool> {
+        &self.pool
     }
 }
 
@@ -290,5 +380,26 @@ mod tests {
         let p = BatchPolicy::default();
         assert!(p.page_tokens > 0);
         assert!(p.max_steps > 1000);
+        assert_eq!(p.workers, 1);
+        assert!(p.kv_budget_bytes.is_none());
+    }
+
+    #[test]
+    fn fan_out_preserves_job_order_and_errors() {
+        let jobs: Vec<usize> = (0..23).collect();
+        for workers in [1, 3, 8] {
+            let out = fan_out(&jobs, workers, |&j| Ok(j * 2)).unwrap();
+            assert_eq!(out, jobs.iter().map(|j| j * 2).collect::<Vec<_>>());
+        }
+        let err = fan_out(&jobs, 4, |&j| {
+            if j == 13 {
+                Err(Error::Coordinator("boom".into()))
+            } else {
+                Ok(j)
+            }
+        });
+        assert!(err.is_err());
+        let empty: Vec<usize> = Vec::new();
+        assert_eq!(fan_out(&empty, 4, |&j| Ok(j)).unwrap(), empty);
     }
 }

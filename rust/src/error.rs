@@ -34,6 +34,8 @@ pub enum Error {
     KvCache(String),
     /// Serving-coordinator failure (queue closed, session unknown, …).
     Coordinator(String),
+    /// Shared K/V pool failure (unknown sequence, spill slot missing, …).
+    Pool(String),
     /// PJRT runtime failure (artifact missing, XLA error, shape mismatch).
     Runtime(String),
     /// Underlying I/O failure.
@@ -54,6 +56,7 @@ impl fmt::Display for Error {
             Error::Checkpoint(m) => write!(f, "checkpoint: {m}"),
             Error::KvCache(m) => write!(f, "kvcache: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Pool(m) => write!(f, "pool: {m}"),
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }

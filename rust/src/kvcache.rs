@@ -18,6 +18,7 @@ use crate::entropy::Histogram;
 use crate::error::{Error, Result};
 use crate::formats::{merge_streams, split_streams, FloatFormat, StreamSet};
 use crate::huffman::{CodeTable, DEFAULT_CODE_LEN_LIMIT};
+use crate::util::varint;
 use std::collections::BTreeMap;
 
 /// Cache geometry and codec settings.
@@ -199,6 +200,91 @@ impl SealedPage {
     pub fn encoded_len(&self) -> usize {
         self.streams.iter().map(|s| s.encoded_len()).sum()
     }
+
+    /// Raw (uncompressed) page size in bytes.
+    pub fn raw_len(&self) -> usize {
+        self.raw_len
+    }
+
+    /// Serialize the page for the pool's disk spill file: raw length,
+    /// element count, dictionary version, then each [`EncodedStream`] in its
+    /// standard wire framing. The pool adds a per-record CRC on top.
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len() + 16);
+        varint::write_usize(&mut out, self.raw_len);
+        varint::write_usize(&mut out, self.n_elements);
+        match self.dict_version {
+            Some(v) => {
+                out.push(1);
+                varint::write_u64(&mut out, v as u64);
+            }
+            None => out.push(0),
+        }
+        varint::write_usize(&mut out, self.streams.len());
+        for s in &self.streams {
+            s.write_to(&mut out);
+        }
+        out
+    }
+
+    /// Inverse of [`serialize`](Self::serialize); `buf` must contain exactly
+    /// one page record.
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let raw_len = varint::read_usize(buf, &mut pos)?;
+        let n_elements = varint::read_usize(buf, &mut pos)?;
+        let flag = *buf
+            .get(pos)
+            .ok_or_else(|| Error::Corrupt("spilled page truncated".into()))?;
+        pos += 1;
+        let dict_version = match flag {
+            0 => None,
+            1 => Some(varint::read_u64(buf, &mut pos)? as u32),
+            other => {
+                return Err(Error::Corrupt(format!("bad dict-version flag {other}")));
+            }
+        };
+        let n_streams = varint::read_usize(buf, &mut pos)?;
+        if n_streams > 8 {
+            return Err(Error::Corrupt(format!("implausible stream count {n_streams}")));
+        }
+        let mut streams = Vec::with_capacity(n_streams);
+        for _ in 0..n_streams {
+            streams.push(EncodedStream::read_from(buf, &mut pos)?);
+        }
+        if pos != buf.len() {
+            return Err(Error::Corrupt("trailing bytes after spilled page".into()));
+        }
+        Ok(SealedPage { streams, raw_len, n_elements, dict_version })
+    }
+}
+
+/// Placeholder left in a page list after the pool moved a sealed page's
+/// encoded bytes to the spill file. Only the pool creates and resolves
+/// these; a direct [`PagedKvCache::read`] of a spilled page is an error.
+#[derive(Clone, Copy, Debug)]
+pub struct SpilledHandle {
+    /// Spill-file slot id assigned by the pool.
+    pub slot: u64,
+    /// Encoded size the page has when resident (for budget accounting).
+    pub encoded_len: usize,
+    /// Raw (uncompressed) page size.
+    pub raw_len: usize,
+}
+
+/// Identifies a page sealed by a tracked append/seal call, so the pool can
+/// register it for LRU eviction with exact byte accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct SealEvent {
+    /// Sequence id owning the page.
+    pub seq: u64,
+    /// Transformer layer.
+    pub layer: usize,
+    /// Index within the (sequence, layer) page list. Stable for the life of
+    /// the sequence: pages change state in place and are never removed.
+    pub page_idx: usize,
+    /// Encoded bytes the sealed page occupies in memory.
+    pub encoded_len: usize,
 }
 
 /// One (sequence, layer) page list entry.
@@ -206,6 +292,8 @@ impl SealedPage {
 enum Page {
     Hot(Vec<u8>),
     Sealed(SealedPage),
+    /// Encoded bytes live in the pool's spill file.
+    Spilled(SpilledHandle),
 }
 
 /// Aggregate cache statistics.
@@ -225,6 +313,9 @@ pub struct KvCacheStats {
     pub sm_original: u64,
     /// Encoded sign|mantissa bytes across sealed pages.
     pub sm_compressed: u64,
+    /// Encoded bytes currently parked in the pool's spill file (excluded
+    /// from `resident_bytes`).
+    pub spilled_bytes: u64,
 }
 
 impl KvCacheStats {
@@ -259,6 +350,7 @@ impl KvCacheStats {
 /// The paged, compressed K/V cache. `K` and `V` tensors are interleaved in
 /// the same page (they share exponent statistics closely enough; the paper
 /// compresses "K/V cache tensors" jointly per layer).
+#[derive(Debug)]
 pub struct PagedKvCache {
     config: KvCacheConfig,
     dict: DictionaryManager,
@@ -267,6 +359,10 @@ pub struct PagedKvCache {
     /// Tokens appended per (sequence, layer).
     tokens: BTreeMap<(u64, usize), usize>,
     stats_sealed: KvCacheStats,
+    /// Running in-memory byte total (hot raw + sealed encoded), maintained
+    /// at every append/seal/spill/restore/evict so the pool's per-token
+    /// accounting reads it in O(1) instead of rescanning the page lists.
+    resident: u64,
 }
 
 impl PagedKvCache {
@@ -274,7 +370,14 @@ impl PagedKvCache {
     pub fn new(config: KvCacheConfig) -> Self {
         let dict =
             DictionaryManager::new(config.n_layers, config.len_limit, config.refresh_slack);
-        PagedKvCache { config, dict, pages: BTreeMap::new(), tokens: BTreeMap::new(), stats_sealed: KvCacheStats::default() }
+        PagedKvCache {
+            config,
+            dict,
+            pages: BTreeMap::new(),
+            tokens: BTreeMap::new(),
+            stats_sealed: KvCacheStats::default(),
+            resident: 0,
+        }
     }
 
     /// Access the dictionary manager (for pre-training dictionaries).
@@ -290,6 +393,18 @@ impl PagedKvCache {
     /// Append one token's K+V bytes for (sequence, layer). `kv_bytes` must
     /// be exactly `2 * bytes_per_token` (K then V).
     pub fn append_token(&mut self, seq: u64, layer: usize, kv_bytes: &[u8]) -> Result<()> {
+        self.append_token_tracked(seq, layer, kv_bytes).map(|_| ())
+    }
+
+    /// [`append_token`](Self::append_token) that also reports the page the
+    /// append sealed (at most one — the hot page it filled), so the pool can
+    /// register it for LRU eviction without rescanning the page lists.
+    pub fn append_token_tracked(
+        &mut self,
+        seq: u64,
+        layer: usize,
+        kv_bytes: &[u8],
+    ) -> Result<Option<SealEvent>> {
         if layer >= self.config.n_layers {
             return Err(Error::KvCache(format!("layer {layer} out of range")));
         }
@@ -308,18 +423,23 @@ impl PagedKvCache {
             }
             _ => true,
         };
+        let mut sealed = None;
         if need_new {
             // Seal the previous hot page first.
             if let Some(Page::Hot(_)) = pages.last() {
                 let idx = pages.len() - 1;
-                Self::seal_page_at(
+                if let Some((raw_len, encoded_len)) = Self::seal_page_at(
                     &self.config,
                     &mut self.dict,
                     &mut self.stats_sealed,
                     pages,
                     idx,
                     layer,
-                )?;
+                )? {
+                    self.resident -= raw_len as u64;
+                    self.resident += encoded_len as u64;
+                    sealed = Some(SealEvent { seq, layer, page_idx: idx, encoded_len });
+                }
             }
             pages.push(Page::Hot(Vec::with_capacity(
                 self.config.page_tokens * 2 * self.config.bytes_per_token,
@@ -330,31 +450,51 @@ impl PagedKvCache {
         } else {
             unreachable!("just pushed a hot page");
         }
+        self.resident += kv_bytes.len() as u64;
         *self.tokens.entry(key).or_insert(0) += 1;
-        Ok(())
+        Ok(sealed)
     }
 
     /// Seal every hot page (e.g. at sequence end).
     pub fn seal_all(&mut self) -> Result<()> {
+        self.seal_all_tracked().map(|_| ())
+    }
+
+    /// [`seal_all`](Self::seal_all) that reports every page it sealed, for
+    /// the pool's LRU registration.
+    pub fn seal_all_tracked(&mut self) -> Result<Vec<SealEvent>> {
         let keys: Vec<(u64, usize)> = self.pages.keys().cloned().collect();
+        let mut events = Vec::new();
         for key in keys {
             let pages = self.pages.get_mut(&key).unwrap();
             for idx in 0..pages.len() {
                 if matches!(pages[idx], Page::Hot(_)) {
-                    Self::seal_page_at(
+                    if let Some((raw_len, encoded_len)) = Self::seal_page_at(
                         &self.config,
                         &mut self.dict,
                         &mut self.stats_sealed,
                         pages,
                         idx,
                         key.1,
-                    )?;
+                    )? {
+                        self.resident -= raw_len as u64;
+                        self.resident += encoded_len as u64;
+                        events.push(SealEvent {
+                            seq: key.0,
+                            layer: key.1,
+                            page_idx: idx,
+                            encoded_len,
+                        });
+                    }
                 }
             }
         }
-        Ok(())
+        Ok(events)
     }
 
+    /// Seal the page at `idx` in place, returning `(raw len, encoded len)`
+    /// when a seal actually happened (None: already sealed/spilled, or
+    /// compression disabled) so callers can maintain the resident counter.
     fn seal_page_at(
         config: &KvCacheConfig,
         dict: &mut DictionaryManager,
@@ -362,17 +502,18 @@ impl PagedKvCache {
         pages: &mut [Page],
         idx: usize,
         layer: usize,
-    ) -> Result<()> {
+    ) -> Result<Option<(usize, usize)>> {
         let raw = match &pages[idx] {
             Page::Hot(h) => h.clone(),
-            Page::Sealed(_) => return Ok(()),
+            Page::Sealed(_) | Page::Spilled(_) => return Ok(None),
         };
         if !config.compression_enabled {
-            return Ok(()); // leave hot: baseline mode
+            return Ok(None); // leave hot: baseline mode
         }
         let sealed = seal_bytes(config, dict, layer, &raw, stats)?;
+        let delta = (raw.len(), sealed.encoded_len());
         pages[idx] = Page::Sealed(sealed);
-        Ok(())
+        Ok(Some(delta))
     }
 
     /// Read the full K/V byte stream for (sequence, layer): hot pages copied,
@@ -392,9 +533,114 @@ impl PagedKvCache {
                     layer,
                     s,
                 )?),
+                Page::Spilled(h) => {
+                    return Err(Error::KvCache(format!(
+                        "page in spill slot {} is not resident; read through SharedKvPool",
+                        h.slot
+                    )));
+                }
             }
         }
         Ok(out)
+    }
+
+    /// Clone the sealed page at `page_idx` of (sequence, layer) — the first
+    /// half of a pool eviction (serialize + write to the spill file before
+    /// [`mark_spilled`](Self::mark_spilled) drops the resident copy).
+    pub fn sealed_page(&self, seq: u64, layer: usize, page_idx: usize) -> Result<SealedPage> {
+        match self.pages.get(&(seq, layer)).and_then(|p| p.get(page_idx)) {
+            Some(Page::Sealed(sp)) => Ok(sp.clone()),
+            Some(_) => Err(Error::KvCache(format!(
+                "page {page_idx} of seq {seq} layer {layer} is not sealed"
+            ))),
+            None => Err(Error::KvCache(format!(
+                "no page {page_idx} for seq {seq} layer {layer}"
+            ))),
+        }
+    }
+
+    /// Replace a sealed page with a spill placeholder, dropping its encoded
+    /// bytes from memory. The caller must already have written the page to
+    /// the spill file under `handle.slot`.
+    pub fn mark_spilled(
+        &mut self,
+        seq: u64,
+        layer: usize,
+        page_idx: usize,
+        handle: SpilledHandle,
+    ) -> Result<()> {
+        let page = self
+            .pages
+            .get_mut(&(seq, layer))
+            .and_then(|p| p.get_mut(page_idx))
+            .ok_or_else(|| {
+                Error::KvCache(format!("no page {page_idx} for seq {seq} layer {layer}"))
+            })?;
+        match page {
+            Page::Sealed(sp) => {
+                let encoded = sp.encoded_len() as u64;
+                *page = Page::Spilled(handle);
+                self.resident -= encoded;
+                Ok(())
+            }
+            _ => Err(Error::KvCache(format!(
+                "page {page_idx} of seq {seq} layer {layer} is not sealed"
+            ))),
+        }
+    }
+
+    /// Reinstate a spilled page as sealed (pool reload path). The page's
+    /// dictionary versions are still valid: tables are never dropped.
+    pub fn restore_page(
+        &mut self,
+        seq: u64,
+        layer: usize,
+        page_idx: usize,
+        sealed: SealedPage,
+    ) -> Result<()> {
+        let page = self
+            .pages
+            .get_mut(&(seq, layer))
+            .and_then(|p| p.get_mut(page_idx))
+            .ok_or_else(|| {
+                Error::KvCache(format!("no page {page_idx} for seq {seq} layer {layer}"))
+            })?;
+        match page {
+            Page::Spilled(_) => {
+                let encoded = sealed.encoded_len() as u64;
+                *page = Page::Sealed(sealed);
+                self.resident += encoded;
+                Ok(())
+            }
+            _ => Err(Error::KvCache(format!(
+                "page {page_idx} of seq {seq} layer {layer} is not spilled"
+            ))),
+        }
+    }
+
+    /// Spill placeholders in a (sequence, layer) page list, as
+    /// `(page index, handle)` pairs — what the pool must reload before a
+    /// [`read`](Self::read) can succeed.
+    pub fn spilled_pages(&self, seq: u64, layer: usize) -> Vec<(usize, SpilledHandle)> {
+        match self.pages.get(&(seq, layer)) {
+            Some(pages) => pages
+                .iter()
+                .enumerate()
+                .filter_map(|(i, p)| match p {
+                    Page::Spilled(h) => Some((i, *h)),
+                    _ => None,
+                })
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Bytes this cache currently holds in memory: hot pages raw plus
+    /// resident sealed pages encoded. Spilled pages cost nothing here.
+    /// O(1): maintained incrementally at every state change (the pool reads
+    /// this twice per token append for its budget accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident
     }
 
     /// Number of tokens stored for (sequence, layer).
@@ -404,6 +650,17 @@ impl PagedKvCache {
 
     /// Drop a sequence entirely (session end).
     pub fn evict_sequence(&mut self, seq: u64) {
+        let mut freed = 0u64;
+        for (_, pages) in self.pages.range((seq, 0)..=(seq, usize::MAX)) {
+            for p in pages {
+                match p {
+                    Page::Hot(h) => freed += h.len() as u64,
+                    Page::Sealed(sp) => freed += sp.encoded_len() as u64,
+                    Page::Spilled(_) => {}
+                }
+            }
+        }
+        self.resident -= freed;
         self.pages.retain(|&(s, _), _| s != seq);
         self.tokens.retain(|&(s, _), _| s != seq);
     }
@@ -428,6 +685,10 @@ impl PagedKvCache {
                     Page::Sealed(sp) => {
                         s.raw_bytes += sp.raw_len as u64;
                         s.resident_bytes += sp.encoded_len() as u64;
+                    }
+                    Page::Spilled(h) => {
+                        s.raw_bytes += h.raw_len as u64;
+                        s.spilled_bytes += h.encoded_len as u64;
                     }
                 }
             }
@@ -518,10 +779,7 @@ mod tests {
     }
 
     fn token_bytes(config: &KvCacheConfig, seed: u64) -> Vec<u8> {
-        let n = 2 * config.bytes_per_token
-            / crate::formats::FloatFormat::byte_width(config.format).unwrap_or(1);
-        let vals = synthetic::kv_cache_f32(1, n, seed);
-        quantize_slice(&vals, config.format).unwrap()
+        synthetic::kv_token_bytes(config, seed)
     }
 
     #[test]
@@ -535,9 +793,14 @@ mod tests {
             expect.extend_from_slice(&kv);
         }
         assert_eq!(cache.read(1, 0).unwrap(), expect);
+        assert_eq!(cache.resident_bytes(), cache.stats().resident_bytes);
         cache.seal_all().unwrap();
         assert_eq!(cache.read(1, 0).unwrap(), expect);
         assert_eq!(cache.token_count(1, 0), 50);
+        // The O(1) running counter must agree with a full page scan.
+        assert_eq!(cache.resident_bytes(), cache.stats().resident_bytes);
+        cache.evict_sequence(1);
+        assert_eq!(cache.resident_bytes(), 0);
     }
 
     #[test]
@@ -569,6 +832,8 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.ratio(), 1.0);
         assert_eq!(s.sealed_pages, 0);
+        // Compression off: everything stays hot; the counter tracks raw.
+        assert_eq!(cache.resident_bytes(), s.resident_bytes);
     }
 
     #[test]
@@ -663,6 +928,51 @@ mod tests {
         assert_eq!(cache.read(1, 0).unwrap(), expect);
         let s = cache.stats();
         assert!(s.exp_ratio() < 0.7, "dict exp ratio {}", s.exp_ratio());
+    }
+
+    #[test]
+    fn sealed_page_wire_roundtrip_and_spill_hooks() {
+        let config = bf16_config();
+        let mut cache = PagedKvCache::new(config.clone());
+        let mut expect = Vec::new();
+        let mut events = Vec::new();
+        for t in 0..40 {
+            let kv = token_bytes(&config, t);
+            if let Some(e) = cache.append_token_tracked(3, 0, &kv).unwrap() {
+                events.push(e);
+            }
+            expect.extend_from_slice(&kv);
+        }
+        events.extend(cache.seal_all_tracked().unwrap());
+        assert!(events.len() >= 2, "16-token pages over 40 tokens must seal >= 2");
+        let e = events[0];
+        assert_eq!((e.seq, e.layer), (3, 0));
+
+        // Wire round trip is bit-exact.
+        let page = cache.sealed_page(e.seq, e.layer, e.page_idx).unwrap();
+        let wire = page.serialize();
+        let back = SealedPage::deserialize(&wire).unwrap();
+        assert_eq!(back.serialize(), wire);
+        assert_eq!(back.encoded_len(), e.encoded_len);
+        assert!(SealedPage::deserialize(&wire[..wire.len() - 1]).is_err());
+
+        // Spill placeholder blocks direct reads; restore makes them exact.
+        let before = cache.resident_bytes();
+        cache
+            .mark_spilled(
+                e.seq,
+                e.layer,
+                e.page_idx,
+                SpilledHandle { slot: 9, encoded_len: e.encoded_len, raw_len: 64 },
+            )
+            .unwrap();
+        assert_eq!(cache.resident_bytes(), before - e.encoded_len as u64);
+        assert!(cache.read(e.seq, e.layer).is_err());
+        assert_eq!(cache.spilled_pages(e.seq, e.layer).len(), 1);
+        assert!(cache.stats().spilled_bytes > 0);
+        cache.restore_page(e.seq, e.layer, e.page_idx, back).unwrap();
+        assert_eq!(cache.read(e.seq, e.layer).unwrap(), expect);
+        assert_eq!(cache.resident_bytes(), before);
     }
 
     #[test]

@@ -25,10 +25,10 @@
 //! Python invocation.
 //!
 //! The compression stack (codec, container, checkpoint store, K/V cache,
-//! coordinator scheduling) is dependency-free and always builds; only the
-//! PJRT execution half (`runtime::Engine`, `model::ModelRuntime`) needs the
-//! `xla` binding crate and is gated behind the optional **`pjrt`** cargo
-//! feature.
+//! the shared memory-budgeted pool, coordinator scheduling) is
+//! dependency-free and always builds; only the PJRT execution half
+//! (`runtime::Engine`, `model::ModelRuntime`) needs the `xla` binding crate
+//! and is gated behind the optional **`pjrt`** cargo feature.
 //!
 //! ## Quick start
 //!
@@ -60,6 +60,7 @@ pub mod huffman;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod pool;
 pub mod runtime;
 pub mod synthetic;
 pub mod util;

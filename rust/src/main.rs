@@ -19,7 +19,10 @@ use std::process::ExitCode;
 
 #[cfg(feature = "pjrt")]
 use zipnn_lp::checkpoint::CheckpointStore;
-use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions, CompressedBlob};
+use zipnn_lp::codec::{
+    compress_tensor, decompress_tensor, decompress_tensor_threads, CompressOptions,
+    CompressedBlob,
+};
 #[cfg(feature = "pjrt")]
 use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
 use zipnn_lp::formats::FloatFormat;
@@ -74,12 +77,13 @@ SUBCOMMANDS:
               [--chunk-kib 256] [--threads 1] [--exponent-only]
   compress-model --input model.safetensors [--output model.zlpc]
               [--threads 1]   (per-tensor, HF safetensors)
-  decompress  --input FILE.zlpt [--output FILE]
+  decompress  --input FILE.zlpt [--output FILE] [--threads 1]
   inspect     --input FILE.zlpt
   train       --artifacts DIR [--steps 40] [--ckpt-every 10]
               [--ckpt-dir DIR] [--lr 0.1] [--seed 0]
   serve       --artifacts DIR [--requests 8] [--new-tokens 24]
               [--kv-format bf16|fp8|e5m2] [--no-compression] [--seed 0]
+              [--kv-budget-mib 0 (unbounded)] [--pool-workers 1]
   info        --artifacts DIR"
     );
 }
@@ -191,9 +195,14 @@ fn cmd_compress_model(flags: &HashMap<String, String>) -> Result<(), Box<dyn std
 
 fn cmd_decompress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let input = get(flags, "input")?;
+    let threads: usize = get_or(flags, "threads", "1").parse()?;
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
     let t = zipnn_lp::metrics::Timer::new();
-    let data = decompress_tensor(&blob)?;
+    let data = if threads > 1 {
+        decompress_tensor_threads(&blob, threads)?
+    } else {
+        decompress_tensor(&blob)?
+    };
     let secs = t.secs();
     let out_path = flags
         .get("output")
@@ -306,17 +315,29 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::
     };
     let compression = !flags.contains_key("no-compression");
     let seed: u64 = get_or(flags, "seed", "0").parse()?;
+    let budget_mib: f64 = get_or(flags, "kv-budget-mib", "0").parse()?;
+    let pool_workers: usize = get_or(flags, "pool-workers", "1").parse()?;
 
     let model = ModelRuntime::load(&dir)?;
     let dims = model.dims();
+    let policy = BatchPolicy {
+        workers: pool_workers.max(1),
+        kv_budget_bytes: (budget_mib > 0.0).then(|| (budget_mib * 1024.0 * 1024.0) as u64),
+        ..BatchPolicy::default()
+    };
     println!(
-        "serving: kv={} compression={} batch={} max_seq={}",
+        "serving: kv={} compression={} batch={} max_seq={} pool-workers={} budget={}",
         kv_format.name(),
         compression,
         dims.batch,
-        dims.max_seq
+        dims.max_seq,
+        policy.workers,
+        match policy.kv_budget_bytes {
+            Some(b) => human_bytes(b),
+            None => "unbounded".into(),
+        }
     );
-    let mut server = Server::new(model, kv_format, BatchPolicy::default(), compression)?;
+    let mut server = Server::new(model, kv_format, policy, compression)?;
     let mut rng = Rng::new(seed);
     let requests: Vec<Request> = (0..n_requests)
         .map(|i| Request {
@@ -348,6 +369,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::
         c.sm_ratio(),
         c.sealed_pages
     );
+    println!("kv pool: {}", stats.pool);
     Ok(())
 }
 

@@ -1,0 +1,656 @@
+//! Shared memory-budgeted K/V cache pool with LRU eviction and compressed
+//! disk spill — the deployment tier the paper's §4.3/§5.2 memory-saving
+//! claims need once more than one sequence is live at a time.
+//!
+//! # Budget model
+//!
+//! Every cached byte is in exactly one of three states, accounted exactly:
+//!
+//! * **hot** — the raw bytes of the page currently being appended to, per
+//!   (sequence, layer). Hot pages are pinned: they cannot be evicted.
+//! * **sealed** — entropy-coded pages resident in memory. These are the
+//!   only evictable bytes.
+//! * **spilled** — sealed pages whose encoded bytes were moved to the
+//!   [`SpillFile`] on disk. They cost no memory and are reloaded (and
+//!   CRC-verified) on demand.
+//!
+//! The configured budget bounds `hot + sealed`. Headroom is reserved
+//! *before* any byte enters memory — eviction runs first, then the gauge is
+//! bumped — so the in-memory high-water mark ([`PoolCounters`]) can only
+//! exceed the budget when there was genuinely nothing left to evict (e.g.
+//! the hot working set alone is larger than the budget). "Zero budget
+//! violations" is therefore checkable as `high_water <= budget`.
+//!
+//! # Concurrency
+//!
+//! Per-sequence caches live behind their own mutexes, so codec work
+//! (sealing on append, Huffman decode on read) for different sequences runs
+//! genuinely in parallel; a single ledger mutex serializes the cheap parts
+//! (byte accounting, LRU ordering, spill-file extents). Lock order is
+//! `sequence -> ledger`; eviction, which runs under the ledger and needs a
+//! *victim's* sequence lock, only ever `try_lock`s it and skips busy
+//! victims, so no cycle — and no deadlock — is possible.
+//!
+//! Known serialization point: the spill file (slot table + file handle)
+//! lives inside the ledger, so spill writes and reload reads — though not
+//! page deserialization or Huffman decode — briefly hold the ledger during
+//! disk I/O. Moving spill I/O off the ledger (e.g. positioned reads on a
+//! dedicated handle) is a follow-up once profiles show it matters; the
+//! spill byte counters in [`PoolCounters`] exist to observe exactly that.
+//!
+//! # Spill layout
+//!
+//! A spilled page record is [`SealedPage::serialize`] — raw length, element
+//! count, dictionary version, then each encoded stream in the standard
+//! [`crate::codec::EncodedStream`] wire framing — stored in a slot of the
+//! [`SpillFile`] with its CRC-32 verified on every reload. Dictionary
+//! tables are never dropped, so a page sealed against dictionary version
+//! `v` decodes bit-exactly no matter how many evict/reload round trips it
+//! survives.
+
+mod counters;
+mod spill;
+
+pub use counters::PoolCounters;
+pub use spill::SpillFile;
+
+use crate::error::{Error, Result};
+use crate::kvcache::{KvCacheConfig, KvCacheStats, PagedKvCache, SealedPage, SpilledHandle};
+use crate::metrics::{Counter, Gauge};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// (sequence, layer, page index) — stable identity of a sealed page.
+type PageKey = (u64, usize, usize);
+
+/// Pool construction options.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Per-sequence cache geometry and codec settings.
+    pub cache: KvCacheConfig,
+    /// In-memory budget for hot + sealed bytes (`None` = unbounded).
+    pub budget_bytes: Option<u64>,
+    /// Spill-file location; `None` uses a self-cleaning temp file.
+    pub spill_path: Option<PathBuf>,
+}
+
+impl PoolConfig {
+    /// Unbounded pool with a temp spill file.
+    pub fn new(cache: KvCacheConfig) -> Self {
+        PoolConfig { cache, budget_bytes: None, spill_path: None }
+    }
+
+    /// Builder-style byte-budget override.
+    pub fn with_budget(mut self, bytes: u64) -> Self {
+        self.budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Builder-style spill-file location override.
+    pub fn with_spill_path(mut self, path: PathBuf) -> Self {
+        self.spill_path = Some(path);
+        self
+    }
+}
+
+/// Everything the cheap single mutex protects: the sequence registry, the
+/// LRU ordering, the spill-slot directory, and the spill file itself.
+#[derive(Debug)]
+struct Ledger {
+    seqs: BTreeMap<u64, Arc<Mutex<PagedKvCache>>>,
+    /// Eviction order: tick -> page. Smallest tick = coldest.
+    lru: BTreeMap<u64, PageKey>,
+    /// Inverse of `lru` for touch/remove.
+    tick_of: BTreeMap<PageKey, u64>,
+    /// Pages with a live disk copy (resident *or* spilled): re-evicting a
+    /// reloaded page costs no second write.
+    slot_of: BTreeMap<PageKey, u64>,
+    clock: u64,
+    spill: SpillFile,
+}
+
+impl Ledger {
+    fn touch(&mut self, key: PageKey) {
+        if let Some(old) = self.tick_of.remove(&key) {
+            self.lru.remove(&old);
+        }
+        self.clock += 1;
+        self.lru.insert(self.clock, key);
+        self.tick_of.insert(key, self.clock);
+    }
+
+    fn untrack(&mut self, key: &PageKey) {
+        if let Some(old) = self.tick_of.remove(key) {
+            self.lru.remove(&old);
+        }
+    }
+}
+
+/// The shared, budgeted, spilling K/V cache pool. Cheap to share: clone the
+/// [`Arc`] returned by [`SharedKvPool::new`] into every worker thread.
+#[derive(Debug)]
+pub struct SharedKvPool {
+    config: KvCacheConfig,
+    budget: Option<u64>,
+    ledger: Mutex<Ledger>,
+    /// Per-layer exponent bytes applied to every new sequence cache
+    /// ("precomputed dictionaries", §3.3).
+    training: Mutex<Vec<Vec<u8>>>,
+    in_memory: Gauge,
+    evictions: Counter,
+    spills: Counter,
+    reloads: Counter,
+}
+
+impl SharedKvPool {
+    /// Create a pool.
+    pub fn new(config: PoolConfig) -> Result<Arc<Self>> {
+        let spill = match &config.spill_path {
+            Some(p) => SpillFile::create(p)?,
+            None => SpillFile::temp()?,
+        };
+        Ok(Arc::new(SharedKvPool {
+            config: config.cache,
+            budget: config.budget_bytes,
+            ledger: Mutex::new(Ledger {
+                seqs: BTreeMap::new(),
+                lru: BTreeMap::new(),
+                tick_of: BTreeMap::new(),
+                slot_of: BTreeMap::new(),
+                clock: 0,
+                spill,
+            }),
+            training: Mutex::new(Vec::new()),
+            in_memory: Gauge::new(),
+            evictions: Counter::new(),
+            spills: Counter::new(),
+            reloads: Counter::new(),
+        }))
+    }
+
+    /// Cache geometry shared by every sequence in the pool.
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.config
+    }
+
+    /// The configured in-memory budget.
+    pub fn budget_bytes(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Record per-layer exponent training bytes; applied to all existing
+    /// and future sequence caches.
+    pub fn train_dictionaries(&self, per_layer_exponents: &[Vec<u8>]) -> Result<()> {
+        {
+            let mut t = self.training.lock().unwrap();
+            *t = per_layer_exponents.to_vec();
+        }
+        let arcs: Vec<Arc<Mutex<PagedKvCache>>> =
+            self.ledger.lock().unwrap().seqs.values().cloned().collect();
+        for arc in arcs {
+            let mut c = arc.lock().unwrap();
+            for (layer, bytes) in per_layer_exponents.iter().enumerate() {
+                c.dictionaries().train(layer, bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fetch the cache for `seq`, creating it (and pre-training its
+    /// dictionaries) on first use.
+    fn seq_cache_or_create(&self, seq: u64) -> Result<Arc<Mutex<PagedKvCache>>> {
+        let existing = self.ledger.lock().unwrap().seqs.get(&seq).cloned();
+        if let Some(arc) = existing {
+            return Ok(arc);
+        }
+        let mut cache = PagedKvCache::new(self.config.clone());
+        {
+            let training = self.training.lock().unwrap();
+            for (layer, bytes) in training.iter().enumerate() {
+                cache.dictionaries().train(layer, bytes)?;
+            }
+        }
+        let arc = Arc::new(Mutex::new(cache));
+        let mut led = self.ledger.lock().unwrap();
+        // Another thread may have raced the creation; first insert wins.
+        Ok(led.seqs.entry(seq).or_insert(arc).clone())
+    }
+
+    fn seq_cache(&self, seq: u64) -> Result<Arc<Mutex<PagedKvCache>>> {
+        self.ledger
+            .lock()
+            .unwrap()
+            .seqs
+            .get(&seq)
+            .cloned()
+            .ok_or_else(|| Error::Pool(format!("unknown sequence {seq}")))
+    }
+
+    /// Append one token's K+V bytes for (sequence, layer), sealing and — if
+    /// the budget demands it — evicting cold pages first so the in-memory
+    /// total never exceeds the budget on account of this append.
+    pub fn append_token(&self, seq: u64, layer: usize, kv_bytes: &[u8]) -> Result<()> {
+        let arc = self.seq_cache_or_create(seq)?;
+        let need = kv_bytes.len() as u64;
+        // Reserve headroom before the bytes enter memory. We do not hold the
+        // sequence lock yet, so eviction may even pick this sequence's own
+        // cold pages.
+        {
+            let mut led = self.ledger.lock().unwrap();
+            if let Some(budget) = self.budget {
+                self.evict_until(&mut led, need, budget, None, None);
+            }
+            self.in_memory.add(need);
+        }
+        let mut cache = arc.lock().unwrap();
+        let before = cache.resident_bytes();
+        let sealed = cache.append_token_tracked(seq, layer, kv_bytes);
+        let after = cache.resident_bytes();
+        let mut led = self.ledger.lock().unwrap();
+        self.settle(need, before, after);
+        match sealed {
+            Ok(Some(e)) => {
+                led.touch((e.seq, e.layer, e.page_idx));
+                Ok(())
+            }
+            Ok(None) => Ok(()),
+            Err(err) => Err(err),
+        }
+    }
+
+    /// Read the full K/V byte stream for (sequence, layer) bit-exactly,
+    /// reloading (and CRC-verifying) any spilled pages first. The pages of
+    /// the list being read are excluded from eviction for the duration, so
+    /// the read always completes in one pass.
+    pub fn read(&self, seq: u64, layer: usize) -> Result<Vec<u8>> {
+        let arc = self.seq_cache(seq)?;
+        let mut cache = arc.lock().unwrap();
+        for (idx, handle) in cache.spilled_pages(seq, layer) {
+            let need = handle.encoded_len as u64;
+            // Evict for headroom, reserve, and issue the disk read under
+            // the ledger (the spill file's slot table and fd live there —
+            // see the module docs on this known serialization point); the
+            // Huffman-stream deserialization and reinstatement happen
+            // outside it, under only this sequence's lock.
+            let record = {
+                let mut led = self.ledger.lock().unwrap();
+                if let Some(budget) = self.budget {
+                    let pinned = Some((seq, layer));
+                    self.evict_until(&mut led, need, budget, Some((seq, &mut *cache)), pinned);
+                }
+                // Reserve while still holding the ledger so the headroom
+                // just freed cannot be claimed by a concurrent reserve.
+                self.in_memory.add(need);
+                led.spill.read(handle.slot)
+            };
+            let restored = record
+                .and_then(|bytes| SealedPage::deserialize(&bytes))
+                .and_then(|page| cache.restore_page(seq, layer, idx, page));
+            if let Err(e) = restored {
+                // Release the reservation; decreasing the gauge outside the
+                // ledger is safe (it can only create extra headroom).
+                self.in_memory.sub(need);
+                return Err(e);
+            }
+            self.reloads.incr();
+            self.ledger.lock().unwrap().touch((seq, layer, idx));
+            // The disk copy stays valid (slot_of entry retained), so
+            // re-evicting this page later costs no second write.
+        }
+        {
+            // Mark every resident sealed page of this list as just-used.
+            let mut led = self.ledger.lock().unwrap();
+            let keys: Vec<PageKey> = led
+                .tick_of
+                .range((seq, layer, 0)..=(seq, layer, usize::MAX))
+                .map(|(k, _)| *k)
+                .collect();
+            for key in keys {
+                led.touch(key);
+            }
+        }
+        // Huffman decode outside the ledger lock: reads of different
+        // sequences decompress in parallel.
+        cache.read(seq, layer)
+    }
+
+    /// Tokens stored for (sequence, layer); 0 for unknown sequences.
+    pub fn token_count(&self, seq: u64, layer: usize) -> usize {
+        match self.seq_cache(seq) {
+            Ok(arc) => arc.lock().unwrap().token_count(seq, layer),
+            Err(_) => 0,
+        }
+    }
+
+    /// Seal every hot page of every live sequence (e.g. at wave end, so
+    /// resident bytes reflect steady state).
+    pub fn seal_all(&self) -> Result<()> {
+        let arcs: Vec<Arc<Mutex<PagedKvCache>>> =
+            self.ledger.lock().unwrap().seqs.values().cloned().collect();
+        for arc in arcs {
+            let mut cache = arc.lock().unwrap();
+            let before = cache.resident_bytes();
+            let events = cache.seal_all_tracked()?;
+            let after = cache.resident_bytes();
+            let mut led = self.ledger.lock().unwrap();
+            self.settle(0, before, after);
+            for e in events {
+                led.touch((e.seq, e.layer, e.page_idx));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a sequence entirely: its memory leaves the budget and its spill
+    /// slots are freed for reuse. The caller must not use `seq` afterwards.
+    pub fn evict_sequence(&self, seq: u64) {
+        let arc = self.ledger.lock().unwrap().seqs.remove(&seq);
+        let Some(arc) = arc else { return };
+        // Hold the sequence lock across the accounting so a straggler
+        // holding a stale Arc cannot interleave.
+        let cache = arc.lock().unwrap();
+        let resident = cache.resident_bytes();
+        let mut led = self.ledger.lock().unwrap();
+        self.in_memory.sub(resident);
+        let keys: Vec<PageKey> = led
+            .tick_of
+            .range((seq, 0, 0)..=(seq, usize::MAX, usize::MAX))
+            .map(|(k, _)| *k)
+            .collect();
+        for key in keys {
+            led.untrack(&key);
+        }
+        let slots: Vec<(PageKey, u64)> = led
+            .slot_of
+            .range((seq, 0, 0)..=(seq, usize::MAX, usize::MAX))
+            .map(|(k, &s)| (*k, s))
+            .collect();
+        for (key, slot) in slots {
+            led.slot_of.remove(&key);
+            led.spill.free(slot);
+        }
+    }
+
+    /// Live sequence ids.
+    pub fn sequences(&self) -> Vec<u64> {
+        self.ledger.lock().unwrap().seqs.keys().copied().collect()
+    }
+
+    /// Aggregate cache statistics across every live sequence.
+    pub fn stats(&self) -> KvCacheStats {
+        let arcs: Vec<Arc<Mutex<PagedKvCache>>> =
+            self.ledger.lock().unwrap().seqs.values().cloned().collect();
+        let mut total = KvCacheStats::default();
+        for arc in arcs {
+            let s = arc.lock().unwrap().stats();
+            total.raw_bytes += s.raw_bytes;
+            total.resident_bytes += s.resident_bytes;
+            total.sealed_pages += s.sealed_pages;
+            total.exp_original += s.exp_original;
+            total.exp_compressed += s.exp_compressed;
+            total.sm_original += s.sm_original;
+            total.sm_compressed += s.sm_compressed;
+            total.spilled_bytes += s.spilled_bytes;
+        }
+        total
+    }
+
+    /// Observability snapshot (evictions, spills, reloads, high-water).
+    pub fn counters(&self) -> PoolCounters {
+        let (spilled_bytes, written, read) = {
+            let led = self.ledger.lock().unwrap();
+            (led.spill.live_bytes(), led.spill.bytes_written(), led.spill.bytes_read())
+        };
+        PoolCounters {
+            evictions: self.evictions.get(),
+            spills: self.spills.get(),
+            reloads: self.reloads.get(),
+            in_memory_bytes: self.in_memory.get(),
+            high_water_bytes: self.in_memory.high_water(),
+            spilled_bytes,
+            spill_bytes_written: written,
+            spill_bytes_read: read,
+            budget_bytes: self.budget,
+        }
+    }
+
+    /// Apply the difference between the reserved headroom and what an
+    /// operation actually added. Called under the ledger lock so budget
+    /// checks and gauge updates are atomic with respect to each other.
+    fn settle(&self, reserved: u64, before: u64, after: u64) {
+        let delta = after as i64 - before as i64;
+        let adjust = reserved as i64 - delta;
+        match adjust.cmp(&0) {
+            std::cmp::Ordering::Greater => {
+                self.in_memory.sub(adjust as u64);
+            }
+            std::cmp::Ordering::Less => {
+                self.in_memory.add((-adjust) as u64);
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+    }
+
+    /// Evict cold sealed pages (LRU-first) until `need` more bytes fit
+    /// under `budget`, or nothing evictable remains. `current` lends the
+    /// caller's already-locked cache so same-sequence victims need no
+    /// second lock; `exclude` pins the (sequence, layer) list a read is
+    /// materializing. Victims whose sequence lock is busy are skipped (and
+    /// re-marked hot), never waited on — see the module docs on lock order.
+    fn evict_until(
+        &self,
+        led: &mut Ledger,
+        need: u64,
+        budget: u64,
+        mut current: Option<(u64, &mut PagedKvCache)>,
+        exclude: Option<(u64, usize)>,
+    ) {
+        // Each skipped victim is re-inserted hot, so bound the scan.
+        let mut attempts = led.lru.len() + 8;
+        while self.in_memory.get() + need > budget && attempts > 0 {
+            attempts -= 1;
+            let Some((&tick, &key)) = led.lru.iter().next() else { break };
+            led.lru.remove(&tick);
+            led.tick_of.remove(&key);
+            if let Some((ex_seq, ex_layer)) = exclude {
+                if key.0 == ex_seq && key.1 == ex_layer {
+                    led.touch(key); // pinned by the in-flight read
+                    continue;
+                }
+            }
+            let evicted = match &mut current {
+                Some((cur_seq, cache)) if *cur_seq == key.0 => {
+                    self.evict_one(led, key, cache)
+                }
+                _ => {
+                    let Some(arc) = led.seqs.get(&key.0).cloned() else { continue };
+                    match arc.try_lock() {
+                        Ok(mut guard) => self.evict_one(led, key, &mut guard),
+                        Err(_) => {
+                            // Busy victim: skip, re-mark hot, try a colder one.
+                            led.touch(key);
+                            continue;
+                        }
+                    }
+                }
+            };
+            if !evicted {
+                // State changed under us (should not happen); drop tracking.
+                continue;
+            }
+        }
+    }
+
+    /// Move one sealed page to the spill file. Returns false if the page
+    /// was not actually sealed+resident.
+    fn evict_one(&self, led: &mut Ledger, key: PageKey, cache: &mut PagedKvCache) -> bool {
+        let (seq, layer, idx) = key;
+        let Ok(page) = cache.sealed_page(seq, layer, idx) else {
+            return false;
+        };
+        let encoded_len = page.encoded_len();
+        let raw_len = page.raw_len();
+        let slot = match led.slot_of.get(&key) {
+            Some(&slot) => slot,
+            None => {
+                let record = page.serialize();
+                let Ok(slot) = led.spill.write(&record) else {
+                    // Spill I/O failed: keep the page resident and tracked.
+                    led.touch(key);
+                    return false;
+                };
+                led.slot_of.insert(key, slot);
+                self.spills.incr();
+                slot
+            }
+        };
+        let handle = SpilledHandle { slot, encoded_len, raw_len };
+        if cache.mark_spilled(seq, layer, idx, handle).is_err() {
+            return false;
+        }
+        self.in_memory.sub(encoded_len as u64);
+        self.evictions.incr();
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::conv::quantize_slice;
+    use crate::formats::FloatFormat;
+    use crate::synthetic;
+    use std::collections::BTreeMap;
+
+    fn bf16_config() -> KvCacheConfig {
+        let mut c = KvCacheConfig::new(2, 64 * 2, FloatFormat::Bf16);
+        c.page_tokens = 8;
+        c
+    }
+
+    fn token_bytes(config: &KvCacheConfig, seed: u64) -> Vec<u8> {
+        synthetic::kv_token_bytes(config, seed)
+    }
+
+    #[test]
+    fn budget_forces_spill_reads_bit_exact() {
+        let config = bf16_config();
+        // Hot working set: 3 seqs x 2 layers x 8-token pages x 256 B/token
+        // = 12 KiB. 64 KiB leaves room for one fully materialized read list
+        // (~32 KiB) while staying far below the ~240 KiB raw footprint.
+        let budget = 64 * 1024;
+        let pool =
+            SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
+        let mut shadows: BTreeMap<(u64, usize), Vec<u8>> = BTreeMap::new();
+        for t in 0..160u64 {
+            for seq in 1..=3u64 {
+                for layer in 0..2usize {
+                    let kv = token_bytes(&config, t * 131 + seq * 7 + layer as u64);
+                    pool.append_token(seq, layer, &kv).unwrap();
+                    shadows.entry((seq, layer)).or_default().extend_from_slice(&kv);
+                }
+            }
+            if t % 40 == 39 {
+                for (&(seq, layer), shadow) in &shadows {
+                    assert_eq!(&pool.read(seq, layer).unwrap(), shadow, "t={t}");
+                }
+            }
+        }
+        let c = pool.counters();
+        assert!(c.spills > 0, "budget never forced a spill: {c}");
+        assert!(c.reloads > 0, "reads never reloaded a spilled page: {c}");
+        assert!(c.evictions >= c.spills);
+        assert!(c.within_budget(), "budget violated: {c}");
+        assert!(c.high_water_bytes <= budget);
+        let stats = pool.stats();
+        assert!(stats.raw_bytes > budget, "test must oversubscribe the budget");
+        assert_eq!(pool.sequences(), vec![1, 2, 3]);
+        assert_eq!(pool.token_count(1, 0), 160);
+    }
+
+    #[test]
+    fn unbounded_pool_never_evicts() {
+        let config = bf16_config();
+        let pool = SharedKvPool::new(PoolConfig::new(config.clone())).unwrap();
+        let mut shadow = Vec::new();
+        for t in 0..64u64 {
+            let kv = token_bytes(&config, 900 + t);
+            pool.append_token(5, 1, &kv).unwrap();
+            shadow.extend_from_slice(&kv);
+        }
+        assert_eq!(pool.read(5, 1).unwrap(), shadow);
+        let c = pool.counters();
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.spills, 0);
+        assert_eq!(c.reloads, 0);
+        assert!(c.within_budget());
+        assert_eq!(c.in_memory_bytes, pool.stats().resident_bytes);
+    }
+
+    #[test]
+    fn evict_sequence_frees_budget_and_slots() {
+        let config = bf16_config();
+        let budget = 24 * 1024;
+        let pool =
+            SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
+        for seq in 1..=2u64 {
+            for t in 0..80u64 {
+                for layer in 0..2usize {
+                    let kv = token_bytes(&config, seq * 1000 + t * 3 + layer as u64);
+                    pool.append_token(seq, layer, &kv).unwrap();
+                }
+            }
+        }
+        assert!(pool.counters().spills > 0);
+        let before = pool.counters().in_memory_bytes;
+        pool.evict_sequence(1);
+        let after = pool.counters();
+        assert!(after.in_memory_bytes < before);
+        assert_eq!(pool.sequences(), vec![2]);
+        assert!(pool.read(1, 0).is_err());
+        assert_eq!(pool.token_count(1, 0), 0);
+        // Seq 2 still reads back fine after its neighbour vanished.
+        assert_eq!(pool.read(2, 0).unwrap().len(), 80 * 2 * config.bytes_per_token);
+    }
+
+    #[test]
+    fn seal_all_registers_pages_for_eviction() {
+        let config = bf16_config();
+        let pool = SharedKvPool::new(
+            PoolConfig::new(config.clone()).with_budget(512 * 1024),
+        )
+        .unwrap();
+        // 5 tokens: less than one page, so only seal_all can seal it.
+        for t in 0..5u64 {
+            pool.append_token(9, 0, &token_bytes(&config, t)).unwrap();
+        }
+        assert_eq!(pool.stats().sealed_pages, 0);
+        pool.seal_all().unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.sealed_pages, 1);
+        assert!(stats.resident_bytes <= stats.raw_bytes);
+        assert_eq!(pool.counters().in_memory_bytes, stats.resident_bytes);
+    }
+
+    #[test]
+    fn dictionary_training_applies_to_new_sequences() {
+        let config = bf16_config();
+        let pool = SharedKvPool::new(PoolConfig::new(config.clone())).unwrap();
+        let vals = synthetic::kv_cache_f32(512, 128, 21);
+        let bytes = quantize_slice(&vals, config.format).unwrap();
+        let set = crate::formats::split_streams(config.format, &bytes).unwrap();
+        let exp = set.exponent().unwrap().bytes.clone();
+        pool.train_dictionaries(&[exp.clone(), exp]).unwrap();
+        let mut shadow = Vec::new();
+        for t in 0..32u64 {
+            let kv = token_bytes(&config, 700 + t);
+            pool.append_token(1, 0, &kv).unwrap();
+            shadow.extend_from_slice(&kv);
+        }
+        pool.seal_all().unwrap();
+        assert_eq!(pool.read(1, 0).unwrap(), shadow);
+        let stats = pool.stats();
+        assert!(stats.exp_ratio() < 0.7, "trained dict exp ratio {}", stats.exp_ratio());
+    }
+}

@@ -1,0 +1,294 @@
+//! The disk spill file backing cold evicted pages.
+//!
+//! Layout: a single flat file of variable-length page records, each written
+//! at a slot offset chosen by a smallest-fit scan over freed extents (falling
+//! back to appending at the end). Every record's CRC-32 is kept **in memory**
+//! alongside its extent and verified on read, so a damaged spill file is
+//! detected before corrupt bytes can reach an attention computation — the
+//! same integrity discipline the `zlp` container applies per chunk.
+//!
+//! Slots are identities, extents are storage: a slot id never changes while
+//! its page lives in the file, even if compaction were to move extents later.
+
+use crate::error::{Error, Result};
+use crate::util::crc32::crc32;
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Extent + integrity metadata for one live slot.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    offset: u64,
+    len: u64,
+    crc: u32,
+}
+
+/// A spill file holding serialized [`crate::kvcache::SealedPage`] records.
+#[derive(Debug)]
+pub struct SpillFile {
+    file: File,
+    path: PathBuf,
+    remove_on_drop: bool,
+    /// File length high-water mark (append offset).
+    end: u64,
+    slots: BTreeMap<u64, Slot>,
+    /// Free extents keyed `(len, offset)` so `range((need, 0)..)` finds the
+    /// smallest extent that fits.
+    free_extents: BTreeMap<(u64, u64), ()>,
+    /// The same extents keyed by offset, for coalescing with neighbours.
+    free_by_offset: BTreeMap<u64, u64>,
+    next_slot: u64,
+    bytes_written: u64,
+    bytes_read: u64,
+}
+
+impl SpillFile {
+    /// Create (or truncate) a spill file at `path`.
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(SpillFile {
+            file,
+            path: path.to_path_buf(),
+            remove_on_drop: false,
+            end: 0,
+            slots: BTreeMap::new(),
+            free_extents: BTreeMap::new(),
+            free_by_offset: BTreeMap::new(),
+            next_slot: 0,
+            bytes_written: 0,
+            bytes_read: 0,
+        })
+    }
+
+    /// Create a uniquely named spill file in the OS temp directory, removed
+    /// when the pool is dropped.
+    pub fn temp() -> Result<Self> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("zipnn-lp-pool-{}-{}.spill", std::process::id(), n));
+        let mut f = Self::create(&path)?;
+        f.remove_on_drop = true;
+        Ok(f)
+    }
+
+    /// Where the file lives on disk.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write one page record, returning its slot id.
+    pub fn write(&mut self, record: &[u8]) -> Result<u64> {
+        let need = record.len() as u64;
+        if need == 0 {
+            return Err(Error::Pool("refusing to spill an empty page record".into()));
+        }
+        let reuse = self
+            .free_extents
+            .range((need, 0)..)
+            .next()
+            .map(|(&extent, _)| extent);
+        let offset = match reuse {
+            Some((len, off)) => {
+                self.remove_free(off, len);
+                if len > need {
+                    // Return the unused tail of the extent.
+                    self.insert_free(off + need, len - need);
+                }
+                off
+            }
+            None => {
+                let off = self.end;
+                self.end += need;
+                off
+            }
+        };
+        let seek_write = match self.file.seek(SeekFrom::Start(offset)) {
+            Ok(_) => self.file.write_all(record),
+            Err(e) => Err(e),
+        };
+        if let Err(e) = seek_write {
+            // Hand the extent back (append case: end shrinks again) so a
+            // failing disk cannot leak spill-file space on every retry.
+            self.insert_free(offset, need);
+            return Err(e.into());
+        }
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        self.slots.insert(slot, Slot { offset, len: need, crc: crc32(record) });
+        self.bytes_written += need;
+        Ok(slot)
+    }
+
+    /// Read back a slot's record, verifying its CRC-32.
+    pub fn read(&mut self, slot: u64) -> Result<Vec<u8>> {
+        let s = *self
+            .slots
+            .get(&slot)
+            .ok_or_else(|| Error::Pool(format!("unknown spill slot {slot}")))?;
+        self.file.seek(SeekFrom::Start(s.offset))?;
+        let mut buf = vec![0u8; s.len as usize];
+        self.file.read_exact(&mut buf)?;
+        let actual = crc32(&buf);
+        if actual != s.crc {
+            return Err(Error::ChecksumMismatch {
+                chunk: slot as usize,
+                expected: s.crc,
+                actual,
+            });
+        }
+        self.bytes_read += s.len;
+        Ok(buf)
+    }
+
+    /// Release a slot, returning its extent to the free list (coalesced
+    /// with free neighbours so long-lived files do not fragment without
+    /// bound). Unknown slots are ignored (freeing is idempotent).
+    pub fn free(&mut self, slot: u64) {
+        if let Some(s) = self.slots.remove(&slot) {
+            self.insert_free(s.offset, s.len);
+        }
+    }
+
+    fn remove_free(&mut self, offset: u64, len: u64) {
+        self.free_by_offset.remove(&offset);
+        self.free_extents.remove(&(len, offset));
+    }
+
+    /// Insert a free extent, merging it with adjacent free extents; an
+    /// extent that reaches the end of the file shrinks the append offset
+    /// instead of being kept.
+    fn insert_free(&mut self, offset: u64, len: u64) {
+        let mut offset = offset;
+        let mut len = len;
+        if let Some((&succ_off, &succ_len)) = self.free_by_offset.range(offset..).next() {
+            if offset + len == succ_off {
+                self.remove_free(succ_off, succ_len);
+                len += succ_len;
+            }
+        }
+        if let Some((&pred_off, &pred_len)) = self.free_by_offset.range(..offset).next_back() {
+            if pred_off + pred_len == offset {
+                self.remove_free(pred_off, pred_len);
+                offset = pred_off;
+                len += pred_len;
+            }
+        }
+        if offset + len == self.end {
+            self.end = offset;
+            return;
+        }
+        self.free_by_offset.insert(offset, len);
+        self.free_extents.insert((len, offset), ());
+    }
+
+    /// Number of live (occupied) slots.
+    pub fn live_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Bytes currently parked in live slots.
+    pub fn live_bytes(&self) -> u64 {
+        self.slots.values().map(|s| s.len).sum()
+    }
+
+    /// Total record bytes ever written (spill write traffic).
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written
+    }
+
+    /// Total record bytes ever read back (reload traffic).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        if self.remove_on_drop {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip_with_crc() {
+        let mut f = SpillFile::temp().unwrap();
+        let a: Vec<u8> = (0..300u32).map(|i| (i * 7) as u8).collect();
+        let b: Vec<u8> = (0..100u32).map(|i| (i * 13 + 1) as u8).collect();
+        let sa = f.write(&a).unwrap();
+        let sb = f.write(&b).unwrap();
+        assert_ne!(sa, sb);
+        assert_eq!(f.read(sa).unwrap(), a);
+        assert_eq!(f.read(sb).unwrap(), b);
+        // Reads are repeatable.
+        assert_eq!(f.read(sa).unwrap(), a);
+        assert_eq!(f.live_slots(), 2);
+        assert_eq!(f.live_bytes(), 400);
+        assert_eq!(f.bytes_written(), 400);
+        assert!(f.bytes_read() >= 700);
+    }
+
+    #[test]
+    fn freed_extents_reused_and_coalesced() {
+        let mut f = SpillFile::temp().unwrap();
+        let a = f.write(&[1u8; 300]).unwrap(); // 0..300
+        let b = f.write(&[2u8; 300]).unwrap(); // 300..600
+        let c = f.write(&[3u8; 300]).unwrap(); // 600..900
+        let d = f.write(&[4u8; 100]).unwrap(); // 900..1000 pins the end
+        assert_eq!(f.end, 1000);
+        // Free a and c (disjoint), then b: all three must coalesce into one
+        // 0..900 extent.
+        f.free(a);
+        f.free(c);
+        f.free(b);
+        // A 700-byte record fits only in the coalesced hole; without
+        // coalescing it would append at 1000 and grow the file.
+        let e = f.write(&[5u8; 700]).unwrap(); // 0..700; tail 700..900 free
+        assert_eq!(f.end, 1000, "file grew despite coalesced free space");
+        assert_eq!(f.read(e).unwrap(), vec![5u8; 700]);
+        assert_eq!(f.read(d).unwrap(), vec![4u8; 100]);
+        // Freeing the trailing records shrinks the append offset back to 0:
+        // d merges with the free 700..900 tail and reaches the end
+        // (1000 -> 700), then e's 0..700 extent does the same (-> 0).
+        f.free(d);
+        assert_eq!(f.end, 700);
+        f.free(e);
+        assert_eq!(f.end, 0);
+        assert_eq!(f.live_slots(), 0);
+        // Double-free is a no-op.
+        f.free(d);
+        assert_eq!(f.live_slots(), 0);
+    }
+
+    #[test]
+    fn unknown_slot_rejected() {
+        let mut f = SpillFile::temp().unwrap();
+        assert!(f.read(42).is_err());
+        assert!(f.write(&[]).is_err());
+    }
+
+    #[test]
+    fn temp_file_removed_on_drop() {
+        let path;
+        {
+            let mut f = SpillFile::temp().unwrap();
+            f.write(&[1, 2, 3]).unwrap();
+            path = f.path().to_path_buf();
+            assert!(path.exists());
+        }
+        assert!(!path.exists(), "temp spill file not cleaned up");
+    }
+}

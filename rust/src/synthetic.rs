@@ -147,6 +147,22 @@ pub fn kv_cache_f32(n_tokens: usize, head_dim: usize, seed: u64) -> Vec<f32> {
     out
 }
 
+/// One token's quantized K+V bytes (exactly `2 * bytes_per_token`) for a
+/// cache config, drawn from [`kv_cache_f32`] — the shared generator behind
+/// the pool tests, the pool property tests, and the `kv_cache` bench, so
+/// they cannot drift from each other or from the config's geometry.
+/// Panics on formats without a whole byte width (the K/V cache rejects
+/// those at construction anyway).
+pub fn kv_token_bytes(config: &crate::kvcache::KvCacheConfig, seed: u64) -> Vec<u8> {
+    let elem = config
+        .format
+        .byte_width()
+        .expect("K/V cache formats have a whole byte width");
+    let n = 2 * config.bytes_per_token / elem;
+    let vals = kv_cache_f32(1, n, seed);
+    quantize_slice(&vals, config.format).expect("K/V cache format is quantizable")
+}
+
 /// FNV-1a hash for stable per-name seeds.
 fn fnv1a(s: &str) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;

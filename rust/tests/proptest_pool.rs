@@ -1,0 +1,146 @@
+//! Property tests for the shared memory-budgeted K/V pool (in-house seeded
+//! harness; no proptest crate in the baked registry).
+//!
+//! The central invariant: against a **shadow uncompressed cache** (a plain
+//! `Vec<u8>` per (sequence, layer)), every pool read is bit-exact — across
+//! random interleavings of appends, reads, and sequence evictions, for BF16
+//! and FP8 E4M3, under a budget small enough that pages constantly spill to
+//! disk and reload. Also checked: the in-memory high-water mark respects
+//! the budget (single-threaded schedules have no busy-victim corner), and
+//! concurrent appenders/readers on a shared pool stay bit-exact.
+
+use std::collections::BTreeMap;
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::kvcache::KvCacheConfig;
+use zipnn_lp::pool::{PoolConfig, SharedKvPool};
+use zipnn_lp::synthetic;
+use zipnn_lp::util::rng::Rng;
+
+const N_LAYERS: usize = 2;
+const LIVE_SEQS: usize = 5;
+
+fn config_for(format: FloatFormat) -> KvCacheConfig {
+    let elem = FloatFormat::byte_width(format).unwrap_or(1);
+    let mut c = KvCacheConfig::new(N_LAYERS, 64 * elem, format);
+    c.page_tokens = 8;
+    c
+}
+
+fn token_bytes(config: &KvCacheConfig, seed: u64) -> Vec<u8> {
+    synthetic::kv_token_bytes(config, seed)
+}
+
+/// Randomly interleave appends / reads / sequence evictions across ≥ 4 live
+/// sequences, asserting every read against the shadow cache.
+fn run_interleaved(format: FloatFormat, seed: u64) {
+    let config = config_for(format);
+    // Must cover the hot pages (10 lists x <= 2 KiB) plus one materialized
+    // read list, while staying far below the ~hundreds-of-KiB raw total so
+    // eviction runs constantly.
+    let budget = 128 * 1024;
+    let pool =
+        SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut shadows: BTreeMap<(u64, usize), Vec<u8>> = BTreeMap::new();
+    let mut live: Vec<u64> = (1..=LIVE_SEQS as u64).collect();
+    let mut next_seq = LIVE_SEQS as u64 + 1;
+    let mut reads = 0u64;
+    for step in 0..3000u64 {
+        let op = rng.below(100);
+        let seq = live[rng.below(live.len() as u64) as usize];
+        let layer = rng.below(N_LAYERS as u64) as usize;
+        if op < 62 {
+            let kv = token_bytes(&config, step * 7919 + seq * 131 + layer as u64);
+            pool.append_token(seq, layer, &kv).unwrap();
+            shadows.entry((seq, layer)).or_default().extend_from_slice(&kv);
+        } else if op < 97 {
+            match shadows.get(&(seq, layer)) {
+                Some(shadow) => {
+                    assert_eq!(&pool.read(seq, layer).unwrap(), shadow, "step {step}");
+                    reads += 1;
+                }
+                None => assert!(pool.read(seq, layer).is_err(), "step {step}"),
+            }
+        } else {
+            // Retire one sequence, admit a fresh one (session churn).
+            pool.evict_sequence(seq);
+            shadows.retain(|&(s, _), _| s != seq);
+            live.retain(|&s| s != seq);
+            live.push(next_seq);
+            next_seq += 1;
+        }
+    }
+    // Final sweep: everything still live must read back bit-exactly.
+    for (&(seq, layer), shadow) in &shadows {
+        assert_eq!(&pool.read(seq, layer).unwrap(), shadow, "final seq {seq}");
+    }
+    let c = pool.counters();
+    assert!(reads > 100, "schedule degenerate: only {reads} reads");
+    assert!(c.spills > 0, "budget never forced a spill: {c}");
+    assert!(c.reloads > 0, "no spill → reload round trip exercised: {c}");
+    assert!(
+        c.within_budget(),
+        "single-threaded schedule must never violate the budget: {c}"
+    );
+}
+
+#[test]
+fn prop_interleaved_ops_bit_exact_bf16() {
+    run_interleaved(FloatFormat::Bf16, 11);
+}
+
+#[test]
+fn prop_interleaved_ops_bit_exact_fp8_e4m3() {
+    run_interleaved(FloatFormat::Fp8E4M3, 13);
+}
+
+#[test]
+fn prop_concurrent_sequences_bit_exact() {
+    // 8 sequences on 4 threads sharing one budgeted pool: every thread
+    // checks its own sequences against private shadows while eviction
+    // steals pages across threads.
+    let config = config_for(FloatFormat::Bf16);
+    let budget = 160 * 1024;
+    let pool =
+        SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
+    let n_threads = 4u64;
+    let per_thread = 2u64;
+    std::thread::scope(|scope| {
+        for w in 0..n_threads {
+            let pool = &pool;
+            let config = &config;
+            scope.spawn(move || {
+                let seqs: Vec<u64> =
+                    (0..per_thread).map(|i| 1 + w * per_thread + i).collect();
+                let mut shadows: BTreeMap<(u64, usize), Vec<u8>> = BTreeMap::new();
+                for t in 0..220u64 {
+                    for &seq in &seqs {
+                        for layer in 0..N_LAYERS {
+                            let kv =
+                                token_bytes(config, seq * 100_003 + t * 17 + layer as u64);
+                            pool.append_token(seq, layer, &kv).unwrap();
+                            shadows.entry((seq, layer)).or_default().extend_from_slice(&kv);
+                        }
+                    }
+                    if t % 50 == 49 {
+                        for (&(seq, layer), shadow) in &shadows {
+                            assert_eq!(
+                                &pool.read(seq, layer).unwrap(),
+                                shadow,
+                                "seq {seq} layer {layer} t {t}"
+                            );
+                        }
+                    }
+                }
+                for (&(seq, layer), shadow) in &shadows {
+                    assert_eq!(&pool.read(seq, layer).unwrap(), shadow);
+                }
+            });
+        }
+    });
+    let c = pool.counters();
+    assert!(c.spills > 0, "concurrent scenario never spilled: {c}");
+    assert!(c.reloads > 0, "concurrent scenario never reloaded: {c}");
+    // 8 seqs x 2 layers x 220 tokens x 256 B = 880 KiB raw >> 160 KiB.
+    assert!(pool.stats().raw_bytes > budget);
+}
