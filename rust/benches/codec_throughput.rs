@@ -1,26 +1,81 @@
 //! Bench: codec throughput — the §Perf harness.
 //!
-//! Measures encode/decode MiB/s per layer of the stack: histogram, Huffman
-//! encode, Huffman decode, stream split/merge, full codec (1/2/4 threads),
-//! CRC32. These are the numbers tracked in EXPERIMENTS.md §Perf.
+//! Three parts:
 //!
-//! Run: `cargo bench --bench codec_throughput`
+//! 1. Stage microbenches (histogram, Huffman encode/decode, split/merge,
+//!    CRC32, full codec at 1/2/4 threads) — the numbers tracked in
+//!    EXPERIMENTS.md §Perf.
+//! 2. Entropy-backend head-to-head: ratio and encode/decode MiB/s for
+//!    Huffman vs rANS on the exponent and sign|mantissa streams of all five
+//!    low-precision formats (BF16, FP16, FP8 E4M3, FP8 E5M2, FP4 E2M1),
+//!    plus blob-level ratios per `--codec` setting. Asserts the paper-level
+//!    claims: rANS never loses to Huffman on the FP8 E4M3 exponent stream,
+//!    and `auto` never produces a larger blob than the best fixed backend.
+//! 3. Optional machine-readable output: `--json PATH` writes the
+//!    `BENCH_codec.json` schema documented in the README, so future PRs can
+//!    diff ratio/throughput regressions. `--smoke` shrinks the workload for
+//!    CI schema checks.
+//!
+//! Run: `cargo bench --bench codec_throughput -- [--json PATH] [--smoke]`
 
-use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions};
+use zipnn_lp::codec::{compress_tensor, decompress_tensor, Codec, CompressOptions};
 use zipnn_lp::entropy::Histogram;
+use zipnn_lp::formats::conv::quantize_slice;
 use zipnn_lp::formats::{merge_streams, split_streams, FloatFormat};
 use zipnn_lp::huffman::{CodeTable, HuffmanDecoder, HuffmanEncoder};
 use zipnn_lp::metrics::{bench_loop, Table};
 use zipnn_lp::synthetic;
 use zipnn_lp::util::crc32::crc32;
+use zipnn_lp::util::jsonout as jo;
+use zipnn_lp::util::rng::Rng;
 
-fn main() {
-    let mib = 8;
+struct Args {
+    json: Option<String>,
+    smoke: bool,
+}
+
+fn parse_args() -> Args {
+    let mut out = Args { json: None, smoke: false };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => out.json = args.next(),
+            "--smoke" => out.smoke = true,
+            _ => {} // cargo bench passes its own flags; ignore them
+        }
+    }
+    out
+}
+
+/// One measured (format, stream, codec) cell.
+struct StreamRow {
+    format: &'static str,
+    stream: &'static str,
+    codec: &'static str,
+    ratio: f64,
+    encode_mibps: f64,
+    decode_mibps: f64,
+}
+
+/// One blob-level (format, codec) ratio.
+struct BlobRow {
+    format: &'static str,
+    codec: &'static str,
+    ratio: f64,
+}
+
+/// Weight-like values quantized into `format`'s byte representation.
+fn format_bytes(format: FloatFormat, n_elems: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let vals: Vec<f32> = (0..n_elems).map(|_| rng.normal_ms(0.0, 0.4) as f32).collect();
+    quantize_slice(&vals, format).expect("quantize")
+}
+
+fn stage_benches(mib: usize, iters: usize) {
     let n_bytes = mib * 1024 * 1024;
     let data = synthetic::gaussian_bf16_bytes(n_bytes / 2, 0.02, 99);
     let set = split_streams(FloatFormat::Bf16, &data).expect("split");
     let exp = &set.exponent().unwrap().bytes;
-    let iters = 5;
 
     let mut t = Table::new(&["stage", "MiB/s", "notes"]);
 
@@ -38,6 +93,15 @@ fn main() {
     let b = bench_loop(iters, || dec.decode_into(&payload, &mut out).unwrap());
     t.row(&["huffman decode (exp)".into(), format!("{:.0}", b.mib_per_sec(exp.len())), "8 KiB LUT".into()]);
 
+    let rtable = zipnn_lp::rans::FreqTable::from_histogram(&hist).unwrap();
+    let b = bench_loop(iters, || zipnn_lp::rans::RansEncoder::new(&rtable).encode(exp).unwrap());
+    t.row(&["rans encode (exp)".into(), format!("{:.0}", b.mib_per_sec(exp.len())), "4-way interleaved".into()]);
+
+    let rpayload = zipnn_lp::rans::RansEncoder::new(&rtable).encode(exp).unwrap();
+    let rdec = zipnn_lp::rans::RansDecoder::new(&rtable);
+    let b = bench_loop(iters, || rdec.decode(&rpayload, exp.len()).unwrap());
+    t.row(&["rans decode (exp)".into(), format!("{:.0}", b.mib_per_sec(exp.len())), "4 KiB LUT".into()]);
+
     let b = bench_loop(iters, || split_streams(FloatFormat::Bf16, &data).unwrap());
     t.row(&["stream split (bf16)".into(), format!("{:.0}", b.mib_per_sec(data.len())), String::new()]);
 
@@ -53,7 +117,7 @@ fn main() {
         t.row(&[
             format!("full encode ({threads}t)"),
             format!("{:.0}", b.mib_per_sec(data.len())),
-            "split+gate+huffman+crc".into(),
+            "split+gate+auto+crc".into(),
         ]);
     }
     let opts = CompressOptions::for_format(FloatFormat::Bf16);
@@ -62,5 +126,167 @@ fn main() {
     t.row(&["full decode (1t)".into(), format!("{:.0}", b.mib_per_sec(data.len())), "decode+merge+crc".into()]);
 
     println!("Codec throughput on {mib} MiB of BF16 weights:\n{}", t.render());
-    println!("§Perf targets: ≥200 MiB/s encode, ≥400 MiB/s decode per core on exponent streams.");
+    println!("§Perf targets: ≥200 MiB/s encode, ≥400 MiB/s decode per core on exponent streams.\n");
+}
+
+/// Head-to-head: each format's component streams through each backend.
+fn backend_head_to_head(n_elems: usize, iters: usize) -> (Vec<StreamRow>, Vec<BlobRow>) {
+    let formats = [
+        ("bf16", FloatFormat::Bf16),
+        ("fp16", FloatFormat::Fp16),
+        ("fp8_e4m3", FloatFormat::Fp8E4M3),
+        ("fp8_e5m2", FloatFormat::Fp8E5M2),
+        ("fp4_e2m1", FloatFormat::Fp4E2M1),
+    ];
+    let mut stream_rows = Vec::new();
+    let mut blob_rows = Vec::new();
+    let mut table =
+        Table::new(&["format", "stream", "codec", "ratio", "enc MiB/s", "dec MiB/s"]);
+
+    for (fname, format) in formats {
+        let data = format_bytes(format, n_elems, 7);
+        let set = split_streams(format, &data).expect("split");
+        for s in &set.streams {
+            // The documented BENCH_codec.json schema enumerates exactly
+            // these stream names; fail loudly if a format ever grows more.
+            let sname = match s.kind.label() {
+                "exp" => "exponent",
+                "s+m" => "sign_mantissa",
+                other => panic!("stream kind '{other}' not in the bench JSON schema"),
+            };
+            let native_bytes = (s.native_size_bits() as usize).div_ceil(8);
+            for (cname, codec) in [("huffman", Codec::Huffman), ("rans", Codec::Rans)] {
+                // gate 2.0 forces the backend so every row measures the
+                // coder itself, never the raw fallback (incompressible
+                // streams then honestly show ratio >= 1).
+                let enc = zipnn_lp::codec::encode_stream_with(s, 12, 2.0, None, codec)
+                    .expect("encode");
+                let eb = bench_loop(iters, || {
+                    zipnn_lp::codec::encode_stream_with(s, 12, 2.0, None, codec).unwrap()
+                });
+                let db = bench_loop(iters, || {
+                    zipnn_lp::codec::decode_stream(&enc, None).unwrap()
+                });
+                let decoded = zipnn_lp::codec::decode_stream(&enc, None).unwrap();
+                assert_eq!(decoded, s.bytes, "{fname}/{sname}/{cname} not bit-exact");
+                let row = StreamRow {
+                    format: fname,
+                    stream: sname,
+                    codec: cname,
+                    ratio: enc.encoded_len() as f64 / native_bytes as f64,
+                    encode_mibps: eb.mib_per_sec(s.len()),
+                    decode_mibps: db.mib_per_sec(s.len()),
+                };
+                table.row(&[
+                    row.format.into(),
+                    row.stream.into(),
+                    row.codec.into(),
+                    format!("{:.4}", row.ratio),
+                    format!("{:.0}", row.encode_mibps),
+                    format!("{:.0}", row.decode_mibps),
+                ]);
+                stream_rows.push(row);
+            }
+        }
+
+        for (cname, codec) in [
+            ("auto", Codec::Auto),
+            ("huffman", Codec::Huffman),
+            ("rans", Codec::Rans),
+            ("raw", Codec::Raw),
+        ] {
+            let opts = CompressOptions::for_format(format).with_codec(codec);
+            let blob = compress_tensor(&data, &opts).expect("compress");
+            assert_eq!(decompress_tensor(&blob).unwrap(), data, "{fname}/{cname}");
+            blob_rows.push(BlobRow { format: fname, codec: cname, ratio: blob.ratio() });
+        }
+    }
+
+    println!("Entropy-backend head-to-head (per-stream, gate disabled):\n{}", table.render());
+
+    let mut bt = Table::new(&["format", "auto", "huffman", "rans", "raw"]);
+    for (fname, _) in formats {
+        let get = |codec: &str| {
+            blob_rows
+                .iter()
+                .find(|r| r.format == fname && r.codec == codec)
+                .map(|r| format!("{:.4}", r.ratio))
+                .unwrap_or_default()
+        };
+        bt.row(&[fname.into(), get("auto"), get("huffman"), get("rans"), get("raw")]);
+    }
+    println!("Blob-level compression ratio by --codec:\n{}", bt.render());
+
+    // §Acceptance: on FP8 E4M3 exponent streams rANS matches or beats
+    // Huffman, and auto never loses to the best fixed backend anywhere.
+    let find = |f: &str, s: &str, c: &str| {
+        stream_rows
+            .iter()
+            .find(|r| r.format == f && r.stream == s && r.codec == c)
+            .expect("row")
+            .ratio
+    };
+    let rans = find("fp8_e4m3", "exponent", "rans");
+    let huff = find("fp8_e4m3", "exponent", "huffman");
+    assert!(rans <= huff + 1e-9, "rANS {rans} must match or beat Huffman {huff} on E4M3 exponents");
+    for (fname, _) in formats {
+        let ratio = |codec: &str| {
+            blob_rows.iter().find(|r| r.format == fname && r.codec == codec).expect("row").ratio
+        };
+        let auto = ratio("auto");
+        let best = ratio("huffman").min(ratio("rans")).min(ratio("raw"));
+        assert!(
+            auto <= best + 1e-9,
+            "{fname}: auto {auto} larger than best fixed backend {best}"
+        );
+    }
+    println!("auto ≤ best fixed backend on every format; rANS ≤ Huffman on E4M3 exponents. ✔\n");
+
+    (stream_rows, blob_rows)
+}
+
+/// Serialize the measured rows into the documented `BENCH_codec.json`
+/// schema (see README §Bench trajectory).
+fn write_json(path: &str, streams: &[StreamRow], blobs: &[BlobRow]) {
+    let stream_items: Vec<String> = streams
+        .iter()
+        .map(|r| {
+            jo::obj(&[
+                ("format", jo::string(r.format)),
+                ("stream", jo::string(r.stream)),
+                ("codec", jo::string(r.codec)),
+                ("ratio", jo::num(r.ratio)),
+                ("encode_mibps", jo::num(r.encode_mibps)),
+                ("decode_mibps", jo::num(r.decode_mibps)),
+            ])
+        })
+        .collect();
+    let blob_items: Vec<String> = blobs
+        .iter()
+        .map(|r| {
+            jo::obj(&[
+                ("format", jo::string(r.format)),
+                ("codec", jo::string(r.codec)),
+                ("ratio", jo::num(r.ratio)),
+            ])
+        })
+        .collect();
+    let doc = jo::obj(&[
+        ("schema", jo::uint(1)),
+        ("bench", jo::string("codec_throughput")),
+        ("streams", jo::arr(&stream_items)),
+        ("blobs", jo::arr(&blob_items)),
+    ]);
+    std::fs::write(path, doc + "\n").expect("write bench json");
+    println!("wrote {path}");
+}
+
+fn main() {
+    let args = parse_args();
+    let (mib, elems, iters) = if args.smoke { (1, 64 * 1024, 2) } else { (8, 1 << 21, 5) };
+    stage_benches(mib, iters);
+    let (streams, blobs) = backend_head_to_head(elems, iters);
+    if let Some(path) = &args.json {
+        write_json(path, &streams, &blobs);
+    }
 }

@@ -26,13 +26,24 @@ use zipnn_lp::kvcache::{KvCacheConfig, PagedKvCache};
 use zipnn_lp::metrics::{Table, Timer};
 #[cfg(feature = "pjrt")]
 use zipnn_lp::model::ModelRuntime;
-use zipnn_lp::pool::{PoolConfig, SharedKvPool};
+use zipnn_lp::pool::{PoolConfig, PoolCounters, SharedKvPool};
 use zipnn_lp::synthetic;
 use zipnn_lp::util::human_bytes;
+use zipnn_lp::util::jsonout as jo;
 use zipnn_lp::util::rng::Rng;
 
-fn ratio_sweep() {
+/// One measured (format, distribution) ratio row, kept for `--json`.
+struct SweepRow {
+    format: String,
+    distribution: String,
+    exp_ratio: f64,
+    sm_ratio: f64,
+    overall: f64,
+}
+
+fn ratio_sweep() -> Vec<SweepRow> {
     println!("§4.3 — K/V cache compression ratio sweep (synthetic tensors)");
+    let mut rows = Vec::new();
     let mut table = Table::new(&["format", "distribution", "exp ratio", "s+m ratio", "overall"]);
     let head_dim = 128usize;
     let tokens = 2048usize;
@@ -63,11 +74,19 @@ fn ratio_sweep() {
                 format!("{:.4}", s.sm_ratio()),
                 format!("{:.4}", s.ratio()),
             ]);
+            rows.push(SweepRow {
+                format: format.name().to_string(),
+                distribution: dist.to_string(),
+                exp_ratio: s.exp_ratio(),
+                sm_ratio: s.sm_ratio(),
+                overall: s.ratio(),
+            });
         }
     }
     println!("{}", table.render());
     println!("paper bands: FP8 exp 0.25–0.45; BF16 exp often < 0.20 (real traces);");
     println!("mantissa ≈ raw; overall saving 20–30% with static dictionaries.\n");
+    rows
 }
 
 /// CLI knobs for the budgeted-pool scenario (ignore unknown flags: cargo
@@ -76,13 +95,15 @@ struct PoolBenchArgs {
     budget_mib: Option<f64>,
     workers: usize,
     seqs: usize,
+    json: Option<String>,
 }
 
 fn parse_pool_args() -> PoolBenchArgs {
-    let mut out = PoolBenchArgs { budget_mib: None, workers: 4, seqs: 8 };
+    let mut out = PoolBenchArgs { budget_mib: None, workers: 4, seqs: 8, json: None };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
+            "--json" => out.json = args.next(),
             "--kv-budget-mib" => {
                 if let Some(v) = args.next() {
                     out.budget_mib = v.parse().ok();
@@ -108,7 +129,7 @@ fn parse_pool_args() -> PoolBenchArgs {
 /// raw cache footprint. Every read is checked bit-exact against a shadow
 /// uncompressed cache, and the pool's high-water mark proves the budget was
 /// never violated — not even transiently.
-fn budgeted_pool(args: &PoolBenchArgs) {
+fn budgeted_pool(args: &PoolBenchArgs) -> (PoolCounters, u64) {
     let n_seqs = args.seqs.max(8);
     let workers = args.workers.clamp(1, n_seqs);
     let n_layers = 2usize;
@@ -189,6 +210,7 @@ fn budgeted_pool(args: &PoolBenchArgs) {
         human_bytes(c.high_water_bytes),
         human_bytes(budget)
     );
+    (c, budget)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -246,8 +268,48 @@ fn serving_overhead() {
     println!("paper §5.2: static-dict compression reduces memory 20–30% without significant overhead.");
 }
 
+/// Serialize the sweep + pool figures into the documented `BENCH_kv.json`
+/// schema (see README §Bench trajectory).
+fn write_json(path: &str, sweep: &[SweepRow], pool: &PoolCounters, budget: u64) {
+    let sweep_items: Vec<String> = sweep
+        .iter()
+        .map(|r| {
+            jo::obj(&[
+                ("format", jo::string(&r.format)),
+                ("distribution", jo::string(&r.distribution)),
+                ("exp_ratio", jo::num(r.exp_ratio)),
+                ("sm_ratio", jo::num(r.sm_ratio)),
+                ("overall", jo::num(r.overall)),
+            ])
+        })
+        .collect();
+    let pool_obj = jo::obj(&[
+        ("budget_bytes", jo::uint(budget)),
+        ("high_water_bytes", jo::uint(pool.high_water_bytes)),
+        ("spilled_bytes", jo::uint(pool.spilled_bytes)),
+        ("evictions", jo::uint(pool.evictions)),
+        ("spills", jo::uint(pool.spills)),
+        ("reloads", jo::uint(pool.reloads)),
+        ("spill_bytes_written", jo::uint(pool.spill_bytes_written)),
+        ("spill_bytes_read", jo::uint(pool.spill_bytes_read)),
+        ("spill_read_concurrency", jo::uint(pool.spill_read_concurrency)),
+    ]);
+    let doc = jo::obj(&[
+        ("schema", jo::uint(1)),
+        ("bench", jo::string("kv_cache")),
+        ("sweep", jo::arr(&sweep_items)),
+        ("pool", pool_obj),
+    ]);
+    std::fs::write(path, doc + "\n").expect("write bench json");
+    println!("wrote {path}");
+}
+
 fn main() {
-    ratio_sweep();
-    budgeted_pool(&parse_pool_args());
+    let args = parse_pool_args();
+    let sweep = ratio_sweep();
+    let (pool_counters, budget) = budgeted_pool(&args);
     serving_overhead();
+    if let Some(path) = &args.json {
+        write_json(path, &sweep, &pool_counters, budget);
+    }
 }

@@ -1,14 +1,15 @@
 //! The serialized form of one compressed tensor and its statistics.
 
-use super::Strategy;
+use super::{Codec, Strategy};
 use crate::error::{Error, Result};
 use crate::formats::{FloatFormat, StreamKind};
 use crate::util::varint;
 
 /// Magic prefix of a compressed-tensor blob.
 pub const BLOB_MAGIC: &[u8; 4] = b"ZLPT";
-/// Blob wire version.
-pub const BLOB_VERSION: u16 = 1;
+/// Blob wire version. v2 added the [`Codec`] byte after the format byte;
+/// v1 blobs (implicitly Huffman-only) still deserialize.
+pub const BLOB_VERSION: u16 = 2;
 
 /// Per-chunk directory entry.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -51,6 +52,10 @@ impl StreamStat {
 pub struct CompressedBlob {
     /// Strategy used.
     pub strategy: Strategy,
+    /// Entropy-backend policy the blob was compressed with. Informational:
+    /// each stream frame records its actual backend, so decode works without
+    /// this, but `inspect` reports it.
+    pub codec: Codec,
     /// Element format.
     pub format: FloatFormat,
     /// Original tensor length in bytes.
@@ -96,6 +101,7 @@ impl CompressedBlob {
         out.extend_from_slice(&BLOB_VERSION.to_le_bytes());
         out.push(self.strategy.wire_id());
         out.push(self.format.wire_id());
+        out.push(self.codec.wire_id());
         varint::write_usize(&mut out, self.original_len);
         varint::write_usize(&mut out, self.chunk_size);
         varint::write_usize(&mut out, self.chunks.len());
@@ -120,13 +126,24 @@ impl CompressedBlob {
             return Err(Error::Corrupt("bad blob magic".into()));
         }
         let version = u16::from_le_bytes([buf[4], buf[5]]);
-        if version != BLOB_VERSION {
+        if version == 0 || version > BLOB_VERSION {
             return Err(Error::Corrupt(format!("unsupported blob version {version}")));
         }
         let strategy = Strategy::from_wire_id(buf[6])
             .ok_or_else(|| Error::Corrupt(format!("unknown strategy {}", buf[6])))?;
         let format = FloatFormat::from_wire_id(buf[7])?;
         let mut pos = 8;
+        // v1 predates the codec dimension: those blobs are Huffman-only.
+        let codec = if version >= 2 {
+            let id = *buf
+                .get(pos)
+                .ok_or_else(|| Error::Corrupt("blob header truncated".into()))?;
+            pos += 1;
+            Codec::from_wire_id(id)
+                .ok_or_else(|| Error::Corrupt(format!("unknown codec {id}")))?
+        } else {
+            Codec::Huffman
+        };
         let original_len = varint::read_usize(buf, &mut pos)?;
         let chunk_size = varint::read_usize(buf, &mut pos)?;
         let n_chunks = varint::read_usize(buf, &mut pos)?;
@@ -156,6 +173,7 @@ impl CompressedBlob {
         }
         Ok(CompressedBlob {
             strategy,
+            codec,
             format,
             original_len,
             chunk_size,
@@ -173,6 +191,7 @@ mod tests {
     fn sample_blob() -> CompressedBlob {
         CompressedBlob {
             strategy: Strategy::ExpMantissa,
+            codec: Codec::Auto,
             format: FloatFormat::Bf16,
             original_len: 1000,
             chunk_size: 512,
@@ -191,10 +210,30 @@ mod tests {
         let ser = b.serialize();
         let d = CompressedBlob::deserialize(&ser).unwrap();
         assert_eq!(d.strategy, b.strategy);
+        assert_eq!(d.codec, b.codec);
         assert_eq!(d.format, b.format);
         assert_eq!(d.original_len, b.original_len);
         assert_eq!(d.chunks, b.chunks);
         assert_eq!(d.data, b.data);
+    }
+
+    #[test]
+    fn v1_blob_header_still_parses() {
+        // A v1 header is the v2 header minus the codec byte at offset 8.
+        let mut ser = sample_blob().serialize();
+        ser.remove(8);
+        ser[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let d = CompressedBlob::deserialize(&ser).unwrap();
+        assert_eq!(d.codec, Codec::Huffman, "v1 blobs are Huffman-only");
+        assert_eq!(d.chunks, sample_blob().chunks);
+        assert_eq!(d.data, sample_blob().data);
+        // Future versions are rejected, version 0 too.
+        let mut future = sample_blob().serialize();
+        future[4..6].copy_from_slice(&3u16.to_le_bytes());
+        assert!(CompressedBlob::deserialize(&future).is_err());
+        let mut zero = sample_blob().serialize();
+        zero[4..6].copy_from_slice(&0u16.to_le_bytes());
+        assert!(CompressedBlob::deserialize(&zero).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! over `opts.threads` std threads; chunk outputs are stitched in order.
 
 use super::blob::{ChunkInfo, CompressedBlob, StreamStat};
-use super::stream_codec::{decode_stream, encode_stream, EncodedStream};
+use super::stream_codec::{decode_stream, encode_stream_with, EncodedStream, StreamEncoding};
 use super::{CompressOptions, Strategy};
 use crate::error::{Error, Result};
 use crate::formats::{merge_streams, split_streams, FloatFormat, StreamKind};
@@ -36,7 +36,7 @@ fn encode_chunk(raw: &[u8], opts: &CompressOptions) -> Result<(Vec<u8>, Vec<Stre
         } else {
             opts.gate_threshold
         };
-        let enc = encode_stream(stream, opts.len_limit, gate, None)?;
+        let enc = encode_stream_with(stream, opts.len_limit, gate, None, opts.codec)?;
         stats.push(StreamStat {
             kind: stream.kind,
             original_bytes: stream.native_size_bits().div_ceil(8),
@@ -157,6 +157,7 @@ pub(crate) fn compress_with_strategy(
     }
     Ok(CompressedBlob {
         strategy,
+        codec: opts.codec,
         format: opts.format,
         original_len: data.len(),
         chunk_size,
@@ -237,6 +238,108 @@ pub fn decompress_tensor_threads(blob: &CompressedBlob, threads: usize) -> Resul
         )));
     }
     Ok(out)
+}
+
+/// Per-kind observability for one blob: which backends its stream frames
+/// actually used and at what cost. Built by [`stream_report`]; this is what
+/// `inspect` prints so per-stream codec selection is visible without
+/// decoding any payload.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    /// Component kind.
+    pub kind: StreamKind,
+    /// Bytes the component occupies in the original tensor.
+    pub original_bytes: u64,
+    /// Encoded bytes (tables + payloads).
+    pub compressed_bytes: u64,
+    /// Frame count per encoding, `[huffman, huffman-dict, raw, constant, rans]`.
+    pub encoding_counts: [u64; 5],
+}
+
+impl StreamReport {
+    /// compressed / original (1.0 when original is empty).
+    pub fn ratio(&self) -> f64 {
+        if self.original_bytes == 0 {
+            1.0
+        } else {
+            self.compressed_bytes as f64 / self.original_bytes as f64
+        }
+    }
+
+    /// Human summary of the encodings used, e.g. `"rans x12, raw x3"`.
+    pub fn encodings(&self) -> String {
+        let labels = [
+            StreamEncoding::Huffman,
+            StreamEncoding::HuffmanDict,
+            StreamEncoding::Raw,
+            StreamEncoding::Constant,
+            StreamEncoding::Rans,
+        ];
+        let parts: Vec<String> = labels
+            .iter()
+            .zip(self.encoding_counts)
+            .filter(|&(_, n)| n > 0)
+            .map(|(e, n)| format!("{} x{n}", e.label()))
+            .collect();
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+}
+
+/// Walk a blob's chunk frames (without decoding payloads) and aggregate the
+/// per-stream backend choices and sizes. Works for the chunked strategies
+/// ([`Strategy::ExpMantissa`], [`Strategy::Delta`], [`Strategy::Store`]);
+/// FP4 block blobs have their own frame layout and are rejected.
+pub fn stream_report(blob: &CompressedBlob) -> Result<Vec<StreamReport>> {
+    if blob.strategy == Strategy::Fp4Block {
+        return Err(Error::InvalidInput(
+            "stream report not available for FP4 block blobs".into(),
+        ));
+    }
+    let mut reports: Vec<StreamReport> = Vec::new();
+    let mut off = 0usize;
+    for c in &blob.chunks {
+        if off + c.enc_len > blob.data.len() {
+            return Err(Error::Corrupt("chunk data truncated".into()));
+        }
+        let enc = &blob.data[off..off + c.enc_len];
+        off += c.enc_len;
+        if enc.is_empty() {
+            return Err(Error::Corrupt("empty chunk".into()));
+        }
+        let n_streams = enc[0] as usize;
+        let mut pos = 1usize;
+        for _ in 0..n_streams {
+            let frame = EncodedStream::read_from(enc, &mut pos)?;
+            let kind = StreamKind::from_wire_id(frame.kind_id)
+                .ok_or_else(|| Error::Corrupt(format!("unknown stream kind {}", frame.kind_id)))?;
+            let report = match reports.iter_mut().position(|r| r.kind == kind) {
+                Some(i) => &mut reports[i],
+                None => {
+                    reports.push(StreamReport {
+                        kind,
+                        original_bytes: 0,
+                        compressed_bytes: 0,
+                        encoding_counts: [0; 5],
+                    });
+                    reports.last_mut().unwrap()
+                }
+            };
+            report.original_bytes += frame.native_len() as u64;
+            report.compressed_bytes += frame.encoded_len() as u64;
+            report.encoding_counts[frame.encoding.wire_id() as usize] += 1;
+        }
+        // Same strictness as decode_chunk_bytes: a chunk with bytes after
+        // its frames cannot be decompressed, so the report must not present
+        // it as clean either.
+        if pos != enc.len() {
+            return Err(Error::Corrupt("trailing bytes after chunk streams".into()));
+        }
+    }
+    Ok(reports)
 }
 
 /// Random access: decompress only chunk `index` (§3.1).

@@ -11,8 +11,8 @@
 //! [`StreamKind::Payload`] (raw) and [`StreamKind::Scale`]-derived streams.
 
 use super::blob::{ChunkInfo, CompressedBlob, StreamStat};
-use super::stream_codec::{decode_stream, encode_stream, EncodedStream};
-use super::{CompressOptions, Strategy};
+use super::stream_codec::{decode_stream, encode_stream_with, EncodedStream};
+use super::{Codec, CompressOptions, Strategy};
 use crate::error::{Error, Result};
 use crate::formats::fp4::{Mxfp4Tensor, Nvfp4Tensor};
 use crate::formats::streams::{Stream, StreamKind};
@@ -34,7 +34,8 @@ pub fn compress_nvfp4(t: &Nvfp4Tensor, opts: &CompressOptions) -> Result<Compres
 
     let payload_stream = Stream::new(StreamKind::Payload, t.payload.clone(), 8);
     // Payload: stored raw per the paper (incompressible; gate forced off).
-    let enc_payload = encode_stream(&payload_stream, opts.len_limit, 0.0, None)?;
+    let enc_payload =
+        encode_stream_with(&payload_stream, opts.len_limit, 0.0, None, Codec::Raw)?;
     let mut stats = vec![StreamStat {
         kind: StreamKind::Payload,
         original_bytes: t.payload.len() as u64,
@@ -45,7 +46,7 @@ pub fn compress_nvfp4(t: &Nvfp4Tensor, opts: &CompressOptions) -> Result<Compres
     let mut scale_orig = 0u64;
     let mut scale_comp = 0u64;
     for s in &scale_set.streams {
-        let enc = encode_stream(s, opts.len_limit, opts.gate_threshold, None)?;
+        let enc = encode_stream_with(s, opts.len_limit, opts.gate_threshold, None, opts.codec)?;
         scale_orig += s.native_size_bits().div_ceil(8);
         scale_comp += enc.encoded_len() as u64;
         enc.write_to(&mut data);
@@ -63,6 +64,7 @@ pub fn compress_nvfp4(t: &Nvfp4Tensor, opts: &CompressOptions) -> Result<Compres
     raw_all.extend_from_slice(&t.global_scale.to_le_bytes());
     Ok(CompressedBlob {
         strategy: Strategy::Fp4Block,
+        codec: opts.codec,
         format: FloatFormat::Fp4E2M1,
         original_len,
         chunk_size: original_len,
@@ -134,7 +136,8 @@ pub fn compress_mxfp4(t: &Mxfp4Tensor, opts: &CompressOptions) -> Result<Compres
     data.push((1 + scale_set.streams.len()) as u8);
 
     let payload_stream = Stream::new(StreamKind::Payload, t.payload.clone(), 8);
-    let enc_payload = encode_stream(&payload_stream, opts.len_limit, 0.0, None)?;
+    let enc_payload =
+        encode_stream_with(&payload_stream, opts.len_limit, 0.0, None, Codec::Raw)?;
     let mut stats = vec![StreamStat {
         kind: StreamKind::Payload,
         original_bytes: t.payload.len() as u64,
@@ -145,7 +148,7 @@ pub fn compress_mxfp4(t: &Mxfp4Tensor, opts: &CompressOptions) -> Result<Compres
     let mut scale_orig = 0u64;
     let mut scale_comp = 0u64;
     for s in &scale_set.streams {
-        let enc = encode_stream(s, opts.len_limit, opts.gate_threshold, None)?;
+        let enc = encode_stream_with(s, opts.len_limit, opts.gate_threshold, None, opts.codec)?;
         scale_orig += s.native_size_bits().div_ceil(8);
         scale_comp += enc.encoded_len() as u64;
         enc.write_to(&mut data);
@@ -162,6 +165,7 @@ pub fn compress_mxfp4(t: &Mxfp4Tensor, opts: &CompressOptions) -> Result<Compres
     raw_all.extend_from_slice(&t.scales);
     Ok(CompressedBlob {
         strategy: Strategy::Fp4Block,
+        codec: opts.codec,
         format: FloatFormat::Fp4E2M1,
         original_len,
         chunk_size: original_len,

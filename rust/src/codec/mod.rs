@@ -7,9 +7,10 @@
 //! 2. Chunk the byte buffer into fixed-size chunks (default 256 KiB) — the
 //!    paper's unit of random access and parallel decode.
 //! 3. Per chunk: split into component streams ([`crate::formats`]), then per
-//!    stream: build a canonical Huffman table and code it, **unless** the
-//!    entropy gate says the stream is incompressible, in which case it is
-//!    stored raw at native bit density.
+//!    stream: entropy-code with the configured backend ([`Codec`]) — by
+//!    default the auto-selector picks canonical Huffman or interleaved rANS,
+//!    whichever is cheaper — **unless** the entropy gate says the stream is
+//!    incompressible, in which case it is stored raw at native bit density.
 //! 4. Frame everything with lightweight metadata + CRC32 per chunk.
 //!
 //! The FP4 block strategy (§3.4) stores payload nibbles raw by construction
@@ -24,10 +25,13 @@ mod stream_codec;
 pub use blob::{ChunkInfo, CompressedBlob, StreamStat};
 pub use chunked::{
     compress_tensor, decompress_chunk, decompress_tensor, decompress_tensor_threads,
+    stream_report, StreamReport,
 };
 pub use delta::{compress_delta, decompress_delta, xor_buffers, xor_into};
 pub use fp4block::{compress_mxfp4, compress_nvfp4, decompress_mxfp4, decompress_nvfp4};
-pub use stream_codec::{encode_stream, decode_stream, EncodedStream, StreamEncoding};
+pub use stream_codec::{
+    decode_stream, encode_stream, encode_stream_with, EncodedStream, StreamEncoding,
+};
 
 use crate::formats::FloatFormat;
 use crate::huffman::DEFAULT_CODE_LEN_LIMIT;
@@ -69,6 +73,73 @@ impl Strategy {
     }
 }
 
+/// Entropy-backend policy, orthogonal to [`Strategy`]: the *strategy* says
+/// how a tensor is decomposed (delta, stream separation, FP4 blocks), the
+/// *codec* says which entropy backend codes the resulting streams.
+///
+/// Every stream frame records the backend actually used, so decoding never
+/// needs this field — blobs mix backends freely (e.g. rANS exponents next
+/// to raw mantissas under `Auto`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Pick the cheapest backend per stream, by exact encoded size.
+    /// Huffman's cost is known exactly from the histogram; rANS is measured
+    /// (actually encoded) whenever its provable lower bound could win.
+    Auto,
+    /// Canonical length-limited Huffman only ([`crate::huffman`]).
+    Huffman,
+    /// Interleaved rANS only ([`crate::rans`]).
+    Rans,
+    /// No entropy coding: everything packed at native bit density.
+    Raw,
+}
+
+impl Codec {
+    /// Wire id (serialized in v2 blob headers).
+    pub fn wire_id(self) -> u8 {
+        match self {
+            Codec::Auto => 0,
+            Codec::Huffman => 1,
+            Codec::Rans => 2,
+            Codec::Raw => 3,
+        }
+    }
+
+    /// Inverse of [`wire_id`](Self::wire_id).
+    pub fn from_wire_id(id: u8) -> Option<Self> {
+        match id {
+            0 => Some(Codec::Auto),
+            1 => Some(Codec::Huffman),
+            2 => Some(Codec::Rans),
+            3 => Some(Codec::Raw),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI name (`auto`, `huffman`, `rans`, `raw`).
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "auto" => Ok(Codec::Auto),
+            "huffman" | "huff" => Ok(Codec::Huffman),
+            "rans" | "ans" => Ok(Codec::Rans),
+            "raw" | "none" => Ok(Codec::Raw),
+            other => Err(crate::error::Error::InvalidInput(format!(
+                "unknown codec '{other}' (expected auto|huffman|rans|raw)"
+            ))),
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Auto => "auto",
+            Codec::Huffman => "huffman",
+            Codec::Rans => "rans",
+            Codec::Raw => "raw",
+        }
+    }
+}
+
 /// Default chunk size: 256 KiB of original tensor bytes — large enough for
 /// stable per-chunk histograms, small enough for random access (§3.1).
 pub const DEFAULT_CHUNK_SIZE: usize = 256 * 1024;
@@ -89,6 +160,8 @@ pub struct CompressOptions {
     pub threads: usize,
     /// Force-disable mantissa coding (ablation: exponent-only mode).
     pub exponent_only: bool,
+    /// Entropy backend policy ([`Codec::Auto`] picks per stream).
+    pub codec: Codec,
 }
 
 impl CompressOptions {
@@ -113,6 +186,7 @@ impl CompressOptions {
             gate_threshold: crate::entropy::DEFAULT_GATE_THRESHOLD,
             threads: 1,
             exponent_only: false,
+            codec: Codec::Auto,
         }
     }
 
@@ -166,6 +240,23 @@ impl CompressOptions {
         self.len_limit = limit;
         self
     }
+
+    /// Builder-style entropy-backend override. [`Codec::Auto`] (the
+    /// default) picks the cheapest backend per stream; the fixed settings
+    /// pin one backend for ablations and wire-compat testing.
+    ///
+    /// ```
+    /// use zipnn_lp::codec::{Codec, CompressOptions};
+    /// use zipnn_lp::formats::FloatFormat;
+    ///
+    /// let opts = CompressOptions::for_format(FloatFormat::Fp8E4M3).with_codec(Codec::Rans);
+    /// assert_eq!(opts.codec, Codec::Rans);
+    /// assert_eq!(CompressOptions::for_format(FloatFormat::Bf16).codec, Codec::Auto);
+    /// ```
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -178,6 +269,16 @@ mod tests {
             assert_eq!(Strategy::from_wire_id(s.wire_id()), Some(s));
         }
         assert_eq!(Strategy::from_wire_id(200), None);
+    }
+
+    #[test]
+    fn codec_wire_and_parse_roundtrip() {
+        for c in [Codec::Auto, Codec::Huffman, Codec::Rans, Codec::Raw] {
+            assert_eq!(Codec::from_wire_id(c.wire_id()), Some(c));
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(Codec::from_wire_id(99), None);
+        assert!(Codec::parse("zstd").is_err());
     }
 
     #[test]

@@ -1,10 +1,13 @@
-//! Per-stream encode/decode: the entropy gate + Huffman/raw decision.
+//! Per-stream encode/decode: the entropy gate plus the Huffman/rANS/raw
+//! backend selection.
 
-use crate::entropy::{decide, Histogram};
+use super::Codec;
+use crate::entropy::{decide, decide_codec, Histogram};
 use crate::error::{Error, Result};
 use crate::formats::packing;
 use crate::formats::streams::Stream;
 use crate::huffman::{CodeTable, HuffmanDecoder, HuffmanEncoder};
+use crate::rans::{FreqTable, RansDecoder, RansEncoder};
 use crate::util::varint;
 
 /// How a stream ended up encoded.
@@ -22,6 +25,10 @@ pub enum StreamEncoding {
     /// paper's sub-0.125 ratios (abstract: "as low as 0.07") — fully-zero
     /// chunks cost ~6 bytes instead of 1 bit/symbol.
     Constant,
+    /// Interleaved rANS with an embedded compact frequency table. Codes at
+    /// fractional-bit granularity, beating Huffman's 1-bit floor on the
+    /// concentrated exponent histograms of low-precision formats.
+    Rans,
 }
 
 impl StreamEncoding {
@@ -31,6 +38,7 @@ impl StreamEncoding {
             StreamEncoding::HuffmanDict => 1,
             StreamEncoding::Raw => 2,
             StreamEncoding::Constant => 3,
+            StreamEncoding::Rans => 4,
         }
     }
 
@@ -40,7 +48,19 @@ impl StreamEncoding {
             1 => Some(StreamEncoding::HuffmanDict),
             2 => Some(StreamEncoding::Raw),
             3 => Some(StreamEncoding::Constant),
+            4 => Some(StreamEncoding::Rans),
             _ => None,
+        }
+    }
+
+    /// Short label for reports (`inspect`, benches).
+    pub fn label(self) -> &'static str {
+        match self {
+            StreamEncoding::Huffman => "huffman",
+            StreamEncoding::HuffmanDict => "huffman-dict",
+            StreamEncoding::Raw => "raw",
+            StreamEncoding::Constant => "constant",
+            StreamEncoding::Rans => "rans",
         }
     }
 }
@@ -56,7 +76,9 @@ pub struct EncodedStream {
     pub native_bits: u8,
     /// Number of symbols.
     pub n_symbols: usize,
-    /// Serialized Huffman table (empty for Raw / HuffmanDict).
+    /// Serialized code table: fixed-width Huffman lengths for
+    /// [`StreamEncoding::Huffman`], a compact frequency table for
+    /// [`StreamEncoding::Rans`], empty otherwise.
     pub table: Vec<u8>,
     /// The coded payload.
     pub payload: Vec<u8>,
@@ -80,9 +102,18 @@ impl EncodedStream {
         out.push(self.encoding.wire_id());
         out.push(self.native_bits);
         varint::write_usize(out, self.n_symbols);
-        if self.encoding == StreamEncoding::Huffman {
-            debug_assert_eq!(self.table.len(), crate::huffman::table_serialized_len());
-            out.extend_from_slice(&self.table);
+        match self.encoding {
+            StreamEncoding::Huffman => {
+                debug_assert_eq!(self.table.len(), crate::huffman::table_serialized_len());
+                out.extend_from_slice(&self.table);
+            }
+            StreamEncoding::Rans => {
+                // rANS tables are variable-length (only present symbols are
+                // serialized), so the frame carries an explicit length.
+                varint::write_usize(out, self.table.len());
+                out.extend_from_slice(&self.table);
+            }
+            _ => {}
         }
         varint::write_usize(out, self.payload.len());
         out.extend_from_slice(&self.payload);
@@ -102,10 +133,13 @@ impl EncodedStream {
         let encoding = StreamEncoding::from_wire_id(hdr[1])
             .ok_or_else(|| Error::Corrupt(format!("unknown stream encoding {}", hdr[1])))?;
         let n_symbols = varint::read_usize(buf, pos)?;
-        let table = if encoding == StreamEncoding::Huffman {
-            take(buf, pos, crate::huffman::table_serialized_len())?
-        } else {
-            Vec::new()
+        let table = match encoding {
+            StreamEncoding::Huffman => take(buf, pos, crate::huffman::table_serialized_len())?,
+            StreamEncoding::Rans => {
+                let len = varint::read_usize(buf, pos)?;
+                take(buf, pos, len)?
+            }
+            _ => Vec::new(),
         };
         let payload_len = varint::read_usize(buf, pos)?;
         let payload = take(buf, pos, payload_len)?;
@@ -120,19 +154,38 @@ impl EncodedStream {
     }
 }
 
-/// Encode one component stream.
+/// Encode one component stream with the Huffman backend (wire- and
+/// behavior-compatible with the pre-[`Codec`] codec).
 ///
 /// * With `dictionary = Some(table)`, the stream is coded against the shared
 ///   table when it covers the data and beats raw (no embedded table); used
 ///   by the K/V dictionary manager.
 /// * Otherwise a per-stream table is built and embedded, gated on entropy.
-/// * `gate_threshold > = 1.0` forces Huffman whenever it is valid (used for
+/// * `gate_threshold >= 1.0` forces Huffman whenever it is valid (used for
 ///   ablations); `0.0` forces raw.
 pub fn encode_stream(
     stream: &Stream,
     len_limit: u8,
     gate_threshold: f64,
     dictionary: Option<&CodeTable>,
+) -> Result<EncodedStream> {
+    encode_stream_with(stream, len_limit, gate_threshold, dictionary, Codec::Huffman)
+}
+
+/// Encode one component stream with an explicit entropy-backend policy.
+///
+/// `Codec::Auto` selects per stream by **exact** encoded size: Huffman's
+/// cost is computable from the histogram alone (table + ⌈Σ count·len / 8⌉),
+/// while rANS is actually encoded — measured, not guessed — whenever its
+/// provable size lower bound ([`crate::rans::payload_lower_bound_bytes`])
+/// could still beat the best other backend. The result is never larger than
+/// what any fixed backend would have produced for the same stream.
+pub fn encode_stream_with(
+    stream: &Stream,
+    len_limit: u8,
+    gate_threshold: f64,
+    dictionary: Option<&CodeTable>,
+    codec: Codec,
 ) -> Result<EncodedStream> {
     let kind_id = stream.kind.wire_id();
     let native_bits = stream.native_bits;
@@ -149,7 +202,7 @@ pub fn encode_stream(
         }
     };
 
-    if n_symbols == 0 {
+    if n_symbols == 0 || codec == Codec::Raw {
         return Ok(raw(stream));
     }
 
@@ -187,32 +240,121 @@ pub fn encode_stream(
         // adaptive-refresh policy observes this through the encoding field).
     }
 
-    // Entropy gate, measured against the stream's NATIVE density: a 4-bit
-    // exponent stream stored raw costs 4 bits/symbol, so Huffman must beat
-    // that, not 8.
-    let d = decide(&hist, f64::INFINITY); // get expected ratio only
-    let expected_bits_per_sym = d.expected_ratio * 8.0;
-    let gate_ok = expected_bits_per_sym < gate_threshold * native_bits as f64;
-    if !gate_ok {
-        return Ok(raw(stream));
-    }
-    let table = CodeTable::build(&hist, len_limit)?;
-    let enc = HuffmanEncoder::new(&table);
-    // Final sanity: if the real coded size (incl. table) loses to raw,
-    // store raw. Cost comes from the histogram — no extra data pass.
-    let coded_bytes = (table.cost_bits(&hist) as usize).div_ceil(8)
-        + crate::huffman::table_serialized_len();
     let raw_bytes = packing::packed_len(n_symbols, native_bits);
-    if coded_bytes >= raw_bytes && gate_threshold <= 1.0 {
-        return Ok(raw(stream));
+    // Entropy gates, measured against the stream's NATIVE density: a 4-bit
+    // exponent stream stored raw costs 4 bits/symbol, so a backend must
+    // beat that, not 8. Per-backend estimates (each used exactly as its
+    // fixed path uses it, so Auto is never stricter than any fixed codec):
+    let d = decide(&hist, f64::INFINITY); // huffman estimate, no 1-bit floor
+    let huffman_gate = d.expected_ratio * 8.0 < gate_threshold * native_bits as f64;
+    let cd = decide_codec(&hist, native_bits, gate_threshold);
+    let rans_gate = cd.rans_bits < gate_threshold * native_bits as f64;
+
+    // All size comparisons below are *frame-inclusive*: the shared framing
+    // (kind + encoding + bits + symbol-count varint) is identical across
+    // backends, but rANS frames carry a table-length varint and payload
+    // varints differ with payload size, so comparing bare table+payload
+    // bytes could misrank candidates by a byte or two.
+    match codec {
+        Codec::Huffman => {
+            if !huffman_gate {
+                return Ok(raw(stream));
+            }
+            let table = CodeTable::build(&hist, len_limit)?;
+            // Final sanity: if the real coded size (incl. table + framing)
+            // loses to raw, store raw. Cost comes from the histogram — no
+            // extra data pass.
+            if huffman_framed_bytes(&table, &hist) >= raw_framed_bytes(raw_bytes)
+                && gate_threshold <= 1.0
+            {
+                return Ok(raw(stream));
+            }
+            Ok(huffman_stream(stream, &table, kind_id))
+        }
+        Codec::Rans => {
+            if !rans_gate {
+                return Ok(raw(stream));
+            }
+            let table = FreqTable::from_histogram(&hist)?;
+            let enc = rans_stream(stream, &table, kind_id)?;
+            if rans_framed_bytes(&enc) >= raw_framed_bytes(raw_bytes) && gate_threshold <= 1.0 {
+                return Ok(raw(stream));
+            }
+            Ok(enc)
+        }
+        Codec::Auto => {
+            if !huffman_gate && !rans_gate {
+                return Ok(raw(stream));
+            }
+            // Huffman cost is exact without encoding.
+            let htable = CodeTable::build(&hist, len_limit)?;
+            let huffman_framed = huffman_framed_bytes(&htable, &hist);
+            let raw_framed = raw_framed_bytes(raw_bytes);
+            // rANS: encode (measure) only when its sound lower bound could
+            // still win against the best of raw and Huffman.
+            let rtable = FreqTable::from_histogram(&hist)?;
+            let rans_lb = rtable.serialize().len()
+                + crate::rans::payload_lower_bound_bytes(rtable.cost_bits(&hist), n_symbols);
+            let best_fixed = raw_framed.min(huffman_framed);
+            let rans_enc = if rans_lb <= best_fixed || gate_threshold > 1.0 {
+                Some(rans_stream(stream, &rtable, kind_id)?)
+            } else {
+                None
+            };
+            let rans_framed = rans_enc.as_ref().map_or(usize::MAX, rans_framed_bytes);
+            if gate_threshold <= 1.0 && raw_framed <= huffman_framed.min(rans_framed) {
+                return Ok(raw(stream));
+            }
+            if rans_framed < huffman_framed {
+                Ok(rans_enc.expect("rans measured when selected"))
+            } else {
+                Ok(huffman_stream(stream, &htable, kind_id))
+            }
+        }
+        Codec::Raw => unreachable!("handled above"),
     }
-    Ok(EncodedStream {
+}
+
+/// Exact frame bytes (minus the backend-independent header) a Huffman code
+/// would produce for `hist`: table + payload + payload-length varint.
+fn huffman_framed_bytes(table: &CodeTable, hist: &Histogram) -> usize {
+    let payload = (table.cost_bits(hist) as usize).div_ceil(8);
+    crate::huffman::table_serialized_len() + payload + varint::len_u64(payload as u64)
+}
+
+/// Frame bytes (minus the backend-independent header) of an encoded rANS
+/// stream: table-length varint + table + payload-length varint + payload.
+fn rans_framed_bytes(enc: &EncodedStream) -> usize {
+    varint::len_u64(enc.table.len() as u64)
+        + enc.table.len()
+        + varint::len_u64(enc.payload.len() as u64)
+        + enc.payload.len()
+}
+
+/// Frame bytes (minus the backend-independent header) of raw storage.
+fn raw_framed_bytes(raw_bytes: usize) -> usize {
+    raw_bytes + varint::len_u64(raw_bytes as u64)
+}
+
+fn huffman_stream(stream: &Stream, table: &CodeTable, kind_id: u8) -> EncodedStream {
+    EncodedStream {
         kind_id,
         encoding: StreamEncoding::Huffman,
-        native_bits,
-        n_symbols,
+        native_bits: stream.native_bits,
+        n_symbols: stream.len(),
         table: table.serialize(),
-        payload: enc.encode(&stream.bytes),
+        payload: HuffmanEncoder::new(table).encode(&stream.bytes),
+    }
+}
+
+fn rans_stream(stream: &Stream, table: &FreqTable, kind_id: u8) -> Result<EncodedStream> {
+    Ok(EncodedStream {
+        kind_id,
+        encoding: StreamEncoding::Rans,
+        native_bits: stream.native_bits,
+        n_symbols: stream.len(),
+        table: table.serialize(),
+        payload: RansEncoder::new(table).encode(&stream.bytes)?,
     })
 }
 
@@ -232,6 +374,10 @@ pub fn decode_stream(enc: &EncodedStream, dictionary: Option<&CodeTable>) -> Res
         StreamEncoding::Huffman => {
             let table = CodeTable::deserialize(&enc.table)?;
             HuffmanDecoder::new(&table)?.decode(&enc.payload, enc.n_symbols)
+        }
+        StreamEncoding::Rans => {
+            let table = FreqTable::deserialize(&enc.table)?;
+            RansDecoder::new(&table).decode(&enc.payload, enc.n_symbols)
         }
         StreamEncoding::HuffmanDict => {
             let dict = dictionary.ok_or_else(|| {
@@ -269,11 +415,13 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut bytes = vec![0u8; 8192];
         rng.fill_bytes(&mut bytes);
-        let s = mk(bytes.clone(), 8);
-        let e = encode_stream(&s, 12, 0.97, None).unwrap();
-        assert_eq!(e.encoding, StreamEncoding::Raw);
-        assert_eq!(e.encoded_len(), bytes.len());
-        assert_eq!(decode_stream(&e, None).unwrap(), bytes);
+        for codec in [Codec::Huffman, Codec::Rans, Codec::Auto, Codec::Raw] {
+            let s = mk(bytes.clone(), 8);
+            let e = encode_stream_with(&s, 12, 0.97, None, codec).unwrap();
+            assert_eq!(e.encoding, StreamEncoding::Raw, "{codec:?}");
+            assert_eq!(e.encoded_len(), bytes.len());
+            assert_eq!(decode_stream(&e, None).unwrap(), bytes);
+        }
     }
 
     #[test]
@@ -290,12 +438,14 @@ mod tests {
 
     #[test]
     fn sub_byte_gate_uses_native_width() {
-        // 4-bit symbols with ~3.9 bits of entropy: Huffman over bytes would
-        // "compress" 8→4 bits but cannot beat the 4-bit native packing.
+        // 4-bit symbols with ~3.9 bits of entropy: entropy coding over bytes
+        // would "compress" 8→4 bits but cannot beat the 4-bit native packing.
         let mut rng = Rng::new(4);
         let bytes: Vec<u8> = (0..20_000).map(|_| (rng.next_u32() & 0xF) as u8).collect();
-        let e = encode_stream(&mk(bytes, 4), 12, 0.97, None).unwrap();
-        assert_eq!(e.encoding, StreamEncoding::Raw);
+        for codec in [Codec::Huffman, Codec::Rans, Codec::Auto] {
+            let e = encode_stream_with(&mk(bytes.clone(), 4), 12, 0.97, None, codec).unwrap();
+            assert_eq!(e.encoding, StreamEncoding::Raw, "{codec:?}");
+        }
     }
 
     #[test]
@@ -311,17 +461,90 @@ mod tests {
     }
 
     #[test]
+    fn rans_codec_roundtrips_and_beats_huffman_on_peaked_streams() {
+        // FP8-exponent-like: one dominant binade, sub-1-bit entropy.
+        let mut rng = Rng::new(9);
+        let bytes: Vec<u8> = (0..30_000)
+            .map(|_| if rng.next_f64() < 0.95 { 8u8 } else { (rng.below(4) + 7) as u8 })
+            .collect();
+        let s = mk(bytes.clone(), 4);
+        let r = encode_stream_with(&s, 12, 0.97, None, Codec::Rans).unwrap();
+        assert_eq!(r.encoding, StreamEncoding::Rans);
+        assert_eq!(decode_stream(&r, None).unwrap(), bytes);
+        let h = encode_stream_with(&s, 12, 0.97, None, Codec::Huffman).unwrap();
+        assert!(
+            r.encoded_len() < h.encoded_len(),
+            "rans {} !< huffman {}",
+            r.encoded_len(),
+            h.encoded_len()
+        );
+    }
+
+    #[test]
+    fn auto_never_loses_to_any_fixed_backend() {
+        let mut rng = Rng::new(10);
+        for case in 0..60 {
+            let n = 64 + rng.below(20_000) as usize;
+            let native = [4u8, 5, 8][case % 3];
+            let spread = 1u64 << (1 + rng.below(native as u64));
+            let bytes: Vec<u8> = (0..n)
+                .map(|_| {
+                    if rng.next_f64() < 0.8 {
+                        (spread / 2) as u8
+                    } else {
+                        rng.below(spread) as u8
+                    }
+                })
+                .collect();
+            let s = mk(bytes.clone(), native);
+            let framed = |e: &EncodedStream| {
+                let mut buf = Vec::new();
+                e.write_to(&mut buf);
+                buf.len()
+            };
+            let auto = encode_stream_with(&s, 12, 0.97, None, Codec::Auto).unwrap();
+            assert_eq!(decode_stream(&auto, None).unwrap(), bytes, "case {case}");
+            for fixed in [Codec::Huffman, Codec::Rans, Codec::Raw] {
+                let e = encode_stream_with(&s, 12, 0.97, None, fixed).unwrap();
+                assert!(
+                    framed(&auto) <= framed(&e),
+                    "case {case}: auto {} > {fixed:?} {}",
+                    framed(&auto),
+                    framed(&e)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forced_codec_with_gate_above_one() {
+        // gate > 1.0 forces the backend even on incompressible data.
+        let mut rng = Rng::new(13);
+        let mut bytes = vec![0u8; 4096];
+        rng.fill_bytes(&mut bytes);
+        let h = encode_stream_with(&mk(bytes.clone(), 8), 12, 1.5, None, Codec::Huffman).unwrap();
+        assert_eq!(h.encoding, StreamEncoding::Huffman);
+        assert_eq!(decode_stream(&h, None).unwrap(), bytes);
+        let r = encode_stream_with(&mk(bytes.clone(), 8), 12, 1.5, None, Codec::Rans).unwrap();
+        assert_eq!(r.encoding, StreamEncoding::Rans);
+        assert_eq!(decode_stream(&r, None).unwrap(), bytes);
+    }
+
+    #[test]
     fn dictionary_hit_and_miss() {
         let mut rng = Rng::new(6);
         let train: Vec<u8> = (0..50_000).map(|_| (rng.below(8) + 120) as u8).collect();
         let dict = CodeTable::build(&Histogram::from_bytes(&train), 12).unwrap();
 
-        // Hit: same distribution.
+        // Hit: same distribution — for every codec policy, the shared
+        // dictionary wins (no embedded table at all).
         let data: Vec<u8> = (0..5000).map(|_| (rng.below(8) + 120) as u8).collect();
-        let e = encode_stream(&mk(data.clone(), 8), 12, 0.97, Some(&dict)).unwrap();
-        assert_eq!(e.encoding, StreamEncoding::HuffmanDict);
-        assert!(e.table.is_empty());
-        assert_eq!(decode_stream(&e, Some(&dict)).unwrap(), data);
+        for codec in [Codec::Huffman, Codec::Rans, Codec::Auto] {
+            let e = encode_stream_with(&mk(data.clone(), 8), 12, 0.97, Some(&dict), codec).unwrap();
+            assert_eq!(e.encoding, StreamEncoding::HuffmanDict, "{codec:?}");
+            assert!(e.table.is_empty());
+            assert_eq!(decode_stream(&e, Some(&dict)).unwrap(), data);
+        }
 
         // Miss: contains symbols outside the dictionary.
         let data2 = vec![5u8; 4000];
@@ -344,32 +567,44 @@ mod tests {
     fn frame_roundtrip() {
         let mut rng = Rng::new(7);
         let bytes: Vec<u8> = (0..3000).map(|_| if rng.next_f64() < 0.7 { 1 } else { 2 }).collect();
-        let e = encode_stream(&mk(bytes.clone(), 8), 12, 0.97, None).unwrap();
-        let mut buf = Vec::new();
-        e.write_to(&mut buf);
-        let mut pos = 0;
-        let e2 = EncodedStream::read_from(&buf, &mut pos).unwrap();
-        assert_eq!(pos, buf.len());
-        assert_eq!(e2.encoding, e.encoding);
-        assert_eq!(e2.n_symbols, e.n_symbols);
-        assert_eq!(decode_stream(&e2, None).unwrap(), bytes);
+        for codec in [Codec::Huffman, Codec::Rans, Codec::Auto, Codec::Raw] {
+            let e = encode_stream_with(&mk(bytes.clone(), 8), 12, 0.97, None, codec).unwrap();
+            let mut buf = Vec::new();
+            e.write_to(&mut buf);
+            let mut pos = 0;
+            let e2 = EncodedStream::read_from(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len(), "{codec:?}");
+            assert_eq!(e2.encoding, e.encoding);
+            assert_eq!(e2.n_symbols, e.n_symbols);
+            assert_eq!(e2.table, e.table);
+            assert_eq!(decode_stream(&e2, None).unwrap(), bytes, "{codec:?}");
+        }
     }
 
     #[test]
     fn frame_truncation_detected() {
-        let e = encode_stream(&mk(vec![1u8; 100], 8), 12, 0.97, None).unwrap();
-        let mut buf = Vec::new();
-        e.write_to(&mut buf);
-        for cut in [0, 1, 2, buf.len() - 1] {
-            let mut pos = 0;
-            assert!(EncodedStream::read_from(&buf[..cut], &mut pos).is_err(), "cut={cut}");
+        let mut rng = Rng::new(14);
+        let bytes: Vec<u8> = (0..500).map(|_| rng.below(3) as u8).collect();
+        for codec in [Codec::Huffman, Codec::Rans] {
+            let e = encode_stream_with(&mk(bytes.clone(), 8), 12, 1.5, None, codec).unwrap();
+            let mut buf = Vec::new();
+            e.write_to(&mut buf);
+            for cut in [0, 1, 2, buf.len() - 1] {
+                let mut pos = 0;
+                assert!(
+                    EncodedStream::read_from(&buf[..cut], &mut pos).is_err(),
+                    "{codec:?} cut={cut}"
+                );
+            }
         }
     }
 
     #[test]
     fn empty_stream() {
-        let e = encode_stream(&mk(vec![], 8), 12, 0.97, None).unwrap();
-        assert_eq!(e.encoding, StreamEncoding::Raw);
-        assert_eq!(decode_stream(&e, None).unwrap(), Vec::<u8>::new());
+        for codec in [Codec::Huffman, Codec::Rans, Codec::Auto, Codec::Raw] {
+            let e = encode_stream_with(&mk(vec![], 8), 12, 0.97, None, codec).unwrap();
+            assert_eq!(e.encoding, StreamEncoding::Raw, "{codec:?}");
+            assert_eq!(decode_stream(&e, None).unwrap(), Vec::<u8>::new());
+        }
     }
 }

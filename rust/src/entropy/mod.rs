@@ -151,6 +151,92 @@ pub fn decide(h: &Histogram, threshold: f64) -> CompressDecision {
 /// Default mantissa gate threshold.
 pub const DEFAULT_GATE_THRESHOLD: f64 = 0.97;
 
+/// Entropy backend a stream can be routed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Canonical length-limited Huffman ([`crate::huffman`]).
+    Huffman,
+    /// Interleaved rANS ([`crate::rans`]).
+    Rans,
+    /// No entropy coding: packed at native bit density.
+    Raw,
+}
+
+/// Estimated serialized rANS frequency-table cost in bytes for an alphabet
+/// of `distinct` present symbols. Conservative, like
+/// [`TABLE_OVERHEAD_BYTES`]; delegates to
+/// [`crate::rans::table_overhead_estimate_bytes`], which owns the wire
+/// format the estimate describes.
+pub fn rans_table_overhead_bytes(distinct: usize) -> f64 {
+    crate::rans::table_overhead_estimate_bytes(distinct)
+}
+
+/// Per-stream flush cost of the interleaved rANS coder, in bytes
+/// (defined from [`crate::rans::FLUSH_BYTES`] so it cannot drift).
+pub const RANS_FLUSH_BYTES: f64 = crate::rans::FLUSH_BYTES as f64;
+
+/// The per-stream backend selection, extending [`decide`] to the
+/// two-backend world: expected bits/symbol for each entropy backend
+/// (overheads included) plus the cheapest choice by estimate.
+///
+/// Estimates, not measurements: the codec layer confirms the call with
+/// exact byte counts before committing (measured, not guessed, whenever the
+/// estimates are close — see `codec::encode_stream_with`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CodecDecision {
+    /// Expected Huffman bits/symbol including table overhead. Huffman codes
+    /// cannot beat one bit per symbol, hence the floor on multi-symbol
+    /// histograms — the gap rANS exists to close.
+    pub huffman_bits: f64,
+    /// Expected rANS bits/symbol including table + state-flush overhead.
+    pub rans_bits: f64,
+    /// Native bits/symbol (the raw-storage cost).
+    pub raw_bits: f64,
+    /// Cheapest backend by estimate.
+    pub backend: Backend,
+    /// Whether the cheapest entropy backend beats `threshold × raw_bits`.
+    pub compress: bool,
+}
+
+/// Per-stream backend auto-selection from the histogram alone.
+///
+/// `native_bits` is the stream's bit width in the original format (raw
+/// storage costs `native_bits`/symbol, not 8); `threshold` has the same
+/// meaning as in [`decide`].
+pub fn decide_codec(h: &Histogram, native_bits: u8, threshold: f64) -> CodecDecision {
+    let raw_bits = native_bits as f64;
+    if h.total() == 0 {
+        return CodecDecision {
+            huffman_bits: raw_bits,
+            rans_bits: raw_bits,
+            raw_bits,
+            backend: Backend::Raw,
+            compress: false,
+        };
+    }
+    let n = h.total() as f64;
+    let entropy = h.entropy_bits();
+    let floor = if h.distinct() > 1 { 1.0 } else { 0.0 };
+    let huffman_bits = entropy.max(floor) + TABLE_OVERHEAD_BYTES * 8.0 / n;
+    let rans_bits = entropy
+        + (rans_table_overhead_bytes(h.distinct()) + RANS_FLUSH_BYTES) * 8.0 / n;
+    let best = huffman_bits.min(rans_bits);
+    let backend = if best >= raw_bits {
+        Backend::Raw
+    } else if rans_bits <= huffman_bits {
+        Backend::Rans
+    } else {
+        Backend::Huffman
+    };
+    CodecDecision {
+        huffman_bits,
+        rans_bits,
+        raw_bits,
+        backend,
+        compress: best < threshold * raw_bits,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +315,42 @@ mod tests {
         rng.fill_bytes(&mut noise);
         let h2 = Histogram::from_bytes(&noise);
         assert!(!decide(&h2, DEFAULT_GATE_THRESHOLD).compress);
+    }
+
+    #[test]
+    fn codec_selector_prefers_rans_below_the_huffman_floor() {
+        // Sub-1-bit entropy: Huffman is pinned at >= 1 bit/sym, rANS is not.
+        let mut rng = Rng::new(11);
+        let data: Vec<u8> =
+            (0..50_000).map(|_| if rng.next_f64() < 0.97 { 5 } else { 6 }).collect();
+        let h = Histogram::from_bytes(&data);
+        let d = decide_codec(&h, 8, DEFAULT_GATE_THRESHOLD);
+        assert_eq!(d.backend, Backend::Rans);
+        assert!(d.compress);
+        assert!(d.rans_bits < 1.0, "rans estimate {}", d.rans_bits);
+        assert!(d.huffman_bits >= 1.0, "huffman floor missing: {}", d.huffman_bits);
+    }
+
+    #[test]
+    fn codec_selector_stores_noise_raw() {
+        let mut rng = Rng::new(12);
+        let mut noise = vec![0u8; 20_000];
+        rng.fill_bytes(&mut noise);
+        let d = decide_codec(&Histogram::from_bytes(&noise), 8, DEFAULT_GATE_THRESHOLD);
+        assert_eq!(d.backend, Backend::Raw);
+        assert!(!d.compress);
+        // Sub-byte native width: 4-bit uniform symbols are incompressible at
+        // width 4 even though their byte entropy is "only" 4 bits.
+        let nibbles: Vec<u8> = (0..20_000).map(|_| (rng.next_u32() & 0xF) as u8).collect();
+        let d4 = decide_codec(&Histogram::from_bytes(&nibbles), 4, DEFAULT_GATE_THRESHOLD);
+        assert!(!d4.compress, "estimates: {d4:?}");
+    }
+
+    #[test]
+    fn codec_selector_empty_histogram() {
+        let d = decide_codec(&Histogram::new(), 8, DEFAULT_GATE_THRESHOLD);
+        assert_eq!(d.backend, Backend::Raw);
+        assert!(!d.compress);
     }
 
     #[test]

@@ -26,6 +26,8 @@ pub enum Error {
     },
     /// Huffman table construction or decoding failure.
     Huffman(String),
+    /// rANS table construction or decoding failure.
+    Rans(String),
     /// Container-format violation (bad header, unknown strategy id, …).
     Container(String),
     /// Checkpoint-store consistency failure (missing base, broken chain, …).
@@ -52,6 +54,7 @@ impl fmt::Display for Error {
                 "checksum mismatch in chunk {chunk}: expected {expected:#010x}, got {actual:#010x}"
             ),
             Error::Huffman(m) => write!(f, "huffman: {m}"),
+            Error::Rans(m) => write!(f, "rans: {m}"),
             Error::Container(m) => write!(f, "container: {m}"),
             Error::Checkpoint(m) => write!(f, "checkpoint: {m}"),
             Error::KvCache(m) => write!(f, "kvcache: {m}"),

@@ -3,9 +3,12 @@
 //! Reproduction of Heilper & Singer (Intel, 2025): lossless compression of
 //! neural-network weights, training checkpoints, and K/V cache tensors stored
 //! in low-precision floating-point formats (BF16, FP8 E4M3/E5M2, FP4
-//! MXFP4/NVFP4), built on *exponent–mantissa separation* followed by
-//! canonical Huffman entropy coding (the ZipNN insight, extended downward in
-//! bit width).
+//! MXFP4/NVFP4), built on *exponent–mantissa separation* followed by entropy
+//! coding (the ZipNN insight, extended downward in bit width). Two entropy
+//! backends are provided — canonical Huffman ([`huffman`]) and interleaved
+//! rANS ([`rans`]) — with a per-stream auto-selector
+//! ([`codec::Codec::Auto`]) that picks whichever is cheaper by exact
+//! encoded size.
 //!
 //! ## Architecture
 //!
@@ -61,6 +64,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod model;
 pub mod pool;
+pub mod rans;
 pub mod runtime;
 pub mod synthetic;
 pub mod util;

@@ -20,8 +20,8 @@ use std::process::ExitCode;
 #[cfg(feature = "pjrt")]
 use zipnn_lp::checkpoint::CheckpointStore;
 use zipnn_lp::codec::{
-    compress_tensor, decompress_tensor, decompress_tensor_threads, CompressOptions,
-    CompressedBlob,
+    compress_tensor, decompress_tensor, decompress_tensor_threads, stream_report, Codec,
+    CompressOptions, CompressedBlob, Strategy,
 };
 #[cfg(feature = "pjrt")]
 use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
@@ -75,8 +75,10 @@ USAGE: zipnn-lp <SUBCOMMAND> [--flag value ...]
 SUBCOMMANDS:
   compress    --input FILE --format bf16|fp8|fp4|fp32|fp16 [--output FILE]
               [--chunk-kib 256] [--threads 1] [--exponent-only]
+              [--codec auto|huffman|rans|raw]
   compress-model --input model.safetensors [--output model.zlpc]
-              [--threads 1]   (per-tensor, HF safetensors)
+              [--threads 1] [--codec auto|huffman|rans|raw]
+              (per-tensor, HF safetensors)
   decompress  --input FILE.zlpt [--output FILE] [--threads 1]
   inspect     --input FILE.zlpt
   train       --artifacts DIR [--steps 40] [--ckpt-every 10]
@@ -120,9 +122,11 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::erro
     let data = std::fs::read(input)?;
     let chunk_kib: usize = get_or(flags, "chunk-kib", "256").parse()?;
     let threads: usize = get_or(flags, "threads", "1").parse()?;
+    let codec = Codec::parse(get_or(flags, "codec", "auto"))?;
     let mut opts = CompressOptions::for_format(format)
         .with_chunk_size(chunk_kib * 1024)
-        .with_threads(threads);
+        .with_threads(threads)
+        .with_codec(codec);
     opts.exponent_only = flags.contains_key("exponent-only");
     let t = zipnn_lp::metrics::Timer::new();
     let blob = compress_tensor(&data, &opts)?;
@@ -158,6 +162,7 @@ fn cmd_compress_model(flags: &HashMap<String, String>) -> Result<(), Box<dyn std
     use zipnn_lp::formats::safetensors;
     let input = get(flags, "input")?;
     let threads: usize = get_or(flags, "threads", "1").parse()?;
+    let codec = Codec::parse(get_or(flags, "codec", "auto"))?;
     let tensors = safetensors::read_file(std::path::Path::new(input))?;
     let mut archive = Archive::new();
     let mut table = Table::new(&["tensor", "dtype", "original", "ratio"]);
@@ -167,7 +172,7 @@ fn cmd_compress_model(flags: &HashMap<String, String>) -> Result<(), Box<dyn std
             skipped += 1;
             continue;
         };
-        let opts = CompressOptions::for_format(format).with_threads(threads);
+        let opts = CompressOptions::for_format(format).with_threads(threads).with_codec(codec);
         let blob = compress_tensor(&t.data, &opts)?;
         table.row(&[
             t.name.clone(),
@@ -223,11 +228,29 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error
     let input = get(flags, "input")?;
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
     println!("strategy:  {:?}", blob.strategy);
+    println!("codec:     {}", blob.codec.name());
     println!("format:    {}", blob.format.name());
     println!("original:  {}", human_bytes(blob.original_len as u64));
     println!("encoded:   {}", human_bytes(blob.encoded_len() as u64));
     println!("ratio:     {:.4}", blob.ratio());
     println!("chunks:    {} x {}", blob.chunks.len(), human_bytes(blob.chunk_size as u64));
+    if blob.strategy == Strategy::Fp4Block {
+        println!("streams:   (FP4 block layout; per-stream report not available)");
+        return Ok(());
+    }
+    // Per-stream backend observability: which codec each component actually
+    // got, straight from the frame headers (no payload decoding).
+    let mut table = Table::new(&["stream", "original", "encoded", "ratio", "encodings"]);
+    for r in stream_report(&blob)? {
+        table.row(&[
+            r.kind.label().to_string(),
+            human_bytes(r.original_bytes),
+            human_bytes(r.compressed_bytes),
+            format!("{:.4}", r.ratio()),
+            r.encodings(),
+        ]);
+    }
+    println!("{}", table.render());
     Ok(())
 }
 

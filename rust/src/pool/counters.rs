@@ -33,6 +33,10 @@ pub struct PoolCounters {
     pub spill_bytes_written: u64,
     /// Total bytes ever read back from the spill file.
     pub spill_bytes_read: u64,
+    /// All-time maximum number of spill-file reads in flight at once.
+    /// Values >= 2 show reloads overlapping on disk — the point of keeping
+    /// spill I/O off the ledger mutex.
+    pub spill_read_concurrency: u64,
     /// The configured in-memory budget (`None` = unbounded).
     pub budget_bytes: Option<u64>,
 }

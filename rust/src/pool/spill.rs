@@ -9,14 +9,25 @@
 //!
 //! Slots are identities, extents are storage: a slot id never changes while
 //! its page lives in the file, even if compaction were to move extents later.
+//!
+//! The structure is split along the pool's locking boundary:
+//!
+//! * [`SpillFile`] — the allocator (extent maps, slot directory). Lives
+//!   under the pool's ledger mutex; every operation is in-memory and cheap.
+//! * [`SpillIo`] — the shared file handle doing **positioned** reads and
+//!   writes (`pread`/`pwrite`-style, no seek state). Handed out as an `Arc`
+//!   by [`SpillFile::reserve`] / [`SpillFile::locate`] so the actual disk
+//!   I/O runs *outside* the ledger mutex: reloads and evictions of
+//!   different sequences overlap instead of serializing on the lock.
 
 use crate::error::{Error, Result};
+use crate::metrics::Gauge;
 use crate::util::crc32::crc32;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
-use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Extent + integrity metadata for one live slot.
 #[derive(Clone, Copy, Debug)]
@@ -26,12 +37,110 @@ struct Slot {
     crc: u32,
 }
 
-/// A spill file holding serialized [`crate::kvcache::SealedPage`] records.
+/// The shared, position-addressed spill-file handle.
+///
+/// All methods take `&self`: positioned I/O has no cursor, so any number of
+/// threads may read and write disjoint extents concurrently. Traffic
+/// counters are atomics for the same reason.
 #[derive(Debug)]
-pub struct SpillFile {
+pub struct SpillIo {
     file: File,
     path: PathBuf,
     remove_on_drop: bool,
+    bytes_written: AtomicU64,
+    bytes_read: AtomicU64,
+    /// Concurrent `read_record` calls in flight; the high-water mark proves
+    /// (in tests) that reloads genuinely overlap off the ledger mutex.
+    concurrent_reads: Gauge,
+    /// Serializes seek+read/write on targets without positioned I/O.
+    #[cfg(not(unix))]
+    cursor: std::sync::Mutex<()>,
+}
+
+impl SpillIo {
+    /// Write `buf` at `offset`, atomically from the caller's perspective.
+    pub fn write_at(&self, buf: &[u8], offset: u64) -> Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.write_all_at(buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let _guard = self.cursor.lock().unwrap();
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.write_all(buf)?;
+        }
+        self.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Read `len` bytes at `offset` and verify them against `crc`;
+    /// `slot` only labels the checksum error.
+    pub fn read_record(&self, offset: u64, len: u64, crc: u32, slot: u64) -> Result<Vec<u8>> {
+        self.concurrent_reads.add(1);
+        let result = self.read_at(offset, len).and_then(|buf| {
+            let actual = crc32(&buf);
+            if actual != crc {
+                return Err(Error::ChecksumMismatch {
+                    chunk: slot as usize,
+                    expected: crc,
+                    actual,
+                });
+            }
+            Ok(buf)
+        });
+        self.concurrent_reads.sub(1);
+        let buf = result?;
+        self.bytes_read.fetch_add(len, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    fn read_at(&self, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; len as usize];
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(&mut buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let _guard = self.cursor.lock().unwrap();
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(&mut buf)?;
+        }
+        Ok(buf)
+    }
+
+    /// Where the file lives on disk.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// All-time maximum number of overlapping [`read_record`][Self::read_record]
+    /// calls — ≥ 2 demonstrates reloads running concurrently.
+    pub fn max_concurrent_reads(&self) -> u64 {
+        self.concurrent_reads.high_water()
+    }
+}
+
+impl Drop for SpillIo {
+    fn drop(&mut self) {
+        if self.remove_on_drop {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// A spill file holding serialized [`crate::kvcache::SealedPage`] records:
+/// the extent allocator plus a shared [`SpillIo`] handle.
+#[derive(Debug)]
+pub struct SpillFile {
+    io: Arc<SpillIo>,
     /// File length high-water mark (append offset).
     end: u64,
     slots: BTreeMap<u64, Slot>,
@@ -41,13 +150,25 @@ pub struct SpillFile {
     /// The same extents keyed by offset, for coalescing with neighbours.
     free_by_offset: BTreeMap<u64, u64>,
     next_slot: u64,
-    bytes_written: u64,
-    bytes_read: u64,
 }
 
 impl SpillFile {
     /// Create (or truncate) a spill file at `path`.
     pub fn create(path: &Path) -> Result<Self> {
+        Self::create_inner(path, false)
+    }
+
+    /// Create a uniquely named spill file in the OS temp directory, removed
+    /// when the last handle drops.
+    pub fn temp() -> Result<Self> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("zipnn-lp-pool-{}-{}.spill", std::process::id(), n));
+        Self::create_inner(&path, true)
+    }
+
+    fn create_inner(path: &Path, remove_on_drop: bool) -> Result<Self> {
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -55,39 +176,32 @@ impl SpillFile {
             .truncate(true)
             .open(path)?;
         Ok(SpillFile {
-            file,
-            path: path.to_path_buf(),
-            remove_on_drop: false,
+            io: Arc::new(SpillIo {
+                file,
+                path: path.to_path_buf(),
+                remove_on_drop,
+                bytes_written: AtomicU64::new(0),
+                bytes_read: AtomicU64::new(0),
+                concurrent_reads: Gauge::new(),
+                #[cfg(not(unix))]
+                cursor: std::sync::Mutex::new(()),
+            }),
             end: 0,
             slots: BTreeMap::new(),
             free_extents: BTreeMap::new(),
             free_by_offset: BTreeMap::new(),
             next_slot: 0,
-            bytes_written: 0,
-            bytes_read: 0,
         })
     }
 
-    /// Create a uniquely named spill file in the OS temp directory, removed
-    /// when the pool is dropped.
-    pub fn temp() -> Result<Self> {
-        static SEQ: AtomicU64 = AtomicU64::new(0);
-        let n = SEQ.fetch_add(1, Ordering::Relaxed);
-        let path = std::env::temp_dir()
-            .join(format!("zipnn-lp-pool-{}-{}.spill", std::process::id(), n));
-        let mut f = Self::create(&path)?;
-        f.remove_on_drop = true;
-        Ok(f)
-    }
-
-    /// Where the file lives on disk.
-    pub fn path(&self) -> &Path {
-        &self.path
-    }
-
-    /// Write one page record, returning its slot id.
-    pub fn write(&mut self, record: &[u8]) -> Result<u64> {
-        let need = record.len() as u64;
+    /// Reserve an extent + slot for a `len`-byte record with checksum `crc`
+    /// (computed by the caller, off this allocator's lock) without writing
+    /// it. Returns the slot id, the byte offset, and the shared I/O handle
+    /// so the caller can perform the write *after* releasing whatever lock
+    /// guards this allocator. A failed write must be undone with
+    /// [`free`][Self::free].
+    pub fn reserve(&mut self, len: usize, crc: u32) -> Result<(u64, u64, Arc<SpillIo>)> {
+        let need = len as u64;
         if need == 0 {
             return Err(Error::Pool("refusing to spill an empty page record".into()));
         }
@@ -111,42 +225,40 @@ impl SpillFile {
                 off
             }
         };
-        let seek_write = match self.file.seek(SeekFrom::Start(offset)) {
-            Ok(_) => self.file.write_all(record),
-            Err(e) => Err(e),
-        };
-        if let Err(e) = seek_write {
-            // Hand the extent back (append case: end shrinks again) so a
-            // failing disk cannot leak spill-file space on every retry.
-            self.insert_free(offset, need);
-            return Err(e.into());
-        }
         let slot = self.next_slot;
         self.next_slot += 1;
-        self.slots.insert(slot, Slot { offset, len: need, crc: crc32(record) });
-        self.bytes_written += need;
-        Ok(slot)
+        self.slots.insert(slot, Slot { offset, len: need, crc });
+        Ok((slot, offset, self.io.clone()))
     }
 
-    /// Read back a slot's record, verifying its CRC-32.
-    pub fn read(&mut self, slot: u64) -> Result<Vec<u8>> {
-        let s = *self
+    /// Look up a slot's extent and checksum, plus the shared I/O handle for
+    /// reading it outside the allocator's lock.
+    pub fn locate(&self, slot: u64) -> Result<(u64, u64, u32, Arc<SpillIo>)> {
+        let s = self
             .slots
             .get(&slot)
             .ok_or_else(|| Error::Pool(format!("unknown spill slot {slot}")))?;
-        self.file.seek(SeekFrom::Start(s.offset))?;
-        let mut buf = vec![0u8; s.len as usize];
-        self.file.read_exact(&mut buf)?;
-        let actual = crc32(&buf);
-        if actual != s.crc {
-            return Err(Error::ChecksumMismatch {
-                chunk: slot as usize,
-                expected: s.crc,
-                actual,
-            });
+        Ok((s.offset, s.len, s.crc, self.io.clone()))
+    }
+
+    /// Write one page record synchronously, returning its slot id.
+    /// Convenience composition of [`reserve`][Self::reserve] + I/O used by
+    /// tests and single-threaded callers.
+    pub fn write(&mut self, record: &[u8]) -> Result<u64> {
+        let (slot, offset, io) = self.reserve(record.len(), crc32(record))?;
+        if let Err(e) = io.write_at(record, offset) {
+            // Hand the extent back (append case: end shrinks again) so a
+            // failing disk cannot leak spill-file space on every retry.
+            self.free(slot);
+            return Err(e);
         }
-        self.bytes_read += s.len;
-        Ok(buf)
+        Ok(slot)
+    }
+
+    /// Read back a slot's record synchronously, verifying its CRC-32.
+    pub fn read(&self, slot: u64) -> Result<Vec<u8>> {
+        let (offset, len, crc, io) = self.locate(slot)?;
+        io.read_record(offset, len, crc, slot)
     }
 
     /// Release a slot, returning its extent to the free list (coalesced
@@ -190,6 +302,16 @@ impl SpillFile {
         self.free_extents.insert((len, offset), ());
     }
 
+    /// The shared I/O handle (observability: concurrency high-water).
+    pub fn io(&self) -> &Arc<SpillIo> {
+        &self.io
+    }
+
+    /// Where the file lives on disk.
+    pub fn path(&self) -> &Path {
+        self.io.path()
+    }
+
     /// Number of live (occupied) slots.
     pub fn live_slots(&self) -> usize {
         self.slots.len()
@@ -202,20 +324,12 @@ impl SpillFile {
 
     /// Total record bytes ever written (spill write traffic).
     pub fn bytes_written(&self) -> u64 {
-        self.bytes_written
+        self.io.bytes_written.load(Ordering::Relaxed)
     }
 
     /// Total record bytes ever read back (reload traffic).
     pub fn bytes_read(&self) -> u64 {
-        self.bytes_read
-    }
-}
-
-impl Drop for SpillFile {
-    fn drop(&mut self) {
-        if self.remove_on_drop {
-            let _ = std::fs::remove_file(&self.path);
-        }
+        self.io.bytes_read.load(Ordering::Relaxed)
     }
 }
 
@@ -271,6 +385,25 @@ mod tests {
         // Double-free is a no-op.
         f.free(d);
         assert_eq!(f.live_slots(), 0);
+    }
+
+    #[test]
+    fn reserve_then_positioned_write_out_of_band() {
+        // The pool's eviction path: reserve under a lock, write without it.
+        let mut f = SpillFile::temp().unwrap();
+        let rec: Vec<u8> = (0..500u32).map(|i| (i * 3) as u8).collect();
+        let (slot, offset, io) = f.reserve(rec.len(), crc32(&rec)).unwrap();
+        // Nothing written yet, but the slot is addressable.
+        io.write_at(&rec, offset).unwrap();
+        assert_eq!(f.read(slot).unwrap(), rec);
+        // locate + read_record is the decomposed read path.
+        let (off2, len2, crc2, io2) = f.locate(slot).unwrap();
+        assert_eq!((off2, len2), (offset, rec.len() as u64));
+        assert_eq!(io2.read_record(off2, len2, crc2, slot).unwrap(), rec);
+        // A reservation abandoned via free() returns its extent.
+        let (slot2, _, _) = f.reserve(100, crc32(&[9u8; 100])).unwrap();
+        f.free(slot2);
+        assert_eq!(f.live_slots(), 1);
     }
 
     #[test]

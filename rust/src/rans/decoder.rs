@@ -1,0 +1,96 @@
+//! Interleaved rANS decoder.
+
+use super::table::{FreqTable, SCALE, SCALE_BITS};
+use super::{FLUSH_BYTES, INTERLEAVE, RANS_L};
+use crate::error::{Error, Result};
+
+/// Decodes payloads produced by [`super::RansEncoder`].
+///
+/// Construction precomputes a 4 KiB slot→symbol lookup table (one byte per
+/// normalized probability slot), so the per-symbol loop is a mask, a table
+/// load, one multiply, and a branch-predictable renormalization — no
+/// bit-by-bit tree walk, which is what makes this backend faster to decode
+/// than table-walk Huffman on skewed streams.
+#[derive(Debug)]
+pub struct RansDecoder {
+    freq: [u16; 256],
+    cum: [u16; 256],
+    /// Slot → symbol map covering `[0, SCALE)`.
+    slot_sym: Vec<u8>,
+}
+
+impl RansDecoder {
+    /// Decoder for `table`.
+    pub fn new(table: &FreqTable) -> Self {
+        let mut freq = [0u16; 256];
+        let mut cum = [0u16; 256];
+        let mut slot_sym = vec![0u8; SCALE as usize];
+        for s in 0..256usize {
+            let f = table.freq(s as u8);
+            freq[s] = f;
+            cum[s] = table.cum(s as u8);
+            let start = cum[s] as usize;
+            for slot in slot_sym.iter_mut().skip(start).take(f as usize) {
+                *slot = s as u8;
+            }
+        }
+        RansDecoder { freq, cum, slot_sym }
+    }
+
+    /// Decode exactly `n_symbols` bytes from `payload`.
+    ///
+    /// Verifies the full coder invariant: every renormalization byte must be
+    /// consumed and every state must return to its initial value, so
+    /// truncated or bit-flipped payloads are rejected here even before the
+    /// chunk CRC gets a say.
+    pub fn decode(&self, payload: &[u8], n_symbols: usize) -> Result<Vec<u8>> {
+        if n_symbols == 0 {
+            if !payload.is_empty() {
+                return Err(Error::Rans("payload bytes for an empty stream".into()));
+            }
+            return Ok(Vec::new());
+        }
+        if payload.len() < FLUSH_BYTES {
+            return Err(Error::Rans("payload shorter than the state flush".into()));
+        }
+        let mut states = [0u32; INTERLEAVE];
+        for (i, st) in states.iter_mut().enumerate() {
+            *st = u32::from_le_bytes(payload[i * 4..i * 4 + 4].try_into().unwrap());
+            // The coder keeps states in [L, L << 8); anything else is
+            // corruption. The upper bound also keeps the decode-step
+            // multiply below 2^31, so it cannot overflow.
+            if *st < RANS_L || *st >= (RANS_L << 8) {
+                return Err(Error::Rans(format!("initial state {i} outside coder range")));
+            }
+        }
+        let mut pos = FLUSH_BYTES;
+        let mut out = Vec::with_capacity(n_symbols);
+        for j in 0..n_symbols {
+            let lane = j % INTERLEAVE;
+            let x = states[lane];
+            let slot = x & (SCALE - 1);
+            let s = self.slot_sym[slot as usize];
+            let f = self.freq[s as usize] as u32;
+            let mut x = f * (x >> SCALE_BITS) + slot - self.cum[s as usize] as u32;
+            while x < RANS_L {
+                let Some(&b) = payload.get(pos) else {
+                    return Err(Error::Rans("renormalization bytes exhausted".into()));
+                };
+                pos += 1;
+                x = (x << 8) | b as u32;
+            }
+            states[lane] = x;
+            out.push(s);
+        }
+        if pos != payload.len() {
+            return Err(Error::Rans(format!(
+                "{} unconsumed payload bytes",
+                payload.len() - pos
+            )));
+        }
+        if states.iter().any(|&x| x != RANS_L) {
+            return Err(Error::Rans("final states do not match the initial seed".into()));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,61 @@
+//! Interleaved rANS encoder.
+
+use super::table::{FreqTable, SCALE_BITS};
+use super::{FLUSH_BYTES, INTERLEAVE, RANS_L};
+use crate::error::{Error, Result};
+
+/// Encodes byte streams against a [`FreqTable`] with [`INTERLEAVE`]
+/// independent 32-bit states.
+///
+/// Symbol `j` is coded by state `j % INTERLEAVE`; the encoder walks the
+/// input *backwards* (rANS is a stack) emitting renormalization bytes into a
+/// scratch buffer, then writes the final states followed by the scratch
+/// bytes reversed — so the decoder reads states first and renormalization
+/// bytes strictly forward.
+#[derive(Debug)]
+pub struct RansEncoder<'a> {
+    table: &'a FreqTable,
+}
+
+impl<'a> RansEncoder<'a> {
+    /// Encoder over `table`.
+    pub fn new(table: &'a FreqTable) -> Self {
+        RansEncoder { table }
+    }
+
+    /// Encode `symbols`. Empty input yields an empty payload; otherwise the
+    /// payload starts with [`FLUSH_BYTES`] bytes of final state.
+    ///
+    /// Errors if a symbol has zero frequency in the table (the table must be
+    /// built from — or cover — the data's histogram).
+    pub fn encode(&self, symbols: &[u8]) -> Result<Vec<u8>> {
+        if symbols.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut states = [RANS_L; INTERLEAVE];
+        // Renormalization bytes, emitted in reverse decode order.
+        let mut rev = Vec::with_capacity(symbols.len() / 2 + 16);
+        for j in (0..symbols.len()).rev() {
+            let s = symbols[j];
+            let f = self.table.freq(s) as u32;
+            if f == 0 {
+                return Err(Error::Rans(format!("symbol {s} has zero frequency")));
+            }
+            let c = self.table.cum(s) as u32;
+            let mut x = states[j % INTERLEAVE];
+            // Renormalize down so the coding step cannot overflow 31 bits.
+            let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+            while x >= x_max {
+                rev.push((x & 0xFF) as u8);
+                x >>= 8;
+            }
+            states[j % INTERLEAVE] = ((x / f) << SCALE_BITS) + (x % f) + c;
+        }
+        let mut out = Vec::with_capacity(FLUSH_BYTES + rev.len());
+        for st in states {
+            out.extend_from_slice(&st.to_le_bytes());
+        }
+        out.extend(rev.iter().rev());
+        Ok(out)
+    }
+}

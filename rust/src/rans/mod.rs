@@ -1,0 +1,258 @@
+//! Interleaved range Asymmetric Numeral System (rANS) entropy coding over
+//! byte alphabets — the codec's second entropy backend.
+//!
+//! Canonical Huffman (the [`crate::huffman`] backend) pays an integer-bit
+//! floor: no symbol can cost less than one bit, so the heavily concentrated
+//! exponent histograms of FP8/FP4 streams (often < 1 bit/symbol of entropy)
+//! leave real compression on the table. rANS codes at fractional-bit
+//! granularity — within ~0.1% of the order-0 entropy — while its decoder
+//! inner loop is a masked table load plus one multiply, with no per-bit
+//! branching.
+//!
+//! Design choices:
+//!
+//! * **32-bit renormalizing states** (ryg-style `rans_byte`): state stays in
+//!   `[2^23, 2^31)`, renormalizing one byte at a time.
+//! * **[`INTERLEAVE`]-way interleaving**: symbol `j` is coded by state
+//!   `j % INTERLEAVE`, breaking the serial dependency chain so the decode
+//!   loop pipelines. The lane schedule is part of the wire format.
+//! * **12-bit normalized frequencies** ([`SCALE`]): matches the Huffman
+//!   backend's 12-bit decoder budget; the slot→symbol LUT is 4 KiB.
+//! * **Compact tables**: only present symbols are serialized (delta-coded
+//!   symbol + varint frequency), so a 4-symbol FP4 exponent table costs
+//!   ~10 bytes against Huffman's fixed 128.
+//!
+//! Like the rest of the crate, the module is dependency-free.
+//!
+//! ```
+//! use zipnn_lp::rans::{encode_with_table, decode_with_table};
+//!
+//! let data = b"aaaaaaaabbbbccd".to_vec();
+//! let (table, payload) = encode_with_table(&data).unwrap();
+//! let decoded = decode_with_table(&table, &payload, data.len()).unwrap();
+//! assert_eq!(decoded, data);
+//! ```
+
+mod decoder;
+mod encoder;
+mod table;
+
+pub use decoder::RansDecoder;
+pub use encoder::RansEncoder;
+pub use table::{FreqTable, SCALE, SCALE_BITS};
+
+use crate::entropy::Histogram;
+use crate::error::Result;
+
+/// Number of interleaved coder states. Fixed by the wire format.
+pub const INTERLEAVE: usize = 4;
+
+/// Bytes of final-state flush at the head of every non-empty payload
+/// (`INTERLEAVE` little-endian `u32`s).
+pub const FLUSH_BYTES: usize = INTERLEAVE * 4;
+
+/// Conservative estimate of a serialized [`FreqTable`]'s size in bytes for
+/// an alphabet of `distinct` present symbols: the count header plus a
+/// delta-coded symbol and a varint frequency per symbol (≤ ~3.5 bytes
+/// each). Lives here, next to [`FreqTable::serialize`], so the estimate
+/// cannot drift from the wire format; the entropy gate consumes it via
+/// [`crate::entropy::rans_table_overhead_bytes`].
+pub fn table_overhead_estimate_bytes(distinct: usize) -> f64 {
+    2.0 + 3.5 * distinct as f64
+}
+
+/// Renormalization lower bound: states live in `[RANS_L, RANS_L << 8)`.
+pub(crate) const RANS_L: u32 = 1 << 23;
+
+/// A sound lower bound on the encoded payload size, in bytes, for
+/// `n_symbols` of data whose cross-entropy against the table is `cost_bits`
+/// ([`FreqTable::cost_bits`]).
+///
+/// Per state, the flushed 32 bits hold between 23 and 31 bits of accumulated
+/// information, so the payload is close to `cost_bits/8 + [12, 16]` bytes.
+/// The coder's integer divisions additionally leak at most
+/// `log2(1 + 2^-11) < 0.0008` bits per symbol and per renormalization byte;
+/// the `n_symbols / 4096` term over-covers that drift threefold. The
+/// auto-selector uses this bound to skip a measured rANS encode when
+/// Huffman's exact cost already wins — provably, not heuristically.
+pub fn payload_lower_bound_bytes(cost_bits: f64, n_symbols: usize) -> usize {
+    let ideal = (cost_bits / 8.0).floor() as usize + FLUSH_BYTES - 4;
+    ideal.saturating_sub(8 + n_symbols / 4096)
+}
+
+/// One-shot: build a table from the data itself and encode. Returns
+/// `(table_bytes, payload_bytes)`.
+pub fn encode_with_table(data: &[u8]) -> Result<(Vec<u8>, Vec<u8>)> {
+    let table = FreqTable::from_histogram(&Histogram::from_bytes(data))?;
+    let payload = RansEncoder::new(&table).encode(data)?;
+    Ok((table.serialize(), payload))
+}
+
+/// One-shot inverse of [`encode_with_table`].
+pub fn decode_with_table(table_bytes: &[u8], payload: &[u8], n_symbols: usize) -> Result<Vec<u8>> {
+    let table = FreqTable::deserialize(table_bytes)?;
+    RansDecoder::new(&table).decode(payload, n_symbols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8]) {
+        let (tbl, payload) = encode_with_table(data).unwrap();
+        let out = decode_with_table(&tbl, &payload, data.len()).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn roundtrip_skewed() {
+        let mut rng = Rng::new(1);
+        let data: Vec<u8> = (0..10_000)
+            .map(|_| {
+                let r = rng.next_f64();
+                if r < 0.5 {
+                    120
+                } else if r < 0.8 {
+                    121
+                } else if r < 0.95 {
+                    119
+                } else {
+                    rng.below(256) as u8
+                }
+            })
+            .collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_uniform_random() {
+        let mut rng = Rng::new(2);
+        let mut data = vec![0u8; 5000];
+        rng.fill_bytes(&mut data);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_short_lengths_cover_lane_remainders() {
+        // Lengths around the interleave factor exercise lanes that code
+        // zero, one, and several symbols.
+        let mut rng = Rng::new(3);
+        for len in 0..40usize {
+            let data: Vec<u8> = (0..len).map(|_| rng.below(7) as u8).collect();
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn roundtrip_single_symbol() {
+        roundtrip(&[9u8; 777]);
+        roundtrip(&[0u8; 1]);
+    }
+
+    #[test]
+    fn roundtrip_all_256_symbols() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(2560).collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let (_, payload) = encode_with_table(&[1u8]).unwrap(); // table needs data
+        let table = FreqTable::from_histogram(&crate::entropy::Histogram::from_bytes(&[1])).unwrap();
+        let dec = RansDecoder::new(&table);
+        assert_eq!(RansEncoder::new(&table).encode(&[]).unwrap(), Vec::<u8>::new());
+        assert_eq!(dec.decode(&[], 0).unwrap(), Vec::<u8>::new());
+        // Non-empty payload with zero symbols is rejected.
+        assert!(dec.decode(&payload, 0).is_err());
+    }
+
+    #[test]
+    fn compressed_size_beats_huffman_floor() {
+        // 97/1/1/1 four-symbol stream: H ≈ 0.28 bits/sym, but Huffman cannot
+        // go below 1 bit for the dominant symbol. rANS must get well under.
+        let mut rng = Rng::new(5);
+        let data: Vec<u8> = (0..100_000)
+            .map(|_| {
+                let r = rng.next_f64();
+                if r < 0.97 {
+                    1u8
+                } else if r < 0.98 {
+                    2
+                } else if r < 0.99 {
+                    3
+                } else {
+                    4
+                }
+            })
+            .collect();
+        let (tbl, payload) = encode_with_table(&data).unwrap();
+        let bits_per_sym = (tbl.len() + payload.len()) as f64 * 8.0 / data.len() as f64;
+        assert!(bits_per_sym < 0.45, "rANS spent {bits_per_sym} bits/sym");
+        let (htbl, hpay) = crate::huffman::encode_with_table(&data, 12).unwrap();
+        assert!(
+            tbl.len() + payload.len() < htbl.len() + hpay.len(),
+            "rANS {} !< huffman {}",
+            tbl.len() + payload.len(),
+            htbl.len() + hpay.len()
+        );
+    }
+
+    #[test]
+    fn payload_size_within_lower_bound_window() {
+        let mut rng = Rng::new(6);
+        for case in 0..30 {
+            let spread = 2 + rng.below(200);
+            let n = 64 + rng.below(30_000) as usize;
+            let data: Vec<u8> = (0..n).map(|_| rng.below(spread) as u8).collect();
+            let h = Histogram::from_bytes(&data);
+            let t = FreqTable::from_histogram(&h).unwrap();
+            let payload = RansEncoder::new(&t).encode(&data).unwrap();
+            let lb = payload_lower_bound_bytes(t.cost_bits(&h), data.len());
+            assert!(payload.len() >= lb, "case {case}: {} < lb {lb}", payload.len());
+            // The bound stays tight: actual is within the slack window.
+            assert!(
+                payload.len() <= lb + 32 + data.len() / 2048,
+                "case {case}: {} vs lb {lb}",
+                payload.len()
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut rng = Rng::new(7);
+        let data: Vec<u8> = (0..5000).map(|_| rng.below(16) as u8).collect();
+        let (tbl, payload) = encode_with_table(&data).unwrap();
+        let mut detected = 0;
+        let trials = 200;
+        for _ in 0..trials {
+            let mut bad = payload.clone();
+            let byte = rng.below(bad.len() as u64) as usize;
+            bad[byte] ^= 1 << rng.below(8);
+            match decode_with_table(&tbl, &bad, data.len()) {
+                Err(_) => detected += 1,
+                Ok(out) => assert_ne!(out, data, "flip produced identical payload?"),
+            }
+        }
+        // The state-seed + exhaustion invariants catch the large majority of
+        // single-bit flips on their own (chunk CRCs catch the rest upstream).
+        assert!(detected > trials / 2, "only {detected}/{trials} flips detected");
+        // Truncation is always detected.
+        assert!(decode_with_table(&tbl, &payload[..payload.len() - 1], data.len()).is_err());
+        assert!(decode_with_table(&tbl, &payload[..8], data.len()).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_wrong_symbol_count() {
+        // Two-symbol data: every symbol costs real bits, so a count
+        // mismatch must break the state/exhaustion invariants. (A constant
+        // stream carries zero information per symbol — counts are not
+        // recoverable there, which is why the codec layer stores constants
+        // with the dedicated Constant encoding instead.)
+        let data: Vec<u8> = (0..1000).map(|i| (i % 2) as u8).collect();
+        let (tbl, payload) = encode_with_table(&data).unwrap();
+        assert!(decode_with_table(&tbl, &payload, data.len() + 1).is_err());
+        assert!(decode_with_table(&tbl, &payload, data.len() - 1).is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Normalized frequency tables: construction, 12-bit normalization, and
+//! compact serialization.
+
+use crate::entropy::Histogram;
+use crate::error::{Error, Result};
+use crate::util::varint;
+
+/// Probability precision of the coder: frequencies are normalized so they
+/// sum to exactly `1 << SCALE_BITS`.
+pub const SCALE_BITS: u32 = 12;
+
+/// The normalization total (4096). Chosen to match the Huffman backend's
+/// 12-bit decoder LUT budget: the slot→symbol table is 4 KiB, L1-resident.
+pub const SCALE: u32 = 1 << SCALE_BITS;
+
+/// A frequency table normalized to a total of [`SCALE`].
+///
+/// `freq[s]` is the 12-bit frequency of byte `s` (0 = absent) and `cum[s]`
+/// the exclusive prefix sum, so symbol `s` owns slots `cum[s]..cum[s]+freq[s]`
+/// of the `[0, SCALE)` range.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FreqTable {
+    freq: [u16; 256],
+    cum: [u16; 256],
+}
+
+impl FreqTable {
+    /// Normalize a histogram to a total of exactly [`SCALE`], guaranteeing
+    /// every observed symbol a frequency of at least 1 (so it stays
+    /// encodable no matter how rare it is).
+    pub fn from_histogram(h: &Histogram) -> Result<Self> {
+        let total = h.total();
+        if total == 0 {
+            return Err(Error::Rans("cannot build a table from an empty histogram".into()));
+        }
+        let counts = h.counts();
+        let mut freq = [0u16; 256];
+        let mut sum: u32 = 0;
+        for s in 0..256 {
+            if counts[s] > 0 {
+                let scaled =
+                    ((counts[s] as u128 * SCALE as u128) / total as u128) as u32;
+                let f = scaled.clamp(1, SCALE);
+                freq[s] = f as u16;
+                sum += f;
+            }
+        }
+        // Fix rounding drift: distribute the difference over the most
+        // frequent symbols, where one slot of probability mass distorts the
+        // code length least. Both loops touch at most ~256 units (the floor
+        // rounding error is bounded by the alphabet size).
+        if sum != SCALE {
+            let mut order: Vec<usize> = (0..256).filter(|&s| freq[s] > 0).collect();
+            order.sort_by_key(|&s| std::cmp::Reverse(counts[s]));
+            if sum < SCALE {
+                let mut deficit = SCALE - sum;
+                'grow: loop {
+                    for &s in &order {
+                        if deficit == 0 {
+                            break 'grow;
+                        }
+                        freq[s] += 1;
+                        deficit -= 1;
+                    }
+                }
+            } else {
+                let mut excess = sum - SCALE;
+                'shrink: loop {
+                    for &s in &order {
+                        if excess == 0 {
+                            break 'shrink;
+                        }
+                        if freq[s] > 1 {
+                            freq[s] -= 1;
+                            excess -= 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Self::from_freqs(freq))
+    }
+
+    /// Build from frequencies that already sum to [`SCALE`] (private: the
+    /// public constructors validate).
+    fn from_freqs(freq: [u16; 256]) -> Self {
+        let mut cum = [0u16; 256];
+        let mut acc = 0u32;
+        for s in 0..256 {
+            cum[s] = acc as u16;
+            acc += freq[s] as u32;
+        }
+        debug_assert_eq!(acc, SCALE);
+        FreqTable { freq, cum }
+    }
+
+    /// Normalized frequency of `sym` (0 if absent).
+    #[inline]
+    pub fn freq(&self, sym: u8) -> u16 {
+        self.freq[sym as usize]
+    }
+
+    /// Exclusive cumulative frequency of `sym`.
+    #[inline]
+    pub fn cum(&self, sym: u8) -> u16 {
+        self.cum[sym as usize]
+    }
+
+    /// Number of symbols with a non-zero frequency.
+    pub fn distinct(&self) -> usize {
+        self.freq.iter().filter(|&&f| f > 0).count()
+    }
+
+    /// Whether every symbol of `hist` is encodable with this table.
+    pub fn covers(&self, hist: &Histogram) -> bool {
+        hist.counts()
+            .iter()
+            .enumerate()
+            .all(|(s, &c)| c == 0 || self.freq[s] > 0)
+    }
+
+    /// Exact expected payload cost in bits for data with histogram `hist`
+    /// (the cross-entropy of `hist` against the normalized model), ignoring
+    /// the constant per-stream flush. Infinite if the table does not cover
+    /// the histogram.
+    pub fn cost_bits(&self, hist: &Histogram) -> f64 {
+        let mut bits = 0.0;
+        for (s, &c) in hist.counts().iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if self.freq[s] == 0 {
+                return f64::INFINITY;
+            }
+            bits += c as f64 * (SCALE as f64 / self.freq[s] as f64).log2();
+        }
+        bits
+    }
+
+    /// Serialize compactly: present-symbol count, then per present symbol
+    /// (ascending) the delta from the previous symbol and `freq - 1`, all as
+    /// varints. Skewed exponent alphabets (a handful of symbols) cost a few
+    /// bytes, not the Huffman table's fixed 128.
+    pub fn serialize(&self) -> Vec<u8> {
+        let present: Vec<usize> = (0..256).filter(|&s| self.freq[s] > 0).collect();
+        let mut out = Vec::with_capacity(2 + present.len() * 3);
+        varint::write_usize(&mut out, present.len());
+        let mut prev = 0usize;
+        for (i, &s) in present.iter().enumerate() {
+            let delta = if i == 0 { s } else { s - prev };
+            varint::write_usize(&mut out, delta);
+            varint::write_u64(&mut out, (self.freq[s] - 1) as u64);
+            prev = s;
+        }
+        out
+    }
+
+    /// Inverse of [`serialize`](Self::serialize). Rejects tables whose
+    /// symbols are not strictly increasing or whose frequencies do not sum
+    /// to exactly [`SCALE`].
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let n_present = varint::read_usize(buf, &mut pos)?;
+        if n_present == 0 || n_present > 256 {
+            return Err(Error::Rans(format!("implausible symbol count {n_present}")));
+        }
+        let mut freq = [0u16; 256];
+        let mut sym = 0usize;
+        let mut sum = 0u32;
+        for i in 0..n_present {
+            let delta = varint::read_usize(buf, &mut pos)?;
+            if i == 0 {
+                sym = delta;
+            } else {
+                if delta == 0 {
+                    return Err(Error::Rans("symbols not strictly increasing".into()));
+                }
+                sym += delta;
+            }
+            if sym > 255 {
+                return Err(Error::Rans(format!("symbol {sym} out of range")));
+            }
+            let f = varint::read_u64(buf, &mut pos)? + 1;
+            if f > SCALE as u64 {
+                return Err(Error::Rans(format!("frequency {f} exceeds scale")));
+            }
+            freq[sym] = f as u16;
+            sum += f as u32;
+        }
+        if pos != buf.len() {
+            return Err(Error::Rans("trailing bytes after frequency table".into()));
+        }
+        if sum != SCALE {
+            return Err(Error::Rans(format!("frequencies sum to {sum}, need {SCALE}")));
+        }
+        Ok(Self::from_freqs(freq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn normalization_sums_to_scale() {
+        let mut rng = Rng::new(1);
+        for case in 0..50 {
+            let n = 1 + rng.below(20_000) as usize;
+            let spread = 1 + rng.below(256);
+            let data: Vec<u8> = (0..n).map(|_| rng.below(spread) as u8).collect();
+            let t = FreqTable::from_histogram(&Histogram::from_bytes(&data)).unwrap();
+            let sum: u32 = (0..=255u8).map(|s| t.freq(s) as u32).sum();
+            assert_eq!(sum, SCALE, "case {case}");
+            // Every observed symbol keeps a non-zero frequency.
+            let h = Histogram::from_bytes(&data);
+            assert!(t.covers(&h), "case {case}");
+        }
+    }
+
+    #[test]
+    fn single_symbol_takes_all_mass() {
+        let t = FreqTable::from_histogram(&Histogram::from_bytes(&[7u8; 100])).unwrap();
+        assert_eq!(t.freq(7), SCALE as u16);
+        assert_eq!(t.cum(7), 0);
+        assert_eq!(t.distinct(), 1);
+    }
+
+    #[test]
+    fn empty_histogram_rejected() {
+        assert!(FreqTable::from_histogram(&Histogram::new()).is_err());
+    }
+
+    #[test]
+    fn rare_symbols_survive_normalization() {
+        // 4095 copies of one symbol + 1 of another: the rare one must keep
+        // freq >= 1 to stay encodable.
+        let mut data = vec![1u8; 100_000];
+        data.push(200);
+        let t = FreqTable::from_histogram(&Histogram::from_bytes(&data)).unwrap();
+        assert!(t.freq(200) >= 1);
+        assert_eq!(t.freq(1) as u32 + t.freq(200) as u32, SCALE);
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let mut rng = Rng::new(3);
+        for case in 0..30 {
+            let spread = 1 + rng.below(256);
+            let data: Vec<u8> =
+                (0..5000).map(|_| (rng.below(spread)) as u8).collect();
+            let t = FreqTable::from_histogram(&Histogram::from_bytes(&data)).unwrap();
+            let ser = t.serialize();
+            let t2 = FreqTable::deserialize(&ser).unwrap();
+            assert_eq!(t, t2, "case {case}");
+        }
+    }
+
+    #[test]
+    fn compact_for_small_alphabets() {
+        // 4 distinct symbols: far below the Huffman table's fixed 128 bytes.
+        let data: Vec<u8> = (0..10_000).map(|i| 120 + (i % 4) as u8).collect();
+        let t = FreqTable::from_histogram(&Histogram::from_bytes(&data)).unwrap();
+        assert!(t.serialize().len() <= 16, "table {} bytes", t.serialize().len());
+    }
+
+    #[test]
+    fn deserialize_rejects_garbage() {
+        assert!(FreqTable::deserialize(&[]).is_err());
+        assert!(FreqTable::deserialize(&[0]).is_err()); // zero symbols
+        // One symbol with freq 1 != SCALE.
+        let mut buf = Vec::new();
+        varint::write_usize(&mut buf, 1);
+        varint::write_usize(&mut buf, 5);
+        varint::write_u64(&mut buf, 0);
+        assert!(FreqTable::deserialize(&buf).is_err());
+        // Trailing bytes after a valid table.
+        let good = FreqTable::from_histogram(&Histogram::from_bytes(&[1u8, 1, 2])).unwrap();
+        let mut ser = good.serialize();
+        ser.push(0);
+        assert!(FreqTable::deserialize(&ser).is_err());
+        // Duplicate symbol (delta 0 after the first).
+        let mut dup = Vec::new();
+        varint::write_usize(&mut dup, 2);
+        varint::write_usize(&mut dup, 3);
+        varint::write_u64(&mut dup, 2047);
+        varint::write_usize(&mut dup, 0);
+        varint::write_u64(&mut dup, 2047);
+        assert!(FreqTable::deserialize(&dup).is_err());
+    }
+
+    #[test]
+    fn cost_bits_matches_cross_entropy() {
+        // Uniform over 2 symbols normalized to 2048/2048: exactly 1 bit/sym.
+        let data: Vec<u8> = (0..4096).map(|i| (i % 2) as u8).collect();
+        let h = Histogram::from_bytes(&data);
+        let t = FreqTable::from_histogram(&h).unwrap();
+        assert!((t.cost_bits(&h) - 4096.0).abs() < 1e-9);
+        // Uncovered histogram costs infinity.
+        let other = Histogram::from_bytes(&[9u8; 10]);
+        assert!(t.cost_bits(&other).is_infinite());
+        assert!(!t.covers(&other));
+    }
+}

@@ -1,0 +1,80 @@
+//! Minimal JSON *emitter* for machine-readable bench artifacts
+//! (`BENCH_codec.json`, `BENCH_kv.json`), the writing counterpart of
+//! [`super::json`]. Values are pre-rendered JSON fragments built with the
+//! typed helpers, so composition is plain string assembly with escaping
+//! handled exactly once, in [`string`].
+
+/// Render a JSON string literal with escaping.
+pub fn string(v: &str) -> String {
+    let mut out = String::with_capacity(v.len() + 2);
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render a finite float (non-finite values become `null`, which JSON
+/// requires — `NaN` is not valid JSON).
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render an unsigned integer.
+pub fn uint(v: u64) -> String {
+    v.to_string()
+}
+
+/// Render an object from `(key, pre-rendered value)` pairs.
+pub fn obj(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> =
+        fields.iter().map(|(k, v)| format!("{}: {v}", string(k))).collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+/// Render an array of pre-rendered values.
+pub fn arr(items: &[String]) -> String {
+    format!("[{}]", items.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn output_parses_with_the_inhouse_parser() {
+        let doc = obj(&[
+            ("schema", uint(1)),
+            ("name", string("codec \"throughput\"\n")),
+            ("ratio", num(0.3125)),
+            ("rows", arr(&[obj(&[("x", num(1.0))]), obj(&[("x", num(f64::NAN))])])),
+        ]);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.field("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(j.field("name").unwrap().as_str(), Some("codec \"throughput\"\n"));
+        assert_eq!(j.field("ratio").unwrap().as_f64(), Some(0.3125));
+        let rows = j.field("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].field("x").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let s = string("a\u{1}b");
+        assert_eq!(s, "\"a\\u0001b\"");
+        assert!(Json::parse(&s).is_ok());
+    }
+}

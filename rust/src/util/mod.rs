@@ -13,9 +13,12 @@
 //! * [`varint`] — LEB128-style unsigned varints for container metadata.
 //! * [`json`] — recursive-descent JSON used by the AOT manifest reader and
 //!   the safetensors header parser.
+//! * [`jsonout`] — the matching JSON emitter, used by the benches'
+//!   `--json` machine-readable outputs.
 
 pub mod crc32;
 pub mod json;
+pub mod jsonout;
 pub mod rng;
 pub mod varint;
 

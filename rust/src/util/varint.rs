@@ -44,6 +44,18 @@ pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
     }
 }
 
+/// Encoded length of `value` in bytes, without writing it (used by the
+/// codec's backend selector to compare frame-inclusive sizes exactly).
+pub fn len_u64(value: u64) -> usize {
+    let mut n = 1;
+    let mut v = value >> 7;
+    while v > 0 {
+        n += 1;
+        v >>= 7;
+    }
+    n
+}
+
 /// Convenience: write a `usize`.
 pub fn write_usize(out: &mut Vec<u8>, value: usize) -> usize {
     write_u64(out, value as u64)
@@ -80,6 +92,14 @@ mod tests {
         assert_eq!(len(127), 1);
         assert_eq!(len(128), 2);
         assert_eq!(len(u64::MAX), 10);
+    }
+
+    #[test]
+    fn len_matches_written_bytes() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, 1 << 30, u64::MAX] {
+            let mut b = Vec::new();
+            assert_eq!(len_u64(v), write_u64(&mut b, v), "v={v}");
+        }
     }
 
     #[test]

@@ -8,7 +8,8 @@
 use zipnn_lp::baselines;
 use zipnn_lp::codec::{
     compress_delta, compress_mxfp4, compress_nvfp4, compress_tensor, decompress_chunk,
-    decompress_delta, decompress_mxfp4, decompress_nvfp4, decompress_tensor, CompressOptions,
+    decompress_delta, decompress_mxfp4, decompress_nvfp4, decompress_tensor, Codec,
+    CompressOptions, CompressedBlob,
 };
 use zipnn_lp::formats::conv::{quantize_mxfp4, quantize_nvfp4};
 use zipnn_lp::formats::{merge_streams, split_streams, FloatFormat};
@@ -95,6 +96,112 @@ fn prop_compress_roundtrip_all_formats() {
             zipnn_lp::codec::CompressedBlob::deserialize(&blob.serialize()).unwrap();
         assert_eq!(decompress_tensor(&blob2).unwrap(), data, "case {case} serialized");
     }
+}
+
+#[test]
+fn prop_cross_codec_roundtrip_all_formats() {
+    // Every format × every backend policy round-trips bit-exactly, both
+    // in-memory and through blob (de)serialization; and auto's blob is
+    // never larger than the best fixed backend's.
+    let mut rng = Rng::new(0xC0DEC);
+    let codecs = [Codec::Auto, Codec::Huffman, Codec::Rans, Codec::Raw];
+    for case in 0..60 {
+        let format = FORMATS[case % FORMATS.len()];
+        let data = gen_case(&mut rng, format);
+        let chunk = 512 + rng.below(8192) as usize;
+        let mut sizes = std::collections::BTreeMap::new();
+        for codec in codecs {
+            let opts = CompressOptions::for_format(format)
+                .with_chunk_size(chunk)
+                .with_codec(codec);
+            let blob = compress_tensor(&data, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {format:?} {codec:?}: {e}"));
+            assert_eq!(blob.codec, codec);
+            assert_eq!(
+                decompress_tensor(&blob).unwrap(),
+                data,
+                "case {case} {format:?} {codec:?}"
+            );
+            let ser = blob.serialize();
+            let blob2 = CompressedBlob::deserialize(&ser).unwrap();
+            assert_eq!(blob2.codec, codec);
+            assert_eq!(
+                decompress_tensor(&blob2).unwrap(),
+                data,
+                "case {case} {format:?} {codec:?} serialized"
+            );
+            sizes.insert(codec.name(), ser.len());
+        }
+        let auto = sizes["auto"];
+        let best = *sizes
+            .iter()
+            .filter(|(&k, _)| k != "auto")
+            .map(|(_, v)| v)
+            .min()
+            .unwrap();
+        assert!(
+            auto <= best,
+            "case {case} {format:?}: auto blob {auto} B > best fixed {best} B ({sizes:?})"
+        );
+    }
+}
+
+#[test]
+fn prop_v1_blobs_still_decode() {
+    // Wire compat: a v1 blob is the v2 blob minus the codec byte. Huffman
+    // chunks are unchanged between versions, so rewriting the header of a
+    // Huffman-coded v2 blob produces a faithful v1 blob — it must parse,
+    // report the implicit Huffman codec, and decode bit-exactly.
+    let mut rng = Rng::new(0x0111);
+    for case in 0..40 {
+        let format = FORMATS[case % FORMATS.len()];
+        let data = gen_case(&mut rng, format);
+        let opts = CompressOptions::for_format(format)
+            .with_chunk_size(2048)
+            .with_codec(Codec::Huffman);
+        let blob = compress_tensor(&data, &opts).unwrap();
+        let mut v1 = blob.serialize();
+        v1.remove(8); // drop the codec byte
+        v1[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let parsed = CompressedBlob::deserialize(&v1)
+            .unwrap_or_else(|e| panic!("case {case} {format:?}: v1 parse failed: {e}"));
+        assert_eq!(parsed.codec, Codec::Huffman, "case {case}");
+        assert_eq!(decompress_tensor(&parsed).unwrap(), data, "case {case} {format:?}");
+    }
+}
+
+#[test]
+fn prop_corrupted_rans_streams_never_pass_silently() {
+    // Same discipline as the Huffman corruption property, pinned to the
+    // rANS backend: a flipped payload bit must either fail (frame parse,
+    // coder invariants, or chunk CRC) or decode to the original bytes
+    // (dead-padding hits) — never to silently different data.
+    let mut rng = Rng::new(0xBADA5);
+    let mut detected = 0;
+    let cases = 60;
+    for case in 0..cases {
+        let data = gen_case(&mut rng, FloatFormat::Fp8E4M3);
+        if data.is_empty() {
+            continue;
+        }
+        let opts = CompressOptions::for_format(FloatFormat::Fp8E4M3)
+            .with_chunk_size(4096)
+            .with_codec(Codec::Rans);
+        let mut blob = compress_tensor(&data, &opts).unwrap();
+        if blob.data.is_empty() {
+            continue;
+        }
+        let byte = rng.below(blob.data.len() as u64) as usize;
+        let bit = 1u8 << rng.below(8);
+        blob.data[byte] ^= bit;
+        match decompress_tensor(&blob) {
+            Err(_) => detected += 1,
+            Ok(out) => {
+                assert_eq!(out, data, "case {case}: silent corruption passed the CRC");
+            }
+        }
+    }
+    assert!(detected >= cases * 9 / 10, "only {detected}/{cases} detected");
 }
 
 #[test]
