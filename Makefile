@@ -8,7 +8,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench doc artifacts clean
+.PHONY: build test bench bench-json doc artifacts clean
 
 # Tier-1 verify: release build + full test suite (hermetic, no artifacts).
 build:
@@ -19,6 +19,13 @@ test:
 
 bench:
 	$(CARGO) bench
+
+# Machine-readable bench snapshots (schemas documented in the README).
+# CI runs this and uploads BENCH_*.json as artifacts, so the perf
+# trajectory accumulates across commits.
+bench-json:
+	$(CARGO) bench --bench codec_throughput -- --smoke --json BENCH_codec.json
+	$(CARGO) bench --bench kv_cache -- --json BENCH_kv.json
 
 doc:
 	$(CARGO) doc --no-deps

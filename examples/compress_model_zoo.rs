@@ -11,7 +11,7 @@
 //! cargo run --release --example compress_model_zoo
 //! ```
 
-use zipnn_lp::codec::{compress_nvfp4, compress_tensor, CompressOptions};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::formats::conv::quantize_nvfp4;
 use zipnn_lp::formats::{FloatFormat, StreamKind};
 use zipnn_lp::metrics::Table;
@@ -37,11 +37,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ]);
     for m in &zoo {
         let manifest = synthetic::transformer_manifest(m.d_model, m.layers, m.vocab);
-        let opts = CompressOptions::for_format(m.format).with_threads(2);
+        let session =
+            Compressor::new(CompressOptions::for_format(m.format).with_threads(2));
         let (mut orig, mut enc, mut exp_c, mut sm_c) = (0u64, 0u64, 0u64, 0u64);
         for t in &manifest {
             let bytes = synthetic::materialize_bytes(t, m.format, 1);
-            let blob = compress_tensor(&bytes, &opts)?;
+            let blob = session.compress(TensorInput::Tensor(&bytes))?;
             orig += bytes.len() as u64;
             enc += blob.encoded_len() as u64;
             if let Some(s) = blob.stat(StreamKind::Exponent) {
@@ -64,7 +65,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // --- Fig 9: NVFP4 — only the scalers compress ---
     let manifest = synthetic::transformer_manifest(512, 8, 4096);
-    let opts4 = CompressOptions::for_format(FloatFormat::Fp4E2M1);
+    let session4 = Compressor::new(CompressOptions::for_format(FloatFormat::Fp4E2M1));
     let (mut payload_o, mut payload_c, mut scale_o, mut scale_c) = (0u64, 0u64, 0u64, 0u64);
     let mut total_stored = 0u64;
     let mut total_enc = 0u64;
@@ -75,7 +76,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             continue;
         }
         let q = quantize_nvfp4(&vals[..n16]);
-        let blob = compress_nvfp4(&q, &opts4)?;
+        let blob = session4.compress(TensorInput::Nvfp4(&q))?;
         total_stored += q.stored_bytes() as u64;
         total_enc += blob.encoded_len() as u64;
         if let Some(s) = blob.stat(StreamKind::Payload) {

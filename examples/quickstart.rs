@@ -7,7 +7,7 @@
 //! ```
 
 use zipnn_lp::baselines;
-use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::formats::{FloatFormat, StreamKind};
 use zipnn_lp::metrics::Table;
 use zipnn_lp::synthetic;
@@ -20,11 +20,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("tensor: {n} BF16 weights = {}", human_bytes(data.len() as u64));
 
     // 1. Compress with exponent/mantissa separation (the paper's method).
-    let opts = CompressOptions::for_format(FloatFormat::Bf16).with_threads(2);
-    let blob = compress_tensor(&data, &opts)?;
+    //    The Compressor session owns the options and a persistent worker
+    //    pool; every call on it reuses both.
+    let session =
+        Compressor::new(CompressOptions::for_format(FloatFormat::Bf16).with_threads(2));
+    let blob = session.compress(TensorInput::Tensor(&data))?;
 
-    // 2. Losslessness is non-negotiable.
-    let restored = decompress_tensor(&blob)?;
+    // 2. Losslessness is non-negotiable (zero-copy decode path).
+    let mut restored = vec![0u8; data.len()];
+    session.decompress_into(&blob, &mut restored)?;
     assert_eq!(restored, data, "bit-exact roundtrip");
     println!("roundtrip: bit-exact ✓");
 

@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo bench --bench ablations`
 
-use zipnn_lp::codec::{compress_delta, compress_tensor, CompressOptions};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::formats::{split_streams, FloatFormat};
 use zipnn_lp::kvcache::{KvCacheConfig, PagedKvCache};
 use zipnn_lp::metrics::{bench_loop, Table};
@@ -17,9 +17,11 @@ use zipnn_lp::synthetic;
 fn chunk_sweep(data: &[u8]) {
     let mut t = Table::new(&["chunk KiB", "ratio", "enc MiB/s", "chunks"]);
     for kib in [16usize, 64, 256, 1024, 4096] {
-        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(kib * 1024);
-        let blob = compress_tensor(data, &opts).expect("compress");
-        let b = bench_loop(3, || compress_tensor(data, &opts).unwrap());
+        let session = Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(kib * 1024),
+        );
+        let blob = session.compress(TensorInput::Tensor(data)).expect("compress");
+        let b = bench_loop(3, || session.compress(TensorInput::Tensor(data)).unwrap());
         t.row(&[
             kib.to_string(),
             format!("{:.4}", blob.ratio()),
@@ -33,9 +35,11 @@ fn chunk_sweep(data: &[u8]) {
 fn len_limit_sweep(data: &[u8]) {
     let mut t = Table::new(&["len limit", "ratio", "dec MiB/s"]);
     for limit in [8u8, 10, 12, 15] {
-        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_len_limit(limit);
-        let blob = compress_tensor(data, &opts).expect("compress");
-        let b = bench_loop(3, || zipnn_lp::codec::decompress_tensor(&blob).unwrap());
+        let session = Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16).with_len_limit(limit),
+        );
+        let blob = session.compress(TensorInput::Tensor(data)).expect("compress");
+        let b = bench_loop(3, || session.decompress(&blob).unwrap());
         t.row(&[
             limit.to_string(),
             format!("{:.4}", blob.ratio()),
@@ -55,8 +59,9 @@ fn mantissa_gate(data: &[u8]) {
         let mut opts = CompressOptions::for_format(FloatFormat::Bf16);
         opts.exponent_only = exponent_only;
         opts.gate_threshold = gate;
-        let blob = compress_tensor(data, &opts).expect("compress");
-        let b = bench_loop(3, || compress_tensor(data, &opts).unwrap());
+        let session = Compressor::new(opts);
+        let blob = session.compress(TensorInput::Tensor(data)).expect("compress");
+        let b = bench_loop(3, || session.compress(TensorInput::Tensor(data)).unwrap());
         t.row(&[
             label.to_string(),
             format!("{:.4}", blob.ratio()),
@@ -69,9 +74,11 @@ fn mantissa_gate(data: &[u8]) {
 fn delta_vs_direct() {
     let base = synthetic::gaussian_bf16_bytes(2 * 1024 * 1024, 0.02, 7);
     let cur = synthetic::perturb_bf16_bytes(&base, 0.01, 0.15, 8);
-    let opts = CompressOptions::for_format(FloatFormat::Bf16);
-    let direct = compress_tensor(&cur, &opts).expect("direct");
-    let delta = compress_delta(&cur, &base, &opts).expect("delta");
+    let session = Compressor::new(CompressOptions::for_format(FloatFormat::Bf16));
+    let direct = session.compress(TensorInput::Tensor(&cur)).expect("direct");
+    let delta = session
+        .compress(TensorInput::Delta { current: &cur, base: &base })
+        .expect("delta");
     let mut t = Table::new(&["strategy", "ratio"]);
     t.row(&["direct (no base)".into(), format!("{:.4}", direct.ratio())]);
     t.row(&["XOR delta vs previous".into(), format!("{:.4}", delta.ratio())]);

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench baselines`
 
 use zipnn_lp::baselines;
-use zipnn_lp::codec::{compress_tensor, CompressOptions};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::formats::FloatFormat;
 use zipnn_lp::metrics::{bench_loop, Table};
 use zipnn_lp::synthetic;
@@ -41,12 +41,13 @@ fn main() {
         "workload", "zipnn-lp", "byte-huffman", "lzss-huffman", "rle", "zlp enc MiB/s",
     ]);
     for (name, format, data) in &workloads {
-        let opts = CompressOptions::for_format(*format).with_threads(2);
-        let blob = compress_tensor(data, &opts).expect("compress");
+        let session =
+            Compressor::new(CompressOptions::for_format(*format).with_threads(2));
+        let blob = session.compress(TensorInput::Tensor(data)).expect("compress");
         let bh = baselines::byte_huffman(data).expect("bh");
         let lz = baselines::lzss_huffman(data).expect("lz");
         let rl = baselines::rle(data);
-        let bench = bench_loop(3, || compress_tensor(data, &opts).unwrap());
+        let bench = bench_loop(3, || session.compress(TensorInput::Tensor(data)).unwrap());
         table.row(&[
             name.to_string(),
             format!("{:.4}", blob.ratio()),

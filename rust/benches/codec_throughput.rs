@@ -18,7 +18,7 @@
 //!
 //! Run: `cargo bench --bench codec_throughput -- [--json PATH] [--smoke]`
 
-use zipnn_lp::codec::{compress_tensor, decompress_tensor, Codec, CompressOptions};
+use zipnn_lp::codec::{Codec, CompressOptions, Compressor, TensorInput};
 use zipnn_lp::entropy::Histogram;
 use zipnn_lp::formats::conv::quantize_slice;
 use zipnn_lp::formats::{merge_streams, split_streams, FloatFormat};
@@ -112,18 +112,40 @@ fn stage_benches(mib: usize, iters: usize) {
     t.row(&["crc32".into(), format!("{:.0}", b.mib_per_sec(data.len())), "slice-by-8".into()]);
 
     for threads in [1usize, 2, 4] {
-        let opts = CompressOptions::for_format(FloatFormat::Bf16).with_threads(threads);
-        let b = bench_loop(iters, || compress_tensor(&data, &opts).unwrap());
+        // One session per thread count: the worker pool spawns once, every
+        // bench iteration reuses it (the session API's whole point).
+        let session = Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16).with_threads(threads),
+        );
+        let b = bench_loop(iters, || session.compress(TensorInput::Tensor(&data)).unwrap());
         t.row(&[
             format!("full encode ({threads}t)"),
             format!("{:.0}", b.mib_per_sec(data.len())),
             "split+gate+auto+crc".into(),
         ]);
     }
-    let opts = CompressOptions::for_format(FloatFormat::Bf16);
-    let blob = compress_tensor(&data, &opts).unwrap();
-    let b = bench_loop(iters, || decompress_tensor(&blob).unwrap());
-    t.row(&["full decode (1t)".into(), format!("{:.0}", b.mib_per_sec(data.len())), "decode+merge+crc".into()]);
+    let session = Compressor::new(CompressOptions::for_format(FloatFormat::Bf16));
+    let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+    let mut out = vec![0u8; data.len()];
+    let b = bench_loop(iters, || session.decompress_into(&blob, &mut out).unwrap());
+    t.row(&[
+        "full decode (1t, into)".into(),
+        format!("{:.0}", b.mib_per_sec(data.len())),
+        "zero-copy decode+merge+crc".into(),
+    ]);
+    assert_eq!(out, data, "zero-copy decode must be bit-exact");
+
+    let session2 = Compressor::new(
+        CompressOptions::for_format(FloatFormat::Bf16).with_threads(2),
+    );
+    let b = bench_loop(iters, || {
+        session2.compress_stream(&data[..], std::io::sink()).unwrap()
+    });
+    t.row(&[
+        "stream encode (2t)".into(),
+        format!("{:.0}", b.mib_per_sec(data.len())),
+        "bounded window".into(),
+    ]);
 
     println!("Codec throughput on {mib} MiB of BF16 weights:\n{}", t.render());
     println!("§Perf targets: ≥200 MiB/s encode, ≥400 MiB/s decode per core on exponent streams.\n");
@@ -195,9 +217,10 @@ fn backend_head_to_head(n_elems: usize, iters: usize) -> (Vec<StreamRow>, Vec<Bl
             ("rans", Codec::Rans),
             ("raw", Codec::Raw),
         ] {
-            let opts = CompressOptions::for_format(format).with_codec(codec);
-            let blob = compress_tensor(&data, &opts).expect("compress");
-            assert_eq!(decompress_tensor(&blob).unwrap(), data, "{fname}/{cname}");
+            let session =
+                Compressor::new(CompressOptions::for_format(format).with_codec(codec));
+            let blob = session.compress(TensorInput::Tensor(&data)).expect("compress");
+            assert_eq!(session.decompress(&blob).unwrap(), data, "{fname}/{cname}");
             blob_rows.push(BlobRow { format: fname, codec: cname, ratio: blob.ratio() });
         }
     }

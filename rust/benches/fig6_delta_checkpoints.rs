@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo bench --bench fig6_delta_checkpoints`
 
-use zipnn_lp::codec::{compress_delta, CompressOptions};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::formats::{FloatFormat, StreamKind};
 use zipnn_lp::metrics::{Table, Timer};
 use zipnn_lp::synthetic;
@@ -19,7 +19,8 @@ fn main() {
     // ratios, small enough to iterate.
     let n_params = 8 * 1024 * 1024;
     let n_pairs = 4; // the paper evaluates 4 consecutive pairs
-    let opts = CompressOptions::for_format(FloatFormat::Bf16).with_threads(2);
+    let session =
+        Compressor::new(CompressOptions::for_format(FloatFormat::Bf16).with_threads(2));
 
     println!("Fig 6 — delta checkpoint compression ({n_params} BF16 params/ckpt)");
     let mut table = Table::new(&["pair", "exp ratio", "s+m ratio", "overall", "enc MiB/s"]);
@@ -32,7 +33,9 @@ fn main() {
         let cur = synthetic::perturb_bf16_bytes(&prev, rel, p_change, 200 + pair as u64);
 
         let timer = Timer::new();
-        let blob = compress_delta(&cur, &prev, &opts).expect("compress");
+        let blob = session
+            .compress(TensorInput::Delta { current: &cur, base: &prev })
+            .expect("compress");
         let secs = timer.secs();
 
         let exp = blob.stat(StreamKind::Exponent).map(|s| s.ratio()).unwrap_or(1.0);

@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo bench --bench fig8_weights`
 
-use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::formats::{FloatFormat, StreamKind};
 use zipnn_lp::metrics::{Table, Timer};
 use zipnn_lp::synthetic;
@@ -24,16 +24,17 @@ fn main() {
     ]);
     for (name, format, d, layers, vocab) in zoo {
         let manifest = synthetic::transformer_manifest(d, layers, vocab);
-        let opts = CompressOptions::for_format(format).with_threads(2);
+        let session = Compressor::new(CompressOptions::for_format(format).with_threads(2));
         let (mut orig, mut enc_b, mut exp_c, mut sm_c) = (0u64, 0u64, 0u64, 0u64);
         let (mut enc_secs, mut dec_secs) = (0f64, 0f64);
         for t in &manifest {
             let bytes = synthetic::materialize_bytes(t, format, 1);
             let timer = Timer::new();
-            let blob = compress_tensor(&bytes, &opts).expect("compress");
+            let blob = session.compress(TensorInput::Tensor(&bytes)).expect("compress");
             enc_secs += timer.secs();
             let timer = Timer::new();
-            let back = decompress_tensor(&blob).expect("decompress");
+            let mut back = vec![0u8; bytes.len()];
+            session.decompress_into(&blob, &mut back).expect("decompress");
             dec_secs += timer.secs();
             assert_eq!(back, bytes, "lossless");
             orig += bytes.len() as u64;
@@ -57,11 +58,12 @@ fn main() {
 
     // §4.2 per-layer breakdown for the FP8 model.
     let manifest = synthetic::transformer_manifest(512, 8, 4096);
-    let opts = CompressOptions::for_format(FloatFormat::Fp8E4M3).with_threads(2);
+    let session =
+        Compressor::new(CompressOptions::for_format(FloatFormat::Fp8E4M3).with_threads(2));
     let mut layers_tbl = Table::new(&["tensor", "exp ratio", "s+m ratio", "total"]);
     for t in manifest.iter().filter(|t| t.name.contains("layers.0") || t.name == "tok_embeddings.weight") {
         let bytes = synthetic::materialize_bytes(t, FloatFormat::Fp8E4M3, 1);
-        let blob = compress_tensor(&bytes, &opts).expect("compress");
+        let blob = session.compress(TensorInput::Tensor(&bytes)).expect("compress");
         layers_tbl.row(&[
             t.name.clone(),
             format!("{:.4}", blob.stat(StreamKind::Exponent).map(|s| s.ratio()).unwrap_or(1.0)),

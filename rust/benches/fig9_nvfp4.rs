@@ -4,9 +4,7 @@
 //!
 //! Run: `cargo bench --bench fig9_nvfp4`
 
-use zipnn_lp::codec::{
-    compress_mxfp4, compress_nvfp4, compress_tensor, CompressOptions,
-};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::entropy::Histogram;
 use zipnn_lp::formats::conv::{quantize_mxfp4, quantize_nvfp4};
 use zipnn_lp::formats::{split_streams, FloatFormat, StreamKind};
@@ -18,7 +16,7 @@ fn main() {
     let manifest = synthetic::transformer_manifest(512, 8, 4096);
 
     // --- NVFP4 (Fig 9 proper) ---
-    let opts = CompressOptions::for_format(FloatFormat::Fp4E2M1);
+    let session = Compressor::new(CompressOptions::for_format(FloatFormat::Fp4E2M1));
     let (mut pay_o, mut pay_c, mut sc_o, mut sc_c) = (0u64, 0u64, 0u64, 0u64);
     let (mut stored, mut enc) = (0u64, 0u64);
     for t in &manifest {
@@ -28,7 +26,7 @@ fn main() {
             continue;
         }
         let q = quantize_nvfp4(&vals[..n16]);
-        let blob = compress_nvfp4(&q, &opts).expect("compress");
+        let blob = session.compress(TensorInput::Nvfp4(&q)).expect("compress");
         stored += q.stored_bytes() as u64;
         enc += blob.encoded_len() as u64;
         if let Some(s) = blob.stat(StreamKind::Payload) {
@@ -69,8 +67,7 @@ fn main() {
         ]);
     }
     // And what the full codec does with it (should store ≈ raw).
-    let blob = compress_tensor(&q.payload, &CompressOptions::for_format(FloatFormat::Fp4E2M1))
-        .expect("compress");
+    let blob = session.compress(TensorInput::Tensor(&q.payload)).expect("compress");
     println!("§3.4 negative result — FP4 payload byte-regrouping:\n{}", neg.render());
     println!("codec on the payload stream: ratio {:.4} (paper: 'did not yield meaningful compression')\n", blob.ratio());
 
@@ -81,7 +78,7 @@ fn main() {
         for t in manifest.iter().take(12) {
             let vals = synthetic::materialize(t, 4);
             let q = quantize_mxfp4(&vals, group, sf).expect("mxfp4");
-            let blob = compress_mxfp4(&q, &opts).expect("compress");
+            let blob = session.compress(TensorInput::Mxfp4(&q)).expect("compress");
             stored += q.stored_bytes() as u64;
             enc += blob.encoded_len() as u64;
             if let Some(s) = blob.stat(StreamKind::Scale) {

@@ -8,11 +8,15 @@
 //!
 //! Storage is a directory of `.zlp` archives plus a plain-text manifest, so
 //! the store is inspectable with a text editor and robust to partial state.
+//!
+//! The store drives one [`Compressor`] session for all of its codec work:
+//! appends stream tensor-by-tensor through an incremental
+//! [`ArchiveWriter`] (v2 wire — one blob in memory at a time), and loads
+//! open archives through the random-access [`ArchiveReader`], so shape
+//! checks read only the trailing directory, never tensor data.
 
-use crate::codec::{
-    compress_delta, compress_tensor, decompress_delta, decompress_tensor, CompressOptions,
-};
-use crate::container::{Archive, TensorMeta};
+use crate::codec::{CompressOptions, Compressor, TensorInput};
+use crate::container::{ArchiveReader, ArchiveWriter, TensorMeta};
 use crate::error::{Error, Result};
 use crate::formats::StreamKind;
 use std::path::{Path, PathBuf};
@@ -65,20 +69,26 @@ pub type NamedTensor = (String, Vec<u8>);
 /// Directory-backed delta-checkpoint store.
 pub struct CheckpointStore {
     dir: PathBuf,
-    opts: CompressOptions,
+    session: Compressor,
     /// Store a full checkpoint every N appends (anchors bound chain length).
     anchor_interval: usize,
     records: Vec<CkptRecord>,
 }
 
 impl CheckpointStore {
-    /// Create (or reuse) a store at `dir`.
+    /// Create (or reuse) a store at `dir`. The options seed the store's
+    /// [`Compressor`] session (one worker pool for the store's lifetime).
     pub fn create(dir: &Path, opts: CompressOptions, anchor_interval: usize) -> Result<Self> {
         if anchor_interval == 0 {
             return Err(Error::Checkpoint("anchor_interval must be >= 1".into()));
         }
         std::fs::create_dir_all(dir)?;
-        Ok(CheckpointStore { dir: dir.to_path_buf(), opts, anchor_interval, records: Vec::new() })
+        Ok(CheckpointStore {
+            dir: dir.to_path_buf(),
+            session: Compressor::new(opts),
+            anchor_interval,
+            records: Vec::new(),
+        })
     }
 
     /// Number of checkpoints stored.
@@ -106,45 +116,76 @@ impl CheckpointStore {
             || self.records.is_empty()
             || !self.shapes_match(tensors);
 
-        let mut archive = Archive::new();
+        // Tensors stream straight into the v2 archive: compress one, write
+        // its chunks, drop the blob — the store never materializes a whole
+        // checkpoint's compressed form in memory. The archive is built
+        // under a temp name and renamed only on success, so a failed append
+        // can never leave a truncated .zlp in the (inspectable) store dir.
+        let file = format!("ckpt_{id:05}.zlp");
+        let final_path = self.dir.join(&file);
+        let tmp_path = self.dir.join(format!("{file}.tmp"));
         let mut exp = (0u64, 0u64);
         let mut sm = (0u64, 0u64);
-        let kind = if make_full {
-            for (name, data) in tensors {
-                let blob = compress_tensor(data, &self.opts)?;
-                accumulate(&blob, &mut exp, &mut sm);
-                archive
-                    .insert(TensorMeta { name: clean(name), shape: vec![data.len() as u64] }, blob);
-            }
-            CkptKind::Full
-        } else {
-            let base_id = id - 1;
-            let mut base = self.load(base_id)?;
-            base.sort_by(|a, b| a.0.cmp(&b.0));
-            let mut sorted: Vec<&NamedTensor> = tensors.iter().collect();
-            sorted.sort_by(|a, b| clean(&a.0).cmp(&clean(&b.0)));
-            for ((name, data), (bname, bdata)) in sorted.iter().map(|t| (&t.0, &t.1)).zip(&base) {
-                if &clean(name) != bname {
-                    return Err(Error::Checkpoint(format!(
-                        "tensor name mismatch: {name} vs {bname}"
-                    )));
+        let mut original_bytes = 0u64;
+        let mut encoded_bytes = 0u64;
+        let mut build = || -> Result<CkptKind> {
+            let mut writer = ArchiveWriter::create(&tmp_path)?;
+            let kind = if make_full {
+                for (name, data) in tensors {
+                    let blob = self.session.compress(TensorInput::Tensor(data))?;
+                    accumulate(&blob, &mut exp, &mut sm);
+                    original_bytes += blob.original_len as u64;
+                    encoded_bytes += blob.encoded_len() as u64;
+                    writer.add(
+                        TensorMeta { name: clean(name), shape: vec![data.len() as u64] },
+                        &blob,
+                    )?;
                 }
-                let blob = compress_delta(data, bdata, &self.opts)?;
-                accumulate(&blob, &mut exp, &mut sm);
-                archive
-                    .insert(TensorMeta { name: clean(name), shape: vec![data.len() as u64] }, blob);
-            }
-            CkptKind::Delta { base: base_id }
+                CkptKind::Full
+            } else {
+                let base_id = id - 1;
+                let mut base = self.load(base_id)?;
+                base.sort_by(|a, b| a.0.cmp(&b.0));
+                let mut sorted: Vec<&NamedTensor> = tensors.iter().collect();
+                sorted.sort_by(|a, b| clean(&a.0).cmp(&clean(&b.0)));
+                for ((name, data), (bname, bdata)) in
+                    sorted.iter().map(|t| (&t.0, &t.1)).zip(&base)
+                {
+                    if &clean(name) != bname {
+                        return Err(Error::Checkpoint(format!(
+                            "tensor name mismatch: {name} vs {bname}"
+                        )));
+                    }
+                    let blob = self
+                        .session
+                        .compress(TensorInput::Delta { current: data, base: bdata })?;
+                    accumulate(&blob, &mut exp, &mut sm);
+                    original_bytes += blob.original_len as u64;
+                    encoded_bytes += blob.encoded_len() as u64;
+                    writer.add(
+                        TensorMeta { name: clean(name), shape: vec![data.len() as u64] },
+                        &blob,
+                    )?;
+                }
+                CkptKind::Delta { base: base_id }
+            };
+            writer.finish()?;
+            Ok(kind)
         };
-
-        let file = format!("ckpt_{id:05}.zlp");
-        archive.save(&self.dir.join(&file))?;
+        let kind = match build() {
+            Ok(kind) => kind,
+            Err(e) => {
+                std::fs::remove_file(&tmp_path).ok();
+                return Err(e);
+            }
+        };
+        std::fs::rename(&tmp_path, &final_path)?;
         let record = CkptRecord {
             id,
             kind,
             file,
-            original_bytes: archive.total_original(),
-            encoded_bytes: archive.total_encoded(),
+            original_bytes,
+            encoded_bytes,
             exp_ratio: ratio(exp),
             sm_ratio: ratio(sm),
         };
@@ -154,18 +195,20 @@ impl CheckpointStore {
     }
 
     /// Load checkpoint `id`, reconstructing through the delta chain.
-    /// Returned tensors are sorted by name.
+    /// Returned tensors are sorted by name. Each tensor's blob is read by
+    /// position from the archive and decoded on the session's pool.
     pub fn load(&self, id: usize) -> Result<Vec<NamedTensor>> {
         let rec = self
             .records
             .get(id)
             .ok_or_else(|| Error::Checkpoint(format!("unknown checkpoint {id}")))?;
-        let archive = Archive::load(&self.dir.join(&rec.file))?;
+        let reader = ArchiveReader::open(&self.dir.join(&rec.file))?;
         match rec.kind {
             CkptKind::Full => {
                 let mut out = Vec::new();
-                for (meta, blob) in archive.iter() {
-                    out.push((meta.name.clone(), decompress_tensor(blob)?));
+                for name in reader.names() {
+                    let blob = reader.read_blob(&name)?;
+                    out.push((name, self.session.decompress(&blob)?));
                 }
                 Ok(out)
             }
@@ -175,14 +218,14 @@ impl CheckpointStore {
                 }
                 let base_tensors = self.load(base)?;
                 let mut out = Vec::new();
-                for ((meta, blob), (bname, bdata)) in archive.iter().zip(&base_tensors) {
-                    if &meta.name != bname {
+                for (name, (bname, bdata)) in reader.names().into_iter().zip(&base_tensors) {
+                    if &name != bname {
                         return Err(Error::Checkpoint(format!(
-                            "chain tensor mismatch: {} vs {}",
-                            meta.name, bname
+                            "chain tensor mismatch: {name} vs {bname}"
                         )));
                     }
-                    out.push((meta.name.clone(), decompress_delta(blob, bdata)?));
+                    let blob = reader.read_blob(&name)?;
+                    out.push((name, self.session.decompress_delta(&blob, bdata)?));
                 }
                 Ok(out)
             }
@@ -201,15 +244,18 @@ impl CheckpointStore {
         Ok(loaded.iter().zip(&sorted).all(|((ln, ld), (rn, rd))| ln == rn && &ld == rd))
     }
 
+    /// Shape check against the previous checkpoint. Metadata-only: the
+    /// archive reader serves this from the trailing directory without
+    /// touching any tensor data.
     fn shapes_match(&self, tensors: &[NamedTensor]) -> bool {
         match self.records.last() {
             None => false,
-            Some(rec) => match Archive::load(&self.dir.join(&rec.file)) {
-                Ok(a) => {
-                    a.len() == tensors.len()
+            Some(rec) => match ArchiveReader::open(&self.dir.join(&rec.file)) {
+                Ok(r) => {
+                    r.len() == tensors.len()
                         && tensors.iter().all(|(name, data)| {
-                            a.get(&clean(name))
-                                .map(|(_, b)| b.original_len == data.len())
+                            r.entry(&clean(name))
+                                .map(|e| e.original_len == data.len())
                                 .unwrap_or(false)
                         })
                 }

@@ -1,20 +1,24 @@
-//! Chunked tensor compression: the public `compress_tensor` /
-//! `decompress_tensor` entry points.
+//! Chunked tensor compression: the chunk split / encode / decode core that
+//! backs the [`super::Compressor`] session and the legacy free functions.
 //!
 //! Chunks are independent (own Huffman tables, own CRC), which provides the
 //! paper's §3.1 "random access and parallel decoding". Encoding fans out
-//! over `opts.threads` std threads; chunk outputs are stitched in order.
+//! over a shared [`WorkerPool`] — the session API reuses one pool across
+//! calls; the legacy free functions spin up a transient pool per call —
+//! and chunk outputs are stitched in order.
 
 use super::blob::{ChunkInfo, CompressedBlob, StreamStat};
 use super::stream_codec::{decode_stream, encode_stream_with, EncodedStream, StreamEncoding};
 use super::{CompressOptions, Strategy};
 use crate::error::{Error, Result};
-use crate::formats::{merge_streams, split_streams, FloatFormat, StreamKind};
+use crate::exec::WorkerPool;
+use crate::formats::{merge_streams_into, split_streams, FloatFormat, StreamKind};
 use crate::util::crc32::crc32;
+use std::sync::Mutex;
 
 /// Element alignment required so chunk boundaries never split an element
 /// (or an element pair for E4M3 / a 4-element FP4 group).
-fn chunk_alignment(format: FloatFormat) -> usize {
+pub(crate) fn chunk_alignment(format: FloatFormat) -> usize {
     match format {
         FloatFormat::Fp32 => 4,
         FloatFormat::Fp16 | FloatFormat::Bf16 => 2,
@@ -24,8 +28,21 @@ fn chunk_alignment(format: FloatFormat) -> usize {
     }
 }
 
+/// `opts.chunk_size` rounded up to the format's element alignment — the
+/// exact chunk partition both the buffered and the streaming encoder use.
+pub(crate) fn effective_chunk_size(opts: &CompressOptions) -> Result<usize> {
+    if opts.chunk_size == 0 {
+        return Err(Error::InvalidInput("chunk_size must be positive".into()));
+    }
+    let align = chunk_alignment(opts.format);
+    Ok(opts.chunk_size.div_ceil(align) * align)
+}
+
 /// Encode one chunk: split → per-stream encode → frame.
-fn encode_chunk(raw: &[u8], opts: &CompressOptions) -> Result<(Vec<u8>, Vec<StreamStat>)> {
+pub(crate) fn encode_chunk(
+    raw: &[u8],
+    opts: &CompressOptions,
+) -> Result<(Vec<u8>, Vec<StreamStat>)> {
     let set = split_streams(opts.format, raw)?;
     let mut out = Vec::with_capacity(raw.len() / 2);
     out.push(set.streams.len() as u8);
@@ -47,12 +64,12 @@ fn encode_chunk(raw: &[u8], opts: &CompressOptions) -> Result<(Vec<u8>, Vec<Stre
     Ok((out, stats))
 }
 
-/// Decode one encoded chunk back to raw bytes.
-pub(crate) fn decode_chunk_bytes(
-    enc: &[u8],
-    raw_len: usize,
-    format: FloatFormat,
-) -> Result<Vec<u8>> {
+/// Decode one encoded chunk directly into `dst` (which must be exactly the
+/// chunk's raw length) — the allocation-lean half of the zero-copy decode
+/// path. Stream payload decode still materializes the symbol vectors; the
+/// merge writes straight into the caller's buffer.
+pub(crate) fn decode_chunk_into(enc: &[u8], dst: &mut [u8], format: FloatFormat) -> Result<()> {
+    let raw_len = dst.len();
     let mut pos = 0usize;
     if enc.is_empty() {
         return Err(Error::Corrupt("empty chunk".into()));
@@ -81,10 +98,24 @@ pub(crate) fn decode_chunk_bytes(
         FloatFormat::Fp8E4M3 | FloatFormat::Fp8E5M2 => raw_len,
         FloatFormat::Fp4E2M1 => raw_len * 2,
     };
-    merge_streams(format, &set)
+    merge_streams_into(format, &set, dst)
+}
+
+/// Decode one encoded chunk back to freshly allocated raw bytes.
+pub(crate) fn decode_chunk_bytes(
+    enc: &[u8],
+    raw_len: usize,
+    format: FloatFormat,
+) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; raw_len];
+    decode_chunk_into(enc, &mut out, format)?;
+    Ok(out)
 }
 
 /// Compress a tensor byte buffer (strategy [`Strategy::ExpMantissa`]).
+///
+/// Legacy entry point: spins up a transient worker pool per call. Prefer a
+/// [`super::Compressor`] session, which owns one pool across calls.
 pub fn compress_tensor(data: &[u8], opts: &CompressOptions) -> Result<CompressedBlob> {
     compress_with_strategy(data, opts, Strategy::ExpMantissa)
 }
@@ -95,48 +126,32 @@ pub(crate) fn compress_with_strategy(
     opts: &CompressOptions,
     strategy: Strategy,
 ) -> Result<CompressedBlob> {
-    let align = chunk_alignment(opts.format);
-    if opts.chunk_size == 0 {
-        return Err(Error::InvalidInput("chunk_size must be positive".into()));
-    }
-    let chunk_size = opts.chunk_size.div_ceil(align) * align;
+    // Size the transient pool to the actual work: a sub-chunk tensor takes
+    // the serial path with zero thread spawns, exactly like the pre-pool
+    // scoped-thread code did.
+    let n_chunks = data.len().div_ceil(effective_chunk_size(opts)?).max(1);
+    let pool = WorkerPool::new(opts.threads.min(n_chunks));
+    compress_with_strategy_pooled(data, opts, strategy, &pool)
+}
+
+/// Internal: compress with an explicit strategy on a caller-owned pool (the
+/// session path — no thread spawn here).
+pub(crate) fn compress_with_strategy_pooled(
+    data: &[u8],
+    opts: &CompressOptions,
+    strategy: Strategy,
+    pool: &WorkerPool,
+) -> Result<CompressedBlob> {
+    let chunk_size = effective_chunk_size(opts)?;
     let ranges: Vec<(usize, usize)> = (0..data.len())
         .step_by(chunk_size.max(1))
         .map(|start| (start, (start + chunk_size).min(data.len())))
         .collect();
 
-    let n_threads = opts.threads.max(1).min(ranges.len().max(1));
-    let results: Vec<Result<(Vec<u8>, Vec<StreamStat>)>> = if n_threads <= 1 || ranges.len() <= 1 {
-        ranges.iter().map(|&(s, e)| encode_chunk(&data[s..e], opts)).collect()
-    } else {
-        // Static round-robin split across scoped threads.
-        let mut slots: Vec<Option<Result<(Vec<u8>, Vec<StreamStat>)>>> =
-            (0..ranges.len()).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let chunks_of_work: Vec<Vec<usize>> = (0..n_threads)
-                .map(|t| (t..ranges.len()).step_by(n_threads).collect())
-                .collect();
-            let mut handles = Vec::new();
-            for work in chunks_of_work {
-                let ranges = &ranges;
-                let data = &data;
-                handles.push(scope.spawn(move || {
-                    work.into_iter()
-                        .map(|i| {
-                            let (s, e) = ranges[i];
-                            (i, encode_chunk(&data[s..e], opts))
-                        })
-                        .collect::<Vec<_>>()
-                }));
-            }
-            for h in handles {
-                for (i, r) in h.join().expect("encode worker panicked") {
-                    slots[i] = Some(r);
-                }
-            }
-        });
-        slots.into_iter().map(|s| s.expect("chunk not encoded")).collect()
-    };
+    let results: Vec<Result<(Vec<u8>, Vec<StreamStat>)>> = pool.run(ranges.len(), |i| {
+        let (s, e) = ranges[i];
+        encode_chunk(&data[s..e], opts)
+    });
 
     let mut chunks = Vec::with_capacity(ranges.len());
     let mut blob_data = Vec::new();
@@ -175,69 +190,95 @@ pub fn decompress_tensor(blob: &CompressedBlob) -> Result<Vec<u8>> {
 
 /// Chunk-parallel decompression (the paper's §3.1 "parallel decoding").
 /// `threads = 1` is the serial path; outputs are identical either way.
+///
+/// Legacy entry point: spins up a transient worker pool per call. Prefer
+/// [`super::Compressor::decompress`].
 pub fn decompress_tensor_threads(blob: &CompressedBlob, threads: usize) -> Result<Vec<u8>> {
+    // Never spawn more workers than there are chunks to decode.
+    let pool = WorkerPool::new(threads.min(blob.chunks.len().max(1)));
+    decompress_pooled(blob, &pool)
+}
+
+/// Internal: allocate the output and decode into it on a caller-owned pool.
+pub(crate) fn decompress_pooled(blob: &CompressedBlob, pool: &WorkerPool) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; blob.original_len];
+    decompress_into_pooled(blob, &mut out, pool)?;
+    Ok(out)
+}
+
+/// Internal: zero-copy decode — every chunk merges directly into its slice
+/// of `out`, in parallel over the pool. `out.len()` must equal the blob's
+/// `original_len` exactly.
+pub(crate) fn decompress_into_pooled(
+    blob: &CompressedBlob,
+    out: &mut [u8],
+    pool: &WorkerPool,
+) -> Result<()> {
     if blob.strategy == Strategy::Delta {
         return Err(Error::InvalidInput(
             "delta blob requires a base: use decompress_delta".into(),
         ));
     }
-    // Precompute chunk extents.
-    let mut extents = Vec::with_capacity(blob.chunks.len());
-    let mut off = 0usize;
-    for c in &blob.chunks {
-        if off + c.enc_len > blob.data.len() {
-            return Err(Error::Corrupt("chunk data truncated".into()));
-        }
-        extents.push((off, c.enc_len, c.raw_len, c.crc32));
-        off += c.enc_len;
-    }
+    decompress_chunks_into(blob, out, pool)
+}
 
-    let decode_one = |i: usize| -> Result<Vec<u8>> {
-        let (off, enc_len, raw_len, crc) = extents[i];
-        let raw = decode_chunk_bytes(&blob.data[off..off + enc_len], raw_len, blob.format)?;
-        let actual = crc32(&raw);
-        if actual != crc {
-            return Err(Error::ChecksumMismatch { chunk: i, expected: crc, actual });
-        }
-        Ok(raw)
-    };
-
-    let n_threads = threads.max(1).min(extents.len().max(1));
-    let mut out = Vec::with_capacity(blob.original_len);
-    if n_threads <= 1 || extents.len() <= 1 {
-        for i in 0..extents.len() {
-            out.extend_from_slice(&decode_one(i)?);
-        }
-    } else {
-        let mut slots: Vec<Option<Result<Vec<u8>>>> =
-            (0..extents.len()).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for t in 0..n_threads {
-                let work: Vec<usize> = (t..extents.len()).step_by(n_threads).collect();
-                let decode_one = &decode_one;
-                handles.push(scope.spawn(move || {
-                    work.into_iter().map(|i| (i, decode_one(i))).collect::<Vec<_>>()
-                }));
-            }
-            for h in handles {
-                for (i, r) in h.join().expect("decode worker panicked") {
-                    slots[i] = Some(r);
-                }
-            }
-        });
-        for s in slots {
-            out.extend_from_slice(&s.expect("chunk not decoded")?);
-        }
-    }
+/// Internal: the strategy-agnostic chunk decoder behind
+/// [`decompress_into_pooled`] — the delta path calls this directly (its
+/// chunks decode like any other; the XOR against the base happens after).
+pub(crate) fn decompress_chunks_into(
+    blob: &CompressedBlob,
+    out: &mut [u8],
+    pool: &WorkerPool,
+) -> Result<()> {
     if out.len() != blob.original_len {
-        return Err(Error::Corrupt(format!(
-            "decompressed {} bytes, expected {}",
+        return Err(Error::InvalidInput(format!(
+            "output buffer is {} bytes, blob decodes to {}",
             out.len(),
             blob.original_len
         )));
     }
-    Ok(out)
+    // Precompute chunk extents and validate both directories up front so the
+    // slice split below cannot panic.
+    let mut extents = Vec::with_capacity(blob.chunks.len());
+    let mut enc_off = 0usize;
+    let mut raw_total = 0usize;
+    for c in &blob.chunks {
+        if enc_off + c.enc_len > blob.data.len() {
+            return Err(Error::Corrupt("chunk data truncated".into()));
+        }
+        extents.push((enc_off, c.enc_len, c.crc32));
+        enc_off += c.enc_len;
+        raw_total += c.raw_len;
+    }
+    if raw_total != blob.original_len {
+        return Err(Error::Corrupt(format!(
+            "chunk directory decodes to {} bytes, blob says {}",
+            raw_total, blob.original_len
+        )));
+    }
+    // Hand each chunk its disjoint output slice. The Mutex is uncontended
+    // (one owner per slot); it only exists to move `&mut` access through
+    // the shared `Fn` the pool requires.
+    let mut slices: Vec<Mutex<&mut [u8]>> = Vec::with_capacity(blob.chunks.len());
+    let mut rest: &mut [u8] = out;
+    for c in &blob.chunks {
+        let tail = std::mem::take(&mut rest);
+        let (head, tail) = tail.split_at_mut(c.raw_len);
+        slices.push(Mutex::new(head));
+        rest = tail;
+    }
+    let results: Vec<Result<()>> = pool.run(extents.len(), |i| {
+        let (off, enc_len, crc) = extents[i];
+        let mut guard = slices[i].lock().unwrap();
+        let dst: &mut [u8] = &mut guard[..];
+        decode_chunk_into(&blob.data[off..off + enc_len], dst, blob.format)?;
+        let actual = crc32(&guard[..]);
+        if actual != crc {
+            return Err(Error::ChecksumMismatch { chunk: i, expected: crc, actual });
+        }
+        Ok(())
+    });
+    results.into_iter().collect()
 }
 
 /// Per-kind observability for one blob: which backends its stream frames
@@ -252,8 +293,9 @@ pub struct StreamReport {
     pub original_bytes: u64,
     /// Encoded bytes (tables + payloads).
     pub compressed_bytes: u64,
-    /// Frame count per encoding, `[huffman, huffman-dict, raw, constant, rans]`.
-    pub encoding_counts: [u64; 5],
+    /// Frame count per encoding,
+    /// `[huffman, huffman-dict, raw, constant, rans, rans-dict]`.
+    pub encoding_counts: [u64; 6],
 }
 
 impl StreamReport {
@@ -274,6 +316,7 @@ impl StreamReport {
             StreamEncoding::Raw,
             StreamEncoding::Constant,
             StreamEncoding::Rans,
+            StreamEncoding::RansDict,
         ];
         let parts: Vec<String> = labels
             .iter()
@@ -323,7 +366,7 @@ pub fn stream_report(blob: &CompressedBlob) -> Result<Vec<StreamReport>> {
                         kind,
                         original_bytes: 0,
                         compressed_bytes: 0,
-                        encoding_counts: [0; 5],
+                        encoding_counts: [0; 6],
                     });
                     reports.last_mut().unwrap()
                 }
@@ -332,7 +375,7 @@ pub fn stream_report(blob: &CompressedBlob) -> Result<Vec<StreamReport>> {
             report.compressed_bytes += frame.encoded_len() as u64;
             report.encoding_counts[frame.encoding.wire_id() as usize] += 1;
         }
-        // Same strictness as decode_chunk_bytes: a chunk with bytes after
+        // Same strictness as decode_chunk_into: a chunk with bytes after
         // its frames cannot be decompressed, so the report must not present
         // it as clean either.
         if pos != enc.len() {
@@ -344,17 +387,40 @@ pub fn stream_report(blob: &CompressedBlob) -> Result<Vec<StreamReport>> {
 
 /// Random access: decompress only chunk `index` (§3.1).
 pub fn decompress_chunk(blob: &CompressedBlob, index: usize) -> Result<Vec<u8>> {
+    let raw_len = blob
+        .chunks
+        .get(index)
+        .ok_or_else(|| Error::InvalidInput(format!("chunk {index} out of range")))?
+        .raw_len;
+    let mut out = vec![0u8; raw_len];
+    decompress_chunk_into(blob, index, &mut out)?;
+    Ok(out)
+}
+
+/// Random access without allocation: decode chunk `index` into `out`, which
+/// must be exactly the chunk's raw length.
+pub fn decompress_chunk_into(blob: &CompressedBlob, index: usize, out: &mut [u8]) -> Result<()> {
     let c = blob
         .chunks
         .get(index)
         .ok_or_else(|| Error::InvalidInput(format!("chunk {index} out of range")))?;
+    if out.len() != c.raw_len {
+        return Err(Error::InvalidInput(format!(
+            "output buffer is {} bytes, chunk {index} decodes to {}",
+            out.len(),
+            c.raw_len
+        )));
+    }
     let off = blob.chunk_offset(index);
-    let raw = decode_chunk_bytes(&blob.data[off..off + c.enc_len], c.raw_len, blob.format)?;
-    let actual = crc32(&raw);
+    if off + c.enc_len > blob.data.len() {
+        return Err(Error::Corrupt("chunk data truncated".into()));
+    }
+    decode_chunk_into(&blob.data[off..off + c.enc_len], out, blob.format)?;
+    let actual = crc32(out);
     if actual != c.crc32 {
         return Err(Error::ChecksumMismatch { chunk: index, expected: c.crc32, actual });
     }
-    Ok(raw)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -431,6 +497,26 @@ mod tests {
     }
 
     #[test]
+    fn decompress_into_validates_length() {
+        let data = synthetic::gaussian_bf16_bytes(5_000, 0.02, 21);
+        let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
+        let pool = WorkerPool::serial();
+        for bad_len in [0usize, data.len() - 2, data.len() + 2] {
+            let mut out = vec![0u8; bad_len];
+            assert!(
+                matches!(
+                    decompress_into_pooled(&blob, &mut out, &pool),
+                    Err(Error::InvalidInput(_))
+                ),
+                "len={bad_len}"
+            );
+        }
+        let mut out = vec![0u8; data.len()];
+        decompress_into_pooled(&blob, &mut out, &pool).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
     fn random_access_chunk() {
         let data = synthetic::gaussian_bf16_bytes(20_000, 0.02, 3);
         let blob = compress_tensor(&data, &opts(FloatFormat::Bf16)).unwrap();
@@ -441,6 +527,9 @@ mod tests {
             assert_eq!(chunk, &data[start..start + blob.chunks[i].raw_len], "chunk {i}");
         }
         assert!(decompress_chunk(&blob, blob.chunks.len()).is_err());
+        // The into-variant validates the output length.
+        let mut tiny = vec![0u8; 3];
+        assert!(decompress_chunk_into(&blob, 0, &mut tiny).is_err());
     }
 
     #[test]

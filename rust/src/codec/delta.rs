@@ -11,9 +11,10 @@
 //! converges.
 
 use super::blob::CompressedBlob;
-use super::chunked::{compress_with_strategy, decompress_tensor};
+use super::chunked::{compress_with_strategy, decompress_chunks_into};
 use super::{CompressOptions, Strategy};
 use crate::error::{Error, Result};
+use crate::exec::WorkerPool;
 
 /// XOR two equal-length buffers into a fresh Vec.
 pub fn xor_buffers(a: &[u8], b: &[u8]) -> Result<Vec<u8>> {
@@ -62,15 +63,34 @@ pub fn compress_delta(
 
 /// Reconstruct `current` from a delta blob and the same `base`.
 pub fn decompress_delta(blob: &CompressedBlob, base: &[u8]) -> Result<Vec<u8>> {
+    let pool = WorkerPool::serial();
+    decompress_delta_pooled(blob, base, &pool)
+}
+
+/// Internal: delta decode on a caller-owned pool (the session path).
+pub(crate) fn decompress_delta_pooled(
+    blob: &CompressedBlob,
+    base: &[u8],
+    pool: &WorkerPool,
+) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; blob.original_len];
+    decompress_delta_into_pooled(blob, base, &mut out, pool)?;
+    Ok(out)
+}
+
+/// Internal: zero-copy delta decode — chunks merge straight into `out`,
+/// then the base XORs in place. No intermediate delta buffer.
+pub(crate) fn decompress_delta_into_pooled(
+    blob: &CompressedBlob,
+    base: &[u8],
+    out: &mut [u8],
+    pool: &WorkerPool,
+) -> Result<()> {
     if blob.strategy != Strategy::Delta {
         return Err(Error::InvalidInput("blob is not a delta".into()));
     }
-    // Temporarily view as ExpMantissa for the chunk decoder.
-    let mut inner = blob.clone();
-    inner.strategy = Strategy::ExpMantissa;
-    let mut delta = decompress_tensor(&inner)?;
-    xor_into(&mut delta, base)?;
-    Ok(delta)
+    decompress_chunks_into(blob, out, pool)?;
+    xor_into(out, base)
 }
 
 #[cfg(test)]

@@ -1,6 +1,14 @@
 //! The tensor codec: chunked, stream-separated, entropy-gated lossless
 //! compression (paper §3).
 //!
+//! The public entry point is the [`Compressor`] **session**: one object
+//! owning the [`CompressOptions`] and a persistent
+//! [`crate::exec::WorkerPool`], with unified strategy dispatch
+//! ([`TensorInput`]), zero-copy decode ([`Compressor::decompress_into`]),
+//! and bounded-memory streaming ([`Compressor::compress_stream`]). The
+//! free functions (`compress_tensor`, `compress_delta`, …) predate the
+//! session and remain as thin wrappers.
+//!
 //! Pipeline per tensor:
 //!
 //! 1. (Delta strategy only) XOR against a base tensor (§3.1).
@@ -20,17 +28,24 @@ mod blob;
 mod chunked;
 mod delta;
 mod fp4block;
+mod session;
 mod stream_codec;
+
+pub(crate) use chunked::{decode_chunk_bytes, decode_chunk_into};
 
 pub use blob::{ChunkInfo, CompressedBlob, StreamStat};
 pub use chunked::{
-    compress_tensor, decompress_chunk, decompress_tensor, decompress_tensor_threads,
-    stream_report, StreamReport,
+    compress_tensor, decompress_chunk, decompress_chunk_into, decompress_tensor,
+    decompress_tensor_threads, stream_report, StreamReport,
 };
 pub use delta::{compress_delta, decompress_delta, xor_buffers, xor_into};
 pub use fp4block::{compress_mxfp4, compress_nvfp4, decompress_mxfp4, decompress_nvfp4};
+pub use session::{
+    Compressor, StreamSummary, TensorInput, STREAM_MAGIC, STREAM_VERSION,
+};
 pub use stream_codec::{
-    decode_stream, encode_stream, encode_stream_with, EncodedStream, StreamEncoding,
+    decode_stream, decode_stream_dicts, encode_stream, encode_stream_dicts, encode_stream_with,
+    EncodedStream, StreamDicts, StreamEncoding,
 };
 
 use crate::formats::FloatFormat;
@@ -69,6 +84,38 @@ impl Strategy {
             2 => Some(Strategy::Fp4Block),
             3 => Some(Strategy::Store),
             _ => None,
+        }
+    }
+
+    /// Canonical name (inverse of the [`std::str::FromStr`] impl).
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::ExpMantissa => "exp-mantissa",
+            Strategy::Delta => "delta",
+            Strategy::Fp4Block => "fp4-block",
+            Strategy::Store => "store",
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = crate::error::Error;
+
+    fn from_str(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "exp-mantissa" | "exp_mantissa" | "expmantissa" => Ok(Strategy::ExpMantissa),
+            "delta" => Ok(Strategy::Delta),
+            "fp4-block" | "fp4_block" | "fp4block" => Ok(Strategy::Fp4Block),
+            "store" | "raw" => Ok(Strategy::Store),
+            other => Err(crate::error::Error::InvalidInput(format!(
+                "unknown strategy '{other}' (expected exp-mantissa|delta|fp4-block|store)"
+            ))),
         }
     }
 }
@@ -116,8 +163,34 @@ impl Codec {
         }
     }
 
-    /// Parse a CLI name (`auto`, `huffman`, `rans`, `raw`).
+    /// Parse a CLI name (`auto`, `huffman`, `rans`, `raw`). Equivalent to
+    /// the [`std::str::FromStr`] impl; kept for API stability.
     pub fn parse(s: &str) -> crate::error::Result<Self> {
+        s.parse()
+    }
+
+    /// Display name. Equivalent to the [`std::fmt::Display`] impl; kept
+    /// for API stability.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Auto => "auto",
+            Codec::Huffman => "huffman",
+            Codec::Rans => "rans",
+            Codec::Raw => "raw",
+        }
+    }
+}
+
+impl std::fmt::Display for Codec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Codec {
+    type Err = crate::error::Error;
+
+    fn from_str(s: &str) -> crate::error::Result<Self> {
         match s {
             "auto" => Ok(Codec::Auto),
             "huffman" | "huff" => Ok(Codec::Huffman),
@@ -126,16 +199,6 @@ impl Codec {
             other => Err(crate::error::Error::InvalidInput(format!(
                 "unknown codec '{other}' (expected auto|huffman|rans|raw)"
             ))),
-        }
-    }
-
-    /// Display name.
-    pub fn name(self) -> &'static str {
-        match self {
-            Codec::Auto => "auto",
-            Codec::Huffman => "huffman",
-            Codec::Rans => "rans",
-            Codec::Raw => "raw",
         }
     }
 }
@@ -276,9 +339,19 @@ mod tests {
         for c in [Codec::Auto, Codec::Huffman, Codec::Rans, Codec::Raw] {
             assert_eq!(Codec::from_wire_id(c.wire_id()), Some(c));
             assert_eq!(Codec::parse(c.name()).unwrap(), c);
+            assert_eq!(c.to_string().parse::<Codec>().unwrap(), c);
         }
         assert_eq!(Codec::from_wire_id(99), None);
         assert!(Codec::parse("zstd").is_err());
+        assert!("zstd".parse::<Codec>().is_err());
+    }
+
+    #[test]
+    fn strategy_display_fromstr_roundtrip() {
+        for s in [Strategy::ExpMantissa, Strategy::Delta, Strategy::Fp4Block, Strategy::Store] {
+            assert_eq!(s.to_string().parse::<Strategy>().unwrap(), s, "{s:?}");
+        }
+        assert!("zstd".parse::<Strategy>().is_err());
     }
 
     #[test]

@@ -1,0 +1,664 @@
+//! The `Compressor` session: one entry point for every strategy, zero-copy
+//! decode, and bounded-memory streaming — the public face of the codec.
+//!
+//! The legacy free functions (`compress_tensor`, `compress_delta`,
+//! `compress_mxfp4`, `compress_nvfp4`, `decompress_tensor[_threads]`, …)
+//! each fully materialize their input and output and spawn their own
+//! threads per call. A [`Compressor`] instead owns the knobs
+//! ([`CompressOptions`]) and a persistent [`WorkerPool`] once, dispatches
+//! every decomposition strategy through [`Compressor::compress`], decodes
+//! into caller-provided buffers ([`Compressor::decompress_into`],
+//! [`Compressor::decompress_chunk_into`]), and moves arbitrarily large
+//! tensors through [`Compressor::compress_stream`] /
+//! [`Compressor::decompress_stream`] while holding only one window of
+//! chunks (one chunk per worker) in memory.
+//!
+//! # Streaming wire format (`ZLPS`, version 1)
+//!
+//! ```text
+//! header:  magic "ZLPS" | version u16 | strategy u8 | format u8 | codec u8
+//!          | chunk_size varint
+//! chunk:   0x01 | raw_len varint | crc32 u32 | enc_len varint | enc bytes
+//! trailer: 0x00 | total_raw varint | chunk_count varint
+//! ```
+//!
+//! Chunks are the same partition (and the same encoded bytes) the buffered
+//! path produces for identical options, so streaming and buffered output
+//! are bit-identical chunk for chunk; only the framing differs (a blob
+//! carries a leading directory, a stream carries per-chunk records and a
+//! trailer).
+
+use super::blob::CompressedBlob;
+use super::chunked::{
+    compress_with_strategy_pooled, decode_chunk_bytes, decompress_chunk_into,
+    decompress_into_pooled, decompress_pooled, effective_chunk_size, encode_chunk,
+};
+use super::delta::{decompress_delta_into_pooled, decompress_delta_pooled, xor_buffers};
+use super::fp4block::{compress_mxfp4, compress_nvfp4, decompress_mxfp4, decompress_nvfp4};
+use super::{Codec, CompressOptions, Strategy};
+use crate::error::{Error, Result};
+use crate::exec::WorkerPool;
+use crate::formats::fp4::{Mxfp4Tensor, Nvfp4Tensor};
+use crate::formats::FloatFormat;
+use crate::util::crc32::crc32;
+use crate::util::varint;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+/// Magic prefix of the streaming wire format.
+pub const STREAM_MAGIC: &[u8; 4] = b"ZLPS";
+/// Streaming wire version.
+pub const STREAM_VERSION: u16 = 1;
+
+/// Record marker: one encoded chunk follows.
+const CHUNK_MARKER: u8 = 0x01;
+/// Record marker: stream trailer follows.
+const END_MARKER: u8 = 0x00;
+/// Sanity bound on a stream header's chunk size (1 GiB of raw bytes per
+/// chunk is far beyond any sane configuration).
+const MAX_STREAM_CHUNK: usize = 1 << 30;
+
+/// One tensor handed to [`Compressor::compress`]: the input form picks the
+/// decomposition strategy, the session supplies everything else.
+#[derive(Clone, Copy, Debug)]
+pub enum TensorInput<'a> {
+    /// Raw tensor bytes → exponent/mantissa separation
+    /// ([`Strategy::ExpMantissa`], §3.2/§3.3).
+    Tensor(&'a [u8]),
+    /// Checkpoint delta: XOR `current` against `base`, then ExpMantissa
+    /// ([`Strategy::Delta`], §3.1). Decompression needs the same base.
+    Delta {
+        /// The checkpoint being stored.
+        current: &'a [u8],
+        /// The base it is stored relative to.
+        base: &'a [u8],
+    },
+    /// NVFP4 block tensor: raw payload + coded scale streams
+    /// ([`Strategy::Fp4Block`], §3.4).
+    Nvfp4(&'a Nvfp4Tensor),
+    /// MXFP4 block tensor ([`Strategy::Fp4Block`], §3.4).
+    Mxfp4(&'a Mxfp4Tensor),
+    /// Store chunks at native bit density without entropy coding
+    /// ([`Strategy::Store`] — baseline / incompressible fallback).
+    Store(&'a [u8]),
+}
+
+/// What a streaming call did: totals for ratio accounting plus the peak
+/// number of bytes the call ever held in memory at once — the bounded-
+/// buffering guarantee, checkable by tests and ops alike.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamSummary {
+    /// Raw tensor bytes moved through the stream.
+    pub original_len: u64,
+    /// Bytes on the wire, framing included (header + records + trailer).
+    pub encoded_len: u64,
+    /// Chunks encoded or decoded.
+    pub chunks: u64,
+    /// High-water mark of raw + encoded chunk bytes resident at once.
+    /// Bounded by the window (one chunk per pool worker), independent of
+    /// the total stream length.
+    pub peak_buffered: u64,
+    /// Effective chunk size (options' chunk size rounded to the format's
+    /// element alignment).
+    pub chunk_size: usize,
+}
+
+impl StreamSummary {
+    /// encoded / original (1.0 when the stream was empty).
+    pub fn ratio(&self) -> f64 {
+        if self.original_len == 0 {
+            1.0
+        } else {
+            self.encoded_len as f64 / self.original_len as f64
+        }
+    }
+}
+
+/// A reusable codec session: options + a persistent worker pool.
+///
+/// Construction is the only place threads are spawned; every subsequent
+/// `compress`/`decompress`/streaming call reuses the pool. Sessions are
+/// cheap to clone (the pool is shared through an [`Arc`]) and [`Sync`], so
+/// one session can serve many threads.
+///
+/// ```
+/// use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
+/// use zipnn_lp::formats::FloatFormat;
+///
+/// let weights = zipnn_lp::synthetic::gaussian_bf16_bytes(4096, 0.02, 7);
+/// let session = Compressor::new(
+///     CompressOptions::for_format(FloatFormat::Bf16).with_threads(2),
+/// );
+/// let blob = session.compress(TensorInput::Tensor(&weights)).unwrap();
+/// // Zero-copy decode into a caller-owned buffer.
+/// let mut restored = vec![0u8; weights.len()];
+/// session.decompress_into(&blob, &mut restored).unwrap();
+/// assert_eq!(restored, weights);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Compressor {
+    opts: CompressOptions,
+    pool: Arc<WorkerPool>,
+}
+
+impl Compressor {
+    /// New session; sizes the worker pool from `opts.threads`.
+    pub fn new(opts: CompressOptions) -> Self {
+        let pool = Arc::new(WorkerPool::new(opts.threads));
+        Compressor { opts, pool }
+    }
+
+    /// New session on an existing pool (e.g. one pool shared by several
+    /// sessions with different options). `opts.threads` is ignored; the
+    /// pool's size governs.
+    pub fn with_pool(opts: CompressOptions, pool: Arc<WorkerPool>) -> Self {
+        Compressor { opts, pool }
+    }
+
+    /// The session's options.
+    pub fn options(&self) -> &CompressOptions {
+        &self.opts
+    }
+
+    /// The session's worker pool.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Compress one tensor; the input form selects the strategy
+    /// ([`TensorInput`]).
+    pub fn compress(&self, input: TensorInput<'_>) -> Result<CompressedBlob> {
+        match input {
+            TensorInput::Tensor(data) => compress_with_strategy_pooled(
+                data,
+                &self.opts,
+                Strategy::ExpMantissa,
+                &self.pool,
+            ),
+            TensorInput::Delta { current, base } => {
+                let delta = xor_buffers(current, base)?;
+                compress_with_strategy_pooled(&delta, &self.opts, Strategy::Delta, &self.pool)
+            }
+            TensorInput::Nvfp4(t) => compress_nvfp4(t, &self.opts),
+            TensorInput::Mxfp4(t) => compress_mxfp4(t, &self.opts),
+            TensorInput::Store(data) => {
+                let opts = self.opts.clone().with_codec(Codec::Raw);
+                compress_with_strategy_pooled(data, &opts, Strategy::Store, &self.pool)
+            }
+        }
+    }
+
+    /// Convenience for the common case: [`TensorInput::Tensor`].
+    pub fn compress_bytes(&self, data: &[u8]) -> Result<CompressedBlob> {
+        self.compress(TensorInput::Tensor(data))
+    }
+
+    /// Decompress a chunked blob (ExpMantissa / Store), allocating the
+    /// output. Verifies every chunk CRC; chunk-parallel over the pool.
+    pub fn decompress(&self, blob: &CompressedBlob) -> Result<Vec<u8>> {
+        decompress_pooled(blob, &self.pool)
+    }
+
+    /// Zero-copy decompress: every chunk merges directly into its slice of
+    /// `out`, which must be exactly `blob.original_len` bytes
+    /// ([`Error::InvalidInput`] otherwise). This is the allocation-lean
+    /// decode path deployments should sit on.
+    pub fn decompress_into(&self, blob: &CompressedBlob, out: &mut [u8]) -> Result<()> {
+        decompress_into_pooled(blob, out, &self.pool)
+    }
+
+    /// Random access: decode only chunk `index` into `out` (exactly the
+    /// chunk's `raw_len` bytes), verifying its CRC.
+    pub fn decompress_chunk_into(
+        &self,
+        blob: &CompressedBlob,
+        index: usize,
+        out: &mut [u8],
+    ) -> Result<()> {
+        decompress_chunk_into(blob, index, out)
+    }
+
+    /// Reconstruct a delta blob against its base, allocating the output.
+    pub fn decompress_delta(&self, blob: &CompressedBlob, base: &[u8]) -> Result<Vec<u8>> {
+        decompress_delta_pooled(blob, base, &self.pool)
+    }
+
+    /// Zero-copy delta reconstruction: chunks decode into `out`, then the
+    /// base XORs in place. `out` must be exactly `blob.original_len` bytes.
+    pub fn decompress_delta_into(
+        &self,
+        blob: &CompressedBlob,
+        base: &[u8],
+        out: &mut [u8],
+    ) -> Result<()> {
+        decompress_delta_into_pooled(blob, base, out, &self.pool)
+    }
+
+    /// Decompress an NVFP4 block blob.
+    pub fn decompress_nvfp4(&self, blob: &CompressedBlob) -> Result<Nvfp4Tensor> {
+        decompress_nvfp4(blob)
+    }
+
+    /// Decompress an MXFP4 block blob.
+    pub fn decompress_mxfp4(&self, blob: &CompressedBlob) -> Result<Mxfp4Tensor> {
+        decompress_mxfp4(blob)
+    }
+
+    /// Compress a byte stream with bounded memory: at most one window —
+    /// one chunk per pool worker — of raw input plus its encoded chunks is
+    /// resident at any moment, no matter how large the stream. Chunk
+    /// payloads are bit-identical to what [`Compressor::compress`] produces
+    /// for the same bytes and options.
+    ///
+    /// The stream is encoded with [`Strategy::ExpMantissa`]; the total
+    /// length must satisfy the format's element alignment (same rule as the
+    /// buffered path).
+    pub fn compress_stream<R: Read, W: Write>(
+        &self,
+        mut reader: R,
+        mut writer: W,
+    ) -> Result<StreamSummary> {
+        let chunk_size = effective_chunk_size(&self.opts)?;
+        let window = self.pool.threads().max(1);
+        let mut header = Vec::with_capacity(16);
+        header.extend_from_slice(STREAM_MAGIC);
+        header.extend_from_slice(&STREAM_VERSION.to_le_bytes());
+        header.push(Strategy::ExpMantissa.wire_id());
+        header.push(self.opts.format.wire_id());
+        header.push(self.opts.codec.wire_id());
+        varint::write_usize(&mut header, chunk_size);
+        writer.write_all(&header)?;
+        let mut encoded_len = header.len() as u64;
+        let mut total_raw = 0u64;
+        let mut n_chunks = 0u64;
+        let mut buf = vec![0u8; chunk_size.saturating_mul(window)];
+        let mut peak = buf.len() as u64;
+        loop {
+            let filled = read_full(&mut reader, &mut buf)?;
+            if filled == 0 {
+                break;
+            }
+            let ranges: Vec<(usize, usize)> = (0..filled)
+                .step_by(chunk_size)
+                .map(|s| (s, (s + chunk_size).min(filled)))
+                .collect();
+            let results = self.pool.run(ranges.len(), |i| {
+                let (s, e) = ranges[i];
+                encode_chunk(&buf[s..e], &self.opts)
+            });
+            // Everything resident right now: the input window plus every
+            // encoded chunk of this round.
+            let round_enc: usize = results
+                .iter()
+                .map(|r| r.as_ref().map_or(0, |(enc, _)| enc.len()))
+                .sum();
+            peak = peak.max(buf.len() as u64 + round_enc as u64);
+            for (&(s, e), res) in ranges.iter().zip(results) {
+                let (enc, _) = res?;
+                let mut head = Vec::with_capacity(16);
+                head.push(CHUNK_MARKER);
+                varint::write_usize(&mut head, e - s);
+                head.extend_from_slice(&crc32(&buf[s..e]).to_le_bytes());
+                varint::write_usize(&mut head, enc.len());
+                writer.write_all(&head)?;
+                writer.write_all(&enc)?;
+                encoded_len += (head.len() + enc.len()) as u64;
+                total_raw += (e - s) as u64;
+                n_chunks += 1;
+            }
+            if filled < buf.len() {
+                break; // EOF inside this window
+            }
+        }
+        let mut tail = Vec::with_capacity(16);
+        tail.push(END_MARKER);
+        varint::write_u64(&mut tail, total_raw);
+        varint::write_u64(&mut tail, n_chunks);
+        writer.write_all(&tail)?;
+        writer.flush()?;
+        encoded_len += tail.len() as u64;
+        Ok(StreamSummary {
+            original_len: total_raw,
+            encoded_len,
+            chunks: n_chunks,
+            peak_buffered: peak,
+            chunk_size,
+        })
+    }
+
+    /// Decompress a [`compress_stream`](Self::compress_stream) stream with
+    /// bounded memory: at most one window of encoded chunks plus their
+    /// decoded bytes is resident at once. Verifies every chunk CRC and the
+    /// trailer totals.
+    pub fn decompress_stream<R: Read, W: Write>(
+        &self,
+        mut reader: R,
+        mut writer: W,
+    ) -> Result<StreamSummary> {
+        let mut magic = [0u8; 4];
+        reader.read_exact(&mut magic)?;
+        if &magic != STREAM_MAGIC {
+            return Err(Error::Corrupt("bad stream magic".into()));
+        }
+        let mut vbuf = [0u8; 2];
+        reader.read_exact(&mut vbuf)?;
+        let version = u16::from_le_bytes(vbuf);
+        if version == 0 || version > STREAM_VERSION {
+            return Err(Error::Corrupt(format!("unsupported stream version {version}")));
+        }
+        let mut hdr = [0u8; 3];
+        reader.read_exact(&mut hdr)?;
+        let strategy = Strategy::from_wire_id(hdr[0])
+            .ok_or_else(|| Error::Corrupt(format!("unknown strategy {}", hdr[0])))?;
+        if !matches!(strategy, Strategy::ExpMantissa | Strategy::Store) {
+            return Err(Error::InvalidInput(format!(
+                "stream decode supports exp-mantissa/store, not {strategy}"
+            )));
+        }
+        let format = FloatFormat::from_wire_id(hdr[1])?;
+        Codec::from_wire_id(hdr[2])
+            .ok_or_else(|| Error::Corrupt(format!("unknown codec {}", hdr[2])))?;
+        let chunk_size = read_stream_varint(&mut reader)? as usize;
+        if chunk_size == 0 || chunk_size > MAX_STREAM_CHUNK {
+            return Err(Error::Corrupt(format!("implausible stream chunk size {chunk_size}")));
+        }
+        let window = self.pool.threads().max(1);
+        let mut encoded_len = 9 + varint::len_u64(chunk_size as u64) as u64;
+        let mut total_written = 0u64;
+        let mut n_chunks = 0u64;
+        let mut peak = 0u64;
+        let mut pending: Vec<(usize, u32, Vec<u8>)> = Vec::with_capacity(window);
+        let mut trailer = None;
+        while trailer.is_none() {
+            let mut marker = [0u8; 1];
+            reader.read_exact(&mut marker)?;
+            encoded_len += 1;
+            match marker[0] {
+                CHUNK_MARKER => {
+                    let raw_len = read_stream_varint(&mut reader)? as usize;
+                    if raw_len == 0 || raw_len > chunk_size {
+                        return Err(Error::Corrupt(format!(
+                            "chunk raw length {raw_len} outside (0, {chunk_size}]"
+                        )));
+                    }
+                    let mut crcb = [0u8; 4];
+                    reader.read_exact(&mut crcb)?;
+                    let crc = u32::from_le_bytes(crcb);
+                    let enc_len = read_stream_varint(&mut reader)? as usize;
+                    // An encoded chunk is never larger than raw + per-stream
+                    // framing; anything bigger is corruption, not data.
+                    if enc_len == 0 || enc_len > raw_len * 2 + 4096 {
+                        return Err(Error::Corrupt(format!(
+                            "implausible chunk encoded length {enc_len}"
+                        )));
+                    }
+                    let mut enc = vec![0u8; enc_len];
+                    reader.read_exact(&mut enc)?;
+                    encoded_len += varint::len_u64(raw_len as u64) as u64
+                        + 4
+                        + varint::len_u64(enc_len as u64) as u64
+                        + enc_len as u64;
+                    pending.push((raw_len, crc, enc));
+                }
+                END_MARKER => {
+                    let total = read_stream_varint(&mut reader)?;
+                    let count = read_stream_varint(&mut reader)?;
+                    encoded_len +=
+                        varint::len_u64(total) as u64 + varint::len_u64(count) as u64;
+                    trailer = Some((total, count));
+                }
+                other => {
+                    return Err(Error::Corrupt(format!("unknown stream marker {other}")));
+                }
+            }
+            if !pending.is_empty() && (pending.len() >= window || trailer.is_some()) {
+                let batch = std::mem::take(&mut pending);
+                let in_flight: u64 =
+                    batch.iter().map(|(r, _, e)| (*r + e.len()) as u64).sum();
+                peak = peak.max(in_flight);
+                let base_idx = n_chunks as usize;
+                let decoded: Vec<Result<Vec<u8>>> = self.pool.run(batch.len(), |i| {
+                    let (raw_len, crc, enc) = &batch[i];
+                    let out = decode_chunk_bytes(enc, *raw_len, format)?;
+                    let actual = crc32(&out);
+                    if actual != *crc {
+                        return Err(Error::ChecksumMismatch {
+                            chunk: base_idx + i,
+                            expected: *crc,
+                            actual,
+                        });
+                    }
+                    Ok(out)
+                });
+                for d in decoded {
+                    let bytes = d?;
+                    writer.write_all(&bytes)?;
+                    total_written += bytes.len() as u64;
+                    n_chunks += 1;
+                }
+            }
+        }
+        let (total, count) = trailer.expect("loop exits with trailer");
+        if total != total_written || count != n_chunks {
+            return Err(Error::Corrupt(format!(
+                "stream trailer mismatch: trailer says {total} bytes / {count} chunks, \
+                 decoded {total_written} / {n_chunks}"
+            )));
+        }
+        writer.flush()?;
+        Ok(StreamSummary {
+            original_len: total_written,
+            encoded_len,
+            chunks: n_chunks,
+            peak_buffered: peak,
+            chunk_size,
+        })
+    }
+}
+
+/// Fill `buf` from `reader` until full or EOF; returns bytes read.
+fn read_full<R: Read>(reader: &mut R, buf: &mut [u8]) -> Result<usize> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(filled)
+}
+
+/// Read one LEB128 varint from a byte stream (wire-compatible with
+/// [`crate::util::varint`]).
+fn read_stream_varint<R: Read>(reader: &mut R) -> Result<u64> {
+    let mut value: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let mut byte = [0u8; 1];
+        reader.read_exact(&mut byte)?;
+        let byte = byte[0];
+        if shift == 63 && byte > 1 {
+            return Err(Error::Corrupt("varint overflows u64".into()));
+        }
+        value |= u64::from(byte & 0x7F) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(value);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(Error::Corrupt("varint too long".into()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::conv::{quantize_mxfp4, quantize_nvfp4};
+    use crate::synthetic;
+
+    fn session(threads: usize) -> Compressor {
+        Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16)
+                .with_chunk_size(4096)
+                .with_threads(threads),
+        )
+    }
+
+    #[test]
+    fn session_matches_free_functions() {
+        let data = synthetic::gaussian_bf16_bytes(20_000, 0.02, 31);
+        let s = session(3);
+        let blob = s.compress(TensorInput::Tensor(&data)).unwrap();
+        let legacy = super::super::compress_tensor(&data, s.options()).unwrap();
+        assert_eq!(blob.serialize(), legacy.serialize());
+        assert_eq!(s.decompress(&blob).unwrap(), data);
+        assert_eq!(s.compress_bytes(&data).unwrap().serialize(), legacy.serialize());
+    }
+
+    #[test]
+    fn session_all_strategies_roundtrip() {
+        let s = session(2);
+        let base = synthetic::gaussian_bf16_bytes(10_000, 0.02, 32);
+        let cur = synthetic::perturb_bf16_bytes(&base, 0.001, 0.05, 33);
+        let delta = s.compress(TensorInput::Delta { current: &cur, base: &base }).unwrap();
+        assert_eq!(delta.strategy, Strategy::Delta);
+        assert_eq!(s.decompress_delta(&delta, &base).unwrap(), cur);
+        let mut out = vec![0u8; cur.len()];
+        s.decompress_delta_into(&delta, &base, &mut out).unwrap();
+        assert_eq!(out, cur);
+
+        let store = s.compress(TensorInput::Store(&base)).unwrap();
+        assert_eq!(store.strategy, Strategy::Store);
+        assert_eq!(s.decompress(&store).unwrap(), base);
+
+        let vals = synthetic::gaussian_f32(8192, 0.02, 34);
+        let s4 = Compressor::new(CompressOptions::for_format(FloatFormat::Fp4E2M1));
+        let nv = quantize_nvfp4(&vals);
+        let blob = s4.compress(TensorInput::Nvfp4(&nv)).unwrap();
+        assert_eq!(s4.decompress_nvfp4(&blob).unwrap(), nv);
+        let mx = quantize_mxfp4(&vals, 32, FloatFormat::Fp16).unwrap();
+        let blob = s4.compress(TensorInput::Mxfp4(&mx)).unwrap();
+        assert_eq!(s4.decompress_mxfp4(&blob).unwrap(), mx);
+    }
+
+    #[test]
+    fn decompress_into_length_mismatch_errors() {
+        let data = synthetic::gaussian_bf16_bytes(5_000, 0.02, 35);
+        let s = session(1);
+        let blob = s.compress_bytes(&data).unwrap();
+        let mut short = vec![0u8; data.len() - 2];
+        assert!(matches!(
+            s.decompress_into(&blob, &mut short),
+            Err(Error::InvalidInput(_))
+        ));
+        let mut long = vec![0u8; data.len() + 2];
+        assert!(matches!(
+            s.decompress_into(&blob, &mut long),
+            Err(Error::InvalidInput(_))
+        ));
+        // Chunk-level length mismatch too.
+        let mut bad = vec![0u8; blob.chunks[0].raw_len + 1];
+        assert!(matches!(
+            s.decompress_chunk_into(&blob, 0, &mut bad),
+            Err(Error::InvalidInput(_))
+        ));
+        let mut ok = vec![0u8; blob.chunks[0].raw_len];
+        s.decompress_chunk_into(&blob, 0, &mut ok).unwrap();
+        assert_eq!(ok, data[..blob.chunks[0].raw_len]);
+    }
+
+    #[test]
+    fn stream_roundtrip_larger_than_window() {
+        // 2 workers x 4 KiB chunks = 8 KiB window; 40x more data than that.
+        let s = session(2);
+        let data = synthetic::gaussian_bf16_bytes(160_000, 0.02, 36);
+        let mut wire = Vec::new();
+        let summary = s.compress_stream(&data[..], &mut wire).unwrap();
+        assert_eq!(summary.original_len, data.len() as u64);
+        assert_eq!(summary.encoded_len, wire.len() as u64);
+        assert!(summary.chunks as usize > s.pool().threads());
+        // Bounded buffering: the window (raw + encoded, encoded <= raw +
+        // slack) is independent of the stream length.
+        let window_bytes = (s.pool().threads() * summary.chunk_size) as u64;
+        assert!(
+            summary.peak_buffered <= 2 * window_bytes + 8192,
+            "peak {} vs window {window_bytes}",
+            summary.peak_buffered
+        );
+        assert!(summary.peak_buffered < data.len() as u64 / 4);
+        let mut out = Vec::new();
+        let dsum = s.decompress_stream(&wire[..], &mut out).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(dsum.original_len, data.len() as u64);
+        assert_eq!(dsum.chunks, summary.chunks);
+        assert!(dsum.peak_buffered <= 2 * window_bytes + 8192);
+    }
+
+    #[test]
+    fn stream_chunks_bit_identical_to_buffered() {
+        let s = session(2);
+        let data = synthetic::gaussian_bf16_bytes(30_000, 0.02, 37);
+        let blob = s.compress_bytes(&data).unwrap();
+        let mut wire = Vec::new();
+        s.compress_stream(&data[..], &mut wire).unwrap();
+        // Concatenated encoded chunk payloads must match the blob's data.
+        let mut pos = 4 + 2 + 3;
+        let _ = varint::read_usize(&wire, &mut pos).unwrap(); // chunk_size
+        let mut stream_chunks = Vec::new();
+        loop {
+            let marker = wire[pos];
+            pos += 1;
+            if marker == 0 {
+                break;
+            }
+            let raw_len = varint::read_usize(&wire, &mut pos).unwrap();
+            pos += 4; // crc
+            let enc_len = varint::read_usize(&wire, &mut pos).unwrap();
+            stream_chunks.push((raw_len, wire[pos..pos + enc_len].to_vec()));
+            pos += enc_len;
+        }
+        assert_eq!(stream_chunks.len(), blob.chunks.len());
+        let mut concat = Vec::new();
+        for ((raw_len, enc), info) in stream_chunks.iter().zip(&blob.chunks) {
+            assert_eq!(*raw_len, info.raw_len);
+            assert_eq!(enc.len(), info.enc_len);
+            concat.extend_from_slice(enc);
+        }
+        assert_eq!(concat, blob.data);
+    }
+
+    #[test]
+    fn stream_empty_and_corrupt() {
+        let s = session(1);
+        let mut wire = Vec::new();
+        let summary = s.compress_stream(&[][..], &mut wire).unwrap();
+        assert_eq!(summary.chunks, 0);
+        assert_eq!(summary.ratio(), 1.0);
+        let mut out = Vec::new();
+        s.decompress_stream(&wire[..], &mut out).unwrap();
+        assert!(out.is_empty());
+
+        // Bad magic.
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        assert!(s.decompress_stream(&bad[..], &mut Vec::new()).is_err());
+
+        // Corrupted payload byte must be caught (CRC or frame parse).
+        let data = synthetic::gaussian_bf16_bytes(6_000, 0.02, 38);
+        let mut wire = Vec::new();
+        s.compress_stream(&data[..], &mut wire).unwrap();
+        let n = wire.len();
+        wire[n / 2] ^= 0x20;
+        assert!(s.decompress_stream(&wire[..], &mut Vec::new()).is_err());
+
+        // Truncation must be caught.
+        let mut wire2 = Vec::new();
+        s.compress_stream(&data[..], &mut wire2).unwrap();
+        assert!(s
+            .decompress_stream(&wire2[..wire2.len() - 3], &mut Vec::new())
+            .is_err());
+    }
+}

@@ -29,6 +29,11 @@ pub enum StreamEncoding {
     /// fractional-bit granularity, beating Huffman's 1-bit floor on the
     /// concentrated exponent histograms of low-precision formats.
     Rans,
+    /// Interleaved rANS against an external (dictionary) frequency table —
+    /// no table embedded. The rANS analogue of [`HuffmanDict`](Self::HuffmanDict):
+    /// used for K/V cache pages with precomputed per-layer dictionaries
+    /// (§3.3), closing the "dictionary coding is Huffman-only" gap.
+    RansDict,
 }
 
 impl StreamEncoding {
@@ -39,6 +44,7 @@ impl StreamEncoding {
             StreamEncoding::Raw => 2,
             StreamEncoding::Constant => 3,
             StreamEncoding::Rans => 4,
+            StreamEncoding::RansDict => 5,
         }
     }
 
@@ -49,6 +55,7 @@ impl StreamEncoding {
             2 => Some(StreamEncoding::Raw),
             3 => Some(StreamEncoding::Constant),
             4 => Some(StreamEncoding::Rans),
+            5 => Some(StreamEncoding::RansDict),
             _ => None,
         }
     }
@@ -61,8 +68,23 @@ impl StreamEncoding {
             StreamEncoding::Raw => "raw",
             StreamEncoding::Constant => "constant",
             StreamEncoding::Rans => "rans",
+            StreamEncoding::RansDict => "rans-dict",
         }
     }
+}
+
+/// Shared (precomputed) dictionary tables a caller can lend to
+/// [`encode_stream_dicts`] / [`decode_stream_dicts`]: a canonical-Huffman
+/// code table, an rANS frequency table, or both. With both available the
+/// encoder picks whichever models the stream in fewer bits; every frame
+/// records which one it used, so decode passes the matching table back.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamDicts<'a> {
+    /// Precomputed Huffman table ([`StreamEncoding::HuffmanDict`] frames).
+    pub huffman: Option<&'a CodeTable>,
+    /// Precomputed rANS frequency table ([`StreamEncoding::RansDict`]
+    /// frames).
+    pub rans: Option<&'a FreqTable>,
 }
 
 /// An encoded component stream plus its framing metadata.
@@ -172,7 +194,27 @@ pub fn encode_stream(
     encode_stream_with(stream, len_limit, gate_threshold, dictionary, Codec::Huffman)
 }
 
-/// Encode one component stream with an explicit entropy-backend policy.
+/// Encode one component stream with an explicit entropy-backend policy and
+/// a Huffman-only dictionary. Equivalent to [`encode_stream_dicts`] with no
+/// rANS table; kept as the stable mid-level entry point.
+pub fn encode_stream_with(
+    stream: &Stream,
+    len_limit: u8,
+    gate_threshold: f64,
+    dictionary: Option<&CodeTable>,
+    codec: Codec,
+) -> Result<EncodedStream> {
+    encode_stream_dicts(
+        stream,
+        len_limit,
+        gate_threshold,
+        StreamDicts { huffman: dictionary, rans: None },
+        codec,
+    )
+}
+
+/// Encode one component stream with an explicit entropy-backend policy and
+/// any combination of shared dictionaries.
 ///
 /// `Codec::Auto` selects per stream by **exact** encoded size: Huffman's
 /// cost is computable from the histogram alone (table + ⌈Σ count·len / 8⌉),
@@ -180,11 +222,17 @@ pub fn encode_stream(
 /// provable size lower bound ([`crate::rans::payload_lower_bound_bytes`])
 /// could still beat the best other backend. The result is never larger than
 /// what any fixed backend would have produced for the same stream.
-pub fn encode_stream_with(
+///
+/// Dictionaries short-circuit the per-stream paths: when a lent table
+/// covers the stream and beats raw, the frame carries no table at all
+/// ([`StreamEncoding::HuffmanDict`] / [`StreamEncoding::RansDict`]). A
+/// dictionary miss falls through to per-stream coding, which the caller's
+/// adaptive-refresh policy observes through the `encoding` field.
+pub fn encode_stream_dicts(
     stream: &Stream,
     len_limit: u8,
     gate_threshold: f64,
-    dictionary: Option<&CodeTable>,
+    dicts: StreamDicts<'_>,
     codec: Codec,
 ) -> Result<EncodedStream> {
     let kind_id = stream.kind.wire_id();
@@ -220,24 +268,52 @@ pub fn encode_stream_with(
         });
     }
 
-    if let Some(dict) = dictionary {
-        if dict.covers(&hist) {
-            let cost_bits = dict.cost_bits(&hist);
-            let raw_bits = stream.native_size_bits();
-            if cost_bits < raw_bits {
-                let payload = HuffmanEncoder::new(dict).encode(&stream.bytes);
-                return Ok(EncodedStream {
-                    kind_id,
-                    encoding: StreamEncoding::HuffmanDict,
-                    native_bits,
-                    n_symbols,
-                    table: Vec::new(),
-                    payload,
-                });
-            }
+    // Shared dictionaries (§3.3): code against a precomputed table when one
+    // covers the stream and beats raw. With both backends' tables available
+    // the cheaper one (by modeled bits, rANS including its fixed state
+    // flush) is tried first; the rANS pick is verified by measurement. Any
+    // miss falls through to per-stream coding.
+    let raw_bits = stream.native_size_bits();
+    let hdict = dicts.huffman.filter(|d| d.covers(&hist));
+    let rdict = if matches!(codec, Codec::Rans | Codec::Auto) {
+        dicts.rans.filter(|d| d.covers(&hist))
+    } else {
+        None
+    };
+    let h_bits = hdict.map(|d| d.cost_bits(&hist) as f64);
+    let r_bits = rdict.map(|d| d.cost_bits(&hist) + (crate::rans::FLUSH_BYTES as f64) * 8.0);
+    let rans_first = match (h_bits, r_bits) {
+        (Some(h), Some(r)) => r < h,
+        (None, Some(_)) => true,
+        _ => false,
+    };
+    if rans_first {
+        let d = rdict.expect("rans dictionary present when selected");
+        let payload = RansEncoder::new(d).encode(&stream.bytes)?;
+        if (payload.len() as u64) * 8 < raw_bits {
+            return Ok(EncodedStream {
+                kind_id,
+                encoding: StreamEncoding::RansDict,
+                native_bits,
+                n_symbols,
+                table: Vec::new(),
+                payload,
+            });
         }
-        // Dictionary miss → fall through to per-stream coding (the caller's
-        // adaptive-refresh policy observes this through the encoding field).
+    }
+    if let Some(dict) = hdict {
+        let cost_bits = dict.cost_bits(&hist);
+        if cost_bits < raw_bits {
+            let payload = HuffmanEncoder::new(dict).encode(&stream.bytes);
+            return Ok(EncodedStream {
+                kind_id,
+                encoding: StreamEncoding::HuffmanDict,
+                native_bits,
+                n_symbols,
+                table: Vec::new(),
+                payload,
+            });
+        }
     }
 
     let raw_bytes = packing::packed_len(n_symbols, native_bits);
@@ -361,8 +437,15 @@ fn rans_stream(stream: &Stream, table: &FreqTable, kind_id: u8) -> Result<Encode
 /// Decode one component stream back to symbol bytes.
 ///
 /// `dictionary` must be provided iff the stream was coded with
-/// [`StreamEncoding::HuffmanDict`].
+/// [`StreamEncoding::HuffmanDict`]. For [`StreamEncoding::RansDict`]
+/// streams use [`decode_stream_dicts`].
 pub fn decode_stream(enc: &EncodedStream, dictionary: Option<&CodeTable>) -> Result<Vec<u8>> {
+    decode_stream_dicts(enc, StreamDicts { huffman: dictionary, rans: None })
+}
+
+/// Decode one component stream back to symbol bytes, with whichever shared
+/// dictionary the frame's encoding requires lent via `dicts`.
+pub fn decode_stream_dicts(enc: &EncodedStream, dicts: StreamDicts<'_>) -> Result<Vec<u8>> {
     match enc.encoding {
         StreamEncoding::Constant => {
             if enc.payload.len() != 1 {
@@ -380,10 +463,16 @@ pub fn decode_stream(enc: &EncodedStream, dictionary: Option<&CodeTable>) -> Res
             RansDecoder::new(&table).decode(&enc.payload, enc.n_symbols)
         }
         StreamEncoding::HuffmanDict => {
-            let dict = dictionary.ok_or_else(|| {
+            let dict = dicts.huffman.ok_or_else(|| {
                 Error::Corrupt("stream needs dictionary but none provided".into())
             })?;
             HuffmanDecoder::new(dict)?.decode(&enc.payload, enc.n_symbols)
+        }
+        StreamEncoding::RansDict => {
+            let table = dicts.rans.ok_or_else(|| {
+                Error::Corrupt("stream needs rANS dictionary but none provided".into())
+            })?;
+            RansDecoder::new(table).decode(&enc.payload, enc.n_symbols)
         }
     }
 }
@@ -551,6 +640,77 @@ mod tests {
         let e2 = encode_stream(&mk(data2.clone(), 8), 12, 0.97, Some(&dict)).unwrap();
         assert_ne!(e2.encoding, StreamEncoding::HuffmanDict);
         assert_eq!(decode_stream(&e2, None).unwrap(), data2);
+    }
+
+    #[test]
+    fn rans_dictionary_hit_roundtrips_without_embedded_table() {
+        let mut rng = Rng::new(21);
+        // FP8-exponent-like peaked alphabet: rANS territory.
+        let train: Vec<u8> = (0..50_000)
+            .map(|_| if rng.next_f64() < 0.93 { 8u8 } else { (rng.below(4) + 7) as u8 })
+            .collect();
+        let hist = Histogram::from_bytes(&train);
+        let rdict = crate::rans::FreqTable::from_histogram(&hist).unwrap();
+        let hdict = CodeTable::build(&hist, 12).unwrap();
+        let data: Vec<u8> = (0..8000)
+            .map(|_| if rng.next_f64() < 0.93 { 8u8 } else { (rng.below(4) + 7) as u8 })
+            .collect();
+        let s = mk(data.clone(), 4);
+        // rANS-only dictionary: the frame must be RansDict, table-free.
+        let e = encode_stream_dicts(
+            &s,
+            12,
+            0.97,
+            StreamDicts { huffman: None, rans: Some(&rdict) },
+            Codec::Rans,
+        )
+        .unwrap();
+        assert_eq!(e.encoding, StreamEncoding::RansDict);
+        assert!(e.table.is_empty());
+        assert_eq!(
+            decode_stream_dicts(&e, StreamDicts { huffman: None, rans: Some(&rdict) }).unwrap(),
+            data
+        );
+        // Missing dictionary at decode time is an error, not silence.
+        assert!(decode_stream_dicts(&e, StreamDicts::default()).is_err());
+        // Frame wire roundtrip.
+        let mut buf = Vec::new();
+        e.write_to(&mut buf);
+        let mut pos = 0;
+        let e2 = EncodedStream::read_from(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(e2.encoding, StreamEncoding::RansDict);
+        // With both tables under Auto, the sub-1-bit alphabet picks rANS
+        // (no 1-bit/symbol floor) and still round-trips.
+        let both = StreamDicts { huffman: Some(&hdict), rans: Some(&rdict) };
+        let ea = encode_stream_dicts(&s, 12, 0.97, both, Codec::Auto).unwrap();
+        assert_eq!(ea.encoding, StreamEncoding::RansDict);
+        assert!(ea.payload.len() < e2.payload.len() + 1); // same payload size
+        assert_eq!(decode_stream_dicts(&ea, both).unwrap(), data);
+        // Under Codec::Huffman the rANS table is ignored.
+        let eh = encode_stream_dicts(&s, 12, 0.97, both, Codec::Huffman).unwrap();
+        assert_eq!(eh.encoding, StreamEncoding::HuffmanDict);
+        assert_eq!(decode_stream_dicts(&eh, both).unwrap(), data);
+    }
+
+    #[test]
+    fn rans_dictionary_miss_falls_through() {
+        let mut rng = Rng::new(22);
+        let train: Vec<u8> = (0..20_000).map(|_| (rng.below(4) + 100) as u8).collect();
+        let rdict =
+            crate::rans::FreqTable::from_histogram(&Histogram::from_bytes(&train)).unwrap();
+        // Symbols outside the dictionary alphabet: must not be RansDict.
+        let data = vec![5u8; 4000];
+        let e = encode_stream_dicts(
+            &mk(data.clone(), 8),
+            12,
+            0.97,
+            StreamDicts { huffman: None, rans: Some(&rdict) },
+            Codec::Rans,
+        )
+        .unwrap();
+        assert_ne!(e.encoding, StreamEncoding::RansDict);
+        assert_eq!(decode_stream(&e, None).unwrap(), data);
     }
 
     #[test]

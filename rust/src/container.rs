@@ -1,18 +1,43 @@
 //! The `zlp` archive: many named compressed tensors in one file.
 //!
-//! Layout (all integers varint unless noted):
+//! Two wire formats coexist:
+//!
+//! **v1** (in-memory, [`Archive::serialize`] / [`Archive::deserialize`]):
 //!
 //! ```text
-//! magic "ZLPC" | version u16 | flags u16 | tensor_count
+//! magic "ZLPC" | version=1 u16 | flags u16 | tensor_count
 //! per tensor:  name_len | name | shape_rank | shape... | blob_len | blob
 //! ```
 //!
-//! Each blob is a [`CompressedBlob`] (self-describing: format, strategy,
-//! chunk directory, CRCs). The archive keeps an in-memory index so tensors
-//! decode independently — model loaders can stream tensor-by-tensor.
+//! **v2** (random-access, [`ArchiveWriter`] / [`ArchiveReader`]): chunk
+//! data is written incrementally as tensors arrive, and the whole tensor +
+//! chunk directory trails the data as a footer, so writing never buffers
+//! more than one blob and reading never loads the file:
+//!
+//! ```text
+//! magic "ZLPC" | version=2 u16 | flags u16
+//! body:   per-tensor encoded chunks, concatenated in add() order
+//! footer: tensor_count | per tensor:
+//!           name_len | name | rank | shape...
+//!           strategy u8 | format u8 | codec u8
+//!           original_len | chunk_size | data_offset
+//!           n_chunks | (raw_len | enc_len | crc32 u32)*
+//! tail:   footer_offset u64 | footer_crc32 u32 | magic "ZLPF"   (16 bytes)
+//! ```
+//!
+//! [`ArchiveReader::open`] reads the 16-byte tail, then the footer, and
+//! serves per-tensor ([`ArchiveReader::read_tensor`]), per-chunk
+//! ([`ArchiveReader::read_chunk`]) and byte-range
+//! ([`ArchiveReader::read_range`]) access through positioned reads —
+//! nothing outside the requested chunks is ever deserialized. v1 files
+//! still open (fully loaded, same API).
 
-use crate::codec::CompressedBlob;
+use crate::codec::{
+    decode_chunk_bytes, decode_chunk_into, ChunkInfo, Codec, CompressedBlob, Strategy,
+};
 use crate::error::{Error, Result};
+use crate::formats::FloatFormat;
+use crate::util::crc32::crc32;
 use crate::util::varint;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -20,8 +45,14 @@ use std::path::Path;
 
 /// Archive magic.
 pub const ARCHIVE_MAGIC: &[u8; 4] = b"ZLPC";
-/// Archive wire version.
+/// v1 archive wire version (the in-memory [`Archive`] wire format).
 pub const ARCHIVE_VERSION: u16 = 1;
+/// v2 archive wire version (the random-access footer format).
+pub const ARCHIVE_VERSION_V2: u16 = 2;
+/// Footer magic closing a v2 file.
+pub const FOOTER_MAGIC: &[u8; 4] = b"ZLPF";
+/// Fixed v2 tail length: footer offset (8) + footer CRC (4) + magic (4).
+const TAIL_LEN: usize = 16;
 
 /// Metadata of one archived tensor.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -32,7 +63,43 @@ pub struct TensorMeta {
     pub shape: Vec<u64>,
 }
 
-/// An in-memory `zlp` archive.
+/// Directory record of one tensor in a v2 archive: everything a blob
+/// header carries, plus where the tensor's chunk data lives in the file.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    /// Name + shape.
+    pub meta: TensorMeta,
+    /// Compression strategy of the blob.
+    pub strategy: Strategy,
+    /// Entropy-backend policy the blob was compressed with.
+    pub codec: Codec,
+    /// Element format.
+    pub format: FloatFormat,
+    /// Original tensor length in bytes.
+    pub original_len: usize,
+    /// Chunk size used at compression time.
+    pub chunk_size: usize,
+    /// Absolute file offset of the tensor's first encoded chunk byte
+    /// (0 for entries served from a loaded v1 archive).
+    pub data_offset: u64,
+    /// Chunk directory (same records a [`CompressedBlob`] carries).
+    pub chunks: Vec<ChunkInfo>,
+}
+
+impl TensorEntry {
+    /// Total encoded chunk bytes of this tensor.
+    pub fn data_len(&self) -> u64 {
+        self.chunks.iter().map(|c| c.enc_len as u64).sum()
+    }
+
+    /// Byte offset of chunk `i` within this tensor's data region.
+    pub fn chunk_offset(&self, i: usize) -> u64 {
+        self.chunks[..i].iter().map(|c| c.enc_len as u64).sum()
+    }
+}
+
+/// An in-memory `zlp` archive (v1 wire format; [`Archive::save`] writes v2
+/// on disk and [`Archive::load`] reads either version).
 #[derive(Debug, Default)]
 pub struct Archive {
     entries: BTreeMap<String, (TensorMeta, CompressedBlob)>,
@@ -89,7 +156,7 @@ impl Archive {
         }
     }
 
-    /// Serialize the archive.
+    /// Serialize the archive (v1 wire format).
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(ARCHIVE_MAGIC);
@@ -110,7 +177,7 @@ impl Archive {
         out
     }
 
-    /// Parse an archive from bytes.
+    /// Parse a v1 archive from bytes.
     pub fn deserialize(buf: &[u8]) -> Result<Self> {
         if buf.len() < 8 || &buf[..4] != ARCHIVE_MAGIC {
             return Err(Error::Container("bad archive magic".into()));
@@ -153,27 +220,603 @@ impl Archive {
         Ok(archive)
     }
 
-    /// Write to a file.
+    /// Write to a file in the v2 random-access format.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&self.serialize())?;
+        let mut writer = ArchiveWriter::create(path)?;
+        for (meta, blob) in self.entries.values() {
+            writer.add(meta.clone(), blob)?;
+        }
+        writer.finish()?;
         Ok(())
     }
 
-    /// Read from a file.
+    /// Read from a file (either wire version), fully materialized.
     pub fn load(path: &Path) -> Result<Self> {
+        // v1 short-circuit: deserialize owns the data directly instead of
+        // bouncing it through the reader's memory backing (which would cost
+        // two extra full-data copies on multi-GB archives).
+        let mut file = std::fs::File::open(path)?;
+        let mut header = [0u8; 8];
+        file.read_exact(&mut header)?;
+        if &header[..4] == ARCHIVE_MAGIC
+            && u16::from_le_bytes([header[4], header[5]]) == ARCHIVE_VERSION
+        {
+            use std::io::Seek;
+            file.seek(std::io::SeekFrom::Start(0))?;
+            let mut buf = Vec::new();
+            file.read_to_end(&mut buf)?;
+            return Self::deserialize(&buf);
+        }
+        drop(file);
+        let reader = ArchiveReader::open(path)?;
+        let mut archive = Archive::new();
+        for name in reader.names() {
+            let entry = reader.entry(&name).expect("listed name resolves");
+            let meta = entry.meta.clone();
+            let blob = reader.read_blob(&name)?;
+            archive.insert(meta, blob);
+        }
+        Ok(archive)
+    }
+}
+
+/// Incremental v2 archive writer: tensors are appended one at a time, each
+/// blob's chunk data hits the writer immediately, and [`finish`] emits the
+/// trailing directory footer. Nothing is buffered beyond the entry records.
+///
+/// [`finish`]: ArchiveWriter::finish
+pub struct ArchiveWriter<W: Write> {
+    w: W,
+    offset: u64,
+    entries: Vec<TensorEntry>,
+    names: std::collections::BTreeSet<String>,
+}
+
+impl ArchiveWriter<std::io::BufWriter<std::fs::File>> {
+    /// Create a v2 archive file at `path`.
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = std::fs::File::create(path)?;
+        Self::new(std::io::BufWriter::new(file))
+    }
+}
+
+impl<W: Write> ArchiveWriter<W> {
+    /// Start a v2 archive on any writer; writes the 8-byte header.
+    pub fn new(mut w: W) -> Result<Self> {
+        w.write_all(ARCHIVE_MAGIC)?;
+        w.write_all(&ARCHIVE_VERSION_V2.to_le_bytes())?;
+        w.write_all(&0u16.to_le_bytes())?; // flags
+        Ok(ArchiveWriter { w, offset: 8, entries: Vec::new(), names: Default::default() })
+    }
+
+    /// Tensors added so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been added yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append one tensor: its chunk data is written now, its directory
+    /// record is held for the footer. Duplicate names are rejected (the
+    /// read-side directory is keyed by name).
+    pub fn add(&mut self, meta: TensorMeta, blob: &CompressedBlob) -> Result<()> {
+        if self.names.contains(&meta.name) {
+            return Err(Error::Container(format!("duplicate tensor name '{}'", meta.name)));
+        }
+        // Mirror the reader's directory limits so finish() can never emit an
+        // archive the library itself refuses to reopen.
+        if meta.shape.len() > 16 {
+            return Err(Error::Container(format!(
+                "tensor '{}': implausible rank {}",
+                meta.name,
+                meta.shape.len()
+            )));
+        }
+        let dir_len: usize = blob.chunks.iter().map(|c| c.enc_len).sum();
+        if dir_len != blob.data.len() {
+            return Err(Error::Container(format!(
+                "blob '{}' directory says {dir_len} data bytes, have {}",
+                meta.name,
+                blob.data.len()
+            )));
+        }
+        self.w.write_all(&blob.data)?;
+        self.names.insert(meta.name.clone());
+        self.entries.push(TensorEntry {
+            meta,
+            strategy: blob.strategy,
+            codec: blob.codec,
+            format: blob.format,
+            original_len: blob.original_len,
+            chunk_size: blob.chunk_size,
+            data_offset: self.offset,
+            chunks: blob.chunks.clone(),
+        });
+        self.offset += blob.data.len() as u64;
+        Ok(())
+    }
+
+    /// Write the directory footer + tail and return the inner writer
+    /// (flushed).
+    pub fn finish(mut self) -> Result<W> {
+        let footer_offset = self.offset;
+        let mut footer = Vec::new();
+        varint::write_usize(&mut footer, self.entries.len());
+        for e in &self.entries {
+            varint::write_usize(&mut footer, e.meta.name.len());
+            footer.extend_from_slice(e.meta.name.as_bytes());
+            varint::write_usize(&mut footer, e.meta.shape.len());
+            for &d in &e.meta.shape {
+                varint::write_u64(&mut footer, d);
+            }
+            footer.push(e.strategy.wire_id());
+            footer.push(e.format.wire_id());
+            footer.push(e.codec.wire_id());
+            varint::write_usize(&mut footer, e.original_len);
+            varint::write_usize(&mut footer, e.chunk_size);
+            varint::write_u64(&mut footer, e.data_offset);
+            varint::write_usize(&mut footer, e.chunks.len());
+            for c in &e.chunks {
+                varint::write_usize(&mut footer, c.raw_len);
+                varint::write_usize(&mut footer, c.enc_len);
+                footer.extend_from_slice(&c.crc32.to_le_bytes());
+            }
+        }
+        self.w.write_all(&footer)?;
+        self.w.write_all(&footer_offset.to_le_bytes())?;
+        self.w.write_all(&crc32(&footer).to_le_bytes())?;
+        self.w.write_all(FOOTER_MAGIC)?;
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Where an open archive's chunk bytes live.
+#[derive(Debug)]
+enum Backing {
+    /// v2: positioned reads against the file.
+    File(std::fs::File),
+    /// v1 fallback: blobs were fully loaded; data keyed by tensor name.
+    Memory(BTreeMap<String, Vec<u8>>),
+}
+
+/// Random-access reader over an archive file.
+///
+/// For v2 files, `open` reads only the 16-byte tail and the footer; every
+/// tensor/chunk/range read afterwards is a positioned read of exactly the
+/// chunks it needs. v1 files are loaded whole (their format requires it)
+/// but expose the same API.
+#[derive(Debug)]
+pub struct ArchiveReader {
+    entries: BTreeMap<String, TensorEntry>,
+    backing: Backing,
+    version: u16,
+}
+
+impl ArchiveReader {
+    /// Open an archive file of either wire version.
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file = std::fs::File::open(path)?;
+        let mut header = [0u8; 8];
+        file.read_exact(&mut header)?;
+        if &header[..4] != ARCHIVE_MAGIC {
+            return Err(Error::Container("bad archive magic".into()));
+        }
+        let version = u16::from_le_bytes([header[4], header[5]]);
+        match version {
+            ARCHIVE_VERSION => Self::open_v1(file),
+            ARCHIVE_VERSION_V2 => Self::open_v2(file),
+            other => Err(Error::Container(format!("unsupported archive version {other}"))),
+        }
+    }
+
+    fn open_v1(mut file: std::fs::File) -> Result<Self> {
+        use std::io::Seek;
+        file.seek(std::io::SeekFrom::Start(0))?;
         let mut buf = Vec::new();
-        std::fs::File::open(path)?.read_to_end(&mut buf)?;
-        Self::deserialize(&buf)
+        file.read_to_end(&mut buf)?;
+        let archive = Archive::deserialize(&buf)?;
+        let mut entries = BTreeMap::new();
+        let mut data = BTreeMap::new();
+        for (meta, blob) in archive.iter() {
+            entries.insert(
+                meta.name.clone(),
+                TensorEntry {
+                    meta: meta.clone(),
+                    strategy: blob.strategy,
+                    codec: blob.codec,
+                    format: blob.format,
+                    original_len: blob.original_len,
+                    chunk_size: blob.chunk_size,
+                    data_offset: 0,
+                    chunks: blob.chunks.clone(),
+                },
+            );
+            data.insert(meta.name.clone(), blob.data.clone());
+        }
+        Ok(ArchiveReader {
+            entries,
+            backing: Backing::Memory(data),
+            version: ARCHIVE_VERSION,
+        })
+    }
+
+    fn open_v2(file: std::fs::File) -> Result<Self> {
+        let file_len = file.metadata()?.len();
+        if file_len < (8 + TAIL_LEN) as u64 {
+            return Err(Error::Container("v2 archive truncated".into()));
+        }
+        let mut tail = [0u8; TAIL_LEN];
+        read_exact_at(&file, &mut tail, file_len - TAIL_LEN as u64)?;
+        if &tail[12..16] != FOOTER_MAGIC {
+            return Err(Error::Container("bad footer magic".into()));
+        }
+        let footer_offset = u64::from_le_bytes(tail[0..8].try_into().unwrap());
+        let footer_crc = u32::from_le_bytes(tail[8..12].try_into().unwrap());
+        let footer_end = file_len - TAIL_LEN as u64;
+        if footer_offset < 8 || footer_offset > footer_end {
+            return Err(Error::Container(format!(
+                "footer offset {footer_offset} outside file"
+            )));
+        }
+        let mut footer = vec![0u8; (footer_end - footer_offset) as usize];
+        read_exact_at(&file, &mut footer, footer_offset)?;
+        let actual = crc32(&footer);
+        if actual != footer_crc {
+            return Err(Error::Container(format!(
+                "footer checksum mismatch: expected {footer_crc:#010x}, got {actual:#010x}"
+            )));
+        }
+        let buf = &footer[..];
+        let mut pos = 0usize;
+        let count = varint::read_usize(buf, &mut pos)?;
+        if count > buf.len() {
+            return Err(Error::Container("tensor count exceeds footer size".into()));
+        }
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            // All length/offset arithmetic below is checked: the footer CRC
+            // is not a MAC, so a crafted file must hit Err, never a wrapping
+            // add followed by a slice panic.
+            let name_len = varint::read_usize(buf, &mut pos)?;
+            if name_len > buf.len().saturating_sub(pos) {
+                return Err(Error::Container("name truncated".into()));
+            }
+            let name = std::str::from_utf8(&buf[pos..pos + name_len])
+                .map_err(|_| Error::Container("name not utf-8".into()))?
+                .to_string();
+            pos += name_len;
+            let rank = varint::read_usize(buf, &mut pos)?;
+            if rank > 16 {
+                return Err(Error::Container(format!("implausible rank {rank}")));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(varint::read_u64(buf, &mut pos)?);
+            }
+            if pos + 3 > buf.len() {
+                return Err(Error::Container("entry header truncated".into()));
+            }
+            let strategy = Strategy::from_wire_id(buf[pos])
+                .ok_or_else(|| Error::Container(format!("unknown strategy {}", buf[pos])))?;
+            let format = FloatFormat::from_wire_id(buf[pos + 1])?;
+            let codec = Codec::from_wire_id(buf[pos + 2])
+                .ok_or_else(|| Error::Container(format!("unknown codec {}", buf[pos + 2])))?;
+            pos += 3;
+            let original_len = varint::read_usize(buf, &mut pos)?;
+            let chunk_size = varint::read_usize(buf, &mut pos)?;
+            let data_offset = varint::read_u64(buf, &mut pos)?;
+            let n_chunks = varint::read_usize(buf, &mut pos)?;
+            if n_chunks > footer_offset as usize {
+                return Err(Error::Container("chunk count exceeds data size".into()));
+            }
+            let mut chunks = Vec::with_capacity(n_chunks);
+            let mut data_len = 0u64;
+            for _ in 0..n_chunks {
+                let raw_len = varint::read_usize(buf, &mut pos)?;
+                let enc_len = varint::read_usize(buf, &mut pos)?;
+                if pos + 4 > buf.len() {
+                    return Err(Error::Container("chunk directory truncated".into()));
+                }
+                let c =
+                    u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]);
+                pos += 4;
+                data_len = data_len
+                    .checked_add(enc_len as u64)
+                    .ok_or_else(|| Error::Container("chunk sizes overflow".into()))?;
+                chunks.push(ChunkInfo { raw_len, enc_len, crc32: c });
+            }
+            let data_end = data_offset
+                .checked_add(data_len)
+                .ok_or_else(|| Error::Container("data extent overflows".into()))?;
+            if data_offset < 8 || data_end > footer_offset {
+                return Err(Error::Container(format!(
+                    "tensor '{name}' data region outside the archive body"
+                )));
+            }
+            let entry = TensorEntry {
+                meta: TensorMeta { name: name.clone(), shape },
+                strategy,
+                codec,
+                format,
+                original_len,
+                chunk_size,
+                data_offset,
+                chunks,
+            };
+            if entries.insert(name.clone(), entry).is_some() {
+                return Err(Error::Container(format!("duplicate tensor name '{name}'")));
+            }
+        }
+        if pos != buf.len() {
+            return Err(Error::Container("trailing footer bytes".into()));
+        }
+        Ok(ArchiveReader {
+            entries,
+            backing: Backing::File(file),
+            version: ARCHIVE_VERSION_V2,
+        })
+    }
+
+    /// Wire version of the opened file (1 or 2).
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// Tensor names in sorted order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the archive holds no tensors.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Directory record for `name` — metadata access without any data I/O.
+    pub fn entry(&self, name: &str) -> Option<&TensorEntry> {
+        self.entries.get(name)
+    }
+
+    /// Iterate directory records in name order.
+    pub fn entries(&self) -> impl Iterator<Item = &TensorEntry> {
+        self.entries.values()
+    }
+
+    /// Sum of original tensor sizes.
+    pub fn total_original(&self) -> u64 {
+        self.entries.values().map(|e| e.original_len as u64).sum()
+    }
+
+    /// Sum of encoded chunk bytes (directory overhead excluded).
+    pub fn total_encoded(&self) -> u64 {
+        self.entries.values().map(|e| e.data_len()).sum()
+    }
+
+    /// Overall ratio (encoded chunk bytes / original).
+    pub fn ratio(&self) -> f64 {
+        let orig = self.total_original();
+        if orig == 0 {
+            1.0
+        } else {
+            self.total_encoded() as f64 / orig as f64
+        }
+    }
+
+    /// Positioned read of `len` bytes at `off` within a tensor's data
+    /// region.
+    fn read_span(&self, entry: &TensorEntry, off: u64, len: usize) -> Result<Vec<u8>> {
+        match &self.backing {
+            Backing::File(file) => {
+                let mut buf = vec![0u8; len];
+                read_exact_at(file, &mut buf, entry.data_offset + off)?;
+                Ok(buf)
+            }
+            Backing::Memory(map) => {
+                let data = map
+                    .get(&entry.meta.name)
+                    .ok_or_else(|| Error::Container("entry data missing".into()))?;
+                let start = off as usize;
+                if len > data.len() || start > data.len() - len {
+                    return Err(Error::Container("span outside tensor data".into()));
+                }
+                Ok(data[start..start + len].to_vec())
+            }
+        }
+    }
+
+    fn chunked_entry(&self, name: &str) -> Result<&TensorEntry> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Container(format!("no tensor '{name}'")))?;
+        match entry.strategy {
+            Strategy::ExpMantissa | Strategy::Store => Ok(entry),
+            Strategy::Delta => Err(Error::InvalidInput(format!(
+                "tensor '{name}' is a delta: use read_blob + decompress_delta with its base"
+            ))),
+            Strategy::Fp4Block => Err(Error::InvalidInput(format!(
+                "tensor '{name}' is an FP4 block: use read_blob + decompress_nvfp4/mxfp4"
+            ))),
+        }
+    }
+
+    /// Reassemble one tensor's [`CompressedBlob`] (one positioned read of
+    /// its data region; no other tensor is touched). Works for every
+    /// strategy — this is the escape hatch for delta and FP4-block blobs.
+    pub fn read_blob(&self, name: &str) -> Result<CompressedBlob> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Container(format!("no tensor '{name}'")))?;
+        let data = self.read_span(entry, 0, entry.data_len() as usize)?;
+        Ok(CompressedBlob {
+            strategy: entry.strategy,
+            codec: entry.codec,
+            format: entry.format,
+            original_len: entry.original_len,
+            chunk_size: entry.chunk_size,
+            chunks: entry.chunks.clone(),
+            data,
+            stats: Vec::new(),
+        })
+    }
+
+    /// Decompress one whole tensor (ExpMantissa / Store strategies),
+    /// verifying every chunk CRC.
+    pub fn read_tensor(&self, name: &str) -> Result<Vec<u8>> {
+        let entry = self.chunked_entry(name)?;
+        let mut out = vec![0u8; entry.original_len];
+        self.read_tensor_into_entry(entry, &mut out)?;
+        Ok(out)
+    }
+
+    /// Zero-copy variant of [`read_tensor`](Self::read_tensor): `out` must
+    /// be exactly `original_len` bytes.
+    pub fn read_tensor_into(&self, name: &str, out: &mut [u8]) -> Result<()> {
+        let entry = self.chunked_entry(name)?;
+        self.read_tensor_into_entry(entry, out)
+    }
+
+    fn read_tensor_into_entry(&self, entry: &TensorEntry, out: &mut [u8]) -> Result<()> {
+        if out.len() != entry.original_len {
+            return Err(Error::InvalidInput(format!(
+                "output buffer is {} bytes, tensor decodes to {}",
+                out.len(),
+                entry.original_len
+            )));
+        }
+        let mut raw_off = 0usize;
+        let mut enc_off = 0u64;
+        for (i, c) in entry.chunks.iter().enumerate() {
+            // Checked: raw_len comes from the (unauthenticated) footer.
+            if c.raw_len > out.len() - raw_off {
+                return Err(Error::Container("chunk directory exceeds tensor size".into()));
+            }
+            let enc = self.read_span(entry, enc_off, c.enc_len)?;
+            enc_off += c.enc_len as u64;
+            // Decode straight into the caller's slice — no per-chunk Vec.
+            let dst = &mut out[raw_off..raw_off + c.raw_len];
+            decode_chunk_into(&enc, dst, entry.format)?;
+            let actual = crc32(dst);
+            if actual != c.crc32 {
+                return Err(Error::ChecksumMismatch { chunk: i, expected: c.crc32, actual });
+            }
+            raw_off += c.raw_len;
+        }
+        if raw_off != out.len() {
+            return Err(Error::Container("chunk directory short of tensor size".into()));
+        }
+        Ok(())
+    }
+
+    /// Random access: decode only chunk `index` of tensor `name` with one
+    /// positioned read — no other chunk (let alone tensor) is read or
+    /// deserialized. CRC-verified.
+    pub fn read_chunk(&self, name: &str, index: usize) -> Result<Vec<u8>> {
+        let entry = self.chunked_entry(name)?;
+        self.read_chunk_entry(entry, index)
+    }
+
+    fn read_chunk_entry(&self, entry: &TensorEntry, index: usize) -> Result<Vec<u8>> {
+        let c = entry.chunks.get(index).ok_or_else(|| {
+            Error::InvalidInput(format!(
+                "chunk {index} out of range for '{}'",
+                entry.meta.name
+            ))
+        })?;
+        let enc = self.read_span(entry, entry.chunk_offset(index), c.enc_len)?;
+        let raw = decode_chunk_bytes(&enc, c.raw_len, entry.format)?;
+        let actual = crc32(&raw);
+        if actual != c.crc32 {
+            return Err(Error::ChecksumMismatch { chunk: index, expected: c.crc32, actual });
+        }
+        Ok(raw)
+    }
+
+    /// Byte-range random access: decode exactly the chunks overlapping
+    /// `[start, start + len)` of the original tensor and return that range.
+    /// Callers translate element ranges to byte ranges via the format's
+    /// element width.
+    pub fn read_range(&self, name: &str, start: usize, len: usize) -> Result<Vec<u8>> {
+        let entry = self.chunked_entry(name)?;
+        if len > entry.original_len || start > entry.original_len - len {
+            return Err(Error::InvalidInput(format!(
+                "range {start}(+{len}) outside tensor of {} bytes",
+                entry.original_len
+            )));
+        }
+        let mut out = Vec::with_capacity(len);
+        let mut raw_off = 0usize;
+        for i in 0..entry.chunks.len() {
+            let raw_len = entry.chunks[i].raw_len;
+            let c_start = raw_off;
+            let c_end = raw_off.saturating_add(raw_len);
+            raw_off = c_end;
+            if c_end <= start || c_start >= start + len {
+                continue;
+            }
+            let chunk = self.read_chunk_entry(entry, i)?;
+            let lo = start.max(c_start) - c_start;
+            let hi = (start + len).min(c_end) - c_start;
+            out.extend_from_slice(&chunk[lo..hi]);
+        }
+        if out.len() != len {
+            return Err(Error::Container("chunk directory short of requested range".into()));
+        }
+        Ok(out)
+    }
+}
+
+/// Positioned read helper. Both the unix and windows paths pass the offset
+/// explicitly per call (pread / seek_read), so concurrent reads through one
+/// [`ArchiveReader`] never race on a shared file cursor.
+fn read_exact_at(file: &std::fs::File, buf: &mut [u8], offset: u64) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, offset)?;
+        Ok(())
+    }
+    #[cfg(windows)]
+    {
+        use std::os::windows::fs::FileExt;
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let n = file.seek_read(&mut buf[filled..], offset + filled as u64)?;
+            if n == 0 {
+                return Err(Error::Container("positioned read hit end of file".into()));
+            }
+            filled += n;
+        }
+        Ok(())
+    }
+    #[cfg(not(any(unix, windows)))]
+    {
+        use std::io::{Read as _, Seek, SeekFrom};
+        let mut f = file;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)?;
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::{compress_tensor, decompress_tensor, CompressOptions};
-    use crate::formats::FloatFormat;
+    use crate::codec::{
+        compress_tensor, decompress_tensor, CompressOptions, Compressor, TensorInput,
+    };
     use crate::synthetic;
+    use std::path::PathBuf;
 
     fn sample_archive() -> (Archive, Vec<(String, Vec<u8>)>) {
         let mut archive = Archive::new();
@@ -191,6 +834,12 @@ mod tests {
         (archive, raw)
     }
 
+    fn tmpfile(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("zipnn_lp_test_archive");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}_{}.zlp", std::process::id()))
+    }
+
     #[test]
     fn archive_roundtrip_memory() {
         let (archive, raw) = sample_archive();
@@ -205,16 +854,122 @@ mod tests {
     }
 
     #[test]
-    fn archive_roundtrip_file() {
+    fn archive_roundtrip_file_v2() {
         let (archive, raw) = sample_archive();
-        let dir = std::env::temp_dir().join("zipnn_lp_test_archive");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("model.zlp");
+        let path = tmpfile("v2_roundtrip");
         archive.save(&path).unwrap();
+        // On disk it's a v2 file now.
+        let reader = ArchiveReader::open(&path).unwrap();
+        assert_eq!(reader.version(), ARCHIVE_VERSION_V2);
+        // And the whole-archive load path still materializes it.
         let back = Archive::load(&path).unwrap();
         for (name, data) in &raw {
             let (_, blob) = back.get(name).unwrap();
             assert_eq!(decompress_tensor(blob).unwrap(), *data);
+            assert_eq!(reader.read_tensor(name).unwrap(), *data);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_files_still_open_through_reader() {
+        let (archive, raw) = sample_archive();
+        let path = tmpfile("v1_compat");
+        std::fs::write(&path, archive.serialize()).unwrap();
+        let reader = ArchiveReader::open(&path).unwrap();
+        assert_eq!(reader.version(), ARCHIVE_VERSION);
+        assert_eq!(reader.len(), 3);
+        for (name, data) in &raw {
+            assert_eq!(reader.read_tensor(name).unwrap(), *data);
+            // Chunk access works on v1 too.
+            let chunk0 = reader.read_chunk(name, 0).unwrap();
+            assert_eq!(chunk0[..], data[..chunk0.len()]);
+        }
+        let back = Archive::load(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_chunk_and_range_random_access() {
+        let path = tmpfile("v2_random_access");
+        let mut writer = ArchiveWriter::create(&path).unwrap();
+        let session = Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(2048),
+        );
+        let a = synthetic::gaussian_bf16_bytes(6000, 0.02, 51);
+        let b = synthetic::gaussian_bf16_bytes(9000, 0.02, 52);
+        let blob_a = session.compress(TensorInput::Tensor(&a)).unwrap();
+        let blob_b = session.compress(TensorInput::Tensor(&b)).unwrap();
+        writer.add(TensorMeta { name: "a".into(), shape: vec![6000] }, &blob_a).unwrap();
+        writer.add(TensorMeta { name: "b".into(), shape: vec![9000] }, &blob_b).unwrap();
+        writer.finish().unwrap();
+
+        let reader = ArchiveReader::open(&path).unwrap();
+        assert_eq!(reader.names(), vec!["a".to_string(), "b".to_string()]);
+        let entry = reader.entry("b").unwrap();
+        assert!(entry.chunks.len() >= 3);
+        // One chunk of one tensor, positioned, bit-exact.
+        for idx in [0usize, 1, entry.chunks.len() - 1] {
+            let chunk = reader.read_chunk("b", idx).unwrap();
+            let start: usize = entry.chunks[..idx].iter().map(|c| c.raw_len).sum();
+            assert_eq!(chunk[..], b[start..start + entry.chunks[idx].raw_len], "chunk {idx}");
+        }
+        assert!(reader.read_chunk("b", entry.chunks.len()).is_err());
+        // Byte-range access spanning a chunk boundary.
+        let range = reader.read_range("b", 2048 - 100, 300).unwrap();
+        assert_eq!(range[..], b[2048 - 100..2048 + 200]);
+        // Blob reassembly matches the original serialization.
+        let blob = reader.read_blob("b").unwrap();
+        assert_eq!(blob.serialize(), blob_b.serialize());
+        // read_tensor_into validates length.
+        let mut short = vec![0u8; b.len() - 1];
+        assert!(reader.read_tensor_into("b", &mut short).is_err());
+        let mut full = vec![0u8; b.len()];
+        reader.read_tensor_into("b", &mut full).unwrap();
+        assert_eq!(full, b);
+        // Totals are sane.
+        assert_eq!(reader.total_original(), (a.len() + b.len()) as u64);
+        assert!(reader.ratio() < 1.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_writer_rejects_duplicates_and_reader_rejects_corruption() {
+        let path = tmpfile("v2_corruption");
+        let mut writer = ArchiveWriter::create(&path).unwrap();
+        let data = synthetic::gaussian_bf16_bytes(3000, 0.02, 53);
+        let blob =
+            compress_tensor(&data, &CompressOptions::for_format(FloatFormat::Bf16)).unwrap();
+        writer.add(TensorMeta { name: "t".into(), shape: vec![3000] }, &blob).unwrap();
+        assert!(writer
+            .add(TensorMeta { name: "t".into(), shape: vec![3000] }, &blob)
+            .is_err());
+        writer.finish().unwrap();
+
+        let good = std::fs::read(&path).unwrap();
+        // Bad tail magic.
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 1] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(ArchiveReader::open(&path).is_err());
+        // Footer bitflip fails the footer CRC.
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - TAIL_LEN - 2] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(ArchiveReader::open(&path).is_err());
+        // Truncation loses the tail.
+        std::fs::write(&path, &good[..good.len() - 8]).unwrap();
+        assert!(ArchiveReader::open(&path).is_err());
+        // Chunk-data bitflip is caught by the chunk CRC on read.
+        let mut bad = good.clone();
+        bad[16] ^= 0x40; // inside the first tensor's encoded data
+        std::fs::write(&path, &bad).unwrap();
+        match ArchiveReader::open(&path) {
+            Ok(reader) => assert!(reader.read_tensor("t").is_err()),
+            Err(_) => {} // frame parse may fail before the CRC — also fine
         }
         std::fs::remove_file(&path).ok();
     }

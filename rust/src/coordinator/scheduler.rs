@@ -11,6 +11,7 @@
 
 use super::{dequantize_row, quantize_row, DecoderModel, Request, Response, ServerStats};
 use crate::error::{Error, Result};
+use crate::exec::WorkerPool;
 use crate::metrics::Timer;
 use crate::pool::SharedKvPool;
 use std::collections::VecDeque;
@@ -66,34 +67,23 @@ struct LiveSeq {
     done: bool,
 }
 
-/// Run `f` over `jobs` on up to `workers` scoped threads. Results come back
-/// in job order (chunks are concatenated in spawn order).
-fn fan_out<T, R, F>(jobs: &[T], workers: usize, f: F) -> Result<Vec<R>>
+/// Run `f` over `jobs` on the scheduler's persistent worker pool. Results
+/// come back in job order. (Before the shared [`WorkerPool`], every wave
+/// spawned fresh scoped threads here — three times per decode step.)
+///
+/// A panicking job surfaces as `Err(Coordinator)` rather than unwinding
+/// through the serve loop — same contract as the old scoped-thread version.
+fn fan_out<T, R, F>(pool: &WorkerPool, jobs: &[T], f: F) -> Result<Vec<R>>
 where
     T: Sync,
     R: Send,
     F: Fn(&T) -> Result<R> + Sync,
 {
-    let workers = workers.clamp(1, jobs.len().max(1));
-    if workers <= 1 {
-        return jobs.iter().map(&f).collect();
-    }
-    let chunk = jobs.len().div_ceil(workers);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(workers);
-        for part in jobs.chunks(chunk) {
-            let f = &f;
-            handles.push(scope.spawn(move || part.iter().map(f).collect::<Result<Vec<R>>>()));
-        }
-        let mut out = Vec::with_capacity(jobs.len());
-        for h in handles {
-            let part = h
-                .join()
-                .map_err(|_| Error::Coordinator("cache worker thread panicked".into()))??;
-            out.extend(part);
-        }
-        Ok(out)
-    })
+    let results = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(jobs.len(), |i| f(&jobs[i]))
+    }))
+    .map_err(|_| Error::Coordinator("cache worker thread panicked".into()))?;
+    results.into_iter().collect()
 }
 
 /// The scheduler: drains a queue in waves of ≤ `dims.batch` sequences.
@@ -101,6 +91,9 @@ pub struct Scheduler<M: DecoderModel> {
     model: M,
     pool: Arc<SharedKvPool>,
     policy: BatchPolicy,
+    /// Persistent codec workers (`BatchPolicy::workers` threads), reused by
+    /// every wave instead of spawning scoped threads per fan-out.
+    workers: WorkerPool,
     next_seq_id: u64,
     stats: ServerStats,
 }
@@ -108,7 +101,8 @@ pub struct Scheduler<M: DecoderModel> {
 impl<M: DecoderModel> Scheduler<M> {
     /// New scheduler over a shared pool.
     pub fn new(model: M, pool: Arc<SharedKvPool>, policy: BatchPolicy) -> Self {
-        Scheduler { model, pool, policy, next_seq_id: 1, stats: ServerStats::default() }
+        let workers = WorkerPool::new(policy.workers);
+        Scheduler { model, pool, policy, workers, next_seq_id: 1, stats: ServerStats::default() }
     }
 
     /// Aggregate stats. Cache stats are snapshotted at the end of each wave
@@ -183,7 +177,6 @@ impl<M: DecoderModel> Scheduler<M> {
         // of the wave.
         let fmt = self.pool.config().format;
         let bpt = self.pool.config().bytes_per_token;
-        let workers = self.policy.workers;
         {
             let pool = &self.pool;
             let jobs: Vec<(usize, u64, usize)> = seqs
@@ -191,7 +184,7 @@ impl<M: DecoderModel> Scheduler<M> {
                 .enumerate()
                 .map(|(slot, s)| (slot, s.seq_id, s.tokens.len()))
                 .collect();
-            fan_out(&jobs, workers, |&(slot, seq_id, n_tokens)| {
+            fan_out(&self.workers, &jobs, |&(slot, seq_id, n_tokens)| {
                 for t in 0..n_tokens {
                     for layer in 0..l {
                         let base = ((layer * b + slot) * s_max + t) * d;
@@ -256,11 +249,15 @@ impl<M: DecoderModel> Scheduler<M> {
                     .iter()
                     .map(|&slot| (slot, seqs[slot].seq_id, seqs[slot].tokens.len() - 1))
                     .collect();
-                fan_out(&jobs, workers, |&(slot, seq_id, n_cached)| {
+                fan_out(&self.workers, &jobs, |&(slot, seq_id, n_cached)| {
                     let mut per_layer = Vec::with_capacity(l);
+                    // One reusable decode buffer per job: the zero-copy
+                    // read_into path kills the per-layer allocation the old
+                    // pool.read exhibited.
+                    let mut bytes = vec![0u8; n_cached * 2 * bpt];
                     for layer in 0..l {
-                        let bytes = pool.read(seq_id, layer)?;
-                        debug_assert_eq!(bytes.len(), n_cached * 2 * bpt);
+                        let n = pool.read_into(seq_id, layer, &mut bytes)?;
+                        debug_assert_eq!(n, n_cached * 2 * bpt);
                         let mut k_rows = vec![0f32; n_cached * d];
                         let mut v_rows = vec![0f32; n_cached * d];
                         for t in 0..n_cached {
@@ -302,7 +299,7 @@ impl<M: DecoderModel> Scheduler<M> {
                 let out_ref = &out;
                 let jobs: Vec<(usize, u64)> =
                     live.iter().map(|&slot| (slot, seqs[slot].seq_id)).collect();
-                fan_out(&jobs, workers, |&(slot, seq_id)| {
+                fan_out(&self.workers, &jobs, |&(slot, seq_id)| {
                     for layer in 0..l {
                         let base = (layer * b + slot) * d;
                         let mut kv = quantize_row(&out_ref.k_new[base..base + d], fmt);
@@ -387,11 +384,13 @@ mod tests {
     #[test]
     fn fan_out_preserves_job_order_and_errors() {
         let jobs: Vec<usize> = (0..23).collect();
-        for workers in [1, 3, 8] {
-            let out = fan_out(&jobs, workers, |&j| Ok(j * 2)).unwrap();
+        for workers in [1usize, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            let out = fan_out(&pool, &jobs, |&j| Ok(j * 2)).unwrap();
             assert_eq!(out, jobs.iter().map(|j| j * 2).collect::<Vec<_>>());
         }
-        let err = fan_out(&jobs, 4, |&j| {
+        let pool = WorkerPool::new(4);
+        let err = fan_out(&pool, &jobs, |&j| {
             if j == 13 {
                 Err(Error::Coordinator("boom".into()))
             } else {
@@ -400,6 +399,6 @@ mod tests {
         });
         assert!(err.is_err());
         let empty: Vec<usize> = Vec::new();
-        assert_eq!(fan_out(&empty, 4, |&j| Ok(j)).unwrap(), empty);
+        assert_eq!(fan_out(&pool, &empty, |&j| Ok(j)).unwrap(), empty);
     }
 }

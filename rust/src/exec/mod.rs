@@ -1,0 +1,294 @@
+//! Shared worker pool for chunk-parallel codec work.
+//!
+//! Before the session API every `compress_tensor` / `decompress_tensor`
+//! call (and every coordinator wave) spawned its own scoped threads. The
+//! [`WorkerPool`] replaces that with a set of **persistent** workers that a
+//! [`crate::codec::Compressor`] session — or the serving coordinator —
+//! creates once and reuses across calls: no thread spawn on the hot path.
+//!
+//! The pool runs *indexed job batches*: [`WorkerPool::run`] takes a job
+//! count and a `Fn(usize) -> T` and returns the results in index order. The
+//! calling thread participates in the batch (so a 1-thread pool is exactly
+//! the serial path and spawns nothing), helpers claim indices from a shared
+//! atomic cursor, and the call does not return until every job finished —
+//! which is what makes lending stack-borrowed closures to the persistent
+//! workers sound (see the safety notes on `erase_job_lifetime`).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A task shipped to a persistent worker. Lifetime-erased: the submitting
+/// call guarantees (by blocking on a latch) that every borrow in the task
+/// outlives its execution.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Erase the lifetime of a job so it can sit in the pool's `'static` queue.
+///
+/// # Safety
+///
+/// The caller must not return (or otherwise invalidate anything the job
+/// borrows) until the job has finished executing. [`WorkerPool::run`]
+/// upholds this by waiting on a completion latch that every submitted job
+/// counts down — including on panic, since the panic is caught inside the
+/// job body before the count-down runs.
+unsafe fn erase_job_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute(job)
+}
+
+/// Queue state shared between the submitting threads and the workers.
+#[derive(Default)]
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+/// Completion latch: `run` blocks until every helper task counted down.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), done: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+}
+
+/// A pool of persistent worker threads executing indexed job batches.
+///
+/// Sized once at construction; `WorkerPool::new(1)` (or `new(0)`) spawns no
+/// threads at all and runs every batch serially on the caller. Dropping the
+/// pool shuts the workers down and joins them.
+///
+/// ```
+/// use zipnn_lp::exec::WorkerPool;
+///
+/// let pool = WorkerPool::new(4);
+/// let squares = pool.run(8, |i| i * i);
+/// assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+/// assert_eq!(pool.threads(), 4);
+/// ```
+pub struct WorkerPool {
+    threads: usize,
+    shared: Arc<(Mutex<Queue>, Condvar)>,
+    handles: Vec<JoinHandle<()>>,
+    batches: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// Create a pool with `threads` total workers (the calling thread counts
+    /// as one: `threads = 4` spawns 3 helpers). Values below 1 clamp to 1.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new((Mutex::new(Queue::default()), Condvar::new()));
+        let mut handles = Vec::new();
+        for _ in 1..threads {
+            let shared = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || worker_loop(&shared)));
+        }
+        WorkerPool { threads, shared, handles, batches: AtomicUsize::new(0) }
+    }
+
+    /// A pool that always runs serially (no spawned threads).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Total worker count including the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of `run` batches that actually fanned out to helper threads
+    /// (observability: sessions reusing one pool show one spawn, many
+    /// batches).
+    pub fn parallel_batches(&self) -> usize {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Execute `n_jobs` jobs, `f(i)` for each index, returning results in
+    /// index order. The calling thread works too; helpers claim indices
+    /// dynamically, so uneven jobs balance. Panics in any job are re-raised
+    /// on the calling thread after the whole batch has drained.
+    pub fn run<T, F>(&self, n_jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads <= 1 || n_jobs <= 1 {
+            return (0..n_jobs).map(f).collect();
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+        let work = || {
+            loop {
+                if panicked.load(Ordering::SeqCst) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n_jobs {
+                    break;
+                }
+                match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    Ok(v) => *slots[i].lock().unwrap() = Some(v),
+                    Err(_) => {
+                        panicked.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+            }
+        };
+        let helpers = (self.threads - 1).min(n_jobs - 1);
+        let latch = Latch::new(helpers);
+        {
+            let (queue, available) = &*self.shared;
+            let mut q = queue.lock().unwrap();
+            for _ in 0..helpers {
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                    work();
+                    latch.count_down();
+                });
+                // SAFETY: `latch.wait()` below blocks until this task has
+                // run to completion, so every stack borrow it captures
+                // (`work`, `latch`, and through them `f`, `slots`, …)
+                // strictly outlives its execution.
+                q.jobs.push_back(unsafe { erase_job_lifetime(task) });
+            }
+            available.notify_all();
+        }
+        work();
+        latch.wait();
+        if panicked.load(Ordering::SeqCst) {
+            panic!("worker pool job panicked");
+        }
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("job executed"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let (queue, available) = &*self.shared;
+            queue.lock().unwrap().shutdown = true;
+            available.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &(Mutex<Queue>, Condvar)) {
+    let (queue, available) = shared;
+    loop {
+        let job = {
+            let mut q = queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break Some(job);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::serial();
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.run(5, |i| i + 1), vec![1, 2, 3, 4, 5]);
+        assert_eq!(pool.parallel_batches(), 0);
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn results_in_index_order() {
+        let pool = WorkerPool::new(4);
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            let out = pool.run(n, |i| i * 3);
+            assert_eq!(out, (0..n).map(|i| i * 3).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn borrows_stack_data() {
+        let pool = WorkerPool::new(3);
+        let data: Vec<u64> = (0..1000).collect();
+        let sums = pool.run(10, |i| data[i * 100..(i + 1) * 100].iter().sum::<u64>());
+        let total: u64 = sums.iter().sum();
+        assert_eq!(total, data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn pool_is_reused_across_batches() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicU64::new(0);
+        for _ in 0..8 {
+            pool.run(16, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 8 * 16);
+        assert_eq!(pool.parallel_batches(), 8);
+    }
+
+    #[test]
+    fn job_panic_propagates_after_drain() {
+        let pool = WorkerPool::new(4);
+        let ran = AtomicU64::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(32, |i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err());
+        // The pool survives a panicked batch and keeps working.
+        assert_eq!(pool.run(3, |i| i), vec![0, 1, 2]);
+    }
+}

@@ -37,6 +37,14 @@ pub fn split(data: &[u8]) -> Result<StreamSet> {
 
 /// Inverse of [`split`].
 pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; set.n_elements * 2];
+    merge_into(set, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`split`], writing into a caller-provided buffer of exactly
+/// `n_elements * 2` bytes (the zero-copy decode path).
+pub fn merge_into(set: &StreamSet, out: &mut [u8]) -> Result<()> {
     let exp = set
         .exponent()
         .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
@@ -46,7 +54,13 @@ pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
     if exp.len() != set.n_elements || sm.len() != set.n_elements {
         return Err(Error::Corrupt("BF16 stream length mismatch".into()));
     }
-    let mut out = vec![0u8; set.n_elements * 2];
+    if out.len() != set.n_elements * 2 {
+        return Err(Error::InvalidInput(format!(
+            "BF16 merge buffer is {} bytes, need {}",
+            out.len(),
+            set.n_elements * 2
+        )));
+    }
     for ((o, &e8), &s8) in
         out.chunks_exact_mut(2).zip(&exp.bytes).zip(&sm.bytes)
     {
@@ -55,7 +69,7 @@ pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
         let w = ((s & 0x80) << 8) | (e << 7) | (s & 0x7F);
         o.copy_from_slice(&w.to_le_bytes());
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

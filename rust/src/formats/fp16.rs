@@ -50,6 +50,14 @@ pub fn split(data: &[u8]) -> Result<StreamSet> {
 
 /// Inverse of [`split`].
 pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; set.n_elements * 2];
+    merge_into(set, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`split`], writing into a caller-provided buffer of exactly
+/// `n_elements * 2` bytes (the zero-copy decode path).
+pub fn merge_into(set: &StreamSet, out: &mut [u8]) -> Result<()> {
     let exp = set
         .exponent()
         .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
@@ -63,15 +71,21 @@ pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
     if exp.len() != n || mlo.len() != n || smh.len() != n {
         return Err(Error::Corrupt("FP16 stream length mismatch".into()));
     }
-    let mut out = Vec::with_capacity(n * 2);
-    for i in 0..n {
+    if out.len() != n * 2 {
+        return Err(Error::InvalidInput(format!(
+            "FP16 merge buffer is {} bytes, need {}",
+            out.len(),
+            n * 2
+        )));
+    }
+    for (i, o) in out.chunks_exact_mut(2).enumerate() {
         let e = (exp.bytes[i] & 0x1F) as u16;
         let lo = mlo.bytes[i] as u16;
         let h = smh.bytes[i] as u16;
         let w = ((h >> 2) << 15) | (e << 10) | ((h & 0x3) << 8) | lo;
-        out.extend_from_slice(&w.to_le_bytes());
+        o.copy_from_slice(&w.to_le_bytes());
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Densely packed native size check helper (used by ratio accounting tests).

@@ -39,6 +39,14 @@ pub fn split(data: &[u8]) -> Result<StreamSet> {
 
 /// Inverse of [`split`].
 pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; set.n_elements * 4];
+    merge_into(set, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`split`], writing into a caller-provided buffer of exactly
+/// `n_elements * 4` bytes (the zero-copy decode path).
+pub fn merge_into(set: &StreamSet, out: &mut [u8]) -> Result<()> {
     let exp = set
         .exponent()
         .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
@@ -48,15 +56,21 @@ pub fn merge(set: &StreamSet) -> Result<Vec<u8>> {
     if exp.len() != set.n_elements || sm.len() != set.n_elements * 3 {
         return Err(Error::Corrupt("FP32 stream length mismatch".into()));
     }
-    let mut out = Vec::with_capacity(set.n_elements * 4);
-    for i in 0..set.n_elements {
+    if out.len() != set.n_elements * 4 {
+        return Err(Error::InvalidInput(format!(
+            "FP32 merge buffer is {} bytes, need {}",
+            out.len(),
+            set.n_elements * 4
+        )));
+    }
+    for (i, o) in out.chunks_exact_mut(4).enumerate() {
         let sm24 = sm.bytes[3 * i] as u32
             | (sm.bytes[3 * i + 1] as u32) << 8
             | (sm.bytes[3 * i + 2] as u32) << 16;
         let w = ((sm24 >> 23) << 31) | ((exp.bytes[i] as u32) << 23) | (sm24 & 0x7F_FFFF);
-        out.extend_from_slice(&w.to_le_bytes());
+        o.copy_from_slice(&w.to_le_bytes());
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

@@ -78,6 +78,14 @@ pub fn split_nibbles(data: &[u8]) -> Result<StreamSet> {
 
 /// Inverse of [`split_nibbles`].
 pub fn merge_nibbles(set: &StreamSet) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; set.n_elements.div_ceil(2)];
+    merge_nibbles_into(set, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`split_nibbles`], writing into a caller-provided buffer of
+/// exactly `n_elements.div_ceil(2)` bytes (the zero-copy decode path).
+pub fn merge_nibbles_into(set: &StreamSet, out: &mut [u8]) -> Result<()> {
     let exp = set
         .exponent()
         .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
@@ -89,24 +97,28 @@ pub fn merge_nibbles(set: &StreamSet) -> Result<Vec<u8>> {
     if exp.len() != expect || sm.len() != expect {
         return Err(Error::Corrupt("FP4 stream length mismatch".into()));
     }
-    let mut out = Vec::with_capacity(set.original_bytes);
-    let mut cur = 0u8;
+    if out.len() != n.div_ceil(2) {
+        return Err(Error::InvalidInput(format!(
+            "FP4 merge buffer is {} bytes, need {}",
+            out.len(),
+            n.div_ceil(2)
+        )));
+    }
     for i in 0..n {
         let byte_i = i / 4;
         let sh = 2 * (i % 4) as u32;
         let e = (exp.bytes[byte_i] >> sh) & 0x3;
         let s = (sm.bytes[byte_i] >> sh) & 0x3;
         let nib = nibble_from_parts(e, s);
+        // Even elements overwrite the whole byte, so stale caller bytes
+        // never leak through; odd elements OR in the high nibble.
         if i % 2 == 0 {
-            cur = nib;
+            out[i / 2] = nib;
         } else {
-            out.push(cur | (nib << 4));
+            out[i / 2] |= nib << 4;
         }
     }
-    if n % 2 == 1 {
-        out.push(cur);
-    }
-    Ok(out)
+    Ok(())
 }
 
 /// An MXFP4-quantized tensor: packed E2M1 payload + one scale per group.

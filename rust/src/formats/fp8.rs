@@ -47,6 +47,14 @@ pub fn split_e4m3(data: &[u8]) -> Result<StreamSet> {
 
 /// Inverse of [`split_e4m3`].
 pub fn merge_e4m3(set: &StreamSet) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; set.n_elements];
+    merge_e4m3_into(set, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`split_e4m3`], writing into a caller-provided buffer of
+/// exactly `n_elements` bytes (the zero-copy decode path).
+pub fn merge_e4m3_into(set: &StreamSet, out: &mut [u8]) -> Result<()> {
     let exp = set
         .exponent()
         .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
@@ -58,15 +66,20 @@ pub fn merge_e4m3(set: &StreamSet) -> Result<Vec<u8>> {
     if exp.len() != expect || sm.len() != expect {
         return Err(Error::Corrupt("E4M3 stream length mismatch".into()));
     }
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
+    if out.len() != n {
+        return Err(Error::InvalidInput(format!(
+            "E4M3 merge buffer is {} bytes, need {n}",
+            out.len()
+        )));
+    }
+    for (i, o) in out.iter_mut().enumerate() {
         let byte_i = i / 2;
         let hi = (i % 2) as u32 * 4;
         let e = (exp.bytes[byte_i] >> hi) & 0x0F;
         let s = (sm.bytes[byte_i] >> hi) & 0x0F;
-        out.push(((s >> 3) << 7) | (e << 3) | (s & 0x07));
+        *o = ((s >> 3) << 7) | (e << 3) | (s & 0x07);
     }
-    Ok(out)
+    Ok(())
 }
 
 // --- E5M2 ---------------------------------------------------------------
@@ -92,6 +105,14 @@ pub fn split_e5m2(data: &[u8]) -> Result<StreamSet> {
 
 /// Inverse of [`split_e5m2`].
 pub fn merge_e5m2(set: &StreamSet) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; set.n_elements];
+    merge_e5m2_into(set, &mut out)?;
+    Ok(out)
+}
+
+/// Inverse of [`split_e5m2`], writing into a caller-provided buffer of
+/// exactly `n_elements` bytes (the zero-copy decode path).
+pub fn merge_e5m2_into(set: &StreamSet, out: &mut [u8]) -> Result<()> {
     let exp = set
         .exponent()
         .ok_or_else(|| Error::InvalidInput("missing exponent stream".into()))?;
@@ -102,13 +123,18 @@ pub fn merge_e5m2(set: &StreamSet) -> Result<Vec<u8>> {
     if exp.len() != n || sm.len() != n {
         return Err(Error::Corrupt("E5M2 stream length mismatch".into()));
     }
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
+    if out.len() != n {
+        return Err(Error::InvalidInput(format!(
+            "E5M2 merge buffer is {} bytes, need {n}",
+            out.len()
+        )));
+    }
+    for (i, o) in out.iter_mut().enumerate() {
         let e = exp.bytes[i] & 0x1F;
         let s = sm.bytes[i];
-        out.push(((s >> 2) << 7) | (e << 2) | (s & 0x03));
+        *o = ((s >> 2) << 7) | (e << 2) | (s & 0x03);
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

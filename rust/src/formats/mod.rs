@@ -98,7 +98,8 @@ impl FloatFormat {
         }
     }
 
-    /// Parse from a CLI / manifest string.
+    /// Parse from a CLI / manifest string. Equivalent to the [`FromStr`]
+    /// impl (`s.parse::<FloatFormat>()`); kept for API stability.
     pub fn parse(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "fp32" | "f32" | "float32" => Ok(FloatFormat::Fp32),
@@ -111,7 +112,8 @@ impl FloatFormat {
         }
     }
 
-    /// Canonical name (inverse of [`parse`](Self::parse)).
+    /// Canonical name (inverse of [`parse`](Self::parse)). Equivalent to
+    /// the [`std::fmt::Display`] impl; kept for API stability.
     pub fn name(self) -> &'static str {
         match self {
             FloatFormat::Fp32 => "fp32",
@@ -149,6 +151,20 @@ impl FloatFormat {
     }
 }
 
+impl std::fmt::Display for FloatFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for FloatFormat {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
 /// Split a raw little-endian tensor byte buffer into exponent and
 /// sign|mantissa streams according to `format`.
 ///
@@ -177,6 +193,21 @@ pub fn merge_streams(format: FloatFormat, streams: &StreamSet) -> Result<Vec<u8>
     }
 }
 
+/// Inverse of [`split_streams`], writing into a caller-provided buffer of
+/// exactly the original byte length — the allocation-free merge that backs
+/// [`crate::codec::Compressor::decompress_into`] and the K/V cache's
+/// `read_into` path.
+pub fn merge_streams_into(format: FloatFormat, streams: &StreamSet, out: &mut [u8]) -> Result<()> {
+    match format {
+        FloatFormat::Bf16 => bf16::merge_into(streams, out),
+        FloatFormat::Fp32 => fp32::merge_into(streams, out),
+        FloatFormat::Fp16 => fp16::merge_into(streams, out),
+        FloatFormat::Fp8E4M3 => fp8::merge_e4m3_into(streams, out),
+        FloatFormat::Fp8E5M2 => fp8::merge_e5m2_into(streams, out),
+        FloatFormat::Fp4E2M1 => fp4::merge_nibbles_into(streams, out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +233,38 @@ mod tests {
         assert_eq!(FloatFormat::parse("E4M3").unwrap(), FloatFormat::Fp8E4M3);
         assert_eq!(FloatFormat::parse("bfloat16").unwrap(), FloatFormat::Bf16);
         assert!(FloatFormat::parse("fp12").is_err());
+    }
+
+    #[test]
+    fn fromstr_display_roundtrip() {
+        for f in ALL {
+            assert_eq!(f.to_string().parse::<FloatFormat>().unwrap(), f, "{f:?}");
+            assert_eq!(f.to_string(), f.name());
+        }
+        assert!("zstd".parse::<FloatFormat>().is_err());
+    }
+
+    #[test]
+    fn merge_into_matches_merge_for_all_formats() {
+        let mut rng = crate::util::rng::Rng::new(404);
+        for f in ALL {
+            let align = match f {
+                FloatFormat::Fp32 => 4,
+                FloatFormat::Fp16 | FloatFormat::Bf16 => 2,
+                _ => 1,
+            };
+            let mut data = vec![0u8; 1024 / align * align];
+            rng.fill_bytes(&mut data);
+            let set = split_streams(f, &data).unwrap();
+            let merged = merge_streams(f, &set).unwrap();
+            assert_eq!(merged, data, "{f:?}");
+            // Stale buffer contents must be fully overwritten.
+            let mut out = vec![0xAAu8; merged.len()];
+            merge_streams_into(f, &set, &mut out).unwrap();
+            assert_eq!(out, data, "{f:?} into");
+            let mut short = vec![0u8; merged.len().saturating_sub(1)];
+            assert!(merge_streams_into(f, &set, &mut short).is_err(), "{f:?} short");
+        }
     }
 
     #[test]

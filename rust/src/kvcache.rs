@@ -13,11 +13,14 @@
 //! decompressed cache is numerically identical to the uncompressed run —
 //! the paper's core "lossless" property for K/V tensors.
 
-use crate::codec::{decode_stream, encode_stream_with, Codec, EncodedStream, StreamEncoding};
+use crate::codec::{
+    decode_stream_dicts, encode_stream_dicts, Codec, EncodedStream, StreamDicts, StreamEncoding,
+};
 use crate::entropy::Histogram;
 use crate::error::{Error, Result};
-use crate::formats::{merge_streams, split_streams, FloatFormat, StreamSet};
+use crate::formats::{merge_streams_into, split_streams, FloatFormat, StreamSet};
 use crate::huffman::{CodeTable, DEFAULT_CODE_LEN_LIMIT};
+use crate::rans::FreqTable;
 use crate::util::varint;
 use std::collections::BTreeMap;
 
@@ -68,9 +71,14 @@ impl KvCacheConfig {
 /// Static-dictionary manager with adaptive refresh (§3.3).
 ///
 /// Maintains one exponent-stream dictionary per layer (distributions differ
-/// across layers). Tracks a rolling achieved ratio; when it degrades past
-/// `refresh_slack` × build-time ratio, the dictionary is rebuilt from the
-/// recent histogram.
+/// across layers) — for **both** entropy backends: every version carries a
+/// canonical-Huffman [`CodeTable`] and a precomputed rANS [`FreqTable`]
+/// built from the same histogram, so dictionary-coded pages exist for
+/// whichever backend the [`KvCacheConfig`] selects (the serialized
+/// [`FreqTable`] wire form ships tables between processes). Tracks a
+/// rolling achieved ratio; when it degrades past `refresh_slack` ×
+/// build-time ratio, both dictionaries are rebuilt from the recent
+/// histogram.
 #[derive(Debug)]
 pub struct DictionaryManager {
     per_layer: Vec<LayerDict>,
@@ -85,6 +93,9 @@ struct LayerDict {
     /// All table versions ever built for this layer. Sealed pages reference
     /// a version index, so adaptive refresh can never orphan a page.
     tables: Vec<CodeTable>,
+    /// rANS frequency tables, in lockstep with `tables` (same version
+    /// indices; `None` when the training histogram was empty).
+    rans_tables: Vec<Option<FreqTable>>,
     /// Expected bits/symbol at build time of the current table.
     build_bps: f64,
     /// Rolling recent histogram (reset at refresh).
@@ -105,8 +116,9 @@ impl DictionaryManager {
         }
     }
 
-    /// Pre-train the dictionary for `layer` from representative exponent
-    /// bytes ("precomputed Huffman dictionaries", §3.3).
+    /// Pre-train the dictionaries for `layer` from representative exponent
+    /// bytes ("precomputed Huffman dictionaries", §3.3) — one Huffman table
+    /// and one rANS frequency table from the same histogram.
     pub fn train(&mut self, layer: usize, exponent_bytes: &[u8]) -> Result<()> {
         let d = self
             .per_layer
@@ -120,6 +132,11 @@ impl DictionaryManager {
             8.0
         };
         d.tables.push(table);
+        d.rans_tables.push(if hist.total() > 0 {
+            Some(FreqTable::from_histogram(&hist)?)
+        } else {
+            None
+        });
         d.recent = Histogram::new();
         d.rolling_bits = 0.0;
         d.rolling_syms = 0.0;
@@ -133,14 +150,42 @@ impl DictionaryManager {
             .and_then(|d| d.tables.last().map(|t| ((d.tables.len() - 1) as u32, t)))
     }
 
+    /// Current dictionary tables (both backends) for a layer, with their
+    /// shared version index.
+    pub fn current_tables(
+        &self,
+        layer: usize,
+    ) -> Option<(u32, &CodeTable, Option<&FreqTable>)> {
+        let d = self.per_layer.get(layer)?;
+        let version = d.tables.len().checked_sub(1)?;
+        Some((
+            version as u32,
+            &d.tables[version],
+            d.rans_tables.get(version).and_then(|t| t.as_ref()),
+        ))
+    }
+
     /// Current dictionary table for a layer.
     pub fn table(&self, layer: usize) -> Option<&CodeTable> {
         self.current(layer).map(|(_, t)| t)
     }
 
+    /// Current rANS dictionary for a layer, if one was trainable.
+    pub fn rans_table(&self, layer: usize) -> Option<&FreqTable> {
+        self.current_tables(layer).and_then(|(_, _, r)| r)
+    }
+
     /// A specific historical dictionary version.
     pub fn table_version(&self, layer: usize, version: u32) -> Option<&CodeTable> {
         self.per_layer.get(layer).and_then(|d| d.tables.get(version as usize))
+    }
+
+    /// A specific historical rANS dictionary version.
+    pub fn rans_table_version(&self, layer: usize, version: u32) -> Option<&FreqTable> {
+        self.per_layer
+            .get(layer)
+            .and_then(|d| d.rans_tables.get(version as usize))
+            .and_then(|t| t.as_ref())
     }
 
     /// Record an observed page encoding; triggers adaptive refresh when the
@@ -160,7 +205,9 @@ impl DictionaryManager {
         d.recent.merge(&Histogram::from_bytes(exponent_bytes));
         // Dictionary misses count as 8 bits/symbol pressure.
         let bits = match encoded.encoding {
-            StreamEncoding::HuffmanDict => encoded.payload.len() as f64 * 8.0,
+            StreamEncoding::HuffmanDict | StreamEncoding::RansDict => {
+                encoded.payload.len() as f64 * 8.0
+            }
             _ => (encoded.encoded_len() as f64) * 8.0,
         };
         d.rolling_bits += bits;
@@ -173,8 +220,12 @@ impl DictionaryManager {
             || (d.build_bps > 0.0 && achieved_bps > d.build_bps * slack);
         if trigger && d.recent.total() > 0 {
             let table = CodeTable::build(&d.recent, len_limit)?;
+            // Propagate, like train(): `recent` is non-empty here, so a
+            // failure is a real bug, not a silent dictionary downgrade.
+            let rans_table = FreqTable::from_histogram(&d.recent)?;
             d.build_bps = table.cost_bits(&d.recent) as f64 / d.recent.total() as f64;
             d.tables.push(table);
+            d.rans_tables.push(Some(rans_table));
             d.recent = Histogram::new();
             d.rolling_bits = 0.0;
             d.rolling_syms = 0.0;
@@ -196,7 +247,8 @@ pub struct SealedPage {
     streams: Vec<EncodedStream>,
     raw_len: usize,
     n_elements: usize,
-    /// Dictionary version used for the exponent stream (when HuffmanDict).
+    /// Dictionary version used for the exponent stream (when coded as
+    /// HuffmanDict or RansDict — the version indexes both backends' tables).
     dict_version: Option<u32>,
 }
 
@@ -524,20 +576,72 @@ impl PagedKvCache {
     /// Read the full K/V byte stream for (sequence, layer): hot pages copied,
     /// sealed pages decompressed. Bit-exact with what was appended.
     pub fn read(&self, seq: u64, layer: usize) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; self.read_len(seq, layer)?];
+        self.read_into(seq, layer, &mut out)?;
+        Ok(out)
+    }
+
+    /// Logical byte length of the (sequence, layer) stream — what
+    /// [`read`](Self::read) returns and what a [`read_into`](Self::read_into)
+    /// buffer must hold. Spilled pages count (they are part of the stream;
+    /// the pool reloads them before reading).
+    pub fn read_len(&self, seq: u64, layer: usize) -> Result<usize> {
         let pages = self
             .pages
             .get(&(seq, layer))
             .ok_or_else(|| Error::KvCache(format!("no cache for seq {seq} layer {layer}")))?;
-        let mut out = Vec::new();
+        Ok(pages
+            .iter()
+            .map(|p| match p {
+                Page::Hot(h) => h.len(),
+                Page::Sealed(s) => s.raw_len,
+                Page::Spilled(h) => h.raw_len,
+            })
+            .sum())
+    }
+
+    /// Zero-copy read: hot pages copy and sealed pages decompress directly
+    /// into `out`, which must be exactly
+    /// [`read_len`](Self::read_len) bytes. This is what the pool's reload
+    /// path sits on — one reusable buffer instead of a fresh `Vec` per read.
+    pub fn read_into(&self, seq: u64, layer: usize, out: &mut [u8]) -> Result<usize> {
+        // One map lookup and one page-list walk: this runs per (sequence,
+        // layer) per decode step on the serving hot path.
+        let pages = self
+            .pages
+            .get(&(seq, layer))
+            .ok_or_else(|| Error::KvCache(format!("no cache for seq {seq} layer {layer}")))?;
+        let need: usize = pages
+            .iter()
+            .map(|p| match p {
+                Page::Hot(h) => h.len(),
+                Page::Sealed(s) => s.raw_len,
+                Page::Spilled(h) => h.raw_len,
+            })
+            .sum();
+        if out.len() != need {
+            return Err(Error::InvalidInput(format!(
+                "output buffer is {} bytes, stream is {need}",
+                out.len()
+            )));
+        }
+        let mut off = 0usize;
         for p in pages {
             match p {
-                Page::Hot(h) => out.extend_from_slice(h),
-                Page::Sealed(s) => out.extend_from_slice(&unseal_bytes(
-                    &self.config,
-                    &self.dict,
-                    layer,
-                    s,
-                )?),
+                Page::Hot(h) => {
+                    out[off..off + h.len()].copy_from_slice(h);
+                    off += h.len();
+                }
+                Page::Sealed(s) => {
+                    unseal_bytes_into(
+                        &self.config,
+                        &self.dict,
+                        layer,
+                        s,
+                        &mut out[off..off + s.raw_len],
+                    )?;
+                    off += s.raw_len;
+                }
                 Page::Spilled(h) => {
                     return Err(Error::KvCache(format!(
                         "page in spill slot {} is not resident; read through SharedKvPool",
@@ -546,7 +650,7 @@ impl PagedKvCache {
                 }
             }
         }
-        Ok(out)
+        Ok(off)
     }
 
     /// Clone the sealed page at `page_idx` of (sequence, layer) — the first
@@ -720,17 +824,23 @@ fn seal_bytes(
     let mut dict_version = None;
     for s in &set.streams {
         let is_exp = s.kind == crate::formats::StreamKind::Exponent;
-        let current = if is_exp { dict.current(layer) } else { None };
-        let enc = encode_stream_with(
+        let current = if is_exp { dict.current_tables(layer) } else { None };
+        let enc = encode_stream_dicts(
             s,
             config.len_limit,
             config.gate_threshold,
-            current.map(|(_, t)| t),
+            StreamDicts {
+                huffman: current.map(|(_, h, _)| h),
+                rans: current.and_then(|(_, _, r)| r),
+            },
             config.codec,
         )?;
         if is_exp {
-            if enc.encoding == StreamEncoding::HuffmanDict {
-                dict_version = current.map(|(v, _)| v);
+            if matches!(
+                enc.encoding,
+                StreamEncoding::HuffmanDict | StreamEncoding::RansDict
+            ) {
+                dict_version = current.map(|(v, _, _)| v);
             }
             stats.exp_original += s.native_size_bits().div_ceil(8);
             stats.exp_compressed += enc.encoded_len() as u64;
@@ -745,31 +855,52 @@ fn seal_bytes(
     Ok(SealedPage { streams, raw_len: raw.len(), n_elements: set.n_elements, dict_version })
 }
 
-/// Decompress one sealed page.
-fn unseal_bytes(
+/// Decompress one sealed page straight into `dst` (exactly `raw_len`
+/// bytes) — the allocation-lean path behind [`PagedKvCache::read_into`].
+fn unseal_bytes_into(
     config: &KvCacheConfig,
     dict: &DictionaryManager,
     layer: usize,
     page: &SealedPage,
-) -> Result<Vec<u8>> {
+    dst: &mut [u8],
+) -> Result<()> {
     let mut set = StreamSet { streams: Vec::new(), n_elements: page.n_elements, original_bytes: page.raw_len };
     for enc in &page.streams {
         let kind = crate::formats::StreamKind::from_wire_id(enc.kind_id)
             .ok_or_else(|| Error::KvCache("bad stream kind in sealed page".into()))?;
-        let dictionary = if enc.encoding == StreamEncoding::HuffmanDict {
-            let version = page
-                .dict_version
-                .ok_or_else(|| Error::KvCache("sealed page missing dict version".into()))?;
-            Some(dict.table_version(layer, version).ok_or_else(|| {
-                Error::KvCache(format!("dictionary v{version} for layer {layer} missing"))
-            })?)
-        } else {
-            None
+        let version_for = |what: &str| {
+            page.dict_version
+                .ok_or_else(|| Error::KvCache(format!("sealed page missing {what} version")))
         };
-        let bytes = decode_stream(enc, dictionary)?;
+        let dicts = match enc.encoding {
+            StreamEncoding::HuffmanDict => {
+                let version = version_for("dict")?;
+                StreamDicts {
+                    huffman: Some(dict.table_version(layer, version).ok_or_else(|| {
+                        Error::KvCache(format!(
+                            "dictionary v{version} for layer {layer} missing"
+                        ))
+                    })?),
+                    rans: None,
+                }
+            }
+            StreamEncoding::RansDict => {
+                let version = version_for("rANS dict")?;
+                StreamDicts {
+                    huffman: None,
+                    rans: Some(dict.rans_table_version(layer, version).ok_or_else(|| {
+                        Error::KvCache(format!(
+                            "rANS dictionary v{version} for layer {layer} missing"
+                        ))
+                    })?),
+                }
+            }
+            _ => StreamDicts::default(),
+        };
+        let bytes = decode_stream_dicts(enc, dicts)?;
         set.streams.push(crate::formats::Stream::new(kind, bytes, enc.native_bits));
     }
-    merge_streams(config.format, &set)
+    merge_streams_into(config.format, &set, dst)
 }
 
 #[cfg(test)]
@@ -981,6 +1112,54 @@ mod tests {
         cache.restore_page(e.seq, e.layer, e.page_idx, back).unwrap();
         assert_eq!(cache.read(e.seq, e.layer).unwrap(), expect);
         assert_eq!(cache.resident_bytes(), before);
+    }
+
+    #[test]
+    fn rans_dictionary_pages_roundtrip_and_spill() {
+        // Precomputed rANS dictionaries (§3.3 extended to the second
+        // backend): with the codec pinned to rANS and a trained dictionary,
+        // exponent pages must code as RansDict (table-free frames), read
+        // back bit-exactly, and survive the spill wire format.
+        let mut config = bf16_config();
+        config.codec = Codec::Rans;
+        let mut cache = PagedKvCache::new(config.clone());
+        let vals = synthetic::kv_cache_f32(512, 128, 61);
+        let bytes = quantize_slice(&vals, config.format).unwrap();
+        let set = split_streams(config.format, &bytes).unwrap();
+        cache.dictionaries().train(0, &set.exponent().unwrap().bytes).unwrap();
+        assert!(cache.dictionaries().rans_table(0).is_some());
+        // The serialized FreqTable round-trips (the form dictionaries ship
+        // in when moved between processes).
+        let ser = cache.dictionaries().rans_table(0).unwrap().serialize();
+        assert_eq!(
+            &crate::rans::FreqTable::deserialize(&ser).unwrap(),
+            cache.dictionaries().rans_table(0).unwrap()
+        );
+        let mut expect = Vec::new();
+        for t in 0..64 {
+            let kv = token_bytes(&config, 800 + t);
+            cache.append_token(1, 0, &kv).unwrap();
+            expect.extend_from_slice(&kv);
+        }
+        cache.seal_all().unwrap();
+        assert_eq!(cache.read(1, 0).unwrap(), expect);
+        // read_into agrees and validates its buffer length.
+        let mut out = vec![0u8; cache.read_len(1, 0).unwrap()];
+        cache.read_into(1, 0, &mut out).unwrap();
+        assert_eq!(out, expect);
+        let mut short = vec![0u8; out.len() - 1];
+        assert!(cache.read_into(1, 0, &mut short).is_err());
+        // At least one sealed exponent stream used the shared rANS table.
+        let page = cache.sealed_page(1, 0, 0).unwrap();
+        assert!(
+            page.streams.iter().any(|e| e.encoding == StreamEncoding::RansDict),
+            "expected a RansDict stream; got {:?}",
+            page.streams.iter().map(|e| e.encoding).collect::<Vec<_>>()
+        );
+        // Spill wire roundtrip preserves the dictionary reference.
+        let wire = page.serialize();
+        let back = SealedPage::deserialize(&wire).unwrap();
+        assert_eq!(back.serialize(), wire);
     }
 
     #[test]

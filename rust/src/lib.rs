@@ -35,18 +35,33 @@
 //!
 //! ## Quick start
 //!
+//! The codec's entry point is a [`codec::Compressor`] **session**: it owns
+//! the options and a persistent worker pool, dispatches every strategy
+//! through one `compress` call, and decodes into caller-provided buffers.
+//!
 //! ```
-//! use zipnn_lp::codec::{compress_tensor, decompress_tensor, CompressOptions};
+//! use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 //! use zipnn_lp::formats::FloatFormat;
 //!
 //! // 1 KiB of BF16 weights (little-endian byte pairs).
 //! let weights: Vec<u8> = zipnn_lp::synthetic::gaussian_bf16_bytes(512, 0.02, 1);
-//! let opts = CompressOptions::for_format(FloatFormat::Bf16);
-//! let blob = compress_tensor(&weights, &opts).unwrap();
-//! let restored = decompress_tensor(&blob).unwrap();
+//! let session = Compressor::new(CompressOptions::for_format(FloatFormat::Bf16));
+//! let blob = session.compress(TensorInput::Tensor(&weights)).unwrap();
+//!
+//! // Zero-copy decode: no allocation on the session's side.
+//! let mut restored = vec![0u8; weights.len()];
+//! session.decompress_into(&blob, &mut restored).unwrap();
 //! assert_eq!(weights, restored); // bit-exact, always
 //! assert!(blob.encoded_len() < weights.len());
 //! ```
+//!
+//! Tensors larger than memory move through
+//! [`codec::Compressor::compress_stream`] /
+//! [`codec::Compressor::decompress_stream`] with one chunk in flight per
+//! worker, and many tensors pack into a random-access archive via
+//! [`container::ArchiveWriter`] / [`container::ArchiveReader`]. The
+//! pre-session free functions (`codec::compress_tensor`,
+//! `codec::decompress_tensor`, …) remain as thin wrappers.
 
 #![warn(missing_docs)]
 
@@ -58,6 +73,7 @@ pub mod container;
 pub mod coordinator;
 pub mod entropy;
 pub mod error;
+pub mod exec;
 pub mod formats;
 pub mod huffman;
 pub mod kvcache;

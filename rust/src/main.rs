@@ -20,8 +20,7 @@ use std::process::ExitCode;
 #[cfg(feature = "pjrt")]
 use zipnn_lp::checkpoint::CheckpointStore;
 use zipnn_lp::codec::{
-    compress_tensor, decompress_tensor, decompress_tensor_threads, stream_report, Codec,
-    CompressOptions, CompressedBlob, Strategy,
+    stream_report, Codec, CompressOptions, CompressedBlob, Compressor, Strategy, TensorInput,
 };
 #[cfg(feature = "pjrt")]
 use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
@@ -118,18 +117,19 @@ fn get_or<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -
 
 fn cmd_compress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let input = get(flags, "input")?;
-    let format = FloatFormat::parse(get_or(flags, "format", "bf16"))?;
+    let format: FloatFormat = get_or(flags, "format", "bf16").parse()?;
     let data = std::fs::read(input)?;
     let chunk_kib: usize = get_or(flags, "chunk-kib", "256").parse()?;
     let threads: usize = get_or(flags, "threads", "1").parse()?;
-    let codec = Codec::parse(get_or(flags, "codec", "auto"))?;
+    let codec: Codec = get_or(flags, "codec", "auto").parse()?;
     let mut opts = CompressOptions::for_format(format)
         .with_chunk_size(chunk_kib * 1024)
         .with_threads(threads)
         .with_codec(codec);
     opts.exponent_only = flags.contains_key("exponent-only");
+    let session = Compressor::new(opts);
     let t = zipnn_lp::metrics::Timer::new();
-    let blob = compress_tensor(&data, &opts)?;
+    let blob = session.compress(TensorInput::Tensor(&data))?;
     let secs = t.secs();
     let out_path = flags
         .get("output")
@@ -162,18 +162,21 @@ fn cmd_compress_model(flags: &HashMap<String, String>) -> Result<(), Box<dyn std
     use zipnn_lp::formats::safetensors;
     let input = get(flags, "input")?;
     let threads: usize = get_or(flags, "threads", "1").parse()?;
-    let codec = Codec::parse(get_or(flags, "codec", "auto"))?;
+    let codec: Codec = get_or(flags, "codec", "auto").parse()?;
     let tensors = safetensors::read_file(std::path::Path::new(input))?;
     let mut archive = Archive::new();
     let mut table = Table::new(&["tensor", "dtype", "original", "ratio"]);
     let mut skipped = 0usize;
+    // One pool for the whole model: sessions per format share it.
+    let pool = std::sync::Arc::new(zipnn_lp::exec::WorkerPool::new(threads));
     for t in &tensors {
         let Some(format) = t.float_format() else {
             skipped += 1;
             continue;
         };
         let opts = CompressOptions::for_format(format).with_threads(threads).with_codec(codec);
-        let blob = compress_tensor(&t.data, &opts)?;
+        let session = Compressor::with_pool(opts, std::sync::Arc::clone(&pool));
+        let blob = session.compress(TensorInput::Tensor(&t.data))?;
         table.row(&[
             t.name.clone(),
             t.dtype.clone(),
@@ -202,12 +205,13 @@ fn cmd_decompress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::er
     let input = get(flags, "input")?;
     let threads: usize = get_or(flags, "threads", "1").parse()?;
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
+    let session = Compressor::new(
+        CompressOptions::for_format(blob.format).with_threads(threads),
+    );
     let t = zipnn_lp::metrics::Timer::new();
-    let data = if threads > 1 {
-        decompress_tensor_threads(&blob, threads)?
-    } else {
-        decompress_tensor(&blob)?
-    };
+    // Zero-copy decode into the output buffer.
+    let mut data = vec![0u8; blob.original_len];
+    session.decompress_into(&blob, &mut data)?;
     let secs = t.secs();
     let out_path = flags
         .get("output")
@@ -227,9 +231,9 @@ fn cmd_decompress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::er
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let input = get(flags, "input")?;
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
-    println!("strategy:  {:?}", blob.strategy);
-    println!("codec:     {}", blob.codec.name());
-    println!("format:    {}", blob.format.name());
+    println!("strategy:  {}", blob.strategy);
+    println!("codec:     {}", blob.codec);
+    println!("format:    {}", blob.format);
     println!("original:  {}", human_bytes(blob.original_len as u64));
     println!("encoded:   {}", human_bytes(blob.encoded_len() as u64));
     println!("ratio:     {:.4}", blob.ratio());
@@ -330,12 +334,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::
     let dir = PathBuf::from(get(flags, "artifacts")?);
     let n_requests: usize = get_or(flags, "requests", "8").parse()?;
     let new_tokens: usize = get_or(flags, "new-tokens", "24").parse()?;
-    let kv_format = match get_or(flags, "kv-format", "bf16") {
-        "bf16" => FloatFormat::Bf16,
-        "fp8" => FloatFormat::Fp8E4M3,
-        "e5m2" | "fp8_e5m2" => FloatFormat::Fp8E5M2,
-        other => return Err(format!("bad --kv-format '{other}'").into()),
-    };
+    let kv_format: FloatFormat = get_or(flags, "kv-format", "bf16").parse()?;
+    if !matches!(
+        kv_format,
+        FloatFormat::Bf16 | FloatFormat::Fp8E4M3 | FloatFormat::Fp8E5M2
+    ) {
+        return Err(format!("--kv-format must be bf16|fp8|e5m2, got {kv_format}").into());
+    }
     let compression = !flags.contains_key("no-compression");
     let seed: u64 = get_or(flags, "seed", "0").parse()?;
     let budget_mib: f64 = get_or(flags, "kv-budget-mib", "0").parse()?;

@@ -270,11 +270,38 @@ impl SharedKvPool {
     pub fn read(&self, seq: u64, layer: usize) -> Result<Vec<u8>> {
         let arc = self.seq_cache(seq)?;
         let mut cache = arc.lock().unwrap();
+        self.reload_spilled(seq, layer, &mut cache)?;
+        // Entropy decode outside the ledger lock: reads of different
+        // sequences decompress in parallel.
+        cache.read(seq, layer)
+    }
+
+    /// Zero-copy read: like [`read`](Self::read) but decodes into `out`
+    /// (exactly [`read_len`](Self::read_len) bytes), so steady-state
+    /// decode loops reuse one buffer instead of allocating per read.
+    pub fn read_into(&self, seq: u64, layer: usize, out: &mut [u8]) -> Result<usize> {
+        let arc = self.seq_cache(seq)?;
+        let mut cache = arc.lock().unwrap();
+        self.reload_spilled(seq, layer, &mut cache)?;
+        cache.read_into(seq, layer, out)
+    }
+
+    /// Logical byte length of the (sequence, layer) stream — the buffer
+    /// size [`read_into`](Self::read_into) requires.
+    pub fn read_len(&self, seq: u64, layer: usize) -> Result<usize> {
+        let arc = self.seq_cache(seq)?;
+        let guard = arc.lock().unwrap();
+        guard.read_len(seq, layer)
+    }
+
+    /// Reload every spilled page of a (sequence, layer) list and mark the
+    /// list just-used in the LRU. Caller holds the sequence lock.
+    fn reload_spilled(&self, seq: u64, layer: usize, cache: &mut PagedKvCache) -> Result<()> {
         for (idx, handle) in cache.spilled_pages(seq, layer) {
             let need = handle.encoded_len as u64;
             // Make headroom (evicting if the budget demands it; this list's
             // pages are pinned) and take the reservation atomically.
-            self.reserve_headroom(need, Some((seq, &mut cache)), Some((seq, layer)));
+            self.reserve_headroom(need, Some((seq, &mut *cache)), Some((seq, layer)));
             // Locate the extent under a brief ledger lock; the disk read and
             // CRC check run *outside* it, so reloads of different sequences
             // overlap on the spill file.
@@ -306,9 +333,7 @@ impl SharedKvPool {
                 led.touch(key);
             }
         }
-        // Entropy decode outside the ledger lock: reads of different
-        // sequences decompress in parallel.
-        cache.read(seq, layer)
+        Ok(())
     }
 
     /// Tokens stored for (sequence, layer); 0 for unknown sequences.
@@ -621,6 +646,13 @@ mod tests {
         assert!(stats.raw_bytes > budget, "test must oversubscribe the budget");
         assert_eq!(pool.sequences(), vec![1, 2, 3]);
         assert_eq!(pool.token_count(1, 0), 160);
+        // The zero-copy path reloads spilled pages just the same.
+        for (&(seq, layer), shadow) in &shadows {
+            let mut buf = vec![0u8; pool.read_len(seq, layer).unwrap()];
+            pool.read_into(seq, layer, &mut buf).unwrap();
+            assert_eq!(&buf, shadow, "read_into seq {seq} layer {layer}");
+        }
+        assert!(pool.counters().within_budget(), "{}", pool.counters());
     }
 
     #[test]
@@ -634,6 +666,12 @@ mod tests {
             shadow.extend_from_slice(&kv);
         }
         assert_eq!(pool.read(5, 1).unwrap(), shadow);
+        // Zero-copy read path agrees bit for bit and validates its buffer.
+        let mut buf = vec![0u8; pool.read_len(5, 1).unwrap()];
+        pool.read_into(5, 1, &mut buf).unwrap();
+        assert_eq!(buf, shadow);
+        let mut short = vec![0u8; buf.len() - 1];
+        assert!(pool.read_into(5, 1, &mut short).is_err());
         let c = pool.counters();
         assert_eq!(c.evictions, 0);
         assert_eq!(c.spills, 0);

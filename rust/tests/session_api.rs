@@ -1,0 +1,308 @@
+//! Integration tests for the session-based codec API: `Compressor`
+//! streaming with bounded buffering, zero-copy decode error paths, and the
+//! random-access archive v2 (plus v1 back-compat).
+//!
+//! Like the other test targets, this file uses the in-house seeded property
+//! harness (`zipnn_lp::util::rng::Rng`) instead of a proptest crate.
+
+use zipnn_lp::codec::{compress_tensor, CompressOptions, Compressor, TensorInput};
+use zipnn_lp::container::{Archive, ArchiveReader, ArchiveWriter, TensorMeta};
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::synthetic;
+use zipnn_lp::util::rng::Rng;
+use std::path::PathBuf;
+
+const FORMATS: [FloatFormat; 5] = [
+    FloatFormat::Fp32,
+    FloatFormat::Fp16,
+    FloatFormat::Bf16,
+    FloatFormat::Fp8E4M3,
+    FloatFormat::Fp8E5M2,
+];
+
+fn align(format: FloatFormat) -> usize {
+    match format {
+        FloatFormat::Fp32 => 4,
+        FloatFormat::Fp16 | FloatFormat::Bf16 | FloatFormat::Fp8E4M3 => 2,
+        _ => 1,
+    }
+}
+
+fn tmppath(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("zipnn_lp_session_api");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{}.zlp", std::process::id()))
+}
+
+/// Acceptance: a tensor several times larger than the streaming window
+/// moves through compress_stream/decompress_stream bit-exactly, with the
+/// in-flight footprint bounded by the window, not the tensor.
+#[test]
+fn streaming_bounded_buffering_far_beyond_window() {
+    let chunk = 8 * 1024;
+    let threads = 2;
+    let session = Compressor::new(
+        CompressOptions::for_format(FloatFormat::Bf16)
+            .with_chunk_size(chunk)
+            .with_threads(threads),
+    );
+    // 2 MiB of data against a 16 KiB window: 128x larger.
+    let data = synthetic::gaussian_bf16_bytes(1024 * 1024, 0.02, 71);
+    let mut wire = Vec::new();
+    let summary = session.compress_stream(&data[..], &mut wire).unwrap();
+    assert_eq!(summary.original_len, data.len() as u64);
+    assert_eq!(summary.encoded_len, wire.len() as u64);
+    let window = (threads * summary.chunk_size) as u64;
+    assert!(
+        summary.peak_buffered <= 2 * window + 16 * 1024,
+        "encode peak {} not bounded by window {window}",
+        summary.peak_buffered
+    );
+    assert!(
+        summary.peak_buffered < data.len() as u64 / 16,
+        "encode peak {} scales with the stream, not the window",
+        summary.peak_buffered
+    );
+    let mut out = Vec::new();
+    let dsum = session.decompress_stream(&wire[..], &mut out).unwrap();
+    assert_eq!(out, data, "stream roundtrip must be bit-exact");
+    assert_eq!(dsum.chunks, summary.chunks);
+    assert!(
+        dsum.peak_buffered <= 2 * window + 16 * 1024,
+        "decode peak {} not bounded by window {window}",
+        dsum.peak_buffered
+    );
+}
+
+/// Property: streaming output carries exactly the buffered encoder's chunk
+/// payloads for the same options, across all five scalar formats.
+#[test]
+fn prop_streaming_matches_buffered_all_formats() {
+    let mut rng = Rng::new(2024);
+    for format in FORMATS {
+        for case in 0..6 {
+            let a = align(format);
+            let len = (1 + rng.below(60_000) as usize) / a * a;
+            let mut data = vec![0u8; len];
+            match case % 3 {
+                0 => rng.fill_bytes(&mut data),
+                1 => data.fill(0x41),
+                _ => {
+                    for b in data.iter_mut() {
+                        *b = if rng.next_f64() < 0.85 { 0x3E } else { rng.below(256) as u8 };
+                    }
+                }
+            }
+            let session = Compressor::new(
+                CompressOptions::for_format(format)
+                    .with_chunk_size(4096)
+                    .with_threads(1 + (case % 3)),
+            );
+            let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+            let mut wire = Vec::new();
+            session.compress_stream(&data[..], &mut wire).unwrap();
+            // The streamed chunk payloads, concatenated, are the blob's
+            // data region, bit for bit.
+            let concat = extract_stream_chunks(&wire);
+            assert_eq!(concat, blob.data, "{format:?} case {case}");
+            let mut round = Vec::new();
+            session.decompress_stream(&wire[..], &mut round).unwrap();
+            assert_eq!(round, data, "{format:?} case {case} roundtrip");
+        }
+    }
+}
+
+/// Pull the concatenated encoded chunk payloads out of a ZLPS stream.
+fn extract_stream_chunks(wire: &[u8]) -> Vec<u8> {
+    use zipnn_lp::util::varint;
+    let mut pos = 9usize; // magic + version + strategy/format/codec
+    let _chunk_size = varint::read_usize(wire, &mut pos).unwrap();
+    let mut out = Vec::new();
+    loop {
+        let marker = wire[pos];
+        pos += 1;
+        if marker == 0 {
+            break;
+        }
+        let _raw_len = varint::read_usize(wire, &mut pos).unwrap();
+        pos += 4; // crc
+        let enc_len = varint::read_usize(wire, &mut pos).unwrap();
+        out.extend_from_slice(&wire[pos..pos + enc_len]);
+        pos += enc_len;
+    }
+    out
+}
+
+/// decompress_into / decompress_chunk_into refuse wrong-size buffers with
+/// InvalidInput, and succeed on exact ones.
+#[test]
+fn decompress_into_length_mismatches() {
+    let session = Compressor::new(
+        CompressOptions::for_format(FloatFormat::Fp8E4M3).with_chunk_size(2048),
+    );
+    let mut rng = Rng::new(5);
+    let mut data = vec![0u8; 10_000];
+    rng.fill_bytes(&mut data);
+    let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+    for bad in [0usize, 1, data.len() - 1, data.len() + 1] {
+        let mut out = vec![0u8; bad];
+        let err = session.decompress_into(&blob, &mut out).unwrap_err();
+        assert!(
+            matches!(err, zipnn_lp::Error::InvalidInput(_)),
+            "len {bad}: {err}"
+        );
+    }
+    let mut out = vec![0u8; data.len()];
+    session.decompress_into(&blob, &mut out).unwrap();
+    assert_eq!(out, data);
+    // Chunk-level.
+    let raw0 = blob.chunks[0].raw_len;
+    let mut bad = vec![0u8; raw0 + 1];
+    assert!(session.decompress_chunk_into(&blob, 0, &mut bad).is_err());
+    let mut ok = vec![0u8; raw0];
+    session.decompress_chunk_into(&blob, 0, &mut ok).unwrap();
+    assert_eq!(ok[..], data[..raw0]);
+}
+
+/// Property: archive v2 round-trips arbitrary tensor sets through the
+/// incremental writer and the positioned reader; a v1 file written from
+/// the same tensors still decodes identically.
+#[test]
+fn prop_archive_v2_roundtrip_and_v1_backcompat() {
+    let mut rng = Rng::new(88);
+    for case in 0..8 {
+        let n_tensors = 1 + rng.below(5) as usize;
+        let mut tensors: Vec<(String, Vec<u8>, FloatFormat)> = Vec::new();
+        for i in 0..n_tensors {
+            let format = FORMATS[rng.below(FORMATS.len() as u64) as usize];
+            let a = align(format);
+            let len = (1 + rng.below(30_000) as usize) / a * a;
+            let mut data = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            tensors.push((format!("case{case}.t{i}"), data, format));
+        }
+
+        // v2 via the incremental writer.
+        let path = tmppath(&format!("prop_v2_{case}"));
+        let mut writer = ArchiveWriter::create(&path).unwrap();
+        let mut archive = Archive::new(); // shadow for the v1 file
+        for (name, data, format) in &tensors {
+            let session = Compressor::new(
+                CompressOptions::for_format(*format).with_chunk_size(4096),
+            );
+            let blob = session.compress(TensorInput::Tensor(data)).unwrap();
+            writer
+                .add(TensorMeta { name: name.clone(), shape: vec![data.len() as u64] }, &blob)
+                .unwrap();
+            archive.insert(
+                TensorMeta { name: name.clone(), shape: vec![data.len() as u64] },
+                blob,
+            );
+        }
+        writer.finish().unwrap();
+        let reader = ArchiveReader::open(&path).unwrap();
+        assert_eq!(reader.len(), tensors.len(), "case {case}");
+        for (name, data, format) in &tensors {
+            assert_eq!(&reader.read_tensor(name).unwrap(), data, "case {case} {name}");
+            let entry = reader.entry(name).unwrap();
+            assert_eq!(entry.format, *format);
+            assert_eq!(entry.original_len, data.len());
+            // Random chunk + random byte range.
+            if !entry.chunks.is_empty() && !data.is_empty() {
+                let idx = rng.below(entry.chunks.len() as u64) as usize;
+                let start: usize = entry.chunks[..idx].iter().map(|c| c.raw_len).sum();
+                let chunk = reader.read_chunk(name, idx).unwrap();
+                assert_eq!(chunk[..], data[start..start + entry.chunks[idx].raw_len]);
+                let r0 = rng.below(data.len() as u64) as usize;
+                let rl = rng.below((data.len() - r0 + 1) as u64) as usize;
+                assert_eq!(reader.read_range(name, r0, rl).unwrap()[..], data[r0..r0 + rl]);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+
+        // v1 back-compat: same tensors serialized with the v1 wire still
+        // open and decode through both APIs.
+        let v1_path = tmppath(&format!("prop_v1_{case}"));
+        std::fs::write(&v1_path, archive.serialize()).unwrap();
+        let v1 = ArchiveReader::open(&v1_path).unwrap();
+        assert_eq!(v1.version(), 1, "case {case}");
+        for (name, data, _) in &tensors {
+            assert_eq!(&v1.read_tensor(name).unwrap(), data, "case {case} v1 {name}");
+        }
+        let loaded = Archive::load(&v1_path).unwrap();
+        assert_eq!(loaded.len(), tensors.len());
+        std::fs::remove_file(&v1_path).ok();
+    }
+}
+
+/// Acceptance: reading one chunk of one tensor from a v2 archive is a
+/// positioned read of exactly that chunk — demonstrated by corrupting
+/// every OTHER tensor's data region on disk and still reading bit-exactly.
+#[test]
+fn archive_v2_chunk_read_is_isolated() {
+    let path = tmppath("isolated");
+    let session = Compressor::new(
+        CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(2048),
+    );
+    let a = synthetic::gaussian_bf16_bytes(8000, 0.02, 91);
+    let b = synthetic::gaussian_bf16_bytes(8000, 0.02, 92);
+    let c = synthetic::gaussian_bf16_bytes(8000, 0.02, 93);
+    let mut writer = ArchiveWriter::create(&path).unwrap();
+    for (name, data) in [("a", &a), ("b", &b), ("c", &c)] {
+        let blob = session.compress(TensorInput::Tensor(data)).unwrap();
+        writer
+            .add(TensorMeta { name: name.into(), shape: vec![data.len() as u64] }, &blob)
+            .unwrap();
+    }
+    writer.finish().unwrap();
+
+    // Trash every byte of tensors `a` and `c` on disk. If read_chunk("b")
+    // deserialized anything outside b's chunks, it would now fail.
+    let reader = ArchiveReader::open(&path).unwrap();
+    let (a_off, a_len) = {
+        let e = reader.entry("a").unwrap();
+        (e.data_offset, e.data_len())
+    };
+    let (c_off, c_len) = {
+        let e = reader.entry("c").unwrap();
+        (e.data_offset, e.data_len())
+    };
+    let b_entry = reader.entry("b").unwrap().clone();
+    drop(reader);
+    let mut file = std::fs::read(&path).unwrap();
+    for i in a_off..a_off + a_len {
+        file[i as usize] ^= 0xFF;
+    }
+    for i in c_off..c_off + c_len {
+        file[i as usize] ^= 0xFF;
+    }
+    std::fs::write(&path, &file).unwrap();
+
+    let reader = ArchiveReader::open(&path).unwrap();
+    for idx in 0..b_entry.chunks.len() {
+        let start: usize = b_entry.chunks[..idx].iter().map(|ch| ch.raw_len).sum();
+        let chunk = reader.read_chunk("b", idx).unwrap();
+        assert_eq!(
+            chunk[..],
+            b[start..start + b_entry.chunks[idx].raw_len],
+            "chunk {idx} of untouched tensor must read bit-exactly"
+        );
+    }
+    // And the trashed neighbours do fail loudly.
+    assert!(reader.read_tensor("a").is_err());
+    assert!(reader.read_tensor("c").is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+/// The deprecated-style free functions still agree with the session.
+#[test]
+fn free_functions_remain_wire_compatible() {
+    let data = synthetic::gaussian_bf16_bytes(20_000, 0.02, 99);
+    let opts = CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(4096);
+    let legacy = compress_tensor(&data, &opts).unwrap();
+    let session = Compressor::new(opts);
+    let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+    assert_eq!(legacy.serialize(), blob.serialize());
+    assert_eq!(zipnn_lp::codec::decompress_tensor(&legacy).unwrap(), data);
+    assert_eq!(session.decompress(&blob).unwrap(), data);
+}
