@@ -8,7 +8,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench bench-json doc artifacts clean
+.PHONY: build test bench bench-json bench-gate doc artifacts clean
 
 # Tier-1 verify: release build + full test suite (hermetic, no artifacts).
 build:
@@ -26,6 +26,13 @@ bench:
 bench-json:
 	$(CARGO) bench --bench codec_throughput -- --smoke --json BENCH_codec.json
 	$(CARGO) bench --bench kv_cache -- --json BENCH_kv.json
+
+# Enforce the committed perf contract against the latest bench-json run
+# (ratio regressions >1%, decode-throughput drops >20%, parallel-decode
+# speedup floor). CI runs this on every push; BENCH_GATE_OVERRIDE=1 (the
+# `bench-override` PR label) demotes failures to warnings.
+bench-gate: bench-json
+	$(PYTHON) ci/bench_gate.py --baseline BENCH_baseline.json --current BENCH_codec.json
 
 doc:
 	$(CARGO) doc --no-deps

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare BENCH_codec.json against BENCH_baseline.json.
+
+The trajectory JSONs the benches emit are an enforced contract, not an
+artifact dump. This script fails the CI `bench-json` step when the current
+run regresses against the committed baseline:
+
+  * any compression ratio more than --ratio-margin (default 1%) above its
+    baseline value -- ratios are deterministic (seeded synthetic data), so
+    this catches real codec regressions, not noise;
+  * any decode throughput more than --throughput-margin (default 20%) below
+    its baseline value -- baselines are committed deliberately conservative
+    so shared-runner noise does not trip the gate;
+  * any archive row whose baseline carries a `min_speedup` floor (the
+    acceptance criterion: chunk-parallel read_tensor_into at 4 workers must
+    stay >= 2x the serial reader) not meeting that floor -- no margin, it is
+    a hard floor;
+  * any baseline row with no matching current row (a bench silently dropping
+    a measurement is itself a regression).
+
+Override: set BENCH_GATE_OVERRIDE=1 to demote failures to warnings (exit 0).
+CI wires this to the `bench-override` PR label; use it for known-noisy
+runners or intentional trade-offs, and say why in the PR description.
+
+Updating the baseline: run `make bench-json` (or download the `bench-json`
+CI artifact) and copy BENCH_codec.json over BENCH_baseline.json, keeping or
+adjusting the `min_speedup` floors by hand. The baseline schema is the bench
+schema plus the optional per-archive-row `min_speedup` key.
+
+Usage: python3 ci/bench_gate.py [--baseline PATH] [--current PATH]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            return json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"bench-gate: cannot read {path}: {exc}", file=sys.stderr)
+        sys.exit(2)
+
+
+def index(rows, fields):
+    return {tuple(row.get(f) for f in fields): row for row in rows}
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--baseline", default="BENCH_baseline.json")
+    parser.add_argument("--current", default="BENCH_codec.json")
+    parser.add_argument(
+        "--ratio-margin",
+        type=float,
+        default=1.0,
+        help="max allowed compression-ratio regression, percent (default 1)",
+    )
+    parser.add_argument(
+        "--throughput-margin",
+        type=float,
+        default=20.0,
+        help="max allowed decode-throughput drop, percent (default 20)",
+    )
+    args = parser.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    ratio_cap = 1.0 + args.ratio_margin / 100.0
+    thr_floor = 1.0 - args.throughput_margin / 100.0
+    failures = []
+    checks = 0
+
+    def check_rows(section, keys, ratio_keys=(), throughput_keys=()):
+        nonlocal checks
+        cur_rows = index(cur.get(section, []), keys)
+        for brow in base.get(section, []):
+            key = tuple(brow.get(f) for f in keys)
+            label = f"{section}{list(key)}"
+            crow = cur_rows.get(key)
+            if crow is None:
+                failures.append(f"{label}: baseline row has no current counterpart")
+                continue
+            for field in ratio_keys:
+                if field not in brow:
+                    continue
+                checks += 1
+                b, c = brow[field], crow.get(field)
+                if c is None or c > b * ratio_cap:
+                    failures.append(
+                        f"{label}: {field} {c} regressed past baseline "
+                        f"{b} * {ratio_cap:.4f} = {b * ratio_cap:.6f}"
+                    )
+            for field in throughput_keys:
+                if field not in brow:
+                    continue
+                checks += 1
+                b, c = brow[field], crow.get(field)
+                if c is None or c < b * thr_floor:
+                    failures.append(
+                        f"{label}: {field} {c} dropped below baseline "
+                        f"{b} * {thr_floor:.4f} = {b * thr_floor:.6f}"
+                    )
+            if "min_speedup" in brow:
+                checks += 1
+                c = crow.get("speedup_vs_serial")
+                if c is None or c < brow["min_speedup"]:
+                    failures.append(
+                        f"{label}: speedup_vs_serial {c} below hard floor "
+                        f"{brow['min_speedup']} (chunk-parallel decode acceptance)"
+                    )
+
+    check_rows(
+        "streams",
+        ("format", "stream", "codec"),
+        ratio_keys=("ratio",),
+        throughput_keys=("decode_mibps",),
+    )
+    check_rows("blobs", ("format", "codec"), ratio_keys=("ratio",))
+    check_rows(
+        "archive",
+        ("scenario", "backing", "workers"),
+        throughput_keys=("decode_gibps",),
+    )
+    check_rows("stream_decode", ("threads",), throughput_keys=("decode_gibps",))
+
+    if failures:
+        for f in failures:
+            print(f"bench-gate FAIL: {f}", file=sys.stderr)
+        if os.environ.get("BENCH_GATE_OVERRIDE") == "1":
+            print(
+                f"bench-gate: {len(failures)} failure(s) OVERRIDDEN "
+                "(BENCH_GATE_OVERRIDE=1 / `bench-override` label)"
+            )
+            return 0
+        print(
+            f"bench-gate: {len(failures)} failure(s) across {checks} checks. "
+            "If intentional, apply the `bench-override` PR label and update "
+            "BENCH_baseline.json (see README, Bench-regression gate).",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"bench-gate OK: {checks} checks against {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,9 @@ fn main() {
         Compressor::new(CompressOptions::for_format(FloatFormat::Bf16).with_threads(2));
 
     println!("Fig 6 — delta checkpoint compression ({n_params} BF16 params/ckpt)");
-    let mut table = Table::new(&["pair", "exp ratio", "s+m ratio", "overall", "enc MiB/s"]);
+    let mut table = Table::new(&[
+        "pair", "exp ratio", "s+m ratio", "overall", "enc MiB/s", "dec GB/s",
+    ]);
 
     let mut prev = synthetic::gaussian_bf16_bytes(n_params, 0.02, 100);
     for pair in 0..n_pairs {
@@ -38,6 +40,16 @@ fn main() {
             .expect("compress");
         let secs = timer.secs();
 
+        // Decode throughput: zero-copy delta reconstruction (chunks decode
+        // into the buffer, base XORs in place) — the restore path. The
+        // buffer is allocated outside the timed region so the number
+        // measures decode, not page-faulting a fresh allocation.
+        let mut back = vec![0u8; cur.len()];
+        let timer = Timer::new();
+        session.decompress_delta_into(&blob, &prev, &mut back).expect("decompress");
+        let dec_secs = timer.secs();
+        assert_eq!(back, cur, "delta reconstruction must be bit-exact");
+
         let exp = blob.stat(StreamKind::Exponent).map(|s| s.ratio()).unwrap_or(1.0);
         let sm = blob.stat(StreamKind::SignMantissa).map(|s| s.ratio()).unwrap_or(1.0);
         table.row(&[
@@ -46,6 +58,7 @@ fn main() {
             format!("{sm:.4}"),
             format!("{:.4}", blob.ratio()),
             format!("{:.1}", cur.len() as f64 / (1024.0 * 1024.0) / secs),
+            format!("{:.3}", cur.len() as f64 / 1e9 / dec_secs),
         ]);
         prev = cur;
     }

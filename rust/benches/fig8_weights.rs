@@ -8,6 +8,7 @@
 //! Run: `cargo bench --bench fig8_weights`
 
 use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
+use zipnn_lp::container::{ArchiveReader, ArchiveWriter, TensorMeta};
 use zipnn_lp::formats::{FloatFormat, StreamKind};
 use zipnn_lp::metrics::{Table, Timer};
 use zipnn_lp::synthetic;
@@ -21,12 +22,19 @@ fn main() {
 
     let mut fig8 = Table::new(&[
         "model", "original", "comp exp", "comp s+m", "ratio", "enc MiB/s", "dec MiB/s",
+        "archive GB/s",
     ]);
     for (name, format, d, layers, vocab) in zoo {
         let manifest = synthetic::transformer_manifest(d, layers, vocab);
-        let session = Compressor::new(CompressOptions::for_format(format).with_threads(2));
+        // 4 workers: the serving-restore configuration the §4 deployment
+        // story cares about (decode as close to I/O-bound as possible).
+        let session = Compressor::new(CompressOptions::for_format(format).with_threads(4));
         let (mut orig, mut enc_b, mut exp_c, mut sm_c) = (0u64, 0u64, 0u64, 0u64);
         let (mut enc_secs, mut dec_secs) = (0f64, 0f64);
+        let archive_path = std::env::temp_dir()
+            .join(format!("zipnn_lp_fig8_{name}_{}.zlp", std::process::id()));
+        let mut writer = ArchiveWriter::create(&archive_path).expect("create archive");
+        let mut sources: Vec<(String, Vec<u8>)> = Vec::new();
         for t in &manifest {
             let bytes = synthetic::materialize_bytes(t, format, 1);
             let timer = Timer::new();
@@ -41,7 +49,36 @@ fn main() {
             enc_b += blob.encoded_len() as u64;
             exp_c += blob.stat(StreamKind::Exponent).map(|s| s.compressed_bytes).unwrap_or(0);
             sm_c += blob.stat(StreamKind::SignMantissa).map(|s| s.compressed_bytes).unwrap_or(0);
+            writer
+                .add(
+                    TensorMeta { name: t.name.clone(), shape: vec![bytes.len() as u64] },
+                    &blob,
+                )
+                .expect("archive add");
+            sources.push((t.name.clone(), bytes));
         }
+        writer.finish().expect("archive finish");
+
+        // Whole-model restore from the archive: chunk-parallel
+        // read_tensor_into over the session pool, mmap-backed where the
+        // platform allows. One reusable buffer, allocated before the
+        // timer, so the GB/s number measures decode, not allocation.
+        let reader = ArchiveReader::open(&archive_path).expect("open archive");
+        let max_len = sources.iter().map(|(_, b)| b.len()).max().unwrap_or(0);
+        let mut back = vec![0u8; max_len];
+        let mut restored = 0u64;
+        let timer = Timer::new();
+        for (tname, bytes) in &sources {
+            session
+                .read_tensor_into(&reader, tname, &mut back[..bytes.len()])
+                .expect("archive read");
+            restored += bytes.len() as u64;
+            assert_eq!(&back[..bytes.len()], &bytes[..], "archive restore of {tname}");
+        }
+        let archive_secs = timer.secs();
+        assert_eq!(restored, orig);
+        std::fs::remove_file(&archive_path).ok();
+
         let mib = orig as f64 / (1024.0 * 1024.0);
         fig8.row(&[
             name.to_string(),
@@ -51,6 +88,7 @@ fn main() {
             format!("{:.4}", enc_b as f64 / orig as f64),
             format!("{:.1}", mib / enc_secs),
             format!("{:.1}", mib / dec_secs),
+            format!("{:.3} ({})", orig as f64 / 1e9 / archive_secs, reader.backing_kind()),
         ]);
     }
     println!("Fig 8 — FP8/BF16 whole-model compression:\n{}", fig8.render());

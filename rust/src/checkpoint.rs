@@ -207,8 +207,12 @@ impl CheckpointStore {
             CkptKind::Full => {
                 let mut out = Vec::new();
                 for name in reader.names() {
-                    let blob = reader.read_blob(&name)?;
-                    out.push((name, self.session.decompress(&blob)?));
+                    let entry = reader.entry(&name).expect("listed name resolves");
+                    let mut buf = vec![0u8; entry.original_len];
+                    // Chunk-parallel straight from the archive backing into
+                    // the tensor buffer — no intermediate blob copy.
+                    reader.read_tensor_into_pooled(&name, &mut buf, self.session.pool())?;
+                    out.push((name, buf));
                 }
                 Ok(out)
             }
@@ -230,6 +234,79 @@ impl CheckpointStore {
                 Ok(out)
             }
         }
+    }
+
+    /// Zero-copy checkpoint load: reconstruct checkpoint `id` directly
+    /// into caller-provided, exactly-sized buffers — the deployment path
+    /// for restoring weights into already-allocated (e.g. device-pinned)
+    /// memory without a transient copy of the checkpoint.
+    ///
+    /// `out` must carry one `(name, buffer)` entry per stored tensor, in
+    /// the same sorted-name order [`load`](Self::load) returns, each
+    /// buffer exactly the tensor's original length. Full checkpoints
+    /// decode chunk-parallel from the archive backing into the buffers
+    /// (chunks fan out over the store's session pool); delta checkpoints
+    /// decode into the buffers and XOR their reconstructed base in place.
+    pub fn read_checkpoint_into(
+        &self,
+        id: usize,
+        out: &mut [(String, &mut [u8])],
+    ) -> Result<()> {
+        let rec = self
+            .records
+            .get(id)
+            .ok_or_else(|| Error::Checkpoint(format!("unknown checkpoint {id}")))?;
+        let reader = ArchiveReader::open(&self.dir.join(&rec.file))?;
+        let names = reader.names();
+        if out.len() != names.len() {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint {id} stores {} tensors, caller provided {}",
+                names.len(),
+                out.len()
+            )));
+        }
+        match rec.kind {
+            CkptKind::Full => {
+                for (i, ename) in names.iter().enumerate() {
+                    let (name, buf) = &mut out[i];
+                    if name.as_str() != ename.as_str() {
+                        return Err(Error::Checkpoint(format!(
+                            "tensor name mismatch at {i}: {name} vs stored {ename}"
+                        )));
+                    }
+                    reader.read_tensor_into_pooled(ename, buf, self.session.pool())?;
+                }
+            }
+            CkptKind::Delta { base } => {
+                if base >= id {
+                    return Err(Error::Checkpoint("delta chain loops forward".into()));
+                }
+                let base_tensors = self.load(base)?;
+                // zip would silently truncate on a damaged store; a short
+                // base must be a loud error, never a partial restore.
+                if base_tensors.len() != names.len() {
+                    return Err(Error::Checkpoint(format!(
+                        "delta checkpoint {id} stores {} tensors but base {base} \
+                         reconstructs {}",
+                        names.len(),
+                        base_tensors.len()
+                    )));
+                }
+                for (i, (ename, (bname, bdata))) in
+                    names.iter().zip(&base_tensors).enumerate()
+                {
+                    let (name, buf) = &mut out[i];
+                    if name.as_str() != ename.as_str() || ename != bname {
+                        return Err(Error::Checkpoint(format!(
+                            "tensor name mismatch at {i}: {name} vs {ename} vs base {bname}"
+                        )));
+                    }
+                    let blob = reader.read_blob(ename)?;
+                    self.session.decompress_delta_into(&blob, bdata, buf)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Verify that checkpoint `id` reconstructs to exactly `tensors`.
@@ -453,6 +530,44 @@ mod tests {
         for r in &recs[1..] {
             assert!(r.exp_ratio < r.sm_ratio, "{r:?}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_checkpoint_into_matches_load() {
+        let dir = tmpdir("into");
+        let mut store = CheckpointStore::create(&dir, opts(), 2).unwrap();
+        let ckpts = training_run(4, 3000, 9); // mixes full + delta kinds
+        for c in &ckpts {
+            store.append(c).unwrap();
+        }
+        for i in 0..ckpts.len() {
+            let loaded = store.load(i).unwrap();
+            let mut bufs: Vec<Vec<u8>> =
+                loaded.iter().map(|(_, d)| vec![0u8; d.len()]).collect();
+            let mut out: Vec<(String, &mut [u8])> = loaded
+                .iter()
+                .zip(bufs.iter_mut())
+                .map(|((n, _), b)| (n.clone(), &mut b[..]))
+                .collect();
+            store.read_checkpoint_into(i, &mut out).unwrap();
+            drop(out);
+            for ((name, data), buf) in loaded.iter().zip(&bufs) {
+                assert_eq!(data, buf, "ckpt {i} tensor {name}");
+            }
+        }
+        // Error paths: wrong entry count, wrong name, wrong buffer size.
+        let loaded = store.load(0).unwrap();
+        assert!(store.read_checkpoint_into(0, &mut []).is_err());
+        let mut short = vec![0u8; loaded[0].1.len() - 2];
+        let mut rest: Vec<Vec<u8>> =
+            loaded[1..].iter().map(|(_, d)| vec![0u8; d.len()]).collect();
+        let mut out: Vec<(String, &mut [u8])> =
+            vec![(loaded[0].0.clone(), &mut short[..])];
+        for ((n, _), b) in loaded[1..].iter().zip(rest.iter_mut()) {
+            out.push((n.clone(), &mut b[..]));
+        }
+        assert!(store.read_checkpoint_into(0, &mut out).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -222,6 +222,40 @@ pub(crate) fn decompress_into_pooled(
     decompress_chunks_into(blob, out, pool)
 }
 
+/// Internal: validate that `chunks` decode to exactly `out.len()` bytes
+/// (checked arithmetic — directories are not authenticated) and hand each
+/// chunk its disjoint sub-slice of `out`, wrapped in an uncontended Mutex
+/// so `&mut` access can move through the shared `Fn` a worker pool
+/// requires. One implementation shared by the blob decoder and the archive
+/// reader's chunk-parallel read, so the lifetime-sensitive partitioning
+/// logic exists exactly once.
+pub(crate) fn split_into_chunk_slots<'a>(
+    out: &'a mut [u8],
+    chunks: &[ChunkInfo],
+) -> Result<Vec<Mutex<&'a mut [u8]>>> {
+    let mut raw_total = 0usize;
+    for c in chunks {
+        raw_total = raw_total
+            .checked_add(c.raw_len)
+            .ok_or_else(|| Error::Corrupt("chunk raw sizes overflow".into()))?;
+    }
+    if raw_total != out.len() {
+        return Err(Error::Corrupt(format!(
+            "chunk directory decodes to {raw_total} bytes, output buffer holds {}",
+            out.len()
+        )));
+    }
+    let mut slots: Vec<Mutex<&mut [u8]>> = Vec::with_capacity(chunks.len());
+    let mut rest: &mut [u8] = out;
+    for c in chunks {
+        let tail = std::mem::take(&mut rest);
+        let (head, tail) = tail.split_at_mut(c.raw_len);
+        slots.push(Mutex::new(head));
+        rest = tail;
+    }
+    Ok(slots)
+}
+
 /// Internal: the strategy-agnostic chunk decoder behind
 /// [`decompress_into_pooled`] — the delta path calls this directly (its
 /// chunks decode like any other; the XOR against the base happens after).
@@ -237,36 +271,18 @@ pub(crate) fn decompress_chunks_into(
             blob.original_len
         )));
     }
-    // Precompute chunk extents and validate both directories up front so the
-    // slice split below cannot panic.
+    // Precompute chunk extents and validate the encoded directory up front
+    // so nothing below can slice out of bounds.
     let mut extents = Vec::with_capacity(blob.chunks.len());
     let mut enc_off = 0usize;
-    let mut raw_total = 0usize;
     for c in &blob.chunks {
         if enc_off + c.enc_len > blob.data.len() {
             return Err(Error::Corrupt("chunk data truncated".into()));
         }
         extents.push((enc_off, c.enc_len, c.crc32));
         enc_off += c.enc_len;
-        raw_total += c.raw_len;
     }
-    if raw_total != blob.original_len {
-        return Err(Error::Corrupt(format!(
-            "chunk directory decodes to {} bytes, blob says {}",
-            raw_total, blob.original_len
-        )));
-    }
-    // Hand each chunk its disjoint output slice. The Mutex is uncontended
-    // (one owner per slot); it only exists to move `&mut` access through
-    // the shared `Fn` the pool requires.
-    let mut slices: Vec<Mutex<&mut [u8]>> = Vec::with_capacity(blob.chunks.len());
-    let mut rest: &mut [u8] = out;
-    for c in &blob.chunks {
-        let tail = std::mem::take(&mut rest);
-        let (head, tail) = tail.split_at_mut(c.raw_len);
-        slices.push(Mutex::new(head));
-        rest = tail;
-    }
+    let slices = split_into_chunk_slots(out, &blob.chunks)?;
     let results: Vec<Result<()>> = pool.run(extents.len(), |i| {
         let (off, enc_len, crc) = extents[i];
         let mut guard = slices[i].lock().unwrap();

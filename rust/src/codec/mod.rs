@@ -31,7 +31,7 @@ mod fp4block;
 mod session;
 mod stream_codec;
 
-pub(crate) use chunked::{decode_chunk_bytes, decode_chunk_into};
+pub(crate) use chunked::{decode_chunk_bytes, decode_chunk_into, split_into_chunk_slots};
 
 pub use blob::{ChunkInfo, CompressedBlob, StreamStat};
 pub use chunked::{

@@ -36,12 +36,14 @@ use super::chunked::{
 use super::delta::{decompress_delta_into_pooled, decompress_delta_pooled, xor_buffers};
 use super::fp4block::{compress_mxfp4, compress_nvfp4, decompress_mxfp4, decompress_nvfp4};
 use super::{Codec, CompressOptions, Strategy};
+use crate::container::ArchiveReader;
 use crate::error::{Error, Result};
-use crate::exec::WorkerPool;
+use crate::exec::{Task, WorkerPool};
 use crate::formats::fp4::{Mxfp4Tensor, Nvfp4Tensor};
 use crate::formats::FloatFormat;
 use crate::util::crc32::crc32;
 use crate::util::varint;
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::sync::Arc;
 
@@ -244,6 +246,28 @@ impl Compressor {
         decompress_mxfp4(blob)
     }
 
+    /// Chunk-parallel archive read: decode tensor `name` from `reader`
+    /// directly into `out` (exactly the tensor's `original_len` bytes),
+    /// chunks fanned out over the session's worker pool. On an mmap-backed
+    /// reader each chunk decodes straight from the mapping into its
+    /// disjoint sub-slice of `out` — no per-chunk heap read, no copies.
+    /// Bit-identical to the serial [`ArchiveReader::read_tensor_into`] at
+    /// every worker count.
+    pub fn read_tensor_into(
+        &self,
+        reader: &ArchiveReader,
+        name: &str,
+        out: &mut [u8],
+    ) -> Result<()> {
+        reader.read_tensor_into_pooled(name, out, &self.pool)
+    }
+
+    /// Allocating convenience over
+    /// [`read_tensor_into`](Self::read_tensor_into).
+    pub fn read_tensor(&self, reader: &ArchiveReader, name: &str) -> Result<Vec<u8>> {
+        reader.read_tensor_pooled(name, &self.pool)
+    }
+
     /// Compress a byte stream with bounded memory: at most one window —
     /// one chunk per pool worker — of raw input plus its encoded chunks is
     /// resident at any moment, no matter how large the stream. Chunk
@@ -327,9 +351,15 @@ impl Compressor {
     }
 
     /// Decompress a [`compress_stream`](Self::compress_stream) stream with
-    /// bounded memory: at most one window of encoded chunks plus their
-    /// decoded bytes is resident at once. Verifies every chunk CRC and the
-    /// trailer totals.
+    /// bounded memory and a pipelined read → entropy-decode → merge
+    /// overlap: every chunk record is handed to a pool worker the moment
+    /// it is read ([`WorkerPool::submit`]), the calling thread keeps
+    /// reading the next record while workers decode, and decoded chunks
+    /// are written back in stream order. At most one chunk per worker is
+    /// in flight, so the resident footprint stays bounded by the window —
+    /// the same guarantee [`StreamSummary::peak_buffered`] proves on the
+    /// encode side — while read I/O, entropy decode, and output writes all
+    /// overlap. Verifies every chunk CRC and the trailer totals.
     pub fn decompress_stream<R: Read, W: Write>(
         &self,
         mut reader: R,
@@ -367,7 +397,12 @@ impl Compressor {
         let mut total_written = 0u64;
         let mut n_chunks = 0u64;
         let mut peak = 0u64;
-        let mut pending: Vec<(usize, u32, Vec<u8>)> = Vec::with_capacity(window);
+        // The pipeline: (raw_len, enc_len, in-flight decode) per chunk, in
+        // stream order. `resident` attributes raw + encoded bytes to every
+        // chunk from submission until its decoded bytes are written out.
+        let mut in_flight: VecDeque<(usize, usize, Task<Result<Vec<u8>>>)> =
+            VecDeque::with_capacity(window);
+        let mut resident = 0u64;
         let mut trailer = None;
         while trailer.is_none() {
             let mut marker = [0u8; 1];
@@ -392,13 +427,40 @@ impl Compressor {
                             "implausible chunk encoded length {enc_len}"
                         )));
                     }
+                    // Bounded buffering: retire the oldest chunk (in stream
+                    // order) before admitting one past the window.
+                    while in_flight.len() >= window {
+                        let (r, e, task) = in_flight.pop_front().expect("len checked");
+                        let bytes = task.wait()?;
+                        writer.write_all(&bytes)?;
+                        total_written += bytes.len() as u64;
+                        n_chunks += 1;
+                        resident -= (r + e) as u64;
+                    }
                     let mut enc = vec![0u8; enc_len];
                     reader.read_exact(&mut enc)?;
                     encoded_len += varint::len_u64(raw_len as u64) as u64
                         + 4
                         + varint::len_u64(enc_len as u64) as u64
                         + enc_len as u64;
-                    pending.push((raw_len, crc, enc));
+                    resident += (raw_len + enc_len) as u64;
+                    peak = peak.max(resident);
+                    // Ship the decode to a worker immediately; this thread
+                    // goes straight back to reading the next record.
+                    let chunk_index = n_chunks as usize + in_flight.len();
+                    let task = self.pool.submit(move || {
+                        let out = decode_chunk_bytes(&enc, raw_len, format)?;
+                        let actual = crc32(&out);
+                        if actual != crc {
+                            return Err(Error::ChecksumMismatch {
+                                chunk: chunk_index,
+                                expected: crc,
+                                actual,
+                            });
+                        }
+                        Ok(out)
+                    });
+                    in_flight.push_back((raw_len, enc_len, task));
                 }
                 END_MARKER => {
                     let total = read_stream_varint(&mut reader)?;
@@ -411,32 +473,13 @@ impl Compressor {
                     return Err(Error::Corrupt(format!("unknown stream marker {other}")));
                 }
             }
-            if !pending.is_empty() && (pending.len() >= window || trailer.is_some()) {
-                let batch = std::mem::take(&mut pending);
-                let in_flight: u64 =
-                    batch.iter().map(|(r, _, e)| (*r + e.len()) as u64).sum();
-                peak = peak.max(in_flight);
-                let base_idx = n_chunks as usize;
-                let decoded: Vec<Result<Vec<u8>>> = self.pool.run(batch.len(), |i| {
-                    let (raw_len, crc, enc) = &batch[i];
-                    let out = decode_chunk_bytes(enc, *raw_len, format)?;
-                    let actual = crc32(&out);
-                    if actual != *crc {
-                        return Err(Error::ChecksumMismatch {
-                            chunk: base_idx + i,
-                            expected: *crc,
-                            actual,
-                        });
-                    }
-                    Ok(out)
-                });
-                for d in decoded {
-                    let bytes = d?;
-                    writer.write_all(&bytes)?;
-                    total_written += bytes.len() as u64;
-                    n_chunks += 1;
-                }
-            }
+        }
+        // Drain the pipeline in stream order.
+        while let Some((_, _, task)) = in_flight.pop_front() {
+            let bytes = task.wait()?;
+            writer.write_all(&bytes)?;
+            total_written += bytes.len() as u64;
+            n_chunks += 1;
         }
         let (total, count) = trailer.expect("loop exits with trailer");
         if total != total_written || count != n_chunks {

@@ -28,17 +28,36 @@
 //! [`ArchiveReader::open`] reads the 16-byte tail, then the footer, and
 //! serves per-tensor ([`ArchiveReader::read_tensor`]), per-chunk
 //! ([`ArchiveReader::read_chunk`]) and byte-range
-//! ([`ArchiveReader::read_range`]) access through positioned reads —
-//! nothing outside the requested chunks is ever deserialized. v1 files
-//! still open (fully loaded, same API).
+//! ([`ArchiveReader::read_range`]) access without ever deserializing
+//! anything outside the requested chunks. v1 files still open (fully
+//! loaded, same API).
+//!
+//! # Read backings
+//!
+//! Chunk bytes reach the decoder through one of two [`ReadBacking`]s behind
+//! the same internal trait (`SpanSource`): an **mmap** of the file, where
+//! chunk payloads are borrowed slices straight out of the page cache (no
+//! per-chunk heap read, no syscall), or positioned **pread** calls — the
+//! dependency-free fallback that works on every platform and that CI
+//! exercises explicitly. [`ArchiveReader::open`] picks mmap when the
+//! platform supports it; [`ArchiveReader::open_with`] pins either.
+//!
+//! On top of either backing, [`ArchiveReader::read_tensor_into_pooled`]
+//! fans the chunks of one tensor out over a [`WorkerPool`], each chunk
+//! decoding directly into its disjoint sub-slice of the caller's buffer —
+//! the chunk-parallel fast path the [`crate::codec::Compressor`] session
+//! exposes as [`crate::codec::Compressor::read_tensor_into`].
 
 use crate::codec::{
-    decode_chunk_bytes, decode_chunk_into, ChunkInfo, Codec, CompressedBlob, Strategy,
+    decode_chunk_bytes, decode_chunk_into, split_into_chunk_slots, ChunkInfo, Codec,
+    CompressedBlob, Strategy,
 };
 use crate::error::{Error, Result};
+use crate::exec::WorkerPool;
 use crate::formats::FloatFormat;
 use crate::util::crc32::crc32;
 use crate::util::varint;
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
@@ -53,6 +72,15 @@ pub const ARCHIVE_VERSION_V2: u16 = 2;
 pub const FOOTER_MAGIC: &[u8; 4] = b"ZLPF";
 /// Fixed v2 tail length: footer offset (8) + footer CRC (4) + magic (4).
 const TAIL_LEN: usize = 16;
+/// Sanity bound on a footer entry's chunk size. The footer CRC is not a
+/// MAC; buffer sizes parsed from it must be plausibility-checked before
+/// any decode path allocates from them (a crafted 2^60 length must hit
+/// `Err`, not an allocation abort). 4 GiB — wider than the streaming
+/// decoder's `MAX_STREAM_CHUNK` because FP4-block blobs are single-chunk
+/// whole tensors (`chunk_size == original_len`), and whole-tensor chunks
+/// up to 4 GiB must keep round-tripping. (`u64` so the constant also
+/// builds on 32-bit targets, where such archives simply cannot decode.)
+const MAX_ARCHIVE_CHUNK: u64 = 1 << 32;
 
 /// Metadata of one archived tensor.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -315,6 +343,27 @@ impl<W: Write> ArchiveWriter<W> {
                 meta.shape.len()
             )));
         }
+        if (blob.chunk_size == 0 && blob.original_len != 0)
+            || blob.chunk_size as u64 > MAX_ARCHIVE_CHUNK
+        {
+            return Err(Error::Container(format!(
+                "blob '{}': implausible chunk size {}",
+                meta.name, blob.chunk_size
+            )));
+        }
+        if blob.chunks.iter().any(|c| c.raw_len > blob.chunk_size) {
+            return Err(Error::Container(format!(
+                "blob '{}': a chunk exceeds the blob's chunk size",
+                meta.name
+            )));
+        }
+        let raw_total: usize = blob.chunks.iter().map(|c| c.raw_len).sum();
+        if raw_total != blob.original_len {
+            return Err(Error::Container(format!(
+                "blob '{}' chunks decode to {raw_total} bytes, header says {}",
+                meta.name, blob.original_len
+            )));
+        }
         let dir_len: usize = blob.chunks.iter().map(|c| c.enc_len).sum();
         if dir_len != blob.data.len() {
             return Err(Error::Container(format!(
@@ -374,11 +423,221 @@ impl<W: Write> ArchiveWriter<W> {
     }
 }
 
+/// How [`ArchiveReader`] should access a v2 archive's chunk bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReadBacking {
+    /// Memory-map when the platform supports it, positioned reads
+    /// otherwise. The default.
+    #[default]
+    Auto,
+    /// Memory-map the file; [`ArchiveReader::open_with`] errors where mmap
+    /// is unavailable (non-unix or 32-bit targets).
+    Mmap,
+    /// Positioned per-chunk reads (pread) — the dependency-free fallback,
+    /// also useful to keep the page cache out of benchmarks.
+    Pread,
+}
+
+impl ReadBacking {
+    /// Canonical name (inverse of the [`std::str::FromStr`] impl).
+    pub fn name(self) -> &'static str {
+        match self {
+            ReadBacking::Auto => "auto",
+            ReadBacking::Mmap => "mmap",
+            ReadBacking::Pread => "pread",
+        }
+    }
+}
+
+impl std::fmt::Display for ReadBacking {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ReadBacking {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(ReadBacking::Auto),
+            "mmap" => Ok(ReadBacking::Mmap),
+            "pread" => Ok(ReadBacking::Pread),
+            other => Err(Error::InvalidInput(format!(
+                "unknown read backing '{other}' (expected auto|mmap|pread)"
+            ))),
+        }
+    }
+}
+
+/// Uniform positioned access to archive bytes — the one trait both
+/// backings implement, so every read path (serial, chunk-parallel, CLI) is
+/// backing-agnostic and tests can force either side.
+trait SpanSource: Send + Sync {
+    /// `len` bytes at absolute file offset `offset`. Mmap hands out a
+    /// borrowed slice of the mapping; pread reads into an owned buffer.
+    fn span(&self, offset: u64, len: usize) -> Result<Cow<'_, [u8]>>;
+}
+
+/// Positioned-read (pread) span source.
+#[derive(Debug)]
+struct PreadFile(std::fs::File);
+
+impl SpanSource for PreadFile {
+    fn span(&self, offset: u64, len: usize) -> Result<Cow<'_, [u8]>> {
+        let mut buf = vec![0u8; len];
+        read_exact_at(&self.0, &mut buf, offset)?;
+        Ok(Cow::Owned(buf))
+    }
+}
+
+impl SpanSource for mmap::MmapFile {
+    fn span(&self, offset: u64, len: usize) -> Result<Cow<'_, [u8]>> {
+        let data = self.as_slice();
+        let start = usize::try_from(offset)
+            .map_err(|_| Error::Corrupt(format!("span offset {offset} exceeds mapping")))?;
+        if len > data.len() || start > data.len() - len {
+            return Err(Error::Corrupt(format!(
+                "span {start}(+{len}) outside the {}-byte mapping",
+                data.len()
+            )));
+        }
+        Ok(Cow::Borrowed(&data[start..start + len]))
+    }
+}
+
+/// Read-only file memory mapping, dependency-free: the `mmap`/`munmap`
+/// symbols come from the libc that `std` already links on unix. Gated to
+/// 64-bit unix so the raw `off_t`/pointer arithmetic is unambiguous;
+/// everywhere else [`MmapFile::map`] reports unsupported and the reader
+/// falls back to pread.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod mmap {
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: core::ffi::c_int,
+            flags: core::ffi::c_int,
+            fd: core::ffi::c_int,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> core::ffi::c_int;
+    }
+
+    /// PROT_READ — identical on Linux and the BSDs/macOS.
+    const PROT_READ: core::ffi::c_int = 1;
+    /// MAP_PRIVATE — identical on Linux and the BSDs/macOS.
+    const MAP_PRIVATE: core::ffi::c_int = 2;
+
+    /// Whether this build can memory-map archives.
+    pub const SUPPORTED: bool = true;
+
+    /// An owned read-only mapping of a whole file.
+    #[derive(Debug)]
+    pub struct MmapFile {
+        ptr: std::ptr::NonNull<u8>,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is read-only (PROT_READ) and private; the pages
+    // never change through this handle, so shared references from any
+    // thread are fine and the raw pointer may move between threads.
+    unsafe impl Send for MmapFile {}
+    unsafe impl Sync for MmapFile {}
+
+    impl MmapFile {
+        /// Map `file` read-only in its entirety.
+        pub fn map(file: &std::fs::File) -> std::io::Result<MmapFile> {
+            let len = file.metadata()?.len();
+            if len == 0 {
+                // mmap(2) rejects zero-length mappings with EINVAL.
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "cannot map an empty file",
+                ));
+            }
+            let len = usize::try_from(len).map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidInput, "file exceeds address space")
+            })?;
+            // SAFETY: a fresh PROT_READ + MAP_PRIVATE mapping of a valid fd;
+            // the result is checked against MAP_FAILED before use.
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            let ptr = std::ptr::NonNull::new(ptr.cast::<u8>())
+                .ok_or_else(|| std::io::Error::other("mmap returned null"))?;
+            Ok(MmapFile { ptr, len })
+        }
+
+        /// The mapped bytes.
+        pub fn as_slice(&self) -> &[u8] {
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+            // bytes, valid until Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+        }
+    }
+
+    impl Drop for MmapFile {
+        fn drop(&mut self) {
+            // SAFETY: unmapping the exact region this handle mapped.
+            unsafe {
+                munmap(self.ptr.as_ptr().cast(), self.len);
+            }
+        }
+    }
+}
+
+/// Stub for platforms without the raw mmap path: `map` always reports
+/// unsupported, so `ReadBacking::Auto` falls back to pread and
+/// `ReadBacking::Mmap` errors loudly.
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+mod mmap {
+    /// Whether this build can memory-map archives.
+    pub const SUPPORTED: bool = false;
+
+    /// Unsupported-platform placeholder; never constructed.
+    #[derive(Debug)]
+    pub struct MmapFile {}
+
+    impl MmapFile {
+        /// Always fails: mmap is not wired up on this platform.
+        pub fn map(_file: &std::fs::File) -> std::io::Result<MmapFile> {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mmap archive backing is only available on 64-bit unix",
+            ))
+        }
+
+        /// Unreachable (no value of this type exists).
+        pub fn as_slice(&self) -> &[u8] {
+            &[]
+        }
+    }
+}
+
+/// True when this build can serve archives through [`ReadBacking::Mmap`].
+pub const MMAP_SUPPORTED: bool = mmap::SUPPORTED;
+
 /// Where an open archive's chunk bytes live.
 #[derive(Debug)]
 enum Backing {
+    /// v2: borrowed slices out of a file mapping.
+    Mmap(mmap::MmapFile),
     /// v2: positioned reads against the file.
-    File(std::fs::File),
+    File(PreadFile),
     /// v1 fallback: blobs were fully loaded; data keyed by tensor name.
     Memory(BTreeMap<String, Vec<u8>>),
 }
@@ -397,8 +656,18 @@ pub struct ArchiveReader {
 }
 
 impl ArchiveReader {
-    /// Open an archive file of either wire version.
+    /// Open an archive file of either wire version with the default
+    /// backing ([`ReadBacking::Auto`]: mmap where supported, pread
+    /// otherwise).
     pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, ReadBacking::Auto)
+    }
+
+    /// Open an archive file with an explicit [`ReadBacking`]. v1 files are
+    /// fully loaded regardless (their wire format requires it);
+    /// [`ReadBacking::Mmap`] fails with an I/O error on platforms without
+    /// mmap support (see [`MMAP_SUPPORTED`]).
+    pub fn open_with(path: &Path, backing: ReadBacking) -> Result<Self> {
         let mut file = std::fs::File::open(path)?;
         let mut header = [0u8; 8];
         file.read_exact(&mut header)?;
@@ -408,7 +677,7 @@ impl ArchiveReader {
         let version = u16::from_le_bytes([header[4], header[5]]);
         match version {
             ARCHIVE_VERSION => Self::open_v1(file),
-            ARCHIVE_VERSION_V2 => Self::open_v2(file),
+            ARCHIVE_VERSION_V2 => Self::open_v2(file, backing),
             other => Err(Error::Container(format!("unsupported archive version {other}"))),
         }
     }
@@ -444,37 +713,52 @@ impl ArchiveReader {
         })
     }
 
-    fn open_v2(file: std::fs::File) -> Result<Self> {
+    fn open_v2(file: std::fs::File, mode: ReadBacking) -> Result<Self> {
+        // Every structural failure below is a typed `Error::Corrupt`
+        // carrying the byte offset of the damage: a truncated or bit-
+        // flipped trailing footer is data damage, not an I/O failure, and
+        // callers (and their retry/alerting logic) must be able to tell
+        // the two apart.
         let file_len = file.metadata()?.len();
         if file_len < (8 + TAIL_LEN) as u64 {
-            return Err(Error::Container("v2 archive truncated".into()));
+            return Err(Error::Corrupt(format!(
+                "v2 archive truncated: {file_len} bytes, need at least {} for header + tail",
+                8 + TAIL_LEN
+            )));
         }
         let mut tail = [0u8; TAIL_LEN];
         read_exact_at(&file, &mut tail, file_len - TAIL_LEN as u64)?;
         if &tail[12..16] != FOOTER_MAGIC {
-            return Err(Error::Container("bad footer magic".into()));
+            return Err(Error::Corrupt(format!(
+                "bad footer magic at byte {} (archive truncated or overwritten)",
+                file_len - 4
+            )));
         }
         let footer_offset = u64::from_le_bytes(tail[0..8].try_into().unwrap());
         let footer_crc = u32::from_le_bytes(tail[8..12].try_into().unwrap());
         let footer_end = file_len - TAIL_LEN as u64;
         if footer_offset < 8 || footer_offset > footer_end {
-            return Err(Error::Container(format!(
-                "footer offset {footer_offset} outside file"
+            return Err(Error::Corrupt(format!(
+                "footer offset {footer_offset} (at byte {}) outside file of {file_len} bytes",
+                footer_end
             )));
         }
         let mut footer = vec![0u8; (footer_end - footer_offset) as usize];
         read_exact_at(&file, &mut footer, footer_offset)?;
         let actual = crc32(&footer);
         if actual != footer_crc {
-            return Err(Error::Container(format!(
-                "footer checksum mismatch: expected {footer_crc:#010x}, got {actual:#010x}"
+            return Err(Error::Corrupt(format!(
+                "footer checksum mismatch over bytes {footer_offset}..{footer_end}: \
+                 expected {footer_crc:#010x}, got {actual:#010x}"
             )));
         }
         let buf = &footer[..];
         let mut pos = 0usize;
         let count = varint::read_usize(buf, &mut pos)?;
         if count > buf.len() {
-            return Err(Error::Container("tensor count exceeds footer size".into()));
+            return Err(Error::Corrupt(format!(
+                "tensor count {count} exceeds footer size at byte {footer_offset}"
+            )));
         }
         let mut entries = BTreeMap::new();
         for _ in 0..count {
@@ -483,58 +767,93 @@ impl ArchiveReader {
             // add followed by a slice panic.
             let name_len = varint::read_usize(buf, &mut pos)?;
             if name_len > buf.len().saturating_sub(pos) {
-                return Err(Error::Container("name truncated".into()));
+                return Err(Error::Corrupt(format!(
+                    "name truncated at footer byte {pos} (file byte {})",
+                    footer_offset + pos as u64
+                )));
             }
             let name = std::str::from_utf8(&buf[pos..pos + name_len])
-                .map_err(|_| Error::Container("name not utf-8".into()))?
+                .map_err(|_| Error::Corrupt(format!("name at footer byte {pos} is not utf-8")))?
                 .to_string();
             pos += name_len;
             let rank = varint::read_usize(buf, &mut pos)?;
             if rank > 16 {
-                return Err(Error::Container(format!("implausible rank {rank}")));
+                return Err(Error::Corrupt(format!("implausible rank {rank} at footer byte {pos}")));
             }
             let mut shape = Vec::with_capacity(rank);
             for _ in 0..rank {
                 shape.push(varint::read_u64(buf, &mut pos)?);
             }
             if pos + 3 > buf.len() {
-                return Err(Error::Container("entry header truncated".into()));
+                return Err(Error::Corrupt(format!(
+                    "entry header truncated at footer byte {pos} (file byte {})",
+                    footer_offset + pos as u64
+                )));
             }
             let strategy = Strategy::from_wire_id(buf[pos])
-                .ok_or_else(|| Error::Container(format!("unknown strategy {}", buf[pos])))?;
+                .ok_or_else(|| Error::Corrupt(format!("unknown strategy {} at footer byte {pos}", buf[pos])))?;
             let format = FloatFormat::from_wire_id(buf[pos + 1])?;
             let codec = Codec::from_wire_id(buf[pos + 2])
-                .ok_or_else(|| Error::Container(format!("unknown codec {}", buf[pos + 2])))?;
+                .ok_or_else(|| Error::Corrupt(format!("unknown codec {} at footer byte {pos}", buf[pos + 2])))?;
             pos += 3;
             let original_len = varint::read_usize(buf, &mut pos)?;
             let chunk_size = varint::read_usize(buf, &mut pos)?;
+            // Same plausibility bound as the streaming decoder: the footer
+            // CRC is not a MAC, and every decode path sizes buffers from
+            // these fields, so a crafted file must hit Err here — not an
+            // abort inside an absurd allocation later.
+            if (chunk_size == 0 && original_len != 0) || chunk_size as u64 > MAX_ARCHIVE_CHUNK
+            {
+                return Err(Error::Corrupt(format!(
+                    "tensor '{name}': implausible chunk size {chunk_size}"
+                )));
+            }
             let data_offset = varint::read_u64(buf, &mut pos)?;
             let n_chunks = varint::read_usize(buf, &mut pos)?;
             if n_chunks > footer_offset as usize {
-                return Err(Error::Container("chunk count exceeds data size".into()));
+                return Err(Error::Corrupt(format!("chunk count {n_chunks} at footer byte {pos} exceeds data size")));
             }
             let mut chunks = Vec::with_capacity(n_chunks);
             let mut data_len = 0u64;
+            let mut raw_total = 0usize;
             for _ in 0..n_chunks {
                 let raw_len = varint::read_usize(buf, &mut pos)?;
                 let enc_len = varint::read_usize(buf, &mut pos)?;
                 if pos + 4 > buf.len() {
-                    return Err(Error::Container("chunk directory truncated".into()));
+                    return Err(Error::Corrupt(format!(
+                        "chunk directory truncated at footer byte {pos} (file byte {})",
+                        footer_offset + pos as u64
+                    )));
                 }
                 let c =
                     u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]);
                 pos += 4;
+                if raw_len > chunk_size {
+                    return Err(Error::Corrupt(format!(
+                        "tensor '{name}': chunk raw length {raw_len} exceeds chunk size \
+                         {chunk_size}"
+                    )));
+                }
+                raw_total = raw_total.checked_add(raw_len).ok_or_else(|| {
+                    Error::Corrupt(format!("tensor '{name}': chunk raw sizes overflow"))
+                })?;
                 data_len = data_len
                     .checked_add(enc_len as u64)
-                    .ok_or_else(|| Error::Container("chunk sizes overflow".into()))?;
+                    .ok_or_else(|| Error::Corrupt(format!("chunk sizes overflow at footer byte {pos}")))?;
                 chunks.push(ChunkInfo { raw_len, enc_len, crc32: c });
+            }
+            if raw_total != original_len {
+                return Err(Error::Corrupt(format!(
+                    "tensor '{name}': chunk directory decodes to {raw_total} bytes, \
+                     entry says {original_len}"
+                )));
             }
             let data_end = data_offset
                 .checked_add(data_len)
-                .ok_or_else(|| Error::Container("data extent overflows".into()))?;
+                .ok_or_else(|| Error::Corrupt(format!("tensor '{name}' data extent overflows")))?;
             if data_offset < 8 || data_end > footer_offset {
-                return Err(Error::Container(format!(
-                    "tensor '{name}' data region outside the archive body"
+                return Err(Error::Corrupt(format!(
+                    "tensor '{name}' data region outside the archive body (bytes {data_offset}..{data_end})"
                 )));
             }
             let entry = TensorEntry {
@@ -548,22 +867,40 @@ impl ArchiveReader {
                 chunks,
             };
             if entries.insert(name.clone(), entry).is_some() {
-                return Err(Error::Container(format!("duplicate tensor name '{name}'")));
+                return Err(Error::Corrupt(format!("duplicate tensor name '{name}' in footer")));
             }
         }
         if pos != buf.len() {
-            return Err(Error::Container("trailing footer bytes".into()));
+            return Err(Error::Corrupt(format!(
+                "trailing footer bytes after footer byte {pos} (file byte {})",
+                footer_offset + pos as u64
+            )));
         }
-        Ok(ArchiveReader {
-            entries,
-            backing: Backing::File(file),
-            version: ARCHIVE_VERSION_V2,
-        })
+        let backing = match mode {
+            ReadBacking::Pread => Backing::File(PreadFile(file)),
+            ReadBacking::Mmap => Backing::Mmap(mmap::MmapFile::map(&file)?),
+            ReadBacking::Auto => match mmap::MmapFile::map(&file) {
+                Ok(m) => Backing::Mmap(m),
+                Err(_) => Backing::File(PreadFile(file)),
+            },
+        };
+        Ok(ArchiveReader { entries, backing, version: ARCHIVE_VERSION_V2 })
     }
 
     /// Wire version of the opened file (1 or 2).
     pub fn version(&self) -> u16 {
         self.version
+    }
+
+    /// Which backing serves chunk bytes: `"mmap"`, `"pread"`, or
+    /// `"memory"` (v1 files, fully loaded). Observability for `inspect`
+    /// and the benches.
+    pub fn backing_kind(&self) -> &'static str {
+        match &self.backing {
+            Backing::Mmap(_) => "mmap",
+            Backing::File(_) => "pread",
+            Backing::Memory(_) => "memory",
+        }
     }
 
     /// Tensor names in sorted order.
@@ -611,15 +948,12 @@ impl ArchiveReader {
         }
     }
 
-    /// Positioned read of `len` bytes at `off` within a tensor's data
-    /// region.
-    fn read_span(&self, entry: &TensorEntry, off: u64, len: usize) -> Result<Vec<u8>> {
+    /// `len` bytes at `off` within a tensor's data region: a borrowed
+    /// slice (mmap / loaded v1 data) or one positioned read (pread).
+    fn read_span(&self, entry: &TensorEntry, off: u64, len: usize) -> Result<Cow<'_, [u8]>> {
         match &self.backing {
-            Backing::File(file) => {
-                let mut buf = vec![0u8; len];
-                read_exact_at(file, &mut buf, entry.data_offset + off)?;
-                Ok(buf)
-            }
+            Backing::Mmap(m) => m.span(entry.data_offset + off, len),
+            Backing::File(file) => file.span(entry.data_offset + off, len),
             Backing::Memory(map) => {
                 let data = map
                     .get(&entry.meta.name)
@@ -628,7 +962,7 @@ impl ArchiveReader {
                 if len > data.len() || start > data.len() - len {
                     return Err(Error::Container("span outside tensor data".into()));
                 }
-                Ok(data[start..start + len].to_vec())
+                Ok(Cow::Borrowed(&data[start..start + len]))
             }
         }
     }
@@ -657,7 +991,7 @@ impl ArchiveReader {
             .entries
             .get(name)
             .ok_or_else(|| Error::Container(format!("no tensor '{name}'")))?;
-        let data = self.read_span(entry, 0, entry.data_len() as usize)?;
+        let data = self.read_span(entry, 0, entry.data_len() as usize)?.into_owned();
         Ok(CompressedBlob {
             strategy: entry.strategy,
             codec: entry.codec,
@@ -716,6 +1050,63 @@ impl ArchiveReader {
             return Err(Error::Container("chunk directory short of tensor size".into()));
         }
         Ok(())
+    }
+
+    /// Chunk-parallel variant of [`read_tensor_into`](Self::read_tensor_into):
+    /// chunks fan out over `pool`, each fetching its encoded span (a
+    /// borrowed mmap slice or one pread) and decoding directly into its
+    /// disjoint sub-slice of `out` — no per-chunk heap buffer on the mmap
+    /// backing, no copies on any backing. Bit-identical to the serial path
+    /// at every worker count; every chunk CRC is verified.
+    ///
+    /// This is the read-side fast path the [`crate::codec::Compressor`]
+    /// session exposes as [`crate::codec::Compressor::read_tensor_into`].
+    pub fn read_tensor_into_pooled(
+        &self,
+        name: &str,
+        out: &mut [u8],
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        let entry = self.chunked_entry(name)?;
+        if out.len() != entry.original_len {
+            return Err(Error::InvalidInput(format!(
+                "output buffer is {} bytes, tensor decodes to {}",
+                out.len(),
+                entry.original_len
+            )));
+        }
+        let mut enc_offs = Vec::with_capacity(entry.chunks.len());
+        let mut enc_off = 0u64;
+        for c in &entry.chunks {
+            enc_offs.push(enc_off);
+            enc_off += c.enc_len as u64;
+        }
+        // Directory validation + disjoint slice hand-out shared with the
+        // blob decoder (codec::chunked) so the partitioning logic exists
+        // exactly once.
+        let slices = split_into_chunk_slots(out, &entry.chunks)?;
+        let results: Vec<Result<()>> = pool.run(entry.chunks.len(), |i| {
+            let c = &entry.chunks[i];
+            let enc = self.read_span(entry, enc_offs[i], c.enc_len)?;
+            let mut guard = slices[i].lock().unwrap();
+            let dst: &mut [u8] = &mut guard[..];
+            decode_chunk_into(&enc, dst, entry.format)?;
+            let actual = crc32(dst);
+            if actual != c.crc32 {
+                return Err(Error::ChecksumMismatch { chunk: i, expected: c.crc32, actual });
+            }
+            Ok(())
+        });
+        results.into_iter().collect()
+    }
+
+    /// Allocating convenience over
+    /// [`read_tensor_into_pooled`](Self::read_tensor_into_pooled).
+    pub fn read_tensor_pooled(&self, name: &str, pool: &WorkerPool) -> Result<Vec<u8>> {
+        let entry = self.chunked_entry(name)?;
+        let mut out = vec![0u8; entry.original_len];
+        self.read_tensor_into_pooled(name, &mut out, pool)?;
+        Ok(out)
     }
 
     /// Random access: decode only chunk `index` of tensor `name` with one
@@ -971,6 +1362,109 @@ mod tests {
             Ok(reader) => assert!(reader.read_tensor("t").is_err()),
             Err(_) => {} // frame parse may fail before the CRC — also fine
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_backings_agree_and_report_kind() {
+        let (archive, raw) = sample_archive();
+        let path = tmpfile("backings");
+        archive.save(&path).unwrap();
+        let pread = ArchiveReader::open_with(&path, ReadBacking::Pread).unwrap();
+        assert_eq!(pread.backing_kind(), "pread");
+        let auto = ArchiveReader::open(&path).unwrap();
+        if MMAP_SUPPORTED {
+            assert_eq!(auto.backing_kind(), "mmap");
+            let mapped = ArchiveReader::open_with(&path, ReadBacking::Mmap).unwrap();
+            assert_eq!(mapped.backing_kind(), "mmap");
+            for (name, data) in &raw {
+                assert_eq!(&mapped.read_tensor(name).unwrap(), data, "mmap {name}");
+                let chunk0 = mapped.read_chunk(name, 0).unwrap();
+                assert_eq!(chunk0[..], data[..chunk0.len()]);
+            }
+        } else {
+            assert_eq!(auto.backing_kind(), "pread");
+            assert!(ArchiveReader::open_with(&path, ReadBacking::Mmap).is_err());
+        }
+        for (name, data) in &raw {
+            assert_eq!(&pread.read_tensor(name).unwrap(), data, "pread {name}");
+            assert_eq!(&auto.read_tensor(name).unwrap(), data, "auto {name}");
+        }
+        // v1 files load fully regardless of the requested backing.
+        let v1_path = tmpfile("backings_v1");
+        std::fs::write(&v1_path, archive.serialize()).unwrap();
+        let v1 = ArchiveReader::open_with(&v1_path, ReadBacking::Mmap).unwrap();
+        assert_eq!(v1.backing_kind(), "memory");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&v1_path).ok();
+    }
+
+    #[test]
+    fn pooled_read_matches_serial_on_both_backings() {
+        let (archive, raw) = sample_archive();
+        let path = tmpfile("pooled");
+        archive.save(&path).unwrap();
+        for backing in [ReadBacking::Auto, ReadBacking::Pread] {
+            let reader = ArchiveReader::open_with(&path, backing).unwrap();
+            for workers in [1usize, 2, 4] {
+                let pool = crate::exec::WorkerPool::new(workers);
+                for (name, data) in &raw {
+                    let mut out = vec![0u8; data.len()];
+                    reader.read_tensor_into_pooled(name, &mut out, &pool).unwrap();
+                    assert_eq!(&out, data, "{backing:?} workers={workers} {name}");
+                    assert_eq!(&reader.read_tensor_pooled(name, &pool).unwrap(), data);
+                }
+                let mut bad = vec![0u8; raw[0].1.len() + 1];
+                assert!(reader
+                    .read_tensor_into_pooled(&raw[0].0, &mut bad, &pool)
+                    .is_err());
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_or_corrupt_footer_is_typed_corrupt_with_offset() {
+        // Multi-chunk archive so "mid-chunk" and "mid-directory" cuts are
+        // meaningfully different file regions.
+        let path = tmpfile("typed_corrupt");
+        let session = Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16).with_chunk_size(2048),
+        );
+        let data = synthetic::gaussian_bf16_bytes(9000, 0.02, 77);
+        let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+        let mut writer = ArchiveWriter::create(&path).unwrap();
+        writer.add(TensorMeta { name: "t".into(), shape: vec![9000] }, &blob).unwrap();
+        writer.finish().unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let n = good.len();
+        let footer_offset =
+            u64::from_le_bytes(good[n - TAIL_LEN..n - TAIL_LEN + 8].try_into().unwrap())
+                as usize;
+
+        let open_err = |bytes: &[u8]| {
+            std::fs::write(&path, bytes).unwrap();
+            ArchiveReader::open(&path).unwrap_err()
+        };
+        let assert_corrupt = |e: Error, what: &str| {
+            assert!(matches!(e, Error::Corrupt(_)), "{what}: wrong variant: {e}");
+            assert!(e.to_string().contains("byte"), "{what}: no byte offset: {e}");
+        };
+        // Truncated at the footer CRC (inside the 16-byte tail).
+        assert_corrupt(open_err(&good[..n - 6]), "footer-crc cut");
+        // Truncated mid-directory (inside the footer).
+        assert_corrupt(open_err(&good[..footer_offset + 3]), "mid-directory cut");
+        // Truncated mid-chunk (inside the data body).
+        assert_corrupt(open_err(&good[..footer_offset - 5]), "mid-chunk cut");
+        // Truncated below even header + tail size.
+        assert_corrupt(open_err(&good[..10]), "tiny cut");
+        // In-place footer bitflip: the footer CRC catches it.
+        let mut bad = good.clone();
+        bad[footer_offset + 2] ^= 0x01;
+        let e = open_err(&bad);
+        assert_corrupt(e, "footer bitflip");
+        std::fs::write(&path, &good).unwrap();
+        assert!(ArchiveReader::open(&path).is_ok(), "pristine file reopens");
         std::fs::remove_file(&path).ok();
     }
 

@@ -13,6 +13,13 @@
 //! atomic cursor, and the call does not return until every job finished —
 //! which is what makes lending stack-borrowed closures to the persistent
 //! workers sound (see the safety notes on `erase_job_lifetime`).
+//!
+//! For pipelined work the pool also accepts *owned single jobs*:
+//! [`WorkerPool::submit`] ships a `'static` closure to a helper immediately
+//! and returns a [`Task`] handle, so the submitting thread keeps going
+//! (reading the next chunk, writing the previous one) while helpers decode.
+//! On a 1-thread pool `submit` runs the job inline — same results, no
+//! overlap — so callers never special-case the serial configuration.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -192,6 +199,132 @@ impl WorkerPool {
             .map(|s| s.into_inner().unwrap().expect("job executed"))
             .collect()
     }
+
+    /// Submit one owned job for asynchronous execution and return a
+    /// [`Task`] handle for its result. Unlike [`run`](Self::run), the
+    /// calling thread does **not** block: a helper picks the job up, and
+    /// the caller collects the result later via [`Task::wait`]. This is the
+    /// building block of the pipelined stream decoder — one chunk in flight
+    /// per worker while the submitter keeps reading.
+    ///
+    /// On a pool with no helper threads the job runs inline before `submit`
+    /// returns (there is nobody else to run it), so results and ordering
+    /// are identical in the serial configuration.
+    pub fn submit<T, F>(&self, f: F) -> Task<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let shared = Arc::new(TaskShared {
+            state: Mutex::new(TaskState::Pending),
+            done: Condvar::new(),
+        });
+        if self.threads <= 1 {
+            TaskShared::finish(&shared, catch_unwind(AssertUnwindSafe(f)));
+            return Task { shared, queue: std::sync::Weak::new() };
+        }
+        let job_shared = Arc::clone(&shared);
+        let job: Job = Box::new(move || {
+            let result = catch_unwind(AssertUnwindSafe(f));
+            TaskShared::finish(&job_shared, result);
+        });
+        let (queue, available) = &*self.shared;
+        queue.lock().unwrap().jobs.push_back(job);
+        available.notify_one();
+        Task { shared, queue: Arc::downgrade(&self.shared) }
+    }
+}
+
+/// Result slot of one [`WorkerPool::submit`] job.
+enum TaskState<T> {
+    /// Not finished yet.
+    Pending,
+    /// Finished; value not yet claimed by [`Task::wait`].
+    Done(T),
+    /// The job panicked; [`Task::wait`] re-raises.
+    Panicked,
+}
+
+/// Shared completion state between a [`Task`] and its worker.
+struct TaskShared<T> {
+    state: Mutex<TaskState<T>>,
+    done: Condvar,
+}
+
+impl<T> TaskShared<T> {
+    fn finish(shared: &Arc<Self>, result: std::thread::Result<T>) {
+        let mut st = shared.state.lock().unwrap();
+        *st = match result {
+            Ok(v) => TaskState::Done(v),
+            Err(_) => TaskState::Panicked,
+        };
+        shared.done.notify_all();
+    }
+}
+
+/// Handle to one in-flight [`WorkerPool::submit`] job.
+///
+/// Dropping the handle without calling [`wait`](Task::wait) is allowed: the
+/// job still runs to completion (it owns everything it touches) and its
+/// result is discarded.
+pub struct Task<T> {
+    shared: Arc<TaskShared<T>>,
+    /// The submitting pool's job queue, kept weakly so a waiter can *help*
+    /// (see [`Task::wait`]) without keeping a dropped pool alive.
+    queue: std::sync::Weak<(Mutex<Queue>, Condvar)>,
+}
+
+impl<T> Task<T> {
+    /// Block until the job finished and return its result. Panics if the
+    /// job panicked (mirroring [`WorkerPool::run`]'s panic propagation).
+    ///
+    /// Waiters **help**: while the result is pending, `wait` pops and runs
+    /// queued jobs from the submitting pool instead of just sleeping. This
+    /// keeps the calling thread a full decode/encode participant (a
+    /// 2-thread pipelined stream decodes on 2 threads, not 1) and makes
+    /// nested use deadlock-free — a job running *on* the pool may itself
+    /// submit to the same pool and wait, because the waiter will execute
+    /// queued jobs (eventually its own) rather than block on a worker that
+    /// never comes.
+    pub fn wait(self) -> T {
+        loop {
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                match std::mem::replace(&mut *st, TaskState::Pending) {
+                    TaskState::Done(v) => return v,
+                    TaskState::Panicked => panic!("worker pool task panicked"),
+                    TaskState::Pending => {}
+                }
+            }
+            // Help: run one queued job (possibly this very task) here.
+            let job = self
+                .queue
+                .upgrade()
+                .and_then(|shared| shared.0.lock().unwrap().jobs.pop_front());
+            if let Some(job) = job {
+                job();
+                continue;
+            }
+            // Nothing to help with: block until notified. The timeout is a
+            // backstop for the race where a job lands in the queue after
+            // the check above while every worker is busy — the next loop
+            // iteration picks it up.
+            let st = self.shared.state.lock().unwrap();
+            if matches!(*st, TaskState::Pending) {
+                let _ = self
+                    .shared
+                    .done
+                    .wait_timeout(st, std::time::Duration::from_millis(1))
+                    .unwrap();
+            }
+        }
+    }
+
+    /// True once the job has finished (without blocking or consuming the
+    /// result).
+    pub fn is_done(&self) -> bool {
+        !matches!(*self.shared.state.lock().unwrap(), TaskState::Pending)
+    }
 }
 
 impl Drop for WorkerPool {
@@ -272,6 +405,62 @@ mod tests {
         }
         assert_eq!(hits.load(Ordering::Relaxed), 8 * 16);
         assert_eq!(pool.parallel_batches(), 8);
+    }
+
+    #[test]
+    fn submit_runs_async_and_inline() {
+        // Helper-backed pool: jobs run off-thread, results collected later.
+        let pool = WorkerPool::new(3);
+        let tasks: Vec<Task<usize>> =
+            (0..16).map(|i| pool.submit(move || i * 7)).collect();
+        let got: Vec<usize> = tasks.into_iter().map(Task::wait).collect();
+        assert_eq!(got, (0..16).map(|i| i * 7).collect::<Vec<_>>());
+        // Serial pool: submit runs inline, wait returns immediately.
+        let serial = WorkerPool::serial();
+        let t = serial.submit(|| 41 + 1);
+        assert!(t.is_done());
+        assert_eq!(t.wait(), 42);
+    }
+
+    #[test]
+    fn submit_pending_jobs_drain_on_drop() {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicU64::new(0));
+        let tasks: Vec<Task<()>> = (0..64)
+            .map(|_| {
+                let hits = Arc::clone(&hits);
+                pool.submit(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        drop(pool); // shutdown drains the queue before the helpers exit
+        for t in tasks {
+            t.wait();
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn nested_submit_wait_on_same_pool_does_not_deadlock() {
+        // Jobs running ON the pool submit to the same pool and wait.
+        // Without waiter-helping this deadlocks: every worker blocks in
+        // wait() on a job that nobody is left to execute.
+        let pool = Arc::new(WorkerPool::new(2));
+        let inner = Arc::clone(&pool);
+        let results = pool.run(4, move |i| inner.submit(move || i * 10).wait());
+        assert_eq!(results, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn submit_panic_propagates_on_wait() {
+        let pool = WorkerPool::new(2);
+        let t = pool.submit(|| panic!("task boom"));
+        let result = catch_unwind(AssertUnwindSafe(move || t.wait()));
+        assert!(result.is_err());
+        // The pool survives and keeps serving.
+        assert_eq!(pool.submit(|| 5).wait(), 5);
+        assert_eq!(pool.run(3, |i| i), vec![0, 1, 2]);
     }
 
     #[test]

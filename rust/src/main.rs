@@ -78,8 +78,9 @@ SUBCOMMANDS:
   compress-model --input model.safetensors [--output model.zlpc]
               [--threads 1] [--codec auto|huffman|rans|raw]
               (per-tensor, HF safetensors)
-  decompress  --input FILE.zlpt [--output FILE] [--threads 1]
-  inspect     --input FILE.zlpt
+  decompress  --input FILE.zlpt|FILE.zlpc [--output FILE|DIR] [--threads 1]
+              [--backing auto|mmap|pread]  (archives decode chunk-parallel)
+  inspect     --input FILE.zlpt|FILE.zlpc [--backing auto|mmap|pread]
   train       --artifacts DIR [--steps 40] [--ckpt-every 10]
               [--ckpt-dir DIR] [--lr 0.1] [--seed 0]
   serve       --artifacts DIR [--requests 8] [--new-tokens 24]
@@ -201,9 +202,20 @@ fn cmd_compress_model(flags: &HashMap<String, String>) -> Result<(), Box<dyn std
     Ok(())
 }
 
+/// Read a file's 4-byte magic to route between blob and archive paths.
+fn file_magic(path: &str) -> Result<[u8; 4], Box<dyn std::error::Error>> {
+    use std::io::Read as _;
+    let mut magic = [0u8; 4];
+    std::fs::File::open(path)?.read_exact(&mut magic)?;
+    Ok(magic)
+}
+
 fn cmd_decompress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let input = get(flags, "input")?;
     let threads: usize = get_or(flags, "threads", "1").parse()?;
+    if &file_magic(input)? == zipnn_lp::container::ARCHIVE_MAGIC {
+        return cmd_decompress_archive(flags, input, threads);
+    }
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
     let session = Compressor::new(
         CompressOptions::for_format(blob.format).with_threads(threads),
@@ -228,8 +240,83 @@ fn cmd_decompress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::er
     Ok(())
 }
 
+/// Archive decompression: every tensor decodes chunk-parallel over one
+/// worker pool, straight from the reader's backing (mmap where available)
+/// into its output buffer. Writes one `<tensor>.raw` file per tensor into
+/// the output directory and reports aggregate decode throughput.
+fn cmd_decompress_archive(
+    flags: &HashMap<String, String>,
+    input: &str,
+    threads: usize,
+) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::container::{ArchiveReader, ReadBacking};
+    let backing: ReadBacking = get_or(flags, "backing", "auto").parse()?;
+    let reader = ArchiveReader::open_with(std::path::Path::new(input), backing)?;
+    let out_dir = flags
+        .get("output")
+        .cloned()
+        .unwrap_or_else(|| format!("{}.raw.d", input.trim_end_matches(".zlpc")));
+    std::fs::create_dir_all(&out_dir)?;
+    let pool = zipnn_lp::exec::WorkerPool::new(threads);
+    let mut total = 0u64;
+    let mut written = 0usize;
+    let mut skipped = 0usize;
+    let mut decode_secs = 0f64;
+    let mut files = std::collections::BTreeSet::new();
+    // One tensor resident at a time: decode (timed), write, drop.
+    let mut buf = Vec::new();
+    for entry in reader.entries() {
+        // Delta and FP4-block tensors need external context (a base tensor
+        // / block layout) and are left to the library API.
+        if !matches!(entry.strategy, Strategy::ExpMantissa | Strategy::Store) {
+            skipped += 1;
+            continue;
+        }
+        let name = &entry.meta.name;
+        let file = format!("{}.raw", name.replace('/', "_"));
+        if !files.insert(file.clone()) {
+            return Err(format!(
+                "tensor '{name}' maps to output file '{file}' which another tensor \
+                 already produced; extract it via the library API instead"
+            )
+            .into());
+        }
+        // No clear(): decode overwrites every byte (the reader validates
+        // the chunk directory sums to original_len), so only growth needs
+        // the zero-fill resize provides.
+        buf.resize(entry.original_len, 0);
+        let t = zipnn_lp::metrics::Timer::new();
+        reader.read_tensor_into_pooled(name, &mut buf, &pool)?;
+        decode_secs += t.secs();
+        total += buf.len() as u64;
+        written += 1;
+        std::fs::write(std::path::Path::new(&out_dir).join(file), &buf)?;
+    }
+    let rate = if decode_secs > 0.0 {
+        format!("{:.2} GiB/s", total as f64 / (1024.0 * 1024.0 * 1024.0) / decode_secs)
+    } else {
+        "n/a".to_string()
+    };
+    println!(
+        "{} -> {}/: {} tensors ({} skipped), {} decoded in {:.2}s ({}, {} backing, {} workers)",
+        input,
+        out_dir,
+        written,
+        skipped,
+        human_bytes(total),
+        decode_secs,
+        rate,
+        reader.backing_kind(),
+        threads.max(1),
+    );
+    Ok(())
+}
+
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let input = get(flags, "input")?;
+    if &file_magic(input)? == zipnn_lp::container::ARCHIVE_MAGIC {
+        return cmd_inspect_archive(flags, input);
+    }
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
     println!("strategy:  {}", blob.strategy);
     println!("codec:     {}", blob.codec);
@@ -252,6 +339,41 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error
             human_bytes(r.compressed_bytes),
             format!("{:.4}", r.ratio()),
             r.encodings(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Archive inspection: directory metadata only — no chunk is read, which
+/// is the whole point of the trailing-footer format.
+fn cmd_inspect_archive(
+    flags: &HashMap<String, String>,
+    input: &str,
+) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::container::{ArchiveReader, ReadBacking};
+    let backing: ReadBacking = get_or(flags, "backing", "auto").parse()?;
+    let reader = ArchiveReader::open_with(std::path::Path::new(input), backing)?;
+    println!("archive:   v{} ({} backing)", reader.version(), reader.backing_kind());
+    println!("tensors:   {}", reader.len());
+    println!("original:  {}", human_bytes(reader.total_original()));
+    println!("encoded:   {}", human_bytes(reader.total_encoded()));
+    println!("ratio:     {:.4}", reader.ratio());
+    let mut table =
+        Table::new(&["tensor", "format", "strategy", "codec", "chunks", "ratio"]);
+    for e in reader.entries() {
+        let ratio = if e.original_len == 0 {
+            1.0
+        } else {
+            e.data_len() as f64 / e.original_len as f64
+        };
+        table.row(&[
+            e.meta.name.clone(),
+            e.format.to_string(),
+            e.strategy.to_string(),
+            e.codec.to_string(),
+            e.chunks.len().to_string(),
+            format!("{ratio:.4}"),
         ]);
     }
     println!("{}", table.render());

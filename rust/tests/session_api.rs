@@ -294,6 +294,99 @@ fn archive_v2_chunk_read_is_isolated() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Property (tentpole acceptance): the chunk-parallel archive read path is
+/// bit-identical to the serial zero-copy decode on every scalar format, at
+/// every worker count 1..=4, on both backings — including the pread
+/// fallback with mmap force-disabled.
+#[test]
+fn prop_parallel_archive_read_matches_serial_all_formats() {
+    use zipnn_lp::container::ReadBacking;
+    use zipnn_lp::exec::WorkerPool;
+    let mut rng = Rng::new(4242);
+    for format in FORMATS {
+        for case in 0..3 {
+            let a = align(format);
+            let len = (2048 + rng.below(40_000) as usize) / a * a;
+            let mut data = vec![0u8; len];
+            if case % 2 == 0 {
+                rng.fill_bytes(&mut data);
+            } else {
+                for b in data.iter_mut() {
+                    *b = if rng.next_f64() < 0.8 { 0x3C } else { rng.below(256) as u8 };
+                }
+            }
+            let session =
+                Compressor::new(CompressOptions::for_format(format).with_chunk_size(4096));
+            let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+            // Serial reference: the session's zero-copy blob decode.
+            let mut serial = vec![0u8; data.len()];
+            session.decompress_into(&blob, &mut serial).unwrap();
+            assert_eq!(serial, data, "{format:?} case {case} serial reference");
+
+            let path = tmppath(&format!("par_{format:?}_{case}"));
+            let mut writer = ArchiveWriter::create(&path).unwrap();
+            writer
+                .add(TensorMeta { name: "t".into(), shape: vec![len as u64] }, &blob)
+                .unwrap();
+            writer.finish().unwrap();
+
+            for backing in [ReadBacking::Auto, ReadBacking::Pread] {
+                let reader = ArchiveReader::open_with(&path, backing).unwrap();
+                for workers in 1..=4usize {
+                    let pool = WorkerPool::new(workers);
+                    let mut out = vec![0u8; data.len()];
+                    reader.read_tensor_into_pooled("t", &mut out, &pool).unwrap();
+                    assert_eq!(
+                        out, serial,
+                        "{format:?} case {case} {backing:?} x{workers}"
+                    );
+                }
+                // The session wrapper rides the same path.
+                let s = Compressor::new(
+                    CompressOptions::for_format(format).with_threads(4),
+                );
+                let mut out = vec![0u8; data.len()];
+                s.read_tensor_into(&reader, "t", &mut out).unwrap();
+                assert_eq!(out, serial, "{format:?} case {case} session wrapper");
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+/// The pipelined stream decoder produces in-order, bit-exact output at
+/// every thread count, with the bounded-buffer guarantee intact.
+#[test]
+fn pipelined_stream_decode_matches_all_thread_counts() {
+    let chunk = 8 * 1024;
+    let data = synthetic::gaussian_bf16_bytes(300_000, 0.02, 55);
+    let enc = Compressor::new(
+        CompressOptions::for_format(FloatFormat::Bf16)
+            .with_chunk_size(chunk)
+            .with_threads(2),
+    );
+    let mut wire = Vec::new();
+    let esum = enc.compress_stream(&data[..], &mut wire).unwrap();
+    assert!(esum.chunks > 16, "need many chunks to exercise the pipeline");
+    for threads in 1..=4usize {
+        let s = Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16)
+                .with_chunk_size(chunk)
+                .with_threads(threads),
+        );
+        let mut out = Vec::new();
+        let sum = s.decompress_stream(&wire[..], &mut out).unwrap();
+        assert_eq!(out, data, "threads={threads}: output must stay in stream order");
+        assert_eq!(sum.chunks, esum.chunks);
+        let window = (threads * sum.chunk_size) as u64;
+        assert!(
+            sum.peak_buffered <= 2 * window + 16 * 1024,
+            "threads={threads}: peak {} not bounded by window {window}",
+            sum.peak_buffered
+        );
+    }
+}
+
 /// The deprecated-style free functions still agree with the session.
 #[test]
 fn free_functions_remain_wire_compatible() {
