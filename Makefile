@@ -26,13 +26,15 @@ bench:
 bench-json:
 	$(CARGO) bench --bench codec_throughput -- --smoke --json BENCH_codec.json
 	$(CARGO) bench --bench kv_cache -- --json BENCH_kv.json
+	$(CARGO) bench --bench fig6_delta_checkpoints -- --smoke --json BENCH_fig6.json
 
 # Enforce the committed perf contract against the latest bench-json run
 # (ratio regressions >1%, decode-throughput drops >20%, parallel-decode
 # speedup floor). CI runs this on every push; BENCH_GATE_OVERRIDE=1 (the
 # `bench-override` PR label) demotes failures to warnings.
 bench-gate: bench-json
-	$(PYTHON) ci/bench_gate.py --baseline BENCH_baseline.json --current BENCH_codec.json
+	$(PYTHON) ci/bench_gate.py --baseline BENCH_baseline.json \
+		--current BENCH_codec.json --fig6 BENCH_fig6.json
 
 doc:
 	$(CARGO) doc --no-deps

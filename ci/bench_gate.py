@@ -65,10 +65,23 @@ def main():
         default=20.0,
         help="max allowed decode-throughput drop, percent (default 20)",
     )
+    parser.add_argument(
+        "--fig6",
+        default=None,
+        help="path to BENCH_fig6.json; enables the fig6_* checks "
+        "(checkpoint restore/compaction floors)",
+    )
     args = parser.parse_args()
 
     base = load(args.baseline)
     cur = load(args.current)
+    if args.fig6:
+        fig6 = load(args.fig6)
+        # Merge the fig6 document's sections into the current doc under
+        # prefixed names so one baseline file carries every contract.
+        cur["fig6_pairs"] = fig6.get("pairs", [])
+        cur["fig6_restore"] = fig6.get("restore", [])
+        cur["fig6_compaction"] = fig6.get("compaction", [])
     ratio_cap = 1.0 + args.ratio_margin / 100.0
     thr_floor = 1.0 - args.throughput_margin / 100.0
     failures = []
@@ -126,6 +139,18 @@ def main():
         throughput_keys=("decode_gibps",),
     )
     check_rows("stream_decode", ("threads",), throughput_keys=("decode_gibps",))
+    if args.fig6:
+        check_rows("fig6_pairs", ("pair",), ratio_keys=("overall",))
+        check_rows(
+            "fig6_restore", ("chain_len",), throughput_keys=("restore_gibps",)
+        )
+        check_rows(
+            "fig6_compaction",
+            ("chain_len",),
+            throughput_keys=("compact_gibps", "restore_gibps_after"),
+        )
+    else:
+        print("bench-gate: --fig6 not given, skipping fig6_* checks")
 
     if failures:
         for f in failures:

@@ -7,17 +7,52 @@
 //! mantissa, overall ratio falling toward ~0.38 as training converges — is
 //! the reproduced claim.
 //!
-//! Run: `cargo bench --bench fig6_delta_checkpoints`
+//! A second section measures the checkpoint-store *lifecycle*: restore
+//! latency as a function of delta-chain length (1, 2, 4, 8), then the
+//! amortized cost of compacting the longest chain onto a fresh base and
+//! the restore latency after compaction — the operational trade the
+//! `checkpoint compact` subcommand exists to make.
+//!
+//! Run: `cargo bench --bench fig6_delta_checkpoints [-- --smoke]
+//!       [--json BENCH_fig6.json]`
 
+use zipnn_lp::checkpoint::{CheckpointStore, NamedTensor};
 use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
 use zipnn_lp::formats::{FloatFormat, StreamKind};
 use zipnn_lp::metrics::{Table, Timer};
 use zipnn_lp::synthetic;
+use zipnn_lp::util::jsonout as jo;
 
-fn main() {
-    // ~8M params of BF16 (16 MiB per checkpoint) — large enough for stable
-    // ratios, small enough to iterate.
-    let n_params = 8 * 1024 * 1024;
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+struct Args {
+    json: Option<String>,
+    smoke: bool,
+}
+
+fn parse_args() -> Args {
+    let mut out = Args { json: None, smoke: false };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => out.json = args.next(),
+            "--smoke" => out.smoke = true,
+            _ => {}
+        }
+    }
+    out
+}
+
+struct PairRow {
+    pair: u64,
+    exp_ratio: f64,
+    sm_ratio: f64,
+    overall: f64,
+    enc_mibps: f64,
+    dec_gibps: f64,
+}
+
+fn pairs_section(n_params: usize) -> Vec<PairRow> {
     let n_pairs = 4; // the paper evaluates 4 consecutive pairs
     let session =
         Compressor::new(CompressOptions::for_format(FloatFormat::Bf16).with_threads(2));
@@ -27,6 +62,7 @@ fn main() {
         "pair", "exp ratio", "s+m ratio", "overall", "enc MiB/s", "dec GB/s",
     ]);
 
+    let mut rows = Vec::new();
     let mut prev = synthetic::gaussian_bf16_bytes(n_params, 0.02, 100);
     for pair in 0..n_pairs {
         // Convergence: later steps touch fewer weights with smaller updates.
@@ -52,17 +88,172 @@ fn main() {
 
         let exp = blob.stat(StreamKind::Exponent).map(|s| s.ratio()).unwrap_or(1.0);
         let sm = blob.stat(StreamKind::SignMantissa).map(|s| s.ratio()).unwrap_or(1.0);
+        let row = PairRow {
+            pair: pair as u64,
+            exp_ratio: exp,
+            sm_ratio: sm,
+            overall: blob.ratio(),
+            enc_mibps: cur.len() as f64 / (1024.0 * 1024.0) / secs,
+            dec_gibps: cur.len() as f64 / 1e9 / dec_secs,
+        };
         table.row(&[
             format!("{} → {}", pair, pair + 1),
             format!("{exp:.4}"),
             format!("{sm:.4}"),
-            format!("{:.4}", blob.ratio()),
-            format!("{:.1}", cur.len() as f64 / (1024.0 * 1024.0) / secs),
-            format!("{:.3}", cur.len() as f64 / 1e9 / dec_secs),
+            format!("{:.4}", row.overall),
+            format!("{:.1}", row.enc_mibps),
+            format!("{:.3}", row.dec_gibps),
         ]);
+        rows.push(row);
         prev = cur;
     }
     println!("{}", table.render());
     println!("paper: exponent stream strongly compressible (→0.07 late in training),");
     println!("mantissa 0.69–0.92, overall reaching ~0.38 of the original delta size.");
+    rows
+}
+
+struct RestoreRow {
+    chain_len: u64,
+    restore_gibps: f64,
+}
+
+struct CompactionRow {
+    chain_len: u64,
+    compact_gibps: f64,
+    restore_gibps_after: f64,
+}
+
+/// Restore-latency-vs-chain-length + compaction amortization, over a real
+/// on-disk [`CheckpointStore`] (anchor interval large enough that ids
+/// 0..=7 form a single 8-delta chain).
+fn store_section(n_params: usize) -> (Vec<RestoreRow>, CompactionRow) {
+    let dir = std::env::temp_dir()
+        .join(format!("zipnn_lp_fig6_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let opts = CompressOptions::for_format(FloatFormat::Bf16).with_threads(2);
+    let mut store =
+        CheckpointStore::create(&dir, opts, 1_000_000).expect("create store");
+
+    let n_ckpts = 8usize;
+    let mut weights = synthetic::gaussian_bf16_bytes(n_params, 0.02, 300);
+    let mut last: Vec<NamedTensor> = Vec::new();
+    for step in 0..n_ckpts {
+        let p = 0.5 / (step as f64 + 1.0);
+        weights = synthetic::perturb_bf16_bytes(&weights, 0.02, p, 400 + step as u64);
+        last = vec![("model.weights".to_string(), weights.clone())];
+        store.append(&last).expect("append");
+    }
+    let ckpt_bytes = weights.len() as f64;
+
+    println!(
+        "\nCheckpoint-store restore latency ({n_params} BF16 params/ckpt, \
+         chain of {n_ckpts} deltas)"
+    );
+    let mut table = Table::new(&["chain len", "restore ms", "GiB/s"]);
+    let mut restore_rows = Vec::new();
+    for chain_len in [1usize, 2, 4, 8] {
+        let id = chain_len - 1; // id k sits at chain length k+1
+        let timer = Timer::new();
+        let restored = store.load(id).expect("restore");
+        let secs = timer.secs();
+        assert_eq!(restored[0].1.len(), weights.len());
+        let row = RestoreRow {
+            chain_len: chain_len as u64,
+            restore_gibps: ckpt_bytes / GIB / secs,
+        };
+        table.row(&[
+            chain_len.to_string(),
+            format!("{:.2}", secs * 1e3),
+            format!("{:.3}", row.restore_gibps),
+        ]);
+        restore_rows.push(row);
+    }
+    println!("{}", table.render());
+
+    // Compaction: rebase the 8-delta tip onto a fresh base, then restore.
+    let tip = n_ckpts - 1;
+    let timer = Timer::new();
+    store.compact(tip).expect("compact");
+    let compact_secs = timer.secs();
+    assert_eq!(store.chain_len(tip).expect("chain_len"), 1);
+    let timer = Timer::new();
+    assert!(store.verify(tip, &last).expect("verify"), "post-compaction restore bit-exact");
+    let after_secs = timer.secs();
+    let compaction = CompactionRow {
+        chain_len: n_ckpts as u64,
+        compact_gibps: ckpt_bytes / GIB / compact_secs,
+        restore_gibps_after: ckpt_bytes / GIB / after_secs,
+    };
+    println!(
+        "compaction of chain {n_ckpts}: {:.2} ms ({:.3} GiB/s); \
+         restore after: {:.3} GiB/s",
+        compact_secs * 1e3,
+        compaction.compact_gibps,
+        compaction.restore_gibps_after
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    (restore_rows, compaction)
+}
+
+/// Serialize into the documented `BENCH_fig6.json` schema (see README
+/// §Bench trajectory): `pairs`, `restore`, and `compaction` row arrays.
+fn write_json(
+    path: &str,
+    pairs: &[PairRow],
+    restore: &[RestoreRow],
+    compaction: &CompactionRow,
+) {
+    let pair_items: Vec<String> = pairs
+        .iter()
+        .map(|r| {
+            jo::obj(&[
+                ("pair", jo::uint(r.pair)),
+                ("exp_ratio", jo::num(r.exp_ratio)),
+                ("sm_ratio", jo::num(r.sm_ratio)),
+                ("overall", jo::num(r.overall)),
+                ("enc_mibps", jo::num(r.enc_mibps)),
+                ("dec_gibps", jo::num(r.dec_gibps)),
+            ])
+        })
+        .collect();
+    let restore_items: Vec<String> = restore
+        .iter()
+        .map(|r| {
+            jo::obj(&[
+                ("chain_len", jo::uint(r.chain_len)),
+                ("restore_gibps", jo::num(r.restore_gibps)),
+            ])
+        })
+        .collect();
+    let compaction_items = vec![jo::obj(&[
+        ("chain_len", jo::uint(compaction.chain_len)),
+        ("compact_gibps", jo::num(compaction.compact_gibps)),
+        ("restore_gibps_after", jo::num(compaction.restore_gibps_after)),
+    ])];
+    let doc = jo::obj(&[
+        ("schema", jo::uint(1)),
+        ("bench", jo::string("fig6_delta_checkpoints")),
+        ("pairs", jo::arr(&pair_items)),
+        ("restore", jo::arr(&restore_items)),
+        ("compaction", jo::arr(&compaction_items)),
+    ]);
+    std::fs::write(path, doc + "\n").expect("write bench json");
+    println!("wrote {path}");
+}
+
+fn main() {
+    let args = parse_args();
+    // ~8M params of BF16 (16 MiB per checkpoint) — large enough for stable
+    // ratios, small enough to iterate. Smoke keeps CI fast.
+    let (pair_params, store_params) = if args.smoke {
+        (1024 * 1024, 512 * 1024)
+    } else {
+        (8 * 1024 * 1024, 4 * 1024 * 1024)
+    };
+    let pairs = pairs_section(pair_params);
+    let (restore, compaction) = store_section(store_params);
+    if let Some(path) = &args.json {
+        write_json(path, &pairs, &restore, &compaction);
+    }
 }

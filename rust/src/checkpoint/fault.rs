@@ -1,0 +1,373 @@
+//! Fault-injection [`StoreIo`] for crash-recovery testing.
+//!
+//! [`FaultFs`] wraps the real filesystem and injects three failure modes
+//! the durability protocol must survive:
+//!
+//! * **Torn writes** — [`FaultSpec::kill_at_write_byte`] kills the process'
+//!   I/O once a cumulative number of bytes has been written through the
+//!   shim: the final write persists only its allowed prefix, then errors,
+//!   and every subsequent operation errors too (the process is "dead").
+//! * **Dropped fsyncs** — [`FaultSpec::drop_fsync`] makes `sync`/`sync_dir`
+//!   report success without making anything durable, modeling hardware or
+//!   kernels that lie about flushing.
+//! * **Read bitflips** — [`FaultSpec::flip_read`] XORs one byte of
+//!   whatever [`StoreIo::read`] returns, modeling silent media corruption
+//!   on the manifest path.
+//!
+//! [`FaultFs::crash`] then simulates power loss: every file written
+//! through the shim is truncated back to its last *synced* length, so
+//! bytes that were written but never fsynced are lost — exactly the
+//! adversarial model the journal's append-fsync-ack protocol is designed
+//! for. During a clean (fault-free) run the shim records the cumulative
+//! byte offset of every write boundary; tests replay the same workload
+//! once per recorded offset to crash at every injection point.
+//!
+//! Compiled only under `#[cfg(any(test, feature = "fault-inject"))]`.
+
+use super::io::{RealFs, StoreFile, StoreIo};
+use crate::error::Result;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// What to inject. The default spec injects nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSpec {
+    /// Kill all I/O once this many cumulative bytes have been written
+    /// through the shim. The write that crosses the threshold persists
+    /// only the bytes below it, then fails; every later operation fails.
+    pub kill_at_write_byte: Option<u64>,
+    /// Make `sync`/`sync_dir` succeed without making data durable, so a
+    /// [`crash`](FaultFs::crash) loses everything written after the last
+    /// honored sync.
+    pub drop_fsync: bool,
+    /// XOR the byte at this offset with this mask in every
+    /// [`StoreIo::read`] result (when in bounds).
+    pub flip_read: Option<(u64, u8)>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct FileTrack {
+    /// Bytes written through the shim (what the OS would report).
+    len: u64,
+    /// Bytes known durable: advanced only by an honored sync.
+    synced: u64,
+}
+
+#[derive(Debug, Default)]
+struct FaultState {
+    spec: FaultSpec,
+    killed: bool,
+    written_total: u64,
+    files: HashMap<PathBuf, FileTrack>,
+    write_offsets: Vec<u64>,
+}
+
+fn injected(what: &str) -> crate::error::Error {
+    crate::error::Error::from(std::io::Error::other(format!("injected fault: {what}")))
+}
+
+/// Fault-injecting [`StoreIo`]. Cloning shares the fault state, so a test
+/// can keep a handle while the store owns another.
+#[derive(Clone, Debug, Default)]
+pub struct FaultFs {
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl FaultFs {
+    /// A shim with no faults armed.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm a fault spec and reset the write-byte counter, the recorded
+    /// write offsets, and the killed flag. File tracking is preserved so
+    /// a store directory written before arming stays crash-truncatable.
+    pub fn arm(&self, spec: FaultSpec) {
+        let mut st = self.state.lock().unwrap();
+        st.spec = spec;
+        st.killed = false;
+        st.written_total = 0;
+        st.write_offsets.clear();
+    }
+
+    /// Simulate power loss: truncate every tracked file to its last
+    /// synced length, then forget all tracking and disarm the spec so the
+    /// directory can be reopened (through this shim or [`RealFs`]).
+    pub fn crash(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        for (path, track) in st.files.iter() {
+            match std::fs::OpenOptions::new().write(true).open(path) {
+                Ok(f) => f.set_len(track.synced)?,
+                // A file created but never made durable may simply be
+                // absent after the crash; losing it entirely is legal.
+                Err(_) => {
+                    if track.synced == 0 {
+                        std::fs::remove_file(path).ok();
+                    }
+                }
+            }
+        }
+        st.files.clear();
+        st.spec = FaultSpec::default();
+        st.killed = false;
+        st.written_total = 0;
+        Ok(())
+    }
+
+    /// Cumulative bytes written through the shim since the last
+    /// [`arm`](FaultFs::arm).
+    pub fn written_total(&self) -> u64 {
+        self.state.lock().unwrap().written_total
+    }
+
+    /// Cumulative byte offset after each completed write since the last
+    /// [`arm`](FaultFs::arm) — the kill points a crash sweep replays.
+    pub fn write_offsets(&self) -> Vec<u64> {
+        self.state.lock().unwrap().write_offsets.clone()
+    }
+
+    fn check_alive(&self, what: &str) -> Result<()> {
+        if self.state.lock().unwrap().killed {
+            Err(injected(what))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn track_open(&self, path: &Path, existing_len: u64, truncate: bool) {
+        let mut st = self.state.lock().unwrap();
+        if truncate {
+            st.files.insert(path.to_path_buf(), FileTrack::default());
+        } else {
+            // Pre-existing bytes (written outside any fault epoch) count
+            // as durable.
+            st.files
+                .entry(path.to_path_buf())
+                .or_insert(FileTrack { len: existing_len, synced: existing_len });
+        }
+    }
+}
+
+struct FaultFile {
+    path: PathBuf,
+    file: std::fs::File,
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl Write for FaultFile {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut st = self.state.lock().unwrap();
+        if st.killed {
+            return Err(std::io::Error::other("injected fault: process is dead"));
+        }
+        let allowed = match st.spec.kill_at_write_byte {
+            Some(kill) => {
+                let room = kill.saturating_sub(st.written_total);
+                (room.min(buf.len() as u64)) as usize
+            }
+            None => buf.len(),
+        };
+        if allowed > 0 {
+            self.file.write_all(&buf[..allowed])?;
+        }
+        st.written_total += allowed as u64;
+        if let Some(track) = st.files.get_mut(&self.path) {
+            track.len += allowed as u64;
+        }
+        if allowed < buf.len() {
+            st.killed = true;
+            return Err(std::io::Error::other("injected fault: write killed"));
+        }
+        let total = st.written_total;
+        st.write_offsets.push(total);
+        Ok(allowed)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.state.lock().unwrap().killed {
+            return Err(std::io::Error::other("injected fault: process is dead"));
+        }
+        self.file.flush()
+    }
+}
+
+impl StoreFile for FaultFile {
+    fn sync(&mut self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.killed {
+            return Err(injected("sync after kill"));
+        }
+        if !st.spec.drop_fsync {
+            self.file.sync_data()?;
+            if let Some(track) = st.files.get_mut(&self.path) {
+                track.synced = track.len;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl StoreIo for FaultFs {
+    fn create(&self, path: &Path) -> Result<Box<dyn StoreFile>> {
+        self.check_alive("create")?;
+        let file = std::fs::File::create(path)?;
+        self.track_open(path, 0, true);
+        Ok(Box::new(FaultFile {
+            path: path.to_path_buf(),
+            file,
+            state: Arc::clone(&self.state),
+        }))
+    }
+
+    fn append(&self, path: &Path) -> Result<Box<dyn StoreFile>> {
+        self.check_alive("append")?;
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        let existing = file.metadata()?.len();
+        self.track_open(path, existing, false);
+        Ok(Box::new(FaultFile {
+            path: path.to_path_buf(),
+            file,
+            state: Arc::clone(&self.state),
+        }))
+    }
+
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        self.check_alive("read")?;
+        let mut data = std::fs::read(path)?;
+        if let Some((off, mask)) = self.state.lock().unwrap().spec.flip_read {
+            if let Ok(i) = usize::try_from(off) {
+                if i < data.len() {
+                    data[i] ^= mask;
+                }
+            }
+        }
+        Ok(data)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        self.check_alive("rename")?;
+        RealFs.rename(from, to)?;
+        let mut st = self.state.lock().unwrap();
+        if let Some(track) = st.files.remove(from) {
+            st.files.insert(to.to_path_buf(), track);
+        }
+        Ok(())
+    }
+
+    fn remove(&self, path: &Path) -> Result<()> {
+        self.check_alive("remove")?;
+        std::fs::remove_file(path)?;
+        self.state.lock().unwrap().files.remove(path);
+        Ok(())
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        path.exists()
+    }
+
+    fn file_len(&self, path: &Path) -> Result<u64> {
+        self.check_alive("file_len")?;
+        RealFs.file_len(path)
+    }
+
+    fn list(&self, dir: &Path) -> Result<Vec<String>> {
+        self.check_alive("list")?;
+        RealFs.list(dir)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> Result<()> {
+        self.check_alive("create_dir_all")?;
+        RealFs.create_dir_all(dir)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> Result<()> {
+        let st = self.state.lock().unwrap();
+        if st.killed {
+            return Err(injected("sync_dir after kill"));
+        }
+        if st.spec.drop_fsync {
+            return Ok(());
+        }
+        drop(st);
+        RealFs.sync_dir(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("zipnn_lp_fault_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn kill_point_tears_the_final_write_and_deadens_the_shim() {
+        let dir = tmpdir("kill");
+        let fs = FaultFs::new();
+        fs.arm(FaultSpec { kill_at_write_byte: Some(10), ..FaultSpec::default() });
+        let p = dir.join("f.bin");
+        let mut f = fs.create(&p).unwrap();
+        f.write_all(b"0123456").unwrap(); // 7 bytes, under the limit
+        let err = f.write_all(b"abcdef"); // crosses at byte 10
+        assert!(err.is_err());
+        // The allowed prefix landed; nothing after it did.
+        assert_eq!(std::fs::read(&p).unwrap(), b"0123456abc");
+        // Every subsequent operation on the "dead" process errors.
+        assert!(f.write_all(b"x").is_err());
+        assert!(f.sync().is_err());
+        assert!(fs.create(&dir.join("g.bin")).is_err());
+        assert!(fs.read(&p).is_err());
+        // Nothing was synced, so the crash wipes the file.
+        fs.crash().unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dropped_fsync_loses_unsynced_bytes_on_crash() {
+        let dir = tmpdir("dropsync");
+        let fs = FaultFs::new();
+        let p = dir.join("f.bin");
+        // Honored fsync: synced bytes survive the crash.
+        {
+            let mut f = fs.create(&p).unwrap();
+            f.write_all(b"durable|").unwrap();
+            f.sync().unwrap();
+            f.write_all(b"lost").unwrap();
+        }
+        fs.crash().unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"durable|");
+        // Dropped fsync: sync() lies, so even "synced" bytes vanish.
+        fs.arm(FaultSpec { drop_fsync: true, ..FaultSpec::default() });
+        {
+            let mut f = fs.append(&p).unwrap();
+            f.write_all(b"gone").unwrap();
+            f.sync().unwrap();
+        }
+        fs.crash().unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"durable|");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_offsets_record_clean_run_boundaries_and_reads_flip() {
+        let dir = tmpdir("offsets");
+        let fs = FaultFs::new();
+        let p = dir.join("f.bin");
+        let mut f = fs.create(&p).unwrap();
+        f.write_all(b"abcd").unwrap();
+        f.write_all(b"ef").unwrap();
+        drop(f);
+        assert_eq!(fs.write_offsets(), vec![4, 6]);
+        assert_eq!(fs.written_total(), 6);
+        fs.arm(FaultSpec { flip_read: Some((1, 0x80)), ..FaultSpec::default() });
+        assert_eq!(fs.read(&p).unwrap(), b"a\xe2cdef");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,239 @@
+//! Filesystem seam for the checkpoint store.
+//!
+//! Every byte the store persists — archive data, manifest journal records,
+//! renames, fsyncs — flows through the [`StoreIo`] trait so the
+//! fault-injection harness (`super::fault`, tests / `fault-inject`
+//! feature only) can interpose on the exact same code path production
+//! uses. [`RealFs`] is the only implementation
+//! compiled into release builds; it maps each operation onto `std::fs` with
+//! the durability calls (`sync_data`, directory fsync) the crash-safety
+//! contract of the manifest requires.
+
+use crate::error::Result;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// An open, writable store file.
+///
+/// The trait extends [`Write`] with the one durability primitive the
+/// journal protocol needs: [`sync`](StoreFile::sync), which must not return
+/// until previously written bytes are on stable storage (or the
+/// implementation is deliberately lying, as the fault shim does when it
+/// models dropped fsyncs).
+pub trait StoreFile: Write + Send {
+    /// Flush file contents to stable storage (`fdatasync` semantics).
+    fn sync(&mut self) -> Result<()>;
+}
+
+/// Filesystem operations the checkpoint store performs.
+///
+/// Implementations must be usable from multiple threads (`Send + Sync`);
+/// the store itself serializes mutations, but read-side helpers may be
+/// called concurrently.
+pub trait StoreIo: Send + Sync {
+    /// Create (truncate) a file for writing.
+    fn create(&self, path: &Path) -> Result<Box<dyn StoreFile>>;
+    /// Open a file for appending, creating it if absent.
+    fn append(&self, path: &Path) -> Result<Box<dyn StoreFile>>;
+    /// Read an entire file.
+    fn read(&self, path: &Path) -> Result<Vec<u8>>;
+    /// Atomically rename `from` to `to` (replacing `to` if it exists).
+    fn rename(&self, from: &Path, to: &Path) -> Result<()>;
+    /// Delete a file.
+    fn remove(&self, path: &Path) -> Result<()>;
+    /// True if `path` exists.
+    fn exists(&self, path: &Path) -> bool;
+    /// Length of the file at `path` in bytes.
+    fn file_len(&self, path: &Path) -> Result<u64>;
+    /// File names (not full paths) of directory entries under `dir`.
+    fn list(&self, dir: &Path) -> Result<Vec<String>>;
+    /// Create `dir` and any missing parents.
+    fn create_dir_all(&self, dir: &Path) -> Result<()>;
+    /// Flush directory metadata (entry creation/rename/removal) to stable
+    /// storage. A no-op on platforms without directory fsync.
+    fn sync_dir(&self, dir: &Path) -> Result<()>;
+}
+
+/// Production [`StoreIo`]: `std::fs` plus real fsyncs.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealFs;
+
+struct RealFile(std::fs::File);
+
+impl Write for RealFile {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.0.flush()
+    }
+}
+
+impl StoreFile for RealFile {
+    fn sync(&mut self) -> Result<()> {
+        self.0.sync_data()?;
+        Ok(())
+    }
+}
+
+impl StoreIo for RealFs {
+    fn create(&self, path: &Path) -> Result<Box<dyn StoreFile>> {
+        Ok(Box::new(RealFile(std::fs::File::create(path)?)))
+    }
+
+    fn append(&self, path: &Path) -> Result<Box<dyn StoreFile>> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Box::new(RealFile(file)))
+    }
+
+    fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        Ok(std::fs::read(path)?)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> Result<()> {
+        // On Unix, rename atomically replaces `to`. Windows refuses to
+        // replace; remove first (non-atomic, documented platform caveat).
+        #[cfg(windows)]
+        if to.exists() {
+            std::fs::remove_file(to)?;
+        }
+        std::fs::rename(from, to)?;
+        Ok(())
+    }
+
+    fn remove(&self, path: &Path) -> Result<()> {
+        std::fs::remove_file(path)?;
+        Ok(())
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        path.exists()
+    }
+
+    fn file_len(&self, path: &Path) -> Result<u64> {
+        Ok(std::fs::metadata(path)?.len())
+    }
+
+    fn list(&self, dir: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                names.push(name.to_string());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        Ok(())
+    }
+
+    fn sync_dir(&self, dir: &Path) -> Result<()> {
+        // Directory fsync makes renames/unlinks durable on Unix. Other
+        // platforms have no equivalent portable call; best-effort there.
+        #[cfg(unix)]
+        std::fs::File::open(dir)?.sync_all()?;
+        #[cfg(not(unix))]
+        let _ = dir;
+        Ok(())
+    }
+}
+
+/// Write adapter that tallies length and CRC-32 of everything written
+/// through it, so an archive's manifest record can carry whole-file
+/// integrity metadata without re-reading the file after the fact.
+pub(crate) struct TallyWriter {
+    inner: Box<dyn StoreFile>,
+    crc: crate::util::crc32::Crc32,
+    len: u64,
+}
+
+impl TallyWriter {
+    pub(crate) fn new(inner: Box<dyn StoreFile>) -> Self {
+        TallyWriter { inner, crc: crate::util::crc32::Crc32::new(), len: 0 }
+    }
+
+    /// Bytes written so far.
+    pub(crate) fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// CRC-32 over the bytes written so far.
+    pub(crate) fn crc(&self) -> u32 {
+        self.crc.finalize()
+    }
+
+    pub(crate) fn sync(&mut self) -> Result<()> {
+        self.inner.sync()
+    }
+}
+
+impl Write for TallyWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        self.len += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_fs_roundtrip_and_listing() {
+        let dir = std::env::temp_dir()
+            .join(format!("zipnn_lp_storeio_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let io = RealFs;
+        io.create_dir_all(&dir).unwrap();
+        let a = dir.join("a.bin");
+        {
+            let mut f = io.create(&a).unwrap();
+            f.write_all(b"hello").unwrap();
+            f.sync().unwrap();
+        }
+        {
+            let mut f = io.append(&a).unwrap();
+            f.write_all(b" world").unwrap();
+            f.sync().unwrap();
+        }
+        assert_eq!(io.read(&a).unwrap(), b"hello world");
+        assert_eq!(io.file_len(&a).unwrap(), 11);
+        let b = dir.join("b.bin");
+        io.rename(&a, &b).unwrap();
+        io.sync_dir(&dir).unwrap();
+        assert!(!io.exists(&a));
+        assert!(io.exists(&b));
+        assert_eq!(io.list(&dir).unwrap(), vec!["b.bin".to_string()]);
+        io.remove(&b).unwrap();
+        assert!(!io.exists(&b));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tally_writer_tracks_len_and_crc() {
+        let dir = std::env::temp_dir()
+            .join(format!("zipnn_lp_tally_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let io = RealFs;
+        io.create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let mut w = TallyWriter::new(io.create(&p).unwrap());
+        w.write_all(b"abc").unwrap();
+        w.write_all(b"def").unwrap();
+        w.sync().unwrap();
+        assert_eq!(w.len(), 6);
+        assert_eq!(w.crc(), crate::util::crc32::crc32(b"abcdef"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,555 @@
+//! Crash-safe checkpoint manifest: an append-only journal of records.
+//!
+//! The manifest is the store's source of truth. It is a binary journal
+//! (`manifest.jnl`) of length-prefixed, CRC-framed operations:
+//!
+//! ```text
+//! header   := "ZLPJ" version:u16le flags:u16le          (8 bytes)
+//! frame    := payload_len:u32le payload_crc32:u32le payload
+//! payload  := op:u8 ...                                 (ops below)
+//!   op 1 (Add)     id kind(+parent) file archive_len archive_crc32
+//!                  original_bytes encoded_bytes exp_ratio sm_ratio
+//!   op 2 (Remove)  id
+//!   op 3 (NextId)  next_id        (floor survives journal compaction)
+//! ```
+//!
+//! Integers are varints; ratios are `f64::to_le_bytes`. Durability
+//! protocol: every mutation appends one or more frames and fsyncs before
+//! the store acknowledges the operation; full journal rewrites (recovery,
+//! GC compaction, legacy migration) go through write-temp → fsync →
+//! rename → directory-fsync. Replay applies frames in order with
+//! last-writer-wins per id, so compaction swaps a record atomically by
+//! appending a new `Add` for the same id.
+//!
+//! Recovery mirrors `ArchiveReader::open`: a torn or partial **tail**
+//! frame (the write that was in flight when the process died) is
+//! truncated away and reported via [`RecoveryReport`]; damage anywhere
+//! else is a typed [`Error::Corrupt`] carrying the byte offset.
+
+use super::io::StoreIo;
+use super::{CkptKind, CkptRecord};
+use crate::error::{Error, Result};
+use crate::util::crc32::crc32;
+use crate::util::varint;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Journal file name inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.jnl";
+/// Pre-journal plain-text manifest name, migrated on first open.
+pub const LEGACY_MANIFEST_FILE: &str = "manifest.txt";
+
+const JOURNAL_MAGIC: &[u8; 4] = b"ZLPJ";
+const JOURNAL_VERSION: u16 = 1;
+const HEADER_LEN: usize = 8;
+/// Implausibly large payload → framing damage, not a real record.
+const MAX_PAYLOAD: usize = 1 << 20;
+
+const OP_ADD: u8 = 1;
+const OP_REMOVE: u8 = 2;
+const OP_NEXT_ID: u8 = 3;
+
+/// What `CheckpointStore::open` had to repair to reach a durable state.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Byte offset at which a torn tail frame was truncated from the
+    /// journal, if one was found (the interrupted write of a crashed
+    /// process). `None` means the journal replayed cleanly.
+    pub truncated_at: Option<u64>,
+    /// True if a legacy plain-text `manifest.txt` was migrated into the
+    /// journal format on this open.
+    pub migrated_legacy: bool,
+}
+
+pub(super) struct Manifest {
+    dir: PathBuf,
+    path: PathBuf,
+    pub(super) records: Vec<CkptRecord>,
+    pub(super) next_id: usize,
+}
+
+struct Replay {
+    records: Vec<CkptRecord>,
+    next_id: usize,
+    truncated_at: Option<u64>,
+}
+
+impl Manifest {
+    /// Open (or initialize) the manifest under `dir`, replaying the
+    /// journal and repairing a torn tail. Returns the manifest plus a
+    /// report of any recovery actions taken.
+    pub(super) fn open(dir: &Path, io: &dyn StoreIo) -> Result<(Self, RecoveryReport)> {
+        let path = dir.join(MANIFEST_FILE);
+        let mut report = RecoveryReport::default();
+        if !io.exists(&path) {
+            let legacy = dir.join(LEGACY_MANIFEST_FILE);
+            let mut m = Manifest {
+                dir: dir.to_path_buf(),
+                path,
+                records: Vec::new(),
+                next_id: 0,
+            };
+            if io.exists(&legacy) {
+                m.records = parse_legacy(dir, io, &io.read(&legacy)?)?;
+                m.next_id = m.records.last().map(|r| r.id + 1).unwrap_or(0);
+                report.migrated_legacy = true;
+            }
+            m.rewrite(io)?;
+            if report.migrated_legacy {
+                io.remove(&legacy).ok();
+            }
+            return Ok((m, report));
+        }
+        let buf = io.read(&path)?;
+        let replay = replay(&buf)?;
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            path,
+            records: replay.records,
+            next_id: replay.next_id,
+        };
+        if let Some(at) = replay.truncated_at {
+            report.truncated_at = Some(at);
+            // Drop the torn tail durably so the next append starts from a
+            // clean frame boundary.
+            m.rewrite(io)?;
+        }
+        Ok((m, report))
+    }
+
+    /// Look up a record by id.
+    pub(super) fn find(&self, id: usize) -> Option<&CkptRecord> {
+        match self.records.binary_search_by_key(&id, |r| r.id) {
+            Ok(i) => Some(&self.records[i]),
+            Err(_) => None,
+        }
+    }
+
+    /// Append an `Add` frame (insert or last-writer-wins replace) and
+    /// fsync. In-memory state mutates only after the journal is durable.
+    pub(super) fn append_add(&mut self, io: &dyn StoreIo, rec: CkptRecord) -> Result<()> {
+        let mut payload = Vec::with_capacity(64 + rec.file.len());
+        encode_add(&mut payload, &rec);
+        self.append_frames(io, &[payload])?;
+        let id = rec.id;
+        match self.records.binary_search_by_key(&id, |r| r.id) {
+            Ok(i) => self.records[i] = rec,
+            Err(i) => self.records.insert(i, rec),
+        }
+        self.next_id = self.next_id.max(id + 1);
+        Ok(())
+    }
+
+    /// Append one `Remove` frame per id (a single write + fsync) and drop
+    /// the records from memory once durable.
+    pub(super) fn append_removes(&mut self, io: &dyn StoreIo, ids: &[usize]) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let payloads: Vec<Vec<u8>> = ids
+            .iter()
+            .map(|&id| {
+                let mut p = vec![OP_REMOVE];
+                varint::write_usize(&mut p, id);
+                p
+            })
+            .collect();
+        self.append_frames(io, &payloads)?;
+        self.records.retain(|r| !ids.contains(&r.id));
+        Ok(())
+    }
+
+    /// Atomically rewrite the whole journal from in-memory state
+    /// (write-temp → fsync → rename → directory-fsync). Emits a `NextId`
+    /// floor first so id monotonicity survives the removal of high ids.
+    pub(super) fn rewrite(&self, io: &dyn StoreIo) -> Result<()> {
+        let mut buf = Vec::with_capacity(HEADER_LEN + 64 * (self.records.len() + 1));
+        buf.extend_from_slice(JOURNAL_MAGIC);
+        buf.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        let mut next = vec![OP_NEXT_ID];
+        varint::write_usize(&mut next, self.next_id);
+        frame(&mut buf, &next);
+        for rec in &self.records {
+            let mut p = Vec::with_capacity(64 + rec.file.len());
+            encode_add(&mut p, rec);
+            frame(&mut buf, &p);
+        }
+        let tmp = self.path.with_file_name(format!("{MANIFEST_FILE}.tmp"));
+        let mut f = io.create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync()?;
+        drop(f);
+        io.rename(&tmp, &self.path)?;
+        io.sync_dir(&self.dir)?;
+        Ok(())
+    }
+
+    fn append_frames(&self, io: &dyn StoreIo, payloads: &[Vec<u8>]) -> Result<()> {
+        let mut buf = Vec::new();
+        for p in payloads {
+            frame(&mut buf, p);
+        }
+        let mut f = io.append(&self.path)?;
+        f.write_all(&buf)?;
+        f.sync()?;
+        Ok(())
+    }
+}
+
+fn frame(out: &mut Vec<u8>, payload: &[u8]) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+fn encode_add(out: &mut Vec<u8>, rec: &CkptRecord) {
+    out.push(OP_ADD);
+    varint::write_usize(out, rec.id);
+    match rec.kind {
+        CkptKind::Full => out.push(0),
+        CkptKind::Delta { base } => {
+            out.push(1);
+            varint::write_usize(out, base);
+        }
+    }
+    varint::write_usize(out, rec.file.len());
+    out.extend_from_slice(rec.file.as_bytes());
+    varint::write_u64(out, rec.archive_len);
+    varint::write_u64(out, u64::from(rec.archive_crc32));
+    varint::write_u64(out, rec.original_bytes);
+    varint::write_u64(out, rec.encoded_bytes);
+    out.extend_from_slice(&rec.exp_ratio.to_le_bytes());
+    out.extend_from_slice(&rec.sm_ratio.to_le_bytes());
+}
+
+fn decode_add(buf: &[u8], pos: &mut usize) -> Result<CkptRecord> {
+    let id = varint::read_usize(buf, pos)?;
+    let kind = match take_u8(buf, pos)? {
+        0 => CkptKind::Full,
+        1 => CkptKind::Delta { base: varint::read_usize(buf, pos)? },
+        other => {
+            return Err(Error::Corrupt(format!("manifest record: unknown kind {other}")))
+        }
+    };
+    let name_len = varint::read_usize(buf, pos)?;
+    if name_len > buf.len().saturating_sub(*pos) {
+        return Err(Error::Corrupt("manifest record: file name truncated".into()));
+    }
+    let file = std::str::from_utf8(&buf[*pos..*pos + name_len])
+        .map_err(|_| Error::Corrupt("manifest record: file name not UTF-8".into()))?
+        .to_string();
+    *pos += name_len;
+    let archive_len = varint::read_u64(buf, pos)?;
+    let crc_wide = varint::read_u64(buf, pos)?;
+    let archive_crc32 = u32::try_from(crc_wide)
+        .map_err(|_| Error::Corrupt("manifest record: crc exceeds 32 bits".into()))?;
+    let original_bytes = varint::read_u64(buf, pos)?;
+    let encoded_bytes = varint::read_u64(buf, pos)?;
+    let exp_ratio = take_f64(buf, pos)?;
+    let sm_ratio = take_f64(buf, pos)?;
+    Ok(CkptRecord {
+        id,
+        kind,
+        file,
+        archive_len,
+        archive_crc32,
+        original_bytes,
+        encoded_bytes,
+        exp_ratio,
+        sm_ratio,
+    })
+}
+
+fn take_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    let b = *buf
+        .get(*pos)
+        .ok_or_else(|| Error::Corrupt("manifest record truncated".into()))?;
+    *pos += 1;
+    Ok(b)
+}
+
+fn take_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    let bytes: [u8; 8] = buf
+        .get(*pos..*pos + 8)
+        .ok_or_else(|| Error::Corrupt("manifest record truncated".into()))?
+        .try_into()
+        .expect("slice of length 8");
+    *pos += 8;
+    Ok(f64::from_le_bytes(bytes))
+}
+
+fn replay(buf: &[u8]) -> Result<Replay> {
+    let mut rep = Replay { records: Vec::new(), next_id: 0, truncated_at: None };
+    if buf.len() < HEADER_LEN {
+        // A journal that never got its header to disk: recover empty.
+        rep.truncated_at = Some(0);
+        return Ok(rep);
+    }
+    if &buf[..4] != JOURNAL_MAGIC {
+        return Err(Error::Corrupt("bad manifest journal magic at byte 0".into()));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != JOURNAL_VERSION {
+        return Err(Error::Corrupt(format!(
+            "unsupported manifest journal version {version} at byte 4"
+        )));
+    }
+    let mut map: BTreeMap<usize, CkptRecord> = BTreeMap::new();
+    let mut pos = HEADER_LEN;
+    while pos < buf.len() {
+        let avail = buf.len() - pos;
+        if avail < 8 {
+            rep.truncated_at = Some(pos as u64);
+            break;
+        }
+        let plen =
+            u32::from_le_bytes(buf[pos..pos + 4].try_into().expect("4 bytes")) as usize;
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().expect("4 bytes"));
+        if plen > avail - 8 {
+            // The declared payload extends past EOF: the frame whose write
+            // was interrupted. (Garbage lengths land here too — they
+            // exceed what is on disk.)
+            rep.truncated_at = Some(pos as u64);
+            break;
+        }
+        if plen == 0 || plen > MAX_PAYLOAD {
+            return Err(Error::Corrupt(format!(
+                "manifest journal frame at byte {pos}: implausible payload length {plen}"
+            )));
+        }
+        let payload = &buf[pos + 8..pos + 8 + plen];
+        let actual = crc32(payload);
+        if actual != crc {
+            if pos + 8 + plen == buf.len() {
+                // Damaged final frame = torn tail; everything before it is
+                // intact, so recover to the previous frame boundary.
+                rep.truncated_at = Some(pos as u64);
+                break;
+            }
+            return Err(Error::Corrupt(format!(
+                "manifest journal frame at byte {pos}: payload checksum mismatch \
+                 (expected {crc:#010x}, got {actual:#010x})"
+            )));
+        }
+        apply(payload, &mut map, &mut rep.next_id)
+            .map_err(|e| Error::Corrupt(format!("manifest journal frame at byte {pos}: {e}")))?;
+        pos += 8 + plen;
+    }
+    rep.records = map.into_values().collect();
+    Ok(rep)
+}
+
+fn apply(payload: &[u8], map: &mut BTreeMap<usize, CkptRecord>, next_id: &mut usize) -> Result<()> {
+    let mut pos = 0usize;
+    let op = take_u8(payload, &mut pos)?;
+    match op {
+        OP_ADD => {
+            let rec = decode_add(payload, &mut pos)?;
+            if pos != payload.len() {
+                return Err(Error::Corrupt("trailing bytes after Add record".into()));
+            }
+            *next_id = (*next_id).max(rec.id + 1);
+            map.insert(rec.id, rec);
+        }
+        OP_REMOVE => {
+            let id = varint::read_usize(payload, &mut pos)?;
+            if pos != payload.len() {
+                return Err(Error::Corrupt("trailing bytes after Remove record".into()));
+            }
+            *next_id = (*next_id).max(id + 1);
+            map.remove(&id);
+        }
+        OP_NEXT_ID => {
+            let n = varint::read_usize(payload, &mut pos)?;
+            if pos != payload.len() {
+                return Err(Error::Corrupt("trailing bytes after NextId record".into()));
+            }
+            *next_id = (*next_id).max(n);
+        }
+        other => return Err(Error::Corrupt(format!("unknown journal op {other}"))),
+    }
+    Ok(())
+}
+
+/// Parse the pre-journal plain-text manifest (`manifest.txt`), filling the
+/// whole-file integrity columns by reading each referenced archive once
+/// (missing archives migrate with zeroed integrity metadata; `fsck`
+/// flags them).
+fn parse_legacy(dir: &Path, io: &dyn StoreIo, bytes: &[u8]) -> Result<Vec<CkptRecord>> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| Error::Checkpoint("legacy manifest is not UTF-8".into()))?;
+    let bad = |line: &str| Error::Checkpoint(format!("bad manifest line: {line}"));
+    let mut records = Vec::new();
+    for line in text.lines().skip(1) {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 8 {
+            return Err(bad(line));
+        }
+        let id: usize = parts[0].parse().map_err(|_| bad(line))?;
+        let kind = match parts[1] {
+            "full" => CkptKind::Full,
+            "delta" => CkptKind::Delta { base: parts[2].parse().map_err(|_| bad(line))? },
+            _ => return Err(bad(line)),
+        };
+        let file = parts[3].to_string();
+        let (archive_len, archive_crc32) = match io.read(&dir.join(&file)) {
+            Ok(b) => (b.len() as u64, crc32(&b)),
+            Err(_) => (0, 0),
+        };
+        records.push(CkptRecord {
+            id,
+            kind,
+            file,
+            archive_len,
+            archive_crc32,
+            original_bytes: parts[4].parse().map_err(|_| bad(line))?,
+            encoded_bytes: parts[5].parse().map_err(|_| bad(line))?,
+            exp_ratio: parts[6].parse().map_err(|_| bad(line))?,
+            sm_ratio: parts[7].parse().map_err(|_| bad(line))?,
+        });
+    }
+    records.sort_by_key(|r| r.id);
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::io::RealFs;
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("zipnn_lp_manifest_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(id: usize, kind: CkptKind) -> CkptRecord {
+        CkptRecord {
+            id,
+            kind,
+            file: format!("ckpt_{id:05}.zlp"),
+            archive_len: 123 + id as u64,
+            archive_crc32: 0xAB00 + id as u32,
+            original_bytes: 1000,
+            encoded_bytes: 500,
+            exp_ratio: 0.25,
+            sm_ratio: 0.75,
+        }
+    }
+
+    #[test]
+    fn journal_roundtrips_adds_removes_and_swaps() {
+        let dir = tmpdir("roundtrip");
+        let io = RealFs;
+        let (mut m, rep) = Manifest::open(&dir, &io).unwrap();
+        assert_eq!(rep, RecoveryReport::default());
+        m.append_add(&io, rec(0, CkptKind::Full)).unwrap();
+        m.append_add(&io, rec(1, CkptKind::Delta { base: 0 })).unwrap();
+        m.append_add(&io, rec(2, CkptKind::Delta { base: 1 })).unwrap();
+        // Swap: re-add id 1 as a full record (compaction) — last wins.
+        m.append_add(&io, rec(1, CkptKind::Full)).unwrap();
+        m.append_removes(&io, &[0]).unwrap();
+        let (m2, rep2) = Manifest::open(&dir, &io).unwrap();
+        assert_eq!(rep2, RecoveryReport::default());
+        assert_eq!(m2.records.len(), 2);
+        assert_eq!(m2.find(1).unwrap().kind, CkptKind::Full);
+        assert_eq!(m2.find(2).unwrap().kind, CkptKind::Delta { base: 1 });
+        assert!(m2.find(0).is_none());
+        assert_eq!(m2.next_id, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn next_id_floor_survives_rewrite_after_gc() {
+        let dir = tmpdir("floor");
+        let io = RealFs;
+        let (mut m, _) = Manifest::open(&dir, &io).unwrap();
+        for i in 0..4 {
+            m.append_add(&io, rec(i, CkptKind::Full)).unwrap();
+        }
+        m.append_removes(&io, &[2, 3]).unwrap();
+        m.rewrite(&io).unwrap(); // journal compaction drops the Remove ops
+        let (m2, _) = Manifest::open(&dir, &io).unwrap();
+        assert_eq!(m2.next_id, 4, "ids of GC'd checkpoints must never be reused");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_reported() {
+        let dir = tmpdir("torn");
+        let io = RealFs;
+        let (mut m, _) = Manifest::open(&dir, &io).unwrap();
+        m.append_add(&io, rec(0, CkptKind::Full)).unwrap();
+        m.append_add(&io, rec(1, CkptKind::Delta { base: 0 })).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        // Simulate a crash mid-append: a partial frame at the tail.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0x40, 0, 0, 0, 0xde, 0xad, 0xbe]).unwrap();
+        drop(f);
+        let (m2, rep) = Manifest::open(&dir, &io).unwrap();
+        assert_eq!(rep.truncated_at, Some(clean_len));
+        assert_eq!(m2.records.len(), 2);
+        // Recovery rewrote the journal; reopening is clean.
+        let (m3, rep2) = Manifest::open(&dir, &io).unwrap();
+        assert_eq!(rep2.truncated_at, None);
+        assert_eq!(m3.records.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mid_journal_damage_is_typed_corrupt_with_offset() {
+        let dir = tmpdir("midcorrupt");
+        let io = RealFs;
+        let (mut m, _) = Manifest::open(&dir, &io).unwrap();
+        m.append_add(&io, rec(0, CkptKind::Full)).unwrap();
+        let first_end = std::fs::metadata(dir.join(MANIFEST_FILE)).unwrap().len();
+        m.append_add(&io, rec(1, CkptKind::Delta { base: 0 })).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a payload byte of a frame that is NOT the tail: the second
+        // frame (the NextId floor frame is first, then Add(0), Add(1)) —
+        // damage Add(0)'s payload, which sits before first_end.
+        let target = first_end as usize - 4;
+        bytes[target] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Manifest::open(&dir, &io).unwrap_err();
+        match err {
+            Error::Corrupt(msg) => {
+                assert!(msg.contains("byte"), "offset missing from: {msg}")
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_text_manifest_migrates() {
+        let dir = tmpdir("legacy");
+        let io = RealFs;
+        std::fs::write(dir.join("ckpt_00000.zlp"), b"fake archive bytes").unwrap();
+        let text = "# zipnn-lp checkpoint manifest v1\n\
+                    0 full - ckpt_00000.zlp 1000 400 0.250000 0.800000\n\
+                    1 delta 0 ckpt_00001.zlp 1000 150 0.100000 0.500000\n";
+        std::fs::write(dir.join(LEGACY_MANIFEST_FILE), text).unwrap();
+        let (m, rep) = Manifest::open(&dir, &io).unwrap();
+        assert!(rep.migrated_legacy);
+        assert_eq!(m.records.len(), 2);
+        assert_eq!(m.next_id, 2);
+        let r0 = m.find(0).unwrap();
+        assert_eq!(r0.archive_len, 18);
+        assert_eq!(r0.archive_crc32, crc32(b"fake archive bytes"));
+        // Missing archive migrates with zeroed integrity metadata.
+        assert_eq!(m.find(1).unwrap().archive_len, 0);
+        // The text manifest is consumed by the migration.
+        assert!(!dir.join(LEGACY_MANIFEST_FILE).exists());
+        let (m2, rep2) = Manifest::open(&dir, &io).unwrap();
+        assert!(!rep2.migrated_legacy);
+        assert_eq!(m2.records.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

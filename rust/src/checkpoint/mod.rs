@@ -1,0 +1,90 @@
+//! Delta-checkpoint store with a crash-safe lifecycle (paper §3.1 / §4.1).
+//!
+//! Checkpoints arrive as named tensor sets. The first checkpoint (and every
+//! `anchor_interval`-th) is stored **full**; the rest are stored as XOR
+//! deltas against their predecessor, compressed with the exponent/mantissa
+//! codec. Reconstruction walks the chain from the nearest anchor — exactly
+//! how the Amber-checkpoint experiment of Fig 6 consumes the format.
+//!
+//! The subsystem is split by concern:
+//!
+//! * [`io`] — the [`StoreIo`] filesystem seam every persisted byte flows
+//!   through, so the fault-injection harness can interpose on the
+//!   production code path.
+//! * [`manifest`] — the append-only, CRC-framed journal that is the
+//!   store's source of truth. Every mutation is journal-append + fsync;
+//!   rewrites are write-temp → fsync → rename → directory-fsync; a torn
+//!   tail frame is truncated on open (see [`RecoveryReport`]) while
+//!   damage elsewhere is a typed [`Corrupt`](crate::error::Error::Corrupt)
+//!   with a byte offset, mirroring `ArchiveReader::open`.
+//! * [`store`] — [`CheckpointStore`]: append/load/verify plus the
+//!   lifecycle operations — chain [`compaction`](CheckpointStore::compact),
+//!   retention/[`GC`](CheckpointStore::gc) via [`GcPolicy`], a
+//!   [`max_chain_len`](CheckpointStore::with_max_chain_len) guard, and
+//!   [`fsck`](CheckpointStore::fsck).
+//! * `fault` (tests / `fault-inject` feature only) — `FaultFs`, a
+//!   [`StoreIo`] that kills writes at a byte offset, drops fsyncs, and
+//!   flips bits on read, driving the crash-recovery proptests.
+
+pub mod io;
+pub mod manifest;
+pub mod store;
+
+#[cfg(any(test, feature = "fault-inject"))]
+pub mod fault;
+
+pub use io::{RealFs, StoreFile, StoreIo};
+pub use manifest::RecoveryReport;
+pub use store::{CheckpointStore, FsckReport, GcPolicy, DEFAULT_MAX_CHAIN_LEN};
+
+/// How a checkpoint is stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptKind {
+    /// Self-contained.
+    Full,
+    /// XOR delta against checkpoint `base`.
+    Delta {
+        /// Id of the checkpoint this delta is relative to.
+        base: usize,
+    },
+}
+
+/// Manifest entry for one stored checkpoint.
+#[derive(Clone, Debug)]
+pub struct CkptRecord {
+    /// Checkpoint id: assigned monotonically, never reused (GC and journal
+    /// compaction preserve the floor).
+    pub id: usize,
+    /// Full or delta.
+    pub kind: CkptKind,
+    /// Archive file name within the store directory.
+    pub file: String,
+    /// Size in bytes of the archive file as written (`fsck` checks it).
+    pub archive_len: u64,
+    /// CRC-32 over the whole archive file (`fsck --deep` re-verifies it).
+    /// Zero together with `archive_len == 0` means "unknown" — records
+    /// migrated from a legacy manifest whose archive was unreadable.
+    pub archive_crc32: u32,
+    /// Original byte size across tensors.
+    pub original_bytes: u64,
+    /// Encoded byte size across tensors.
+    pub encoded_bytes: u64,
+    /// Aggregate exponent-stream ratio.
+    pub exp_ratio: f64,
+    /// Aggregate sign|mantissa-stream ratio.
+    pub sm_ratio: f64,
+}
+
+impl CkptRecord {
+    /// Overall ratio.
+    pub fn ratio(&self) -> f64 {
+        if self.original_bytes == 0 {
+            1.0
+        } else {
+            self.encoded_bytes as f64 / self.original_bytes as f64
+        }
+    }
+}
+
+/// A named tensor: (name, little-endian bytes).
+pub type NamedTensor = (String, Vec<u8>);

@@ -71,7 +71,10 @@ pub const ARCHIVE_VERSION_V2: u16 = 2;
 /// Footer magic closing a v2 file.
 pub const FOOTER_MAGIC: &[u8; 4] = b"ZLPF";
 /// Fixed v2 tail length: footer offset (8) + footer CRC (4) + magic (4).
-const TAIL_LEN: usize = 16;
+/// Fault-injection tests use this to aim corruption at the tail precisely.
+pub const ARCHIVE_TAIL_LEN: usize = 16;
+/// Short internal alias for [`ARCHIVE_TAIL_LEN`].
+const TAIL_LEN: usize = ARCHIVE_TAIL_LEN;
 /// Sanity bound on a footer entry's chunk size. The footer CRC is not a
 /// MAC; buffer sizes parsed from it must be plausibility-checked before
 /// any decode path allocates from them (a crafted 2^60 length must hit
@@ -668,7 +671,20 @@ impl ArchiveReader {
     /// [`ReadBacking::Mmap`] fails with an I/O error on platforms without
     /// mmap support (see [`MMAP_SUPPORTED`]).
     pub fn open_with(path: &Path, backing: ReadBacking) -> Result<Self> {
-        let mut file = std::fs::File::open(path)?;
+        Self::open_file(std::fs::File::open(path)?, backing)
+    }
+
+    /// Open an archive from an already-open [`std::fs::File`].
+    ///
+    /// This is the seam used by callers that route file opens through
+    /// their own I/O layer (the checkpoint store's fault-injection shim,
+    /// tests that hand in pre-damaged files): the reader performs the same
+    /// header check, version dispatch, and footer validation as
+    /// [`open_with`](ArchiveReader::open_with), but never touches the
+    /// filesystem namespace itself. The file's cursor position is ignored.
+    pub fn open_file(mut file: std::fs::File, backing: ReadBacking) -> Result<Self> {
+        use std::io::Seek;
+        file.seek(std::io::SeekFrom::Start(0))?;
         let mut header = [0u8; 8];
         file.read_exact(&mut header)?;
         if &header[..4] != ARCHIVE_MAGIC {

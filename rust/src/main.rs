@@ -3,6 +3,8 @@
 //! Subcommands:
 //!
 //! * `compress` / `decompress` / `inspect` — offline tensor-file codec.
+//! * `checkpoint` — lifecycle operations on a delta-checkpoint store:
+//!   `list`, chain `compact`ion, retention `gc`, and `fsck`.
 //! * `train` — train the AOT model via PJRT, writing compressed delta
 //!   checkpoints (the §4.1 pipeline).
 //! * `serve` — run the batching server over a compressed K/V cache on
@@ -17,8 +19,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-#[cfg(feature = "pjrt")]
-use zipnn_lp::checkpoint::CheckpointStore;
+use zipnn_lp::checkpoint::{CheckpointStore, GcPolicy};
 use zipnn_lp::codec::{
     stream_report, Codec, CompressOptions, CompressedBlob, Compressor, Strategy, TensorInput,
 };
@@ -48,6 +49,10 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
         print_usage();
         return Ok(());
     };
+    // `checkpoint` takes a positional action before its flags.
+    if cmd == "checkpoint" {
+        return cmd_checkpoint(rest);
+    }
     let flags = parse_flags(rest)?;
     match cmd.as_str() {
         "compress" => cmd_compress(&flags),
@@ -81,6 +86,11 @@ SUBCOMMANDS:
   decompress  --input FILE.zlpt|FILE.zlpc [--output FILE|DIR] [--threads 1]
               [--backing auto|mmap|pread]  (archives decode chunk-parallel)
   inspect     --input FILE.zlpt|FILE.zlpc [--backing auto|mmap|pread]
+  checkpoint  <list|compact|gc|fsck> --dir DIR [--format bf16] [--anchor 1000]
+              [--threads 1]
+              compact: [--id N (default: newest)]
+              gc:      [--keep-last 8 | --keep-bases]
+              fsck:    [--deep]  (deep re-reads archives and restores)
   train       --artifacts DIR [--steps 40] [--ckpt-every 10]
               [--ckpt-dir DIR] [--lr 0.1] [--seed 0]
   serve       --artifacts DIR [--requests 8] [--new-tokens 24]
@@ -98,7 +108,7 @@ fn parse_flags(rest: &[String]) -> Result<HashMap<String, String>, String> {
             return Err(format!("expected --flag, got '{k}'"));
         };
         // Boolean flags.
-        if matches!(key, "exponent-only" | "no-compression") {
+        if matches!(key, "exponent-only" | "no-compression" | "keep-bases" | "deep") {
             map.insert(key.to_string(), "true".to_string());
             continue;
         }
@@ -114,6 +124,89 @@ fn get<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str, Str
 
 fn get_or<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
     flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn cmd_checkpoint(rest: &[String]) -> Result<(), Box<dyn std::error::Error>> {
+    let Some((action, rest)) = rest.split_first() else {
+        return Err("checkpoint needs an action: list|compact|gc|fsck".into());
+    };
+    let flags = parse_flags(rest)?;
+    let dir = std::path::Path::new(get(&flags, "dir")?);
+    let format: FloatFormat = get_or(&flags, "format", "bf16").parse()?;
+    let anchor: usize = get_or(&flags, "anchor", "1000").parse()?;
+    let threads: usize = get_or(&flags, "threads", "1").parse()?;
+    let opts = CompressOptions::for_format(format).with_threads(threads);
+    let mut store = CheckpointStore::open(dir, opts, anchor)?;
+    if let Some(off) = store.recovery().truncated_at {
+        eprintln!("note: recovered manifest — torn tail truncated at byte {off}");
+    }
+    match action.as_str() {
+        "list" => {
+            let mut table = Table::new(&["ckpt", "kind", "file", "chain", "overall", "exp", "s+m"]);
+            for r in store.records() {
+                table.row(&[
+                    r.id.to_string(),
+                    format!("{:?}", r.kind),
+                    r.file.clone(),
+                    store.chain_len(r.id)?.to_string(),
+                    format!("{:.4}", r.ratio()),
+                    format!("{:.4}", r.exp_ratio),
+                    format!("{:.4}", r.sm_ratio),
+                ]);
+            }
+            println!("{}", table.render());
+            println!("{} checkpoint(s), next id {}", store.len(), store.next_id());
+            Ok(())
+        }
+        "compact" => {
+            let id: usize = match flags.get("id") {
+                Some(s) => s.parse()?,
+                None => store.records().last().ok_or("store is empty")?.id,
+            };
+            let before = store.chain_len(id)?;
+            let rec = store.compact(id)?;
+            let file = rec.file.clone();
+            println!(
+                "compacted checkpoint {id}: chain {before} -> {}, archive {file}",
+                store.chain_len(id)?
+            );
+            Ok(())
+        }
+        "gc" => {
+            let policy = if flags.contains_key("keep-bases") {
+                GcPolicy::KeepBases
+            } else {
+                GcPolicy::KeepLast(get_or(&flags, "keep-last", "8").parse()?)
+            };
+            let removed = store.gc(policy)?;
+            println!("removed {} checkpoint(s): {removed:?}", removed.len());
+            Ok(())
+        }
+        "fsck" => {
+            let deep = flags.contains_key("deep");
+            let report = store.fsck(deep)?;
+            println!(
+                "checked {} checkpoint(s) ({})",
+                report.checked,
+                if report.deep { "deep" } else { "shallow" }
+            );
+            for o in &report.orphans {
+                println!("orphan: {o}");
+            }
+            for e in &report.errors {
+                println!("error: {e}");
+            }
+            if report.is_clean() {
+                println!("store is clean");
+                Ok(())
+            } else {
+                Err(format!("fsck found {} error(s)", report.errors.len()).into())
+            }
+        }
+        other => {
+            Err(format!("unknown checkpoint action '{other}' (try list|compact|gc|fsck)").into())
+        }
+    }
 }
 
 fn cmd_compress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {

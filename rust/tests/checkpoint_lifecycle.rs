@@ -1,0 +1,462 @@
+//! Crash-recovery property tests for the checkpoint lifecycle
+//! (requires `--features fault-inject`).
+//!
+//! The core harness runs a fixed append/compact/GC workload through the
+//! [`FaultFs`] shim once cleanly, recording the cumulative byte offset of
+//! every write, then replays the same deterministic workload once per
+//! recorded offset with the I/O killed at that byte — tearing the final
+//! write exactly there — simulates power loss, reopens the store through
+//! the real filesystem, and asserts the recovery invariants:
+//!
+//! 1. every checkpoint whose mutation was acked (journal fsync returned)
+//!    is still visible and restores **bit-exactly**, unless a pending GC
+//!    was entitled to remove it;
+//! 2. the recovered store exposes nothing beyond the acked state plus, at
+//!    most, the single in-flight operation's effect;
+//! 3. checkpoint numbering resumes strictly above every acked id.
+//!
+//! The sweep runs across BF16 and FP8 E4M3 tensor sets. Additional tests
+//! cover lying-fsync hardware and `ArchiveReader` corruption parity on
+//! mmap vs pread backings.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use zipnn_lp::checkpoint::fault::{FaultFs, FaultSpec};
+use zipnn_lp::checkpoint::{CheckpointStore, CkptKind, GcPolicy, NamedTensor, StoreIo};
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
+use zipnn_lp::container::{
+    ArchiveReader, ArchiveWriter, ReadBacking, TensorMeta, ARCHIVE_TAIL_LEN, MMAP_SUPPORTED,
+};
+use zipnn_lp::error::Error;
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::synthetic;
+use zipnn_lp::util::rng::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("zipnn_lp_lifecycle_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts_for(format: FloatFormat) -> CompressOptions {
+    CompressOptions::for_format(format).with_chunk_size(4096)
+}
+
+/// Initial weights for the workload: two small named tensors.
+fn fresh(format: FloatFormat, seed: u64) -> Vec<NamedTensor> {
+    match format {
+        FloatFormat::Bf16 => vec![
+            ("layer.w1".to_string(), synthetic::gaussian_bf16_bytes(900, 0.02, seed)),
+            ("layer.w2".to_string(), synthetic::gaussian_bf16_bytes(400, 0.05, seed + 1)),
+        ],
+        _ => {
+            let mut rng = Rng::new(seed);
+            let mut a = vec![0u8; 1200];
+            rng.fill_bytes(&mut a);
+            let mut b = vec![0u8; 500];
+            rng.fill_bytes(&mut b);
+            vec![("layer.w1".to_string(), a), ("layer.w2".to_string(), b)]
+        }
+    }
+}
+
+/// One deterministic training step: sparse in-place mutation.
+fn mutate(format: FloatFormat, data: &[u8], seed: u64) -> Vec<u8> {
+    match format {
+        FloatFormat::Bf16 => synthetic::perturb_bf16_bytes(data, 0.02, 0.3, seed),
+        _ => {
+            let mut rng = Rng::new(seed);
+            let mut out = data.to_vec();
+            for byte in out.iter_mut() {
+                if rng.next_f64() < 0.08 {
+                    *byte = (rng.next_u64() & 0xff) as u8;
+                }
+            }
+            out
+        }
+    }
+}
+
+fn step_weights(
+    format: FloatFormat,
+    prev: Option<&[NamedTensor]>,
+    step: usize,
+    seed: u64,
+) -> Vec<NamedTensor> {
+    match prev {
+        None => fresh(format, seed),
+        Some(p) => p
+            .iter()
+            .map(|(n, d)| (n.clone(), mutate(format, d, seed + 1000 + step as u64)))
+            .collect(),
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Append,
+    CompactTip,
+    Gc(GcPolicy),
+}
+
+/// Fixed workload: ids 0,1,2 appended (0 full, rest deltas), tip 2
+/// compacted to a new base, id 3 appended, GC drops {0,1}, id 4 appended.
+const OPS: &[Op] = &[
+    Op::Append,
+    Op::Append,
+    Op::Append,
+    Op::CompactTip,
+    Op::Append,
+    Op::Gc(GcPolicy::KeepLast(2)),
+    Op::Append,
+];
+
+/// Acked state the crashed store must recover to (the "shadow model").
+struct Outcome {
+    /// Checkpoints whose append was acked and not removed by an acked GC.
+    shadow: BTreeMap<usize, Vec<NamedTensor>>,
+    /// Ids the in-flight (errored) GC was entitled to remove.
+    pending_removals: Vec<usize>,
+    /// Id + content of the in-flight (errored) append, if any.
+    pending_append: Option<(usize, Vec<NamedTensor>)>,
+    /// Highest id ever acked.
+    max_acked: Option<usize>,
+    /// Index of the op that hit the injected fault (None = clean run).
+    failed_at: Option<usize>,
+}
+
+/// Ids a GC policy may remove, ignoring chain-closure protection (a
+/// superset of what [`CheckpointStore::gc`] actually removes — slack the
+/// recovery invariant is allowed).
+fn gc_candidates(store: &CheckpointStore, policy: GcPolicy) -> Vec<usize> {
+    let ids: Vec<usize> = store.records().iter().map(|r| r.id).collect();
+    match policy {
+        GcPolicy::KeepLast(n) => {
+            let keep: BTreeSet<usize> = ids.iter().rev().take(n).copied().collect();
+            ids.into_iter().filter(|i| !keep.contains(i)).collect()
+        }
+        GcPolicy::KeepBases => store
+            .records()
+            .iter()
+            .filter(|r| r.kind != CkptKind::Full)
+            .map(|r| r.id)
+            .collect(),
+    }
+}
+
+fn run_workload(dir: &Path, io: Arc<dyn StoreIo>, format: FloatFormat, seed: u64) -> Outcome {
+    let mut out = Outcome {
+        shadow: BTreeMap::new(),
+        pending_removals: Vec::new(),
+        pending_append: None,
+        max_acked: None,
+        failed_at: None,
+    };
+    let mut store = match CheckpointStore::open_with_io(dir, opts_for(format), 100, io) {
+        Ok(s) => s,
+        Err(_) => {
+            out.failed_at = Some(0);
+            return out;
+        }
+    };
+    let mut weights: Option<Vec<NamedTensor>> = None;
+    for (i, op) in OPS.iter().enumerate() {
+        match op {
+            Op::Append => {
+                let next = step_weights(format, weights.as_deref(), i, seed);
+                let id = store.next_id();
+                match store.append(&next) {
+                    Ok(rec) => {
+                        let rid = rec.id;
+                        out.shadow.insert(rid, next.clone());
+                        out.max_acked = Some(out.max_acked.map_or(rid, |m| m.max(rid)));
+                        weights = Some(next);
+                    }
+                    Err(_) => {
+                        out.pending_append = Some((id, next));
+                        out.failed_at = Some(i);
+                        return out;
+                    }
+                }
+            }
+            Op::CompactTip => {
+                let Some(tip) = store.records().last().map(|r| r.id) else {
+                    continue;
+                };
+                if store.compact(tip).is_err() {
+                    out.failed_at = Some(i);
+                    return out;
+                }
+            }
+            Op::Gc(policy) => {
+                let candidates = gc_candidates(&store, *policy);
+                match store.gc(*policy) {
+                    Ok(removed) => {
+                        for id in removed {
+                            out.shadow.remove(&id);
+                        }
+                    }
+                    Err(_) => {
+                        out.pending_removals = candidates;
+                        out.failed_at = Some(i);
+                        return out;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reopen `dir` through the real filesystem and assert the recovery
+/// invariants against the shadow model. `durable` is false for the
+/// lying-fsync scenario, where acked state may legitimately be lost and
+/// only the subset + bit-exactness + monotonicity bounds apply.
+fn check_recovery(dir: &Path, out: &Outcome, format: FloatFormat, durable: bool) {
+    let mut store = CheckpointStore::open(dir, opts_for(format), 100)
+        .expect("post-crash open must always succeed");
+    if durable {
+        for (id, tensors) in &out.shadow {
+            match store.record(*id) {
+                Ok(_) => assert!(
+                    store.verify(*id, tensors).unwrap(),
+                    "acked checkpoint {id} does not restore bit-exactly"
+                ),
+                Err(_) => assert!(
+                    out.pending_removals.contains(id),
+                    "acked checkpoint {id} vanished with no GC in flight"
+                ),
+            }
+        }
+    }
+    let visible: Vec<usize> = store.records().iter().map(|r| r.id).collect();
+    for id in &visible {
+        if out.shadow.contains_key(id) {
+            if !durable {
+                assert!(
+                    store.verify(*id, &out.shadow[id]).unwrap(),
+                    "visible checkpoint {id} does not restore bit-exactly"
+                );
+            }
+            continue;
+        }
+        match &out.pending_append {
+            Some((pid, tensors)) if pid == id => assert!(
+                store.verify(*id, tensors).unwrap(),
+                "in-flight checkpoint {id} is visible but not bit-exact"
+            ),
+            _ => panic!("recovered store exposes unexpected checkpoint {id}"),
+        }
+    }
+    // Numbering resumes monotonically: strictly above every acked id and
+    // every visible id.
+    let probe = fresh(format, 999_999);
+    let new_id = store.append(&probe).expect("recovered store must accept appends").id;
+    if durable {
+        if let Some(m) = out.max_acked {
+            assert!(new_id > m, "new id {new_id} reuses acked numbering (max acked {m})");
+        }
+    }
+    for v in &visible {
+        assert!(new_id > *v, "new id {new_id} not above visible id {v}");
+    }
+    assert!(store.verify(new_id, &probe).unwrap());
+}
+
+/// Every recorded write boundary plus the byte just before it (tearing
+/// the write's final byte), down-sampled to keep the sweep bounded.
+fn kill_points(offsets: &[u64]) -> Vec<u64> {
+    let mut set = BTreeSet::new();
+    for &b in offsets {
+        set.insert(b);
+        if b > 0 {
+            set.insert(b - 1);
+        }
+    }
+    let all: Vec<u64> = set.into_iter().collect();
+    const MAX_POINTS: usize = 200;
+    if all.len() <= MAX_POINTS {
+        return all;
+    }
+    let stride = all.len().div_ceil(MAX_POINTS);
+    let mut sampled: Vec<u64> = all.iter().step_by(stride).copied().collect();
+    // Always keep the final boundaries — the GC/compact endgame.
+    for &b in all.iter().rev().take(8) {
+        if !sampled.contains(&b) {
+            sampled.push(b);
+        }
+    }
+    sampled.sort_unstable();
+    sampled
+}
+
+fn fault_sweep(format: FloatFormat, seed: u64, tag: &str) {
+    let base = tmpdir(tag);
+    // Clean run through the shim: learns the write schedule and pins the
+    // expected end state.
+    let clean_dir = base.join("clean");
+    let fs = FaultFs::new();
+    let out = run_workload(&clean_dir, Arc::new(fs.clone()), format, seed);
+    assert_eq!(out.failed_at, None, "clean run must not fail");
+    assert_eq!(
+        out.shadow.keys().copied().collect::<Vec<_>>(),
+        vec![2, 3, 4],
+        "workload end state changed — update the test's expectations"
+    );
+    check_recovery(&clean_dir, &out, format, true);
+    let points = kill_points(&fs.write_offsets());
+    assert!(points.len() >= 20, "suspiciously few write points: {}", points.len());
+    for (i, &k) in points.iter().enumerate() {
+        let dir = base.join(format!("k{i}"));
+        let fs = FaultFs::new();
+        fs.arm(FaultSpec { kill_at_write_byte: Some(k), ..FaultSpec::default() });
+        let out = run_workload(&dir, Arc::new(fs.clone()), format, seed);
+        fs.crash().unwrap();
+        check_recovery(&dir, &out, format, true);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn crash_sweep_recovers_bf16_store_at_every_write_boundary() {
+    fault_sweep(FloatFormat::Bf16, 41, "sweep_bf16");
+}
+
+#[test]
+fn crash_sweep_recovers_fp8_e4m3_store_at_every_write_boundary() {
+    fault_sweep(FloatFormat::Fp8E4M3, 43, "sweep_fp8");
+}
+
+#[test]
+fn lying_fsync_loses_only_the_unsynced_suffix() {
+    let dir = tmpdir("dropfsync");
+    let fs = FaultFs::new();
+    let io: Arc<dyn StoreIo> = Arc::new(fs.clone());
+    let format = FloatFormat::Bf16;
+    let mut store = CheckpointStore::open_with_io(&dir, opts_for(format), 100, io).unwrap();
+    // Two checkpoints written with honored fsyncs: durable.
+    let w0 = fresh(format, 7);
+    let w1 = step_weights(format, Some(&w0), 1, 7);
+    store.append(&w0).unwrap();
+    store.append(&w1).unwrap();
+    // From here on every fsync silently does nothing.
+    fs.arm(FaultSpec { drop_fsync: true, ..FaultSpec::default() });
+    let w2 = step_weights(format, Some(&w1), 2, 7);
+    let w3 = step_weights(format, Some(&w2), 3, 7);
+    store.append(&w2).unwrap();
+    store.append(&w3).unwrap();
+    assert_eq!(store.len(), 4);
+    drop(store);
+    fs.crash().unwrap();
+    // Only the fsync-honored prefix survives; it restores bit-exactly and
+    // numbering resumes after it.
+    let mut store = CheckpointStore::open(&dir, opts_for(format), 100).unwrap();
+    let visible: Vec<usize> = store.records().iter().map(|r| r.id).collect();
+    assert_eq!(visible, vec![0, 1], "exactly the durable prefix survives");
+    assert!(store.verify(0, &w0).unwrap());
+    assert!(store.verify(1, &w1).unwrap());
+    let rec_id = store.append(&w2).unwrap().id;
+    assert_eq!(rec_id, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Build one v2 archive through the shim, returning its bytes.
+fn write_archive(
+    fs: &FaultFs,
+    path: &Path,
+    blob: &zipnn_lp::codec::CompressedBlob,
+) -> zipnn_lp::Result<()> {
+    let f = fs.create(path)?;
+    let mut w = ArchiveWriter::new(f)?;
+    w.add(TensorMeta { name: "t".into(), shape: vec![9000] }, blob)?;
+    let mut f = w.finish()?;
+    f.sync()
+}
+
+#[test]
+fn archive_corruption_classifies_identically_on_mmap_and_pread() {
+    let dir = tmpdir("backing_parity");
+    let path = dir.join("a.zlp");
+    let session = Compressor::new(opts_for(FloatFormat::Bf16).with_chunk_size(2048));
+    let data = synthetic::gaussian_bf16_bytes(9000, 0.02, 77);
+    let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+    let fs = FaultFs::new();
+    write_archive(&fs, &path, &blob).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let n = good.len();
+    let footer_offset =
+        u64::from_le_bytes(good[n - ARCHIVE_TAIL_LEN..n - ARCHIVE_TAIL_LEN + 8].try_into().unwrap())
+            as usize;
+    let backings: Vec<ReadBacking> = if MMAP_SUPPORTED {
+        vec![ReadBacking::Pread, ReadBacking::Mmap]
+    } else {
+        vec![ReadBacking::Pread]
+    };
+
+    // Torn writes, produced by the shim's kill point rather than manual
+    // truncation: the archive build dies mid-write, leaving exactly the
+    // prefix on disk. Each damaged file must be a typed `Corrupt` carrying
+    // a byte offset — identically on every backing.
+    let cuts: [u64; 4] = [
+        (n - 6) as u64,                       // inside the 16-byte tail (footer CRC cut)
+        (footer_offset + 3) as u64,           // mid-directory
+        footer_offset.saturating_sub(5) as u64, // mid-chunk data
+        10,                                   // barely past the header
+    ];
+    for cut in cuts {
+        fs.arm(FaultSpec { kill_at_write_byte: Some(cut), ..FaultSpec::default() });
+        assert!(write_archive(&fs, &path, &blob).is_err(), "kill at {cut} must tear the build");
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), cut, "torn file keeps the prefix");
+        for b in &backings {
+            let e = ArchiveReader::open_with(&path, *b).unwrap_err();
+            assert!(matches!(e, Error::Corrupt(_)), "cut {cut} on {b:?}: wrong variant: {e}");
+            assert!(e.to_string().contains("byte"), "cut {cut} on {b:?}: no byte offset: {e}");
+        }
+    }
+
+    // Footer bitflip: caught by the footer CRC at open, on every backing.
+    fs.arm(FaultSpec::default());
+    let mut bad = good.clone();
+    bad[footer_offset + 2] ^= 0x01;
+    {
+        let mut f = fs.create(&path).unwrap();
+        f.write_all(&bad).unwrap();
+        f.sync().unwrap();
+    }
+    for b in &backings {
+        let e = ArchiveReader::open_with(&path, *b).unwrap_err();
+        assert!(matches!(e, Error::Corrupt(_)), "footer flip on {b:?}: {e}");
+    }
+
+    // Chunk-data bitflip: the footer is intact so the archive opens, but
+    // the chunk CRC rejects the read — on every backing.
+    let mut bad = good.clone();
+    bad[16] ^= 0x40;
+    {
+        let mut f = fs.create(&path).unwrap();
+        f.write_all(&bad).unwrap();
+        f.sync().unwrap();
+    }
+    for b in &backings {
+        let reader = ArchiveReader::open_with(&path, *b).unwrap();
+        assert!(reader.read_tensor("t").is_err(), "data flip undetected on {b:?}");
+    }
+
+    // And the pristine bytes round-trip on every backing, proving the
+    // damage (not the harness) caused the failures above.
+    {
+        let mut f = fs.create(&path).unwrap();
+        f.write_all(&good).unwrap();
+        f.sync().unwrap();
+    }
+    for b in &backings {
+        let reader = ArchiveReader::open_with(&path, *b).unwrap();
+        assert_eq!(reader.read_tensor("t").unwrap(), data, "pristine read on {b:?}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
