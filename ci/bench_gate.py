@@ -16,7 +16,12 @@ run regresses against the committed baseline:
     stay >= 2x the serial reader) not meeting that floor -- no margin, it is
     a hard floor;
   * any baseline row with no matching current row (a bench silently dropping
-    a measurement is itself a regression).
+    a measurement is itself a regression);
+  * (schema >= 3) the embedded metric-registry snapshot missing, malformed,
+    or not covering the instrumented subsystems (codec session, worker pool,
+    archive reader) with the right metric shapes;
+  * (schema >= 3) the measured span-tracing overhead on the decode hot loop
+    exceeding the 1% contract (--span-overhead-max).
 
 Override: set BENCH_GATE_OVERRIDE=1 to demote failures to warnings (exit 0).
 CI wires this to the `bench-override` PR label; use it for known-noisy
@@ -49,6 +54,72 @@ def index(rows, fields):
     return {tuple(row.get(f) for f in fields): row for row in rows}
 
 
+# Required shape of every metric object in the embedded registry snapshot,
+# keyed by its "type" tag (mirrors obs::export::json_fragment).
+METRIC_SHAPES = {
+    "counter": {"type", "value"},
+    "gauge": {"type", "value", "high_water"},
+    "histogram": {"type", "count", "sum", "min", "p50", "p95", "p99", "max", "mean"},
+}
+
+# Instrumented subsystems the bench run must have populated: one
+# representative metric (and its kind) per hot path wired into obs.
+REQUIRED_METRICS = {
+    "codec.compress_ns": "histogram",
+    "codec.decompress_ns": "histogram",
+    "exec.tasks_total": "counter",
+    "archive.chunk_reads_total": "counter",
+}
+
+
+def check_metrics(cur, failures):
+    """Validate the embedded registry snapshot; returns checks performed."""
+    if cur.get("schema", 0) < 3:
+        print("bench-gate: current schema < 3, skipping metrics checks")
+        return 0
+    checks = 0
+    metrics = cur.get("metrics")
+    if not isinstance(metrics, dict):
+        failures.append("metrics: embedded registry snapshot missing or not an object")
+        return 1
+    for name, value in sorted(metrics.items()):
+        checks += 1
+        kind = value.get("type") if isinstance(value, dict) else None
+        required = METRIC_SHAPES.get(kind)
+        if required is None:
+            failures.append(f"metrics[{name}]: unknown metric type {kind!r}")
+            continue
+        missing = required - set(value)
+        if missing:
+            failures.append(f"metrics[{name}]: missing fields {sorted(missing)}")
+    for name, kind in sorted(REQUIRED_METRICS.items()):
+        checks += 1
+        value = metrics.get(name)
+        if not isinstance(value, dict) or value.get("type") != kind:
+            failures.append(
+                f"metrics[{name}]: required {kind} absent from snapshot "
+                "(instrumented subsystem went silent)"
+            )
+    return checks
+
+
+def check_span_overhead(cur, failures, max_ratio):
+    """Enforce the span-overhead contract; returns checks performed."""
+    if cur.get("schema", 0) < 3:
+        return 0
+    overhead = cur.get("span_overhead")
+    if not isinstance(overhead, dict):
+        failures.append("span_overhead: section missing (schema >= 3 requires it)")
+        return 1
+    ratio = overhead.get("overhead_ratio")
+    if not isinstance(ratio, (int, float)) or ratio > max_ratio:
+        failures.append(
+            f"span_overhead: overhead_ratio {ratio} above the "
+            f"{max_ratio:.2%} decode-hot-loop contract"
+        )
+    return 1
+
+
 def main():
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--baseline", default="BENCH_baseline.json")
@@ -64,6 +135,13 @@ def main():
         type=float,
         default=20.0,
         help="max allowed decode-throughput drop, percent (default 20)",
+    )
+    parser.add_argument(
+        "--span-overhead-max",
+        type=float,
+        default=0.01,
+        help="max allowed span-tracing overhead on the decode hot loop, "
+        "as a fraction (default 0.01 = 1%%)",
     )
     parser.add_argument(
         "--fig6",
@@ -151,6 +229,8 @@ def main():
         )
     else:
         print("bench-gate: --fig6 not given, skipping fig6_* checks")
+    checks += check_metrics(cur, failures)
+    checks += check_span_overhead(cur, failures, args.span_overhead_max)
 
     if failures:
         for f in failures:

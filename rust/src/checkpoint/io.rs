@@ -73,8 +73,17 @@ impl Write for RealFile {
 impl StoreFile for RealFile {
     fn sync(&mut self) -> Result<()> {
         self.0.sync_data()?;
+        fsync_total().incr();
         Ok(())
     }
+}
+
+/// Process-wide count of real fsyncs (`sync_data` on store files plus
+/// directory fsyncs) — the durability cost the crash-safety protocol pays.
+fn fsync_total() -> &'static std::sync::Arc<crate::metrics::Counter> {
+    static FSYNCS: std::sync::OnceLock<std::sync::Arc<crate::metrics::Counter>> =
+        std::sync::OnceLock::new();
+    FSYNCS.get_or_init(|| crate::obs::global().counter("ckpt.fsync_total"))
 }
 
 impl StoreIo for RealFs {
@@ -136,7 +145,10 @@ impl StoreIo for RealFs {
         // Directory fsync makes renames/unlinks durable on Unix. Other
         // platforms have no equivalent portable call; best-effort there.
         #[cfg(unix)]
-        std::fs::File::open(dir)?.sync_all()?;
+        {
+            std::fs::File::open(dir)?.sync_all()?;
+            fsync_total().incr();
+        }
         #[cfg(not(unix))]
         let _ = dir;
         Ok(())

@@ -27,10 +27,13 @@ use crate::codec::{CompressOptions, Compressor, TensorInput};
 use crate::container::{ArchiveReader, ArchiveWriter, TensorMeta};
 use crate::error::{Error, Result};
 use crate::formats::StreamKind;
+use crate::metrics::Counter;
+use crate::obs::{self, Histogram};
 use crate::util::crc32::crc32;
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 /// Default bound on delta-chain length enforced by loads (and by the
 /// append-side guard, which forces a full checkpoint rather than extend a
@@ -69,6 +72,35 @@ impl FsckReport {
     pub fn is_clean(&self) -> bool {
         self.errors.is_empty()
     }
+}
+
+/// Store-lifecycle metric handles on the global registry, fetched once.
+struct CkptMetrics {
+    append_ns: Arc<Histogram>,
+    load_ns: Arc<Histogram>,
+    compact_ns: Arc<Histogram>,
+    gc_ns: Arc<Histogram>,
+    fsck_ns: Arc<Histogram>,
+    recovered: Arc<Counter>,
+}
+
+fn ckpt_metrics() -> &'static CkptMetrics {
+    static METRICS: OnceLock<CkptMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let reg = obs::global();
+        CkptMetrics {
+            append_ns: reg.histogram("ckpt.append_ns"),
+            load_ns: reg.histogram("ckpt.load_ns"),
+            compact_ns: reg.histogram("ckpt.compact_ns"),
+            gc_ns: reg.histogram("ckpt.gc_ns"),
+            fsck_ns: reg.histogram("ckpt.fsck_ns"),
+            recovered: reg.counter("ckpt.recovered_total"),
+        }
+    })
+}
+
+fn elapsed_ns(start: Instant) -> u64 {
+    u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX)
 }
 
 /// Directory-backed delta-checkpoint store with a crash-safe lifecycle.
@@ -118,6 +150,9 @@ impl CheckpointStore {
         }
         io.create_dir_all(dir)?;
         let (manifest, recovery) = Manifest::open(dir, io.as_ref())?;
+        if recovery.truncated_at.is_some() {
+            ckpt_metrics().recovered.incr();
+        }
         Ok(CheckpointStore {
             dir: dir.to_path_buf(),
             io,
@@ -190,6 +225,8 @@ impl CheckpointStore {
     /// built under a temp name, fsynced, renamed into place, and only then
     /// journaled — the checkpoint is durable when this returns.
     pub fn append(&mut self, tensors: &[NamedTensor]) -> Result<&CkptRecord> {
+        let _span = crate::span!("ckpt.append");
+        let op_start = Instant::now();
         let id = self.manifest.next_id;
         let prev = self.manifest.records.last().map(|r| r.id);
         let make_full = match prev {
@@ -283,6 +320,7 @@ impl CheckpointStore {
                 self.compact(id)?;
             }
         }
+        ckpt_metrics().append_ns.record(elapsed_ns(op_start));
         Ok(self.manifest.find(id).expect("appended record present"))
     }
 
@@ -291,8 +329,12 @@ impl CheckpointStore {
     /// with a typed [`Error::Checkpoint`] if the chain is longer than
     /// [`with_max_chain_len`](Self::with_max_chain_len) allows.
     pub fn load(&self, id: usize) -> Result<Vec<NamedTensor>> {
+        let _span = crate::span!("ckpt.load");
+        let op_start = Instant::now();
         self.chain_checked(id)?;
-        self.load_unguarded(id)
+        let tensors = self.load_unguarded(id)?;
+        ckpt_metrics().load_ns.record(elapsed_ns(op_start));
+        Ok(tensors)
     }
 
     /// Number of records on the delta chain of checkpoint `id`, including
@@ -393,6 +435,8 @@ impl CheckpointStore {
     /// `max_chain_len` guard does not apply here — compaction is the
     /// repair for a chain the guard refuses to load.
     pub fn compact(&mut self, id: usize) -> Result<&CkptRecord> {
+        let _span = crate::span!("ckpt.compact");
+        let op_start = Instant::now();
         let old = self.record(id)?.clone();
         if old.kind == CkptKind::Full {
             return Ok(self.manifest.find(id).expect("record just found"));
@@ -432,6 +476,7 @@ impl CheckpointStore {
         // The old delta archive is unreferenced once the swap is durable.
         // Deletion failure just leaves an orphan for the next gc sweep.
         self.io.remove(&self.dir.join(&old.file)).ok();
+        ckpt_metrics().compact_ns.record(elapsed_ns(op_start));
         Ok(self.manifest.find(id).expect("swapped record present"))
     }
 
@@ -443,6 +488,8 @@ impl CheckpointStore {
     /// commit and deletion leaves orphan files, which this method (and any
     /// later call) sweeps.
     pub fn gc(&mut self, policy: GcPolicy) -> Result<Vec<usize>> {
+        let _span = crate::span!("ckpt.gc");
+        let op_start = Instant::now();
         let mut keep: BTreeSet<usize> = BTreeSet::new();
         match policy {
             GcPolicy::KeepLast(n) => {
@@ -481,6 +528,7 @@ impl CheckpointStore {
             self.manifest.rewrite(self.io.as_ref())?;
         }
         self.sweep_orphans();
+        ckpt_metrics().gc_ns.record(elapsed_ns(op_start));
         Ok(removed)
     }
 
@@ -490,6 +538,8 @@ impl CheckpointStore {
     /// archive (whole-file CRC against the manifest) and restores every
     /// checkpoint end to end. Orphan files are reported either way.
     pub fn fsck(&self, deep: bool) -> Result<FsckReport> {
+        let _span = crate::span!("ckpt.fsck");
+        let op_start = Instant::now();
         let mut report =
             FsckReport { checked: 0, deep, orphans: Vec::new(), errors: Vec::new() };
         let live: BTreeSet<&str> =
@@ -555,6 +605,7 @@ impl CheckpointStore {
                 }
             }
         }
+        ckpt_metrics().fsck_ns.record(elapsed_ns(op_start));
         Ok(report)
     }
 
@@ -1146,6 +1197,34 @@ mod tests {
         std::fs::remove_file(&f1).unwrap();
         let shallow = store.fsck(false).unwrap();
         assert!(shallow.errors.iter().any(|e| e.contains("missing")), "{:?}", shallow.errors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lifecycle_reports_global_metrics() {
+        let reg = crate::obs::global();
+        let append = reg.histogram("ckpt.append_ns");
+        let load = reg.histogram("ckpt.load_ns");
+        let fsck = reg.histogram("ckpt.fsck_ns");
+        let fsync = reg.counter("ckpt.fsync_total");
+        let a0 = append.summary().count;
+        let l0 = load.summary().count;
+        let k0 = fsck.summary().count;
+        let f0 = fsync.get();
+        let dir = tmpdir("obsmetrics");
+        let mut store = CheckpointStore::create(&dir, opts(), 100).unwrap();
+        let ckpts = training_run(2, 800, 37);
+        for c in &ckpts {
+            store.append(c).unwrap();
+        }
+        store.load(1).unwrap();
+        assert!(store.fsck(false).unwrap().is_clean());
+        // The global registry is shared by every test in the process, so
+        // only monotonic before/after deltas are safe to assert.
+        assert!(append.summary().count >= a0 + 2);
+        assert!(load.summary().count >= l0 + 1);
+        assert!(fsck.summary().count >= k0 + 1);
+        assert!(fsync.get() > f0, "durable appends must fsync");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -149,6 +149,7 @@ pub(crate) fn compress_with_strategy_pooled(
         .collect();
 
     let results: Vec<Result<(Vec<u8>, Vec<StreamStat>)>> = pool.run(ranges.len(), |i| {
+        let _span = crate::span!("codec.encode_chunk");
         let (s, e) = ranges[i];
         encode_chunk(&data[s..e], opts)
     });
@@ -284,6 +285,7 @@ pub(crate) fn decompress_chunks_into(
     }
     let slices = split_into_chunk_slots(out, &blob.chunks)?;
     let results: Vec<Result<()>> = pool.run(extents.len(), |i| {
+        let _span = crate::span!("codec.decode_chunk");
         let (off, enc_len, crc) = extents[i];
         let mut guard = slices[i].lock().unwrap();
         let dst: &mut [u8] = &mut guard[..];

@@ -32,6 +32,7 @@ use super::blob::CompressedBlob;
 use super::chunked::{
     compress_with_strategy_pooled, decode_chunk_bytes, decompress_chunk_into,
     decompress_into_pooled, decompress_pooled, effective_chunk_size, encode_chunk,
+    stream_report,
 };
 use super::delta::{decompress_delta_into_pooled, decompress_delta_pooled, xor_buffers};
 use super::fp4block::{compress_mxfp4, compress_nvfp4, decompress_mxfp4, decompress_nvfp4};
@@ -41,11 +42,87 @@ use crate::error::{Error, Result};
 use crate::exec::{Task, WorkerPool};
 use crate::formats::fp4::{Mxfp4Tensor, Nvfp4Tensor};
 use crate::formats::FloatFormat;
+use crate::metrics::Counter;
+use crate::obs::{self, Histogram};
 use crate::util::crc32::crc32;
 use crate::util::varint;
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Elapsed nanoseconds since `start`, saturating at `u64::MAX`.
+fn elapsed_ns(start: Instant) -> u64 {
+    u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Global-registry handles the session bumps. Fetched once per session so
+/// per-call recording is a few relaxed atomics, never a registry lock.
+#[derive(Clone, Debug)]
+struct SessionMetrics {
+    /// `codec.compress_ns` — per-call encode latency (buffered + stream).
+    compress_ns: Arc<Histogram>,
+    /// `codec.decompress_ns` — per-call decode latency (all decode paths).
+    decompress_ns: Arc<Histogram>,
+    /// `codec.bytes_in_total` — raw bytes compressed.
+    bytes_in: Arc<Counter>,
+    /// `codec.bytes_out_total` — encoded bytes produced (framing included).
+    bytes_out: Arc<Counter>,
+    /// `codec.decoded_bytes_total` — raw bytes reconstructed by decodes.
+    decoded_bytes: Arc<Counter>,
+    /// `codec.stream_chunks_total` — chunks moved through streaming calls.
+    stream_chunks: Arc<Counter>,
+    /// `codec.frames.*_total` — stream frames per chosen encoding, indexed
+    /// by wire id (`[huffman, huffman-dict, raw, constant, rans,
+    /// rans-dict]`, matching [`StreamReport::encoding_counts`]).
+    ///
+    /// [`StreamReport::encoding_counts`]: super::chunked::StreamReport::encoding_counts
+    encodings: [Arc<Counter>; 6],
+}
+
+impl SessionMetrics {
+    fn new() -> Self {
+        const ENCODING_NAMES: [&str; 6] = [
+            "codec.frames.huffman_total",
+            "codec.frames.huffman_dict_total",
+            "codec.frames.raw_total",
+            "codec.frames.constant_total",
+            "codec.frames.rans_total",
+            "codec.frames.rans_dict_total",
+        ];
+        let reg = obs::global();
+        SessionMetrics {
+            compress_ns: reg.histogram("codec.compress_ns"),
+            decompress_ns: reg.histogram("codec.decompress_ns"),
+            bytes_in: reg.counter("codec.bytes_in_total"),
+            bytes_out: reg.counter("codec.bytes_out_total"),
+            decoded_bytes: reg.counter("codec.decoded_bytes_total"),
+            stream_chunks: reg.counter("codec.stream_chunks_total"),
+            encodings: std::array::from_fn(|i| reg.counter(ENCODING_NAMES[i])),
+        }
+    }
+
+    fn record_compress(&self, ns: u64, blob: &CompressedBlob) {
+        self.compress_ns.record(ns);
+        self.bytes_in.add(blob.original_len as u64);
+        self.bytes_out.add(blob.encoded_len() as u64);
+        // Per-stream codec selection; FP4 block blobs have no stream frames.
+        if let Ok(reports) = stream_report(blob) {
+            for report in &reports {
+                for (counter, &n) in self.encodings.iter().zip(&report.encoding_counts) {
+                    if n > 0 {
+                        counter.add(n);
+                    }
+                }
+            }
+        }
+    }
+
+    fn record_decompress(&self, ns: u64, decoded: u64) {
+        self.decompress_ns.record(ns);
+        self.decoded_bytes.add(decoded);
+    }
+}
 
 /// Magic prefix of the streaming wire format.
 pub const STREAM_MAGIC: &[u8; 4] = b"ZLPS";
@@ -141,20 +218,21 @@ impl StreamSummary {
 pub struct Compressor {
     opts: CompressOptions,
     pool: Arc<WorkerPool>,
+    metrics: SessionMetrics,
 }
 
 impl Compressor {
     /// New session; sizes the worker pool from `opts.threads`.
     pub fn new(opts: CompressOptions) -> Self {
         let pool = Arc::new(WorkerPool::new(opts.threads));
-        Compressor { opts, pool }
+        Compressor { opts, pool, metrics: SessionMetrics::new() }
     }
 
     /// New session on an existing pool (e.g. one pool shared by several
     /// sessions with different options). `opts.threads` is ignored; the
     /// pool's size governs.
     pub fn with_pool(opts: CompressOptions, pool: Arc<WorkerPool>) -> Self {
-        Compressor { opts, pool }
+        Compressor { opts, pool, metrics: SessionMetrics::new() }
     }
 
     /// The session's options.
@@ -170,7 +248,9 @@ impl Compressor {
     /// Compress one tensor; the input form selects the strategy
     /// ([`TensorInput`]).
     pub fn compress(&self, input: TensorInput<'_>) -> Result<CompressedBlob> {
-        match input {
+        let _span = crate::span!("codec.compress");
+        let start = Instant::now();
+        let result = match input {
             TensorInput::Tensor(data) => compress_with_strategy_pooled(
                 data,
                 &self.opts,
@@ -187,7 +267,11 @@ impl Compressor {
                 let opts = self.opts.clone().with_codec(Codec::Raw);
                 compress_with_strategy_pooled(data, &opts, Strategy::Store, &self.pool)
             }
+        };
+        if let Ok(blob) = &result {
+            self.metrics.record_compress(elapsed_ns(start), blob);
         }
+        result
     }
 
     /// Convenience for the common case: [`TensorInput::Tensor`].
@@ -198,7 +282,11 @@ impl Compressor {
     /// Decompress a chunked blob (ExpMantissa / Store), allocating the
     /// output. Verifies every chunk CRC; chunk-parallel over the pool.
     pub fn decompress(&self, blob: &CompressedBlob) -> Result<Vec<u8>> {
-        decompress_pooled(blob, &self.pool)
+        let _span = crate::span!("codec.decompress");
+        let start = Instant::now();
+        let out = decompress_pooled(blob, &self.pool)?;
+        self.metrics.record_decompress(elapsed_ns(start), out.len() as u64);
+        Ok(out)
     }
 
     /// Zero-copy decompress: every chunk merges directly into its slice of
@@ -206,7 +294,11 @@ impl Compressor {
     /// ([`Error::InvalidInput`] otherwise). This is the allocation-lean
     /// decode path deployments should sit on.
     pub fn decompress_into(&self, blob: &CompressedBlob, out: &mut [u8]) -> Result<()> {
-        decompress_into_pooled(blob, out, &self.pool)
+        let _span = crate::span!("codec.decompress");
+        let start = Instant::now();
+        decompress_into_pooled(blob, out, &self.pool)?;
+        self.metrics.record_decompress(elapsed_ns(start), out.len() as u64);
+        Ok(())
     }
 
     /// Random access: decode only chunk `index` into `out` (exactly the
@@ -217,12 +309,20 @@ impl Compressor {
         index: usize,
         out: &mut [u8],
     ) -> Result<()> {
-        decompress_chunk_into(blob, index, out)
+        let _span = crate::span!("codec.decompress_chunk");
+        let start = Instant::now();
+        decompress_chunk_into(blob, index, out)?;
+        self.metrics.record_decompress(elapsed_ns(start), out.len() as u64);
+        Ok(())
     }
 
     /// Reconstruct a delta blob against its base, allocating the output.
     pub fn decompress_delta(&self, blob: &CompressedBlob, base: &[u8]) -> Result<Vec<u8>> {
-        decompress_delta_pooled(blob, base, &self.pool)
+        let _span = crate::span!("codec.decompress_delta");
+        let start = Instant::now();
+        let out = decompress_delta_pooled(blob, base, &self.pool)?;
+        self.metrics.record_decompress(elapsed_ns(start), out.len() as u64);
+        Ok(out)
     }
 
     /// Zero-copy delta reconstruction: chunks decode into `out`, then the
@@ -233,17 +333,29 @@ impl Compressor {
         base: &[u8],
         out: &mut [u8],
     ) -> Result<()> {
-        decompress_delta_into_pooled(blob, base, out, &self.pool)
+        let _span = crate::span!("codec.decompress_delta");
+        let start = Instant::now();
+        decompress_delta_into_pooled(blob, base, out, &self.pool)?;
+        self.metrics.record_decompress(elapsed_ns(start), out.len() as u64);
+        Ok(())
     }
 
     /// Decompress an NVFP4 block blob.
     pub fn decompress_nvfp4(&self, blob: &CompressedBlob) -> Result<Nvfp4Tensor> {
-        decompress_nvfp4(blob)
+        let _span = crate::span!("codec.decompress_fp4");
+        let start = Instant::now();
+        let out = decompress_nvfp4(blob)?;
+        self.metrics.record_decompress(elapsed_ns(start), blob.original_len as u64);
+        Ok(out)
     }
 
     /// Decompress an MXFP4 block blob.
     pub fn decompress_mxfp4(&self, blob: &CompressedBlob) -> Result<Mxfp4Tensor> {
-        decompress_mxfp4(blob)
+        let _span = crate::span!("codec.decompress_fp4");
+        let start = Instant::now();
+        let out = decompress_mxfp4(blob)?;
+        self.metrics.record_decompress(elapsed_ns(start), blob.original_len as u64);
+        Ok(out)
     }
 
     /// Chunk-parallel archive read: decode tensor `name` from `reader`
@@ -282,6 +394,8 @@ impl Compressor {
         mut reader: R,
         mut writer: W,
     ) -> Result<StreamSummary> {
+        let _span = crate::span!("codec.compress_stream");
+        let op_start = Instant::now();
         let chunk_size = effective_chunk_size(&self.opts)?;
         let window = self.pool.threads().max(1);
         let mut header = Vec::with_capacity(16);
@@ -341,6 +455,10 @@ impl Compressor {
         writer.write_all(&tail)?;
         writer.flush()?;
         encoded_len += tail.len() as u64;
+        self.metrics.compress_ns.record(elapsed_ns(op_start));
+        self.metrics.bytes_in.add(total_raw);
+        self.metrics.bytes_out.add(encoded_len);
+        self.metrics.stream_chunks.add(n_chunks);
         Ok(StreamSummary {
             original_len: total_raw,
             encoded_len,
@@ -365,6 +483,8 @@ impl Compressor {
         mut reader: R,
         mut writer: W,
     ) -> Result<StreamSummary> {
+        let _span = crate::span!("codec.decompress_stream");
+        let op_start = Instant::now();
         let mut magic = [0u8; 4];
         reader.read_exact(&mut magic)?;
         if &magic != STREAM_MAGIC {
@@ -489,6 +609,8 @@ impl Compressor {
             )));
         }
         writer.flush()?;
+        self.metrics.record_decompress(elapsed_ns(op_start), total_written);
+        self.metrics.stream_chunks.add(n_chunks);
         Ok(StreamSummary {
             original_len: total_written,
             encoded_len,
@@ -611,6 +733,45 @@ mod tests {
         let mut ok = vec![0u8; blob.chunks[0].raw_len];
         s.decompress_chunk_into(&blob, 0, &mut ok).unwrap();
         assert_eq!(ok, data[..blob.chunks[0].raw_len]);
+    }
+
+    #[test]
+    fn session_records_metrics() {
+        // Global registry: other tests compress concurrently, so assert
+        // monotonic deltas only.
+        let reg = crate::obs::global();
+        let bytes_in = reg.counter("codec.bytes_in_total");
+        let decoded = reg.counter("codec.decoded_bytes_total");
+        let compress_ns = reg.histogram("codec.compress_ns");
+        let decompress_ns = reg.histogram("codec.decompress_ns");
+        let frames: Vec<_> = [
+            "codec.frames.huffman_total",
+            "codec.frames.huffman_dict_total",
+            "codec.frames.raw_total",
+            "codec.frames.constant_total",
+            "codec.frames.rans_total",
+            "codec.frames.rans_dict_total",
+        ]
+        .iter()
+        .map(|n| reg.counter(n))
+        .collect();
+        let frames_before: u64 = frames.iter().map(|c| c.get()).sum();
+        let (in_before, dec_before) = (bytes_in.get(), decoded.get());
+        let (cns_before, dns_before) = (compress_ns.count(), decompress_ns.count());
+
+        let data = synthetic::gaussian_bf16_bytes(8_000, 0.02, 99);
+        let s = session(2);
+        let blob = s.compress_bytes(&data).unwrap();
+        let mut out = vec![0u8; data.len()];
+        s.decompress_into(&blob, &mut out).unwrap();
+
+        assert!(bytes_in.get() >= in_before + data.len() as u64);
+        assert!(decoded.get() >= dec_before + data.len() as u64);
+        assert!(compress_ns.count() >= cns_before + 1);
+        assert!(decompress_ns.count() >= dns_before + 1);
+        // Every chunk frame was attributed to some encoding backend.
+        let frames_after: u64 = frames.iter().map(|c| c.get()).sum();
+        assert!(frames_after > frames_before);
     }
 
     #[test]

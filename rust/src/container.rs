@@ -55,12 +55,45 @@ use crate::codec::{
 use crate::error::{Error, Result};
 use crate::exec::WorkerPool;
 use crate::formats::FloatFormat;
+use crate::metrics::Counter;
+use crate::obs::{self, Histogram};
 use crate::util::crc32::crc32;
 use crate::util::varint;
 use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+/// Global-registry handles for archive-read instrumentation, fetched once
+/// (readers are plentiful and short-lived; a per-reader field would just
+/// re-fetch the same globals).
+struct ArchiveMetrics {
+    /// `archive.chunk_reads_total` — spans served to decoders.
+    chunk_reads: Arc<Counter>,
+    /// `archive.read_bytes_{mmap,pread,memory}_total` — bytes served, by
+    /// backing.
+    bytes_mmap: Arc<Counter>,
+    bytes_pread: Arc<Counter>,
+    bytes_memory: Arc<Counter>,
+    /// `archive.read_tensor_ns` — whole-tensor decode latency (serial and
+    /// pooled paths).
+    read_tensor_ns: Arc<Histogram>,
+}
+
+fn archive_metrics() -> &'static ArchiveMetrics {
+    static METRICS: OnceLock<ArchiveMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let reg = obs::global();
+        ArchiveMetrics {
+            chunk_reads: reg.counter("archive.chunk_reads_total"),
+            bytes_mmap: reg.counter("archive.read_bytes_mmap_total"),
+            bytes_pread: reg.counter("archive.read_bytes_pread_total"),
+            bytes_memory: reg.counter("archive.read_bytes_memory_total"),
+            read_tensor_ns: reg.histogram("archive.read_tensor_ns"),
+        }
+    })
+}
 
 /// Archive magic.
 pub const ARCHIVE_MAGIC: &[u8; 4] = b"ZLPC";
@@ -967,6 +1000,14 @@ impl ArchiveReader {
     /// `len` bytes at `off` within a tensor's data region: a borrowed
     /// slice (mmap / loaded v1 data) or one positioned read (pread).
     fn read_span(&self, entry: &TensorEntry, off: u64, len: usize) -> Result<Cow<'_, [u8]>> {
+        let _span = crate::span!("archive.read_chunk");
+        let m = archive_metrics();
+        m.chunk_reads.incr();
+        match &self.backing {
+            Backing::Mmap(_) => m.bytes_mmap.add(len as u64),
+            Backing::File(_) => m.bytes_pread.add(len as u64),
+            Backing::Memory(_) => m.bytes_memory.add(len as u64),
+        }
         match &self.backing {
             Backing::Mmap(m) => m.span(entry.data_offset + off, len),
             Backing::File(file) => file.span(entry.data_offset + off, len),
@@ -1037,6 +1078,8 @@ impl ArchiveReader {
     }
 
     fn read_tensor_into_entry(&self, entry: &TensorEntry, out: &mut [u8]) -> Result<()> {
+        let _span = crate::span!("archive.read_tensor");
+        let start = std::time::Instant::now();
         if out.len() != entry.original_len {
             return Err(Error::InvalidInput(format!(
                 "output buffer is {} bytes, tensor decodes to {}",
@@ -1065,6 +1108,9 @@ impl ArchiveReader {
         if raw_off != out.len() {
             return Err(Error::Container("chunk directory short of tensor size".into()));
         }
+        archive_metrics()
+            .read_tensor_ns
+            .record(u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX));
         Ok(())
     }
 
@@ -1083,6 +1129,8 @@ impl ArchiveReader {
         out: &mut [u8],
         pool: &WorkerPool,
     ) -> Result<()> {
+        let _span = crate::span!("archive.read_tensor");
+        let start = std::time::Instant::now();
         let entry = self.chunked_entry(name)?;
         if out.len() != entry.original_len {
             return Err(Error::InvalidInput(format!(
@@ -1113,7 +1161,13 @@ impl ArchiveReader {
             }
             Ok(())
         });
-        results.into_iter().collect()
+        let result: Result<()> = results.into_iter().collect();
+        if result.is_ok() {
+            archive_metrics()
+                .read_tensor_ns
+                .record(u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX));
+        }
+        result
     }
 
     /// Allocating convenience over
@@ -1275,6 +1329,28 @@ mod tests {
             assert_eq!(decompress_tensor(blob).unwrap(), *data);
             assert_eq!(reader.read_tensor(name).unwrap(), *data);
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reader_reports_global_metrics() {
+        // Global registry, shared across concurrently running tests:
+        // monotonic-delta assertions only.
+        let m = archive_metrics();
+        let reads_before = m.chunk_reads.get();
+        let bytes_before = m.bytes_mmap.get() + m.bytes_pread.get() + m.bytes_memory.get();
+        let tensors_before = m.read_tensor_ns.count();
+        let (archive, raw) = sample_archive();
+        let path = tmpfile("metrics");
+        archive.save(&path).unwrap();
+        let reader = ArchiveReader::open(&path).unwrap();
+        let (name, data) = &raw[0];
+        assert_eq!(reader.read_tensor(name).unwrap(), *data);
+        assert!(m.chunk_reads.get() > reads_before);
+        let bytes_after = m.bytes_mmap.get() + m.bytes_pread.get() + m.bytes_memory.get();
+        // Served bytes at least cover this tensor's encoded chunks.
+        assert!(bytes_after >= bytes_before + reader.entry(name).unwrap().data_len());
+        assert!(m.read_tensor_ns.count() >= tensors_before + 1);
         std::fs::remove_file(&path).ok();
     }
 

@@ -21,11 +21,57 @@
 //! On a 1-thread pool `submit` runs the job inline — same results, no
 //! overlap — so callers never special-case the serial configuration.
 
+use crate::metrics::{Counter, Gauge};
+use crate::obs::{self, Histogram};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+/// Global-registry handles for pool instrumentation, fetched once: both
+/// [`worker_loop`] and [`Task::wait`] run without a `&WorkerPool`, so the
+/// handles live in a process-wide static rather than on the pool.
+struct ExecMetrics {
+    /// `exec.queue_depth` — jobs currently sitting in the shared queue.
+    queue_depth: Arc<Gauge>,
+    /// `exec.task_ns` — per-job execution latency.
+    task_ns: Arc<Histogram>,
+    /// `exec.tasks_total` — jobs executed (batch indices + submits).
+    tasks_total: Arc<Counter>,
+    /// `exec.busy_ns_total` — total ns spent inside jobs; divide by
+    /// `threads x wall-time` for worker utilization.
+    busy_ns_total: Arc<Counter>,
+    /// `exec.batches_total` — `run` batches that fanned out to helpers.
+    batches_total: Arc<Counter>,
+}
+
+fn exec_metrics() -> &'static ExecMetrics {
+    static METRICS: OnceLock<ExecMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let reg = obs::global();
+        ExecMetrics {
+            queue_depth: reg.gauge("exec.queue_depth"),
+            task_ns: reg.histogram("exec.task_ns"),
+            tasks_total: reg.counter("exec.tasks_total"),
+            busy_ns_total: reg.counter("exec.busy_ns_total"),
+            batches_total: reg.counter("exec.batches_total"),
+        }
+    })
+}
+
+/// Run one job under the task clock: latency into `exec.task_ns`, totals
+/// into `exec.tasks_total` / `exec.busy_ns_total`.
+fn timed_job<T>(f: impl FnOnce() -> T) -> T {
+    let start = std::time::Instant::now();
+    let out = f();
+    let ns = u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    let m = exec_metrics();
+    m.task_ns.record(ns);
+    m.tasks_total.incr();
+    m.busy_ns_total.add(ns);
+    out
+}
 
 /// A task shipped to a persistent worker. Lifetime-erased: the submitting
 /// call guarantees (by blocking on a latch) that every borrow in the task
@@ -147,9 +193,10 @@ impl WorkerPool {
         F: Fn(usize) -> T + Sync,
     {
         if self.threads <= 1 || n_jobs <= 1 {
-            return (0..n_jobs).map(f).collect();
+            return (0..n_jobs).map(|i| timed_job(|| f(i))).collect();
         }
         self.batches.fetch_add(1, Ordering::Relaxed);
+        exec_metrics().batches_total.incr();
         let next = AtomicUsize::new(0);
         let panicked = AtomicBool::new(false);
         let slots: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
@@ -162,7 +209,7 @@ impl WorkerPool {
                 if i >= n_jobs {
                     break;
                 }
-                match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                match catch_unwind(AssertUnwindSafe(|| timed_job(|| f(i)))) {
                     Ok(v) => *slots[i].lock().unwrap() = Some(v),
                     Err(_) => {
                         panicked.store(true, Ordering::SeqCst);
@@ -187,6 +234,7 @@ impl WorkerPool {
                 // strictly outlives its execution.
                 q.jobs.push_back(unsafe { erase_job_lifetime(task) });
             }
+            exec_metrics().queue_depth.add(helpers as u64);
             available.notify_all();
         }
         work();
@@ -220,16 +268,17 @@ impl WorkerPool {
             done: Condvar::new(),
         });
         if self.threads <= 1 {
-            TaskShared::finish(&shared, catch_unwind(AssertUnwindSafe(f)));
+            TaskShared::finish(&shared, catch_unwind(AssertUnwindSafe(|| timed_job(f))));
             return Task { shared, queue: std::sync::Weak::new() };
         }
         let job_shared = Arc::clone(&shared);
         let job: Job = Box::new(move || {
-            let result = catch_unwind(AssertUnwindSafe(f));
+            let result = catch_unwind(AssertUnwindSafe(|| timed_job(f)));
             TaskShared::finish(&job_shared, result);
         });
         let (queue, available) = &*self.shared;
         queue.lock().unwrap().jobs.push_back(job);
+        exec_metrics().queue_depth.add(1);
         available.notify_one();
         Task { shared, queue: Arc::downgrade(&self.shared) }
     }
@@ -302,6 +351,7 @@ impl<T> Task<T> {
                 .upgrade()
                 .and_then(|shared| shared.0.lock().unwrap().jobs.pop_front());
             if let Some(job) = job {
+                exec_metrics().queue_depth.sub(1);
                 job();
                 continue;
             }
@@ -356,7 +406,10 @@ fn worker_loop(shared: &(Mutex<Queue>, Condvar)) {
             }
         };
         match job {
-            Some(job) => job(),
+            Some(job) => {
+                exec_metrics().queue_depth.sub(1);
+                job();
+            }
             None => return,
         }
     }
@@ -461,6 +514,29 @@ mod tests {
         // The pool survives and keeps serving.
         assert_eq!(pool.submit(|| 5).wait(), 5);
         assert_eq!(pool.run(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn pool_reports_global_metrics() {
+        // The registry is process-global and other tests run pools
+        // concurrently, so assert monotonic deltas only — never exact
+        // totals or a drained queue depth.
+        let m = exec_metrics();
+        let tasks_before = m.tasks_total.get();
+        let busy_before = m.busy_ns_total.get();
+        let batches_before = m.batches_total.get();
+        let hist_before = m.task_ns.count();
+        let pool = WorkerPool::new(2);
+        pool.run(8, |i| i);
+        assert_eq!(pool.submit(|| 41 + 1).wait(), 42);
+        assert!(m.tasks_total.get() >= tasks_before + 9);
+        assert!(m.task_ns.count() >= hist_before + 9);
+        assert!(m.busy_ns_total.get() >= busy_before);
+        assert!(m.batches_total.get() >= batches_before + 1);
+        // Serial pools account through the same path.
+        let serial_before = m.tasks_total.get();
+        WorkerPool::serial().run(3, |i| i);
+        assert!(m.tasks_total.get() >= serial_before + 3);
     }
 
     #[test]

@@ -79,6 +79,7 @@ pub mod huffman;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod pool;
 pub mod rans;
 pub mod runtime;

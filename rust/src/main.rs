@@ -3,6 +3,8 @@
 //! Subcommands:
 //!
 //! * `compress` / `decompress` / `inspect` — offline tensor-file codec.
+//! * `stats` — decode a file end to end and report the metric registry the
+//!   run populated (table, JSON, or Prometheus text).
 //! * `checkpoint` — lifecycle operations on a delta-checkpoint store:
 //!   `list`, chain `compact`ion, retention `gc`, and `fsck`.
 //! * `train` — train the AOT model via PJRT, writing compressed delta
@@ -13,6 +15,12 @@
 //!
 //! Arg parsing is hand-rolled (the offline registry has no clap); flags are
 //! `--key value` pairs after the subcommand.
+//!
+//! Every data-path subcommand additionally accepts `--metrics-out PATH`
+//! (write the final registry snapshot; `.prom` extension selects Prometheus
+//! text, anything else the JSON document) and `--trace-out PATH` (record
+//! spans for the run and write Chrome `trace_event` JSON for
+//! `chrome://tracing` / Perfetto).
 
 use std::collections::HashMap;
 #[cfg(feature = "pjrt")]
@@ -54,11 +62,13 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
         return cmd_checkpoint(rest);
     }
     let flags = parse_flags(rest)?;
-    match cmd.as_str() {
+    telemetry_begin(&flags);
+    let result = match cmd.as_str() {
         "compress" => cmd_compress(&flags),
         "compress-model" => cmd_compress_model(&flags),
         "decompress" => cmd_decompress(&flags),
         "inspect" => cmd_inspect(&flags),
+        "stats" => cmd_stats(&flags),
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
         "info" => cmd_info(&flags),
@@ -67,7 +77,37 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
             Ok(())
         }
         other => Err(format!("unknown subcommand '{other}' (try 'help')").into()),
+    };
+    result.and_then(|()| telemetry_finish(&flags))
+}
+
+/// Enable span recording up front when the command will export a trace.
+fn telemetry_begin(flags: &HashMap<String, String>) {
+    if flags.contains_key("trace-out") {
+        zipnn_lp::obs::set_tracing(true);
     }
+}
+
+/// Write the `--metrics-out` and `--trace-out` artifacts, if requested.
+fn telemetry_finish(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::obs::export;
+    if let Some(path) = flags.get("metrics-out") {
+        let snap = zipnn_lp::obs::global().snapshot();
+        let text = if path.ends_with(".prom") {
+            export::prometheus_text(&snap)
+        } else {
+            export::json_document(&snap)
+        };
+        std::fs::write(path, text)?;
+        eprintln!("metrics written to {path}");
+    }
+    if let Some(path) = flags.get("trace-out") {
+        zipnn_lp::obs::set_tracing(false);
+        let events = zipnn_lp::obs::take_events();
+        std::fs::write(path, export::chrome_trace(&events))?;
+        eprintln!("{} span(s) written to {path}", events.len());
+    }
+    Ok(())
 }
 
 fn print_usage() {
@@ -85,7 +125,10 @@ SUBCOMMANDS:
               (per-tensor, HF safetensors)
   decompress  --input FILE.zlpt|FILE.zlpc [--output FILE|DIR] [--threads 1]
               [--backing auto|mmap|pread]  (archives decode chunk-parallel)
-  inspect     --input FILE.zlpt|FILE.zlpc [--backing auto|mmap|pread]
+  inspect     --input FILE.zlpt|FILE.zlpc [--backing auto|mmap|pread] [--json]
+  stats       --input FILE.zlpt|FILE.zlpc [--threads 1]
+              [--backing auto|mmap|pread] [--format table|json|prometheus]
+              (decodes the file end to end, then reports the metric registry)
   checkpoint  <list|compact|gc|fsck> --dir DIR [--format bf16] [--anchor 1000]
               [--threads 1]
               compact: [--id N (default: newest)]
@@ -96,7 +139,12 @@ SUBCOMMANDS:
   serve       --artifacts DIR [--requests 8] [--new-tokens 24]
               [--kv-format bf16|fp8|e5m2] [--no-compression] [--seed 0]
               [--kv-budget-mib 0 (unbounded)] [--pool-workers 1]
-  info        --artifacts DIR"
+  info        --artifacts DIR
+
+TELEMETRY (compress / decompress / inspect / stats / checkpoint):
+  --metrics-out PATH   write the final metric registry snapshot
+                       (.prom -> Prometheus text, else JSON)
+  --trace-out PATH     record spans and write Chrome trace_event JSON"
     );
 }
 
@@ -108,7 +156,7 @@ fn parse_flags(rest: &[String]) -> Result<HashMap<String, String>, String> {
             return Err(format!("expected --flag, got '{k}'"));
         };
         // Boolean flags.
-        if matches!(key, "exponent-only" | "no-compression" | "keep-bases" | "deep") {
+        if matches!(key, "exponent-only" | "no-compression" | "keep-bases" | "deep" | "json") {
             map.insert(key.to_string(), "true".to_string());
             continue;
         }
@@ -131,16 +179,25 @@ fn cmd_checkpoint(rest: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         return Err("checkpoint needs an action: list|compact|gc|fsck".into());
     };
     let flags = parse_flags(rest)?;
-    let dir = std::path::Path::new(get(&flags, "dir")?);
-    let format: FloatFormat = get_or(&flags, "format", "bf16").parse()?;
-    let anchor: usize = get_or(&flags, "anchor", "1000").parse()?;
-    let threads: usize = get_or(&flags, "threads", "1").parse()?;
+    telemetry_begin(&flags);
+    checkpoint_action(action, &flags)?;
+    telemetry_finish(&flags)
+}
+
+fn checkpoint_action(
+    action: &str,
+    flags: &HashMap<String, String>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let dir = std::path::Path::new(get(flags, "dir")?);
+    let format: FloatFormat = get_or(flags, "format", "bf16").parse()?;
+    let anchor: usize = get_or(flags, "anchor", "1000").parse()?;
+    let threads: usize = get_or(flags, "threads", "1").parse()?;
     let opts = CompressOptions::for_format(format).with_threads(threads);
     let mut store = CheckpointStore::open(dir, opts, anchor)?;
     if let Some(off) = store.recovery().truncated_at {
         eprintln!("note: recovered manifest — torn tail truncated at byte {off}");
     }
-    match action.as_str() {
+    match action {
         "list" => {
             let mut table = Table::new(&["ckpt", "kind", "file", "chain", "overall", "exp", "s+m"]);
             for r in store.records() {
@@ -176,7 +233,7 @@ fn cmd_checkpoint(rest: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             let policy = if flags.contains_key("keep-bases") {
                 GcPolicy::KeepBases
             } else {
-                GcPolicy::KeepLast(get_or(&flags, "keep-last", "8").parse()?)
+                GcPolicy::KeepLast(get_or(flags, "keep-last", "8").parse()?)
             };
             let removed = store.gc(policy)?;
             println!("removed {} checkpoint(s): {removed:?}", removed.len());
@@ -407,10 +464,14 @@ fn cmd_decompress_archive(
 
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let input = get(flags, "input")?;
+    let json = flags.contains_key("json");
     if &file_magic(input)? == zipnn_lp::container::ARCHIVE_MAGIC {
-        return cmd_inspect_archive(flags, input);
+        return cmd_inspect_archive(flags, input, json);
     }
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
+    if json {
+        return inspect_blob_json(&blob);
+    }
     println!("strategy:  {}", blob.strategy);
     println!("codec:     {}", blob.codec);
     println!("format:    {}", blob.format);
@@ -438,15 +499,59 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error
     Ok(())
 }
 
+/// `inspect --json`: blob metadata rendered through [`zipnn_lp::util::jsonout`],
+/// the same emitter every other machine-readable artifact uses.
+fn inspect_blob_json(blob: &CompressedBlob) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::util::jsonout;
+    // FP4-block layouts carry no per-stream frames; report an empty list.
+    let streams: Vec<String> = if blob.strategy == Strategy::Fp4Block {
+        Vec::new()
+    } else {
+        stream_report(blob)?
+            .iter()
+            .map(|r| {
+                jsonout::obj(&[
+                    ("stream", jsonout::string(r.kind.label())),
+                    ("original_bytes", jsonout::uint(r.original_bytes)),
+                    ("compressed_bytes", jsonout::uint(r.compressed_bytes)),
+                    ("ratio", jsonout::num(r.ratio())),
+                    ("encodings", jsonout::string(&r.encodings())),
+                ])
+            })
+            .collect()
+    };
+    println!(
+        "{}",
+        jsonout::obj(&[
+            ("schema", jsonout::uint(1)),
+            ("kind", jsonout::string("zipnn-inspect")),
+            ("strategy", jsonout::string(&blob.strategy.to_string())),
+            ("codec", jsonout::string(&blob.codec.to_string())),
+            ("format", jsonout::string(&blob.format.to_string())),
+            ("original_len", jsonout::uint(blob.original_len as u64)),
+            ("encoded_len", jsonout::uint(blob.encoded_len() as u64)),
+            ("ratio", jsonout::num(blob.ratio())),
+            ("chunk_size", jsonout::uint(blob.chunk_size as u64)),
+            ("chunks", jsonout::uint(blob.chunks.len() as u64)),
+            ("streams", jsonout::arr(&streams)),
+        ])
+    );
+    Ok(())
+}
+
 /// Archive inspection: directory metadata only — no chunk is read, which
 /// is the whole point of the trailing-footer format.
 fn cmd_inspect_archive(
     flags: &HashMap<String, String>,
     input: &str,
+    json: bool,
 ) -> Result<(), Box<dyn std::error::Error>> {
     use zipnn_lp::container::{ArchiveReader, ReadBacking};
     let backing: ReadBacking = get_or(flags, "backing", "auto").parse()?;
     let reader = ArchiveReader::open_with(std::path::Path::new(input), backing)?;
+    if json {
+        return inspect_archive_json(&reader);
+    }
     println!("archive:   v{} ({} backing)", reader.version(), reader.backing_kind());
     println!("tensors:   {}", reader.len());
     println!("original:  {}", human_bytes(reader.total_original()));
@@ -471,6 +576,122 @@ fn cmd_inspect_archive(
     }
     println!("{}", table.render());
     Ok(())
+}
+
+/// `inspect --json` for archives: directory metadata through
+/// [`zipnn_lp::util::jsonout`] (still no chunk reads).
+fn inspect_archive_json(
+    reader: &zipnn_lp::container::ArchiveReader,
+) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::util::jsonout;
+    let mut entries: Vec<String> = Vec::new();
+    for e in reader.entries() {
+        let ratio = if e.original_len == 0 {
+            1.0
+        } else {
+            e.data_len() as f64 / e.original_len as f64
+        };
+        entries.push(jsonout::obj(&[
+            ("name", jsonout::string(&e.meta.name)),
+            ("format", jsonout::string(&e.format.to_string())),
+            ("strategy", jsonout::string(&e.strategy.to_string())),
+            ("codec", jsonout::string(&e.codec.to_string())),
+            ("chunks", jsonout::uint(e.chunks.len() as u64)),
+            ("original_len", jsonout::uint(e.original_len as u64)),
+            ("encoded_len", jsonout::uint(e.data_len())),
+            ("ratio", jsonout::num(ratio)),
+        ]));
+    }
+    println!(
+        "{}",
+        jsonout::obj(&[
+            ("schema", jsonout::uint(1)),
+            ("kind", jsonout::string("zipnn-inspect-archive")),
+            ("version", jsonout::uint(u64::from(reader.version()))),
+            ("backing", jsonout::string(reader.backing_kind())),
+            ("tensors", jsonout::uint(reader.len() as u64)),
+            ("original_bytes", jsonout::uint(reader.total_original())),
+            ("encoded_bytes", jsonout::uint(reader.total_encoded())),
+            ("ratio", jsonout::num(reader.ratio())),
+            ("entries", jsonout::arr(&entries)),
+        ])
+    );
+    Ok(())
+}
+
+/// `stats`: decode `--input` end to end — the same hot paths `decompress`
+/// exercises, with nothing written to disk — then report the metric
+/// registry the run populated.
+fn cmd_stats(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let input = get(flags, "input")?;
+    let threads: usize = get_or(flags, "threads", "1").parse()?;
+    if &file_magic(input)? == zipnn_lp::container::ARCHIVE_MAGIC {
+        use zipnn_lp::container::{ArchiveReader, ReadBacking};
+        let backing: ReadBacking = get_or(flags, "backing", "auto").parse()?;
+        let reader = ArchiveReader::open_with(std::path::Path::new(input), backing)?;
+        let pool = zipnn_lp::exec::WorkerPool::new(threads);
+        let mut buf = Vec::new();
+        for entry in reader.entries() {
+            if !matches!(entry.strategy, Strategy::ExpMantissa | Strategy::Store) {
+                continue;
+            }
+            buf.resize(entry.original_len, 0);
+            reader.read_tensor_into_pooled(&entry.meta.name, &mut buf, &pool)?;
+        }
+    } else {
+        let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
+        let session =
+            Compressor::new(CompressOptions::for_format(blob.format).with_threads(threads));
+        let mut data = vec![0u8; blob.original_len];
+        session.decompress_into(&blob, &mut data)?;
+    }
+    let snap = zipnn_lp::obs::global().snapshot();
+    match get_or(flags, "format", "table") {
+        "table" => print_snapshot_table(&snap),
+        "json" => print!("{}", zipnn_lp::obs::export::json_document(&snap)),
+        "prometheus" => print!("{}", zipnn_lp::obs::export::prometheus_text(&snap)),
+        other => {
+            return Err(format!("--format must be table|json|prometheus, got {other}").into())
+        }
+    }
+    Ok(())
+}
+
+fn print_snapshot_table(snap: &zipnn_lp::obs::Snapshot) {
+    use zipnn_lp::obs::MetricValue;
+    let mut table = Table::new(&["metric", "kind", "value", "p50", "p95", "p99", "max"]);
+    for e in &snap.entries {
+        match &e.value {
+            MetricValue::Counter(v) => table.row(&[
+                e.name.clone(),
+                "counter".to_string(),
+                v.to_string(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]),
+            MetricValue::Gauge { value, high_water } => table.row(&[
+                e.name.clone(),
+                "gauge".to_string(),
+                format!("{value} (hw {high_water})"),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]),
+            MetricValue::Histogram(h) => table.row(&[
+                e.name.clone(),
+                "histogram".to_string(),
+                format!("n={}", h.count),
+                h.p50.to_string(),
+                h.p95.to_string(),
+                h.p99.to_string(),
+                h.max.to_string(),
+            ]),
+        }
+    }
+    println!("{}", table.render());
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -161,9 +161,15 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
-    /// Throughput given a per-iteration byte count.
+    /// Floor for [`BenchResult::mib_per_sec`]: iterations faster than the
+    /// timer can resolve (sub-nanosecond `min_secs`, seen on smoke-sized
+    /// inputs) are clamped here so throughput stays finite.
+    pub const MIN_MEASURABLE_SECS: f64 = 1e-9;
+
+    /// Throughput given a per-iteration byte count. Never infinite:
+    /// `min_secs` is clamped to [`BenchResult::MIN_MEASURABLE_SECS`].
     pub fn mib_per_sec(&self, bytes: usize) -> f64 {
-        bytes as f64 / (1024.0 * 1024.0) / self.min_secs
+        bytes as f64 / (1024.0 * 1024.0) / self.min_secs.max(Self::MIN_MEASURABLE_SECS)
     }
 }
 
@@ -225,14 +231,17 @@ mod tests {
 
     #[test]
     fn timer_advances() {
-        // Monotonicity only: wall-clock thresholds flake on slow CI machines.
+        // Monotonicity only: wall-clock thresholds flake on slow CI
+        // machines, and even sleep(1ms) can stall a loaded runner — spin
+        // until the clock visibly moves instead.
         let t = Timer::new();
         let first = t.secs();
-        std::thread::sleep(Duration::from_millis(1));
-        let second = t.secs();
+        let mut second = t.secs();
+        while second <= first {
+            second = t.secs();
+        }
         assert!(first >= 0.0);
-        assert!(second >= first, "timer went backwards: {first} -> {second}");
-        assert!(second > 0.0, "timer did not advance across a sleep");
+        assert!(second > first, "timer went backwards: {first} -> {second}");
     }
 
     #[test]
@@ -284,6 +293,16 @@ mod tests {
         assert_eq!(r.iters, 3);
         assert!(r.min_secs <= r.mean_secs);
         assert!(r.mib_per_sec(1024 * 1024) > 0.0);
+    }
+
+    #[test]
+    fn mib_per_sec_is_finite_at_zero_time() {
+        // Sub-resolution timers report min_secs == 0.0 on fast smoke runs;
+        // throughput must clamp instead of going infinite.
+        let r = BenchResult { min_secs: 0.0, mean_secs: 0.0, iters: 1 };
+        let tput = r.mib_per_sec(1024 * 1024);
+        assert!(tput.is_finite(), "throughput must be finite, got {tput}");
+        assert_eq!(tput, 1.0 / BenchResult::MIN_MEASURABLE_SECS);
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Exporters for [`Snapshot`]s and span traces: Prometheus text
+//! exposition, JSON via [`crate::util::jsonout`], and Chrome
+//! `trace_event` JSON loadable in `chrome://tracing` / Perfetto.
+//!
+//! All three render from immutable captured data ([`super::Registry::snapshot`],
+//! [`super::take_events`]) so they never touch metric hot paths.
+
+use super::{MetricValue, Snapshot, SpanEvent};
+use crate::util::jsonout;
+
+/// Map a dotted registry name onto the Prometheus grammar:
+/// `codec.compress_ns` → `zipnn_codec_compress_ns`.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 6);
+    out.push_str("zipnn_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Render a snapshot in the Prometheus text exposition format.
+///
+/// Counters become `counter` families; gauges become a `gauge` family plus
+/// a `_high_water` gauge family; histograms become a `summary` family
+/// (`quantile="0.5"/"0.95"/"0.99"` samples with `_sum`/`_count`) plus
+/// `_min`/`_max` gauge families, since the exposition format has no native
+/// min/max.
+pub fn prometheus_text(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for entry in &snap.entries {
+        let name = prom_name(&entry.name);
+        match entry.value {
+            MetricValue::Counter(v) => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+            }
+            MetricValue::Gauge { value, high_water } => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+                out.push_str(&format!(
+                    "# TYPE {name}_high_water gauge\n{name}_high_water {high_water}\n"
+                ));
+            }
+            MetricValue::Histogram(s) => {
+                out.push_str(&format!("# TYPE {name} summary\n"));
+                out.push_str(&format!("{name}{{quantile=\"0.5\"}} {}\n", s.p50));
+                out.push_str(&format!("{name}{{quantile=\"0.95\"}} {}\n", s.p95));
+                out.push_str(&format!("{name}{{quantile=\"0.99\"}} {}\n", s.p99));
+                out.push_str(&format!("{name}_sum {}\n", s.sum));
+                out.push_str(&format!("{name}_count {}\n", s.count));
+                out.push_str(&format!("# TYPE {name}_min gauge\n{name}_min {}\n", s.min));
+                out.push_str(&format!("# TYPE {name}_max gauge\n{name}_max {}\n", s.max));
+            }
+        }
+    }
+    out
+}
+
+/// Render a snapshot as a pre-rendered JSON object fragment (for embedding
+/// in a larger [`crate::util::jsonout`] document): metric name → typed
+/// object, e.g. `{"x.total": {"type": "counter", "value": 4}, ...}`.
+pub fn json_fragment(snap: &Snapshot) -> String {
+    let fields: Vec<(&str, String)> = snap
+        .entries
+        .iter()
+        .map(|entry| {
+            let value = match entry.value {
+                MetricValue::Counter(v) => jsonout::obj(&[
+                    ("type", jsonout::string("counter")),
+                    ("value", jsonout::uint(v)),
+                ]),
+                MetricValue::Gauge { value, high_water } => jsonout::obj(&[
+                    ("type", jsonout::string("gauge")),
+                    ("value", jsonout::uint(value)),
+                    ("high_water", jsonout::uint(high_water)),
+                ]),
+                MetricValue::Histogram(s) => jsonout::obj(&[
+                    ("type", jsonout::string("histogram")),
+                    ("count", jsonout::uint(s.count)),
+                    ("sum", jsonout::uint(s.sum)),
+                    ("min", jsonout::uint(s.min)),
+                    ("p50", jsonout::uint(s.p50)),
+                    ("p95", jsonout::uint(s.p95)),
+                    ("p99", jsonout::uint(s.p99)),
+                    ("max", jsonout::uint(s.max)),
+                    ("mean", jsonout::num(s.mean())),
+                ]),
+            };
+            (entry.name.as_str(), value)
+        })
+        .collect();
+    jsonout::obj(&fields)
+}
+
+/// Render a snapshot as a standalone JSON document (a `schema`-stamped
+/// wrapper around [`json_fragment`]), newline-terminated for file output.
+pub fn json_document(snap: &Snapshot) -> String {
+    let mut doc = jsonout::obj(&[
+        ("schema", jsonout::uint(1)),
+        ("kind", jsonout::string("zipnn-metrics")),
+        ("metrics", json_fragment(snap)),
+    ]);
+    doc.push('\n');
+    doc
+}
+
+/// Render drained span events as Chrome `trace_event` JSON: complete
+/// (`"ph": "X"`) events with microsecond `ts`/`dur`, one `tid` per
+/// recording thread. Load the file at `chrome://tracing` or
+/// <https://ui.perfetto.dev>.
+pub fn chrome_trace(events: &[SpanEvent]) -> String {
+    let rendered: Vec<String> = events
+        .iter()
+        .map(|e| {
+            jsonout::obj(&[
+                ("name", jsonout::string(e.name)),
+                ("cat", jsonout::string("zipnn")),
+                ("ph", jsonout::string("X")),
+                ("pid", jsonout::uint(1)),
+                ("tid", jsonout::uint(e.thread)),
+                ("ts", jsonout::num(e.start_ns as f64 / 1000.0)),
+                ("dur", jsonout::num(e.dur_ns as f64 / 1000.0)),
+            ])
+        })
+        .collect();
+    let mut doc = jsonout::obj(&[
+        ("traceEvents", jsonout::arr(&rendered)),
+        ("displayTimeUnit", jsonout::string("ms")),
+    ]);
+    doc.push('\n');
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+    use crate::util::json::Json;
+
+    fn sample_snapshot() -> Snapshot {
+        let reg = Registry::new();
+        reg.counter("codec.chunks_total").add(4);
+        let g = reg.gauge("exec.queue_depth");
+        g.add(7);
+        g.sub(2);
+        let h = reg.histogram("codec.decompress_ns");
+        for v in [100u64, 200, 400, 800] {
+            h.record(v);
+        }
+        reg.snapshot()
+    }
+
+    #[test]
+    fn prometheus_text_families() {
+        let text = prometheus_text(&sample_snapshot());
+        assert!(text.contains("# TYPE zipnn_codec_chunks_total counter\n"));
+        assert!(text.contains("zipnn_codec_chunks_total 4\n"));
+        assert!(text.contains("zipnn_exec_queue_depth 5\n"));
+        assert!(text.contains("zipnn_exec_queue_depth_high_water 7\n"));
+        assert!(text.contains("zipnn_codec_decompress_ns{quantile=\"0.5\"}"));
+        assert!(text.contains("zipnn_codec_decompress_ns_count 4\n"));
+        assert!(text.contains("zipnn_codec_decompress_ns_sum 1500\n"));
+        assert!(text.contains("zipnn_codec_decompress_ns_max 800\n"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.split(' ');
+            let name = parts.next().unwrap();
+            assert!(name.starts_with("zipnn_"), "line: {line}");
+            assert!(parts.next().unwrap().parse::<f64>().is_ok(), "line: {line}");
+            assert!(parts.next().is_none(), "line: {line}");
+        }
+    }
+
+    #[test]
+    fn json_document_round_trips() {
+        let doc = json_document(&sample_snapshot());
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.field("kind").unwrap().as_str(), Some("zipnn-metrics"));
+        let metrics = j.field("metrics").unwrap();
+        let counter = metrics.field("codec.chunks_total").unwrap();
+        assert_eq!(counter.field("type").unwrap().as_str(), Some("counter"));
+        assert_eq!(counter.field("value").unwrap().as_usize(), Some(4));
+        let hist = metrics.field("codec.decompress_ns").unwrap();
+        assert_eq!(hist.field("count").unwrap().as_usize(), Some(4));
+        assert_eq!(hist.field("max").unwrap().as_usize(), Some(800));
+        assert_eq!(hist.field("mean").unwrap().as_f64(), Some(375.0));
+    }
+
+    #[test]
+    fn chrome_trace_schema_round_trips() {
+        let events = [
+            SpanEvent { name: "codec.decode_chunk", start_ns: 1_500, dur_ns: 2_000, thread: 0 },
+            SpanEvent { name: "archive.read_chunk", start_ns: 4_000, dur_ns: 500, thread: 3 },
+        ];
+        let doc = chrome_trace(&events);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.field("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let rows = j.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for (row, ev) in rows.iter().zip(&events) {
+            assert_eq!(row.field("ph").unwrap().as_str(), Some("X"));
+            assert_eq!(row.field("cat").unwrap().as_str(), Some("zipnn"));
+            assert_eq!(row.field("name").unwrap().as_str(), Some(ev.name));
+            assert_eq!(row.field("pid").unwrap().as_usize(), Some(1));
+            assert_eq!(row.field("tid").unwrap().as_usize(), Some(ev.thread as usize));
+            let ts = row.field("ts").unwrap().as_f64().unwrap();
+            let dur = row.field("dur").unwrap().as_f64().unwrap();
+            assert_eq!(ts, ev.start_ns as f64 / 1000.0);
+            assert_eq!(dur, ev.dur_ns as f64 / 1000.0);
+        }
+        let empty = chrome_trace(&[]);
+        assert!(Json::parse(&empty).is_ok());
+    }
+}

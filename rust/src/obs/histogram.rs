@@ -1,0 +1,312 @@
+//! Lock-free latency/size histogram with power-of-two buckets.
+//!
+//! [`Histogram`] is the third registry primitive next to
+//! [`crate::metrics::Counter`] and [`crate::metrics::Gauge`]: recording is a
+//! handful of relaxed atomic adds (no lock, no allocation), so it can sit on
+//! per-chunk hot paths, and reads never block writers. Values bucket by
+//! their bit width (bucket `b` covers `[2^(b-1), 2^b - 1]`), which gives
+//! ~2x-relative-error quantiles over the full `u64` range in 65 fixed
+//! slots — the classic HdrHistogram trade traded down to zero configuration.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: one for zero plus one per possible bit width of a `u64`.
+const N_BUCKETS: usize = 65;
+
+/// Bucket index for a value: 0 for 0, otherwise its bit width (1..=64).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of a bucket: the largest value that lands in it.
+#[inline]
+fn bucket_upper(b: usize) -> u64 {
+    if b >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// A lock-free histogram of `u64` samples (latencies in ns, sizes in
+/// bytes) with power-of-two buckets and exact count/sum/min/max.
+///
+/// Quantiles come from the bucket the quantile rank falls in, reported as
+/// that bucket's upper bound clamped to the exact recorded maximum — so
+/// `p50 <= p95 <= p99 <= max` always holds, and a quantile is never more
+/// than 2x above the true value.
+///
+/// ```
+/// use zipnn_lp::obs::Histogram;
+///
+/// let h = Histogram::new();
+/// for v in [1u64, 2, 3, 100, 1000] {
+///     h.record(v);
+/// }
+/// let s = h.summary();
+/// assert_eq!(s.count, 5);
+/// assert_eq!(s.max, 1000);
+/// assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+/// ```
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free: five relaxed atomic ops, safe from any
+    /// thread.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] as whole nanoseconds (saturating).
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded samples (wrapping on overflow, like any counter).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX && self.count() == 0 {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile `q` in `[0, 1]`: the upper bound of the bucket
+    /// holding the rank-`ceil(q * count)` sample, clamped to the exact
+    /// maximum. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (b, slot) in self.buckets.iter().enumerate() {
+            seen += slot.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper(b).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Point-in-time summary (count, sum, min, p50/p95/p99, max).
+    pub fn summary(&self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.count(),
+            sum: self.sum(),
+            min: self.min(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: self.max(),
+        }
+    }
+}
+
+/// Snapshot of a [`Histogram`], as exported to Prometheus/JSON.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSummary {
+    /// Recorded sample count.
+    pub count: u64,
+    /// Sum of recorded samples.
+    pub sum: u64,
+    /// Smallest sample (0 when empty).
+    pub min: u64,
+    /// Median (bucket upper bound, clamped to `max`).
+    pub p50: u64,
+    /// 95th percentile (bucket upper bound, clamped to `max`).
+    pub p95: u64,
+    /// 99th percentile (bucket upper bound, clamped to `max`).
+    pub p99: u64,
+    /// Largest sample, exact.
+    pub max: u64,
+}
+
+impl HistogramSummary {
+    /// Mean sample value (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        let s = h.summary();
+        assert_eq!(s, HistogramSummary::default());
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn bucket_boundaries_cover_edge_values() {
+        // 0, 1, and u64::MAX are the boundary cases: the zero bucket, the
+        // first power-of-two bucket, and the saturating top bucket.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(64), u64::MAX);
+
+        let h = Histogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(u64::MAX);
+        let s = h.summary();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, u64::MAX);
+        // Wrapping sum: 0 + 1 + MAX wraps to 0.
+        assert_eq!(s.sum, 0);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn exact_singleton_quantiles() {
+        let h = Histogram::new();
+        h.record(42);
+        let s = h.summary();
+        // One sample: every quantile is that sample (bucket upper clamps
+        // to the exact max).
+        assert_eq!((s.p50, s.p95, s.p99, s.max), (42, 42, 42, 42));
+        assert_eq!(s.min, 42);
+        assert_eq!(s.mean(), 42.0);
+    }
+
+    #[test]
+    fn quantile_within_2x_of_true_value() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        // True median 500; bucket upper bound may overshoot by < 2x.
+        assert!((500..1000).contains(&p50), "p50 = {p50}");
+        assert_eq!(h.quantile(1.0), 1000);
+    }
+
+    /// Property: over random sample sets, quantiles are always ordered and
+    /// bounded by the recorded extremes (in-house seeded harness).
+    #[test]
+    fn prop_quantiles_ordered_and_bounded() {
+        for seed in 0..200u64 {
+            let mut rng = Rng::new(seed);
+            let h = Histogram::new();
+            let n = 1 + rng.below(400) as usize;
+            let mut lo = u64::MAX;
+            let mut hi = 0u64;
+            for _ in 0..n {
+                // Mix magnitudes so every bucket range gets exercised.
+                let v = match rng.below(4) {
+                    0 => rng.below(4),
+                    1 => rng.below(1 << 12),
+                    2 => rng.below(1 << 40),
+                    _ => u64::MAX - rng.below(1 << 20),
+                };
+                h.record(v);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let s = h.summary();
+            assert_eq!(s.count, n as u64, "seed {seed}");
+            assert_eq!((s.min, s.max), (lo, hi), "seed {seed}");
+            assert!(
+                s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max,
+                "seed {seed}: p50 {} p95 {} p99 {} max {}",
+                s.p50,
+                s.p95,
+                s.p99,
+                s.max
+            );
+            assert!(s.p50 >= lo, "seed {seed}: p50 {} below min {lo}", s.p50);
+        }
+    }
+
+    /// Mirrors `metrics::tests::gauge_concurrent_updates_balance`: four
+    /// threads record concurrently; totals must balance exactly.
+    #[test]
+    fn concurrent_records_balance() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(t * 1000 + i);
+                }
+            }));
+        }
+        for handle in handles {
+            handle.join().unwrap();
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 4000);
+        assert_eq!(s.max, 3999);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.sum, (0..4000u64).sum::<u64>());
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+}

@@ -1,0 +1,276 @@
+//! Unified telemetry: a metrics [`Registry`], latency [`Histogram`]s, span
+//! tracing, and Prometheus / JSON / Chrome-trace exporters.
+//!
+//! Every hot path in the crate reports into this layer:
+//!
+//! * the [`crate::codec::Compressor`] session (per-call encode/decode
+//!   nanoseconds, bytes in/out, per-stream codec chosen),
+//! * the [`crate::exec::WorkerPool`] (queue depth, task latency, busy time),
+//! * the [`crate::container::ArchiveReader`] (chunk reads, mmap vs pread
+//!   bytes),
+//! * the [`crate::pool::SharedKvPool`] (evictions/spills/reloads on a
+//!   scoped registry, with [`crate::pool::PoolCounters`] kept as a façade),
+//! * the [`crate::checkpoint::CheckpointStore`] (append/compact/GC/fsck
+//!   durations, fsync counts, recovery events).
+//!
+//! # Registry model
+//!
+//! A [`Registry`] is a named directory of the three lock-free primitives:
+//! [`Counter`] and [`Gauge`] (from [`crate::metrics`]) plus the
+//! power-of-two-bucket [`Histogram`]. Handles are `Arc`s fetched once at
+//! construction time ([`Registry::counter`] & co.); the registry lock is
+//! touched only at registration and snapshot time, never on the metric hot
+//! path. [`global()`] is the process-wide default registry; components
+//! needing exact per-instance accounting (the K/V pool) own a scoped
+//! `Registry` instead and expose it.
+//!
+//! ```
+//! use zipnn_lp::obs::Registry;
+//!
+//! let reg = Registry::new();
+//! let requests = reg.counter("server.requests_total");
+//! let latency = reg.histogram("server.latency_ns");
+//! requests.incr();
+//! latency.record(1_200);
+//! let snap = reg.snapshot();
+//! assert_eq!(snap.entries.len(), 2);
+//! println!("{}", zipnn_lp::obs::export::prometheus_text(&snap));
+//! ```
+//!
+//! # Spans
+//!
+//! [`crate::span!`] opens a named RAII span recorded onto per-thread ring
+//! buffers when tracing is on ([`set_tracing`]); [`take_events`] drains
+//! them and [`export::chrome_trace`] renders Chrome `trace_event` JSON
+//! loadable in `chrome://tracing` / Perfetto. With the default `telemetry`
+//! cargo feature disabled, spans compile to no-ops (see [`span`]).
+
+pub mod export;
+mod histogram;
+mod span;
+
+pub use histogram::{Histogram, HistogramSummary};
+pub use span::{dropped_events, set_tracing, take_events, tracing_enabled, SpanEvent, SpanGuard};
+
+use crate::metrics::{Counter, Gauge};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A handle to one registered metric.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    /// Monotonic event counter.
+    Counter(Arc<Counter>),
+    /// Current value + high-water mark.
+    Gauge(Arc<Gauge>),
+    /// Power-of-two-bucket latency/size histogram.
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// A named directory of metrics; see the [module docs](self) for the
+/// global-or-scoped model.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    /// An empty scoped registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Get or create the counter named `name`.
+    ///
+    /// # Panics
+    ///
+    /// If `name` is already registered as a different metric kind — metric
+    /// names are a compile-time-style contract, so a kind clash is a
+    /// programming error, not a runtime condition.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match entry {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get or create the gauge named `name`; panics on a kind clash (see
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())));
+        match entry {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get or create the histogram named `name`; panics on a kind clash
+    /// (see [`Registry::counter`]).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())));
+        match entry {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric '{name}' already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Point-in-time values of every registered metric, sorted by name.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.metrics.lock().unwrap();
+        Snapshot {
+            entries: m
+                .iter()
+                .map(|(name, metric)| MetricSnapshot {
+                    name: name.clone(),
+                    value: match metric {
+                        Metric::Counter(c) => MetricValue::Counter(c.get()),
+                        Metric::Gauge(g) => MetricValue::Gauge {
+                            value: g.get(),
+                            high_water: g.high_water(),
+                        },
+                        Metric::Histogram(h) => MetricValue::Histogram(h.summary()),
+                    },
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time value of one metric.
+#[derive(Clone, Copy, Debug)]
+pub enum MetricValue {
+    /// Counter total.
+    Counter(u64),
+    /// Gauge value and all-time high-water mark.
+    Gauge {
+        /// Current value.
+        value: u64,
+        /// All-time maximum.
+        high_water: u64,
+    },
+    /// Histogram summary.
+    Histogram(HistogramSummary),
+}
+
+/// One metric in a [`Snapshot`].
+#[derive(Clone, Debug)]
+pub struct MetricSnapshot {
+    /// Registered name (dotted, e.g. `"codec.compress_ns"`).
+    pub name: String,
+    /// Its value at snapshot time.
+    pub value: MetricValue,
+}
+
+/// A point-in-time capture of a registry, ready for the exporters.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// Captured metrics, sorted by name within each contributing registry.
+    pub entries: Vec<MetricSnapshot>,
+}
+
+impl Snapshot {
+    /// Append another registry's snapshot (e.g. a scoped pool registry onto
+    /// the global one) and re-sort by name.
+    pub fn merge(mut self, other: Snapshot) -> Snapshot {
+        self.entries.extend(other.entries);
+        self.entries.sort_by(|a, b| a.name.cmp(&b.name));
+        self
+    }
+
+    /// Find a metric by exact name.
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|e| e.name == name).map(|e| &e.value)
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide default registry every built-in instrumentation point
+/// reports into. Handles are fetched once per component at construction
+/// time; fetch your own with e.g. `obs::global().counter("my.counter")`.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let reg = Registry::new();
+        let a = reg.counter("x.total");
+        let b = reg.counter("x.total");
+        a.add(3);
+        b.incr();
+        assert_eq!(a.get(), 4);
+        let g = reg.gauge("x.bytes");
+        g.add(10);
+        let h = reg.histogram("x.ns");
+        h.record(7);
+        let snap = reg.snapshot();
+        assert_eq!(snap.entries.len(), 3);
+        // BTreeMap ordering: x.bytes, x.ns, x.total.
+        assert_eq!(snap.entries[0].name, "x.bytes");
+        assert_eq!(snap.entries[2].name, "x.total");
+        match snap.get("x.total") {
+            Some(MetricValue::Counter(4)) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match snap.get("x.bytes") {
+            Some(MetricValue::Gauge { value: 10, high_water: 10 }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match snap.get("x.ns") {
+            Some(MetricValue::Histogram(s)) => assert_eq!(s.count, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_clash_panics() {
+        let reg = Registry::new();
+        let _c = reg.counter("clash");
+        let _g = reg.gauge("clash");
+    }
+
+    #[test]
+    fn snapshots_merge_sorted() {
+        let a = Registry::new();
+        a.counter("b.total").incr();
+        let b = Registry::new();
+        b.counter("a.total").add(2);
+        let merged = a.snapshot().merge(b.snapshot());
+        let names: Vec<&str> = merged.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["a.total", "b.total"]);
+    }
+
+    #[test]
+    fn global_registry_is_stable() {
+        let c = global().counter("obs.test_global_total");
+        let before = c.get();
+        global().counter("obs.test_global_total").incr();
+        assert!(c.get() > before);
+    }
+}

@@ -1,0 +1,272 @@
+//! Zero-alloc span tracing with a compile-out path.
+//!
+//! A span is a named begin/end interval recorded by a [`SpanGuard`] (enter
+//! on construction, exit on drop) onto a fixed-capacity **per-thread ring
+//! buffer** — no allocation on the record path, no shared lock contention
+//! (each thread's ring mutex is only ever contended by the exporter
+//! draining it). Recording is off by default and enabled at runtime with
+//! [`set_tracing`]; a disarmed guard costs one relaxed atomic load.
+//!
+//! With the `telemetry` cargo feature disabled (it is on by default), the
+//! [`crate::span!`] macro and [`SpanGuard::enter`] compile to no-ops: no
+//! clock reads, no ring buffers, zero bytes of state — the compile-out
+//! contract the `telemetry-off` CI leg enforces.
+//!
+//! Drained events ([`take_events`]) carry wall-offset nanoseconds from a
+//! process-wide epoch plus a small per-thread id, exactly what the Chrome
+//! `trace_event` exporter ([`super::export::chrome_trace`]) needs.
+
+/// One completed span: name, start offset from the process epoch, duration,
+/// and the recording thread's dense id.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Span name (static, interned by the call site).
+    pub name: &'static str,
+    /// Start time in nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Dense id of the recording thread (assigned on first span).
+    pub thread: u64,
+}
+
+#[cfg(feature = "telemetry")]
+mod imp {
+    use super::SpanEvent;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex, OnceLock};
+    use std::time::Instant;
+
+    /// Per-thread ring capacity: newest events win once full. 8192 events
+    /// x 40ish bytes is ~320 KiB per recording thread, allocated once.
+    const RING_CAPACITY: usize = 8192;
+
+    static TRACING: AtomicBool = AtomicBool::new(false);
+    static NEXT_THREAD: AtomicU64 = AtomicU64::new(0);
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+
+    /// Nanoseconds since the process trace epoch (first use).
+    #[inline]
+    pub fn now_ns() -> u64 {
+        let epoch = *EPOCH.get_or_init(Instant::now);
+        u64::try_from(epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    struct Ring {
+        events: Vec<SpanEvent>,
+        /// Next write position; wraps at capacity once the ring is full.
+        head: usize,
+        /// Events overwritten because the ring was full.
+        dropped: u64,
+        thread: u64,
+    }
+
+    impl Ring {
+        fn push(&mut self, ev: SpanEvent) {
+            if self.events.len() < RING_CAPACITY {
+                self.events.push(ev);
+            } else {
+                self.events[self.head] = ev;
+                self.dropped += 1;
+            }
+            self.head = (self.head + 1) % RING_CAPACITY;
+        }
+    }
+
+    fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+        RINGS.get_or_init(|| Mutex::new(Vec::new()))
+    }
+
+    thread_local! {
+        static LOCAL_RING: Arc<Mutex<Ring>> = {
+            let ring = Arc::new(Mutex::new(Ring {
+                events: Vec::with_capacity(RING_CAPACITY),
+                head: 0,
+                dropped: 0,
+                thread: NEXT_THREAD.fetch_add(1, Ordering::Relaxed),
+            }));
+            rings().lock().unwrap().push(Arc::clone(&ring));
+            ring
+        };
+    }
+
+    /// Turn span recording on or off process-wide.
+    pub fn set_tracing(on: bool) {
+        TRACING.store(on, Ordering::Relaxed);
+    }
+
+    /// True when spans are currently being recorded.
+    pub fn tracing_enabled() -> bool {
+        TRACING.load(Ordering::Relaxed)
+    }
+
+    /// Drain every thread's ring buffer, returning the collected events
+    /// sorted by start time. Also returns via [`dropped_events`] accounting
+    /// how many events were overwritten before this drain.
+    pub fn take_events() -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for ring in rings().lock().unwrap().iter() {
+            let mut r = ring.lock().unwrap();
+            out.append(&mut r.events);
+            r.head = 0;
+        }
+        out.sort_by_key(|e| e.start_ns);
+        out
+    }
+
+    /// Total events overwritten in full rings since process start (spans
+    /// recorded while nobody drained). Monotonic; never reset.
+    pub fn dropped_events() -> u64 {
+        rings().lock().unwrap().iter().map(|r| r.lock().unwrap().dropped).sum()
+    }
+
+    /// RAII span: records `[enter, drop]` onto the thread's ring buffer
+    /// when tracing is enabled, otherwise does nothing. Construct through
+    /// the [`crate::span!`] macro.
+    #[must_use = "a span measures until dropped; bind it with `let _span = ...`"]
+    #[derive(Debug)]
+    pub struct SpanGuard {
+        name: &'static str,
+        start_ns: u64,
+        armed: bool,
+    }
+
+    impl SpanGuard {
+        /// Open a span named `name`. One relaxed atomic load when tracing
+        /// is off; one clock read when on.
+        #[inline]
+        pub fn enter(name: &'static str) -> Self {
+            if TRACING.load(Ordering::Relaxed) {
+                SpanGuard { name, start_ns: now_ns(), armed: true }
+            } else {
+                SpanGuard { name, start_ns: 0, armed: false }
+            }
+        }
+    }
+
+    impl Drop for SpanGuard {
+        fn drop(&mut self) {
+            if !self.armed {
+                return;
+            }
+            let end = now_ns();
+            let ev_start = self.start_ns;
+            LOCAL_RING.with(|ring| {
+                let mut r = ring.lock().unwrap();
+                let thread = r.thread;
+                r.push(SpanEvent {
+                    name: self.name,
+                    start_ns: ev_start,
+                    dur_ns: end.saturating_sub(ev_start),
+                    thread,
+                });
+            });
+        }
+    }
+}
+
+#[cfg(not(feature = "telemetry"))]
+mod imp {
+    use super::SpanEvent;
+
+    /// Turn span recording on or off process-wide (no-op: the `telemetry`
+    /// feature is disabled, spans are compiled out).
+    pub fn set_tracing(_on: bool) {}
+
+    /// True when spans are currently being recorded (always false: the
+    /// `telemetry` feature is disabled).
+    pub fn tracing_enabled() -> bool {
+        false
+    }
+
+    /// Drain recorded spans (always empty: the `telemetry` feature is
+    /// disabled, spans are compiled out).
+    pub fn take_events() -> Vec<SpanEvent> {
+        Vec::new()
+    }
+
+    /// Events overwritten in full rings (always 0 with `telemetry` off).
+    pub fn dropped_events() -> u64 {
+        0
+    }
+
+    /// RAII span, compiled to a zero-sized no-op (the `telemetry` feature
+    /// is disabled).
+    #[derive(Debug)]
+    pub struct SpanGuard;
+
+    impl SpanGuard {
+        /// Open a span (no-op: spans are compiled out).
+        #[inline(always)]
+        pub fn enter(_name: &'static str) -> Self {
+            SpanGuard
+        }
+    }
+}
+
+pub use imp::{dropped_events, set_tracing, take_events, tracing_enabled, SpanGuard};
+
+/// Open a named trace span for the enclosing scope. Returns a guard that
+/// records the span when dropped; **bind it** or the span closes
+/// immediately:
+///
+/// ```
+/// let _span = zipnn_lp::span!("archive.read_chunk");
+/// // ... the timed work ...
+/// ```
+///
+/// With the default `telemetry` feature this costs one relaxed atomic load
+/// while tracing is disabled ([`crate::obs::set_tracing`]); with the
+/// feature off it compiles to nothing.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::SpanGuard::enter($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test drives the whole enable -> record -> drain -> disable cycle:
+    // the tracing switch is process-global, so splitting these into
+    // separate #[test] fns would race under the parallel test runner.
+    #[cfg(feature = "telemetry")]
+    #[test]
+    fn spans_record_drain_and_disarm() {
+        set_tracing(true);
+        assert!(tracing_enabled());
+        {
+            let _s = crate::span!("test.outer");
+            let _inner = crate::span!("test.inner");
+        }
+        set_tracing(false);
+        let events = take_events();
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        assert!(names.contains(&"test.outer"), "events: {names:?}");
+        assert!(names.contains(&"test.inner"), "events: {names:?}");
+        for e in &events {
+            assert!(e.start_ns + e.dur_ns <= super::imp::now_ns());
+        }
+        // Disarmed guards record nothing.
+        {
+            let _s = crate::span!("test.disarmed");
+        }
+        assert!(take_events().iter().all(|e| e.name != "test.disarmed"));
+    }
+
+    #[cfg(not(feature = "telemetry"))]
+    #[test]
+    fn spans_compile_to_noops() {
+        set_tracing(true);
+        {
+            let _s = crate::span!("test.noop");
+        }
+        assert!(!tracing_enabled());
+        assert!(take_events().is_empty());
+        assert_eq!(dropped_events(), 0);
+        assert_eq!(std::mem::size_of::<SpanGuard>(), 0);
+    }
+}

@@ -66,6 +66,7 @@ pub use spill::{SpillFile, SpillIo};
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCacheConfig, KvCacheStats, PagedKvCache, SealedPage, SpilledHandle};
 use crate::metrics::{Counter, Gauge};
+use crate::obs::Registry;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -147,10 +148,14 @@ pub struct SharedKvPool {
     /// Per-layer exponent bytes applied to every new sequence cache
     /// ("precomputed dictionaries", §3.3).
     training: Mutex<Vec<Vec<u8>>>,
-    in_memory: Gauge,
-    evictions: Counter,
-    spills: Counter,
-    reloads: Counter,
+    /// Scoped metric registry: each pool owns its own so the budget tests'
+    /// exact per-pool assertions can never see another pool's traffic. The
+    /// handles below are fetched from it once at construction.
+    registry: Registry,
+    in_memory: Arc<Gauge>,
+    evictions: Arc<Counter>,
+    spills: Arc<Counter>,
+    reloads: Arc<Counter>,
 }
 
 impl SharedKvPool {
@@ -160,6 +165,11 @@ impl SharedKvPool {
             Some(p) => SpillFile::create(p)?,
             None => SpillFile::temp()?,
         };
+        let registry = Registry::new();
+        let in_memory = registry.gauge("pool.in_memory_bytes");
+        let evictions = registry.counter("pool.evictions_total");
+        let spills = registry.counter("pool.spills_total");
+        let reloads = registry.counter("pool.reloads_total");
         Ok(Arc::new(SharedKvPool {
             config: config.cache,
             budget: config.budget_bytes,
@@ -172,11 +182,21 @@ impl SharedKvPool {
                 spill,
             }),
             training: Mutex::new(Vec::new()),
-            in_memory: Gauge::new(),
-            evictions: Counter::new(),
-            spills: Counter::new(),
-            reloads: Counter::new(),
+            registry,
+            in_memory,
+            evictions,
+            spills,
+            reloads,
         }))
+    }
+
+    /// The pool's scoped metric registry (`pool.in_memory_bytes`,
+    /// `pool.evictions_total`, `pool.spills_total`, `pool.reloads_total`).
+    /// Snapshot it and [`merge`](crate::obs::Snapshot::merge) into the
+    /// global snapshot for export; [`counters`](Self::counters) remains the
+    /// typed façade over the same handles.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// Cache geometry shared by every sequence in the pool.
@@ -678,6 +698,44 @@ mod tests {
         assert_eq!(c.reloads, 0);
         assert!(c.within_budget());
         assert_eq!(c.in_memory_bytes, pool.stats().resident_bytes);
+    }
+
+    #[test]
+    fn scoped_registry_matches_counters_facade() {
+        use crate::obs::MetricValue;
+        let config = bf16_config();
+        let budget = 24 * 1024;
+        let pool =
+            SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
+        for t in 0..80u64 {
+            for layer in 0..2usize {
+                pool.append_token(9, layer, &token_bytes(&config, 400 + t * 2 + layer as u64))
+                    .unwrap();
+            }
+        }
+        let c = pool.counters();
+        let snap = pool.registry().snapshot();
+        // Exact equality is safe here: the registry is scoped per pool, so
+        // no other test's traffic can leak into it.
+        match snap.get("pool.evictions_total") {
+            Some(&MetricValue::Counter(n)) => assert_eq!(n, c.evictions),
+            other => panic!("unexpected {other:?}"),
+        }
+        match snap.get("pool.spills_total") {
+            Some(&MetricValue::Counter(n)) => assert_eq!(n, c.spills),
+            other => panic!("unexpected {other:?}"),
+        }
+        match snap.get("pool.reloads_total") {
+            Some(&MetricValue::Counter(n)) => assert_eq!(n, c.reloads),
+            other => panic!("unexpected {other:?}"),
+        }
+        match snap.get("pool.in_memory_bytes") {
+            Some(&MetricValue::Gauge { value, high_water }) => {
+                assert_eq!(value, c.in_memory_bytes);
+                assert_eq!(high_water, c.high_water_bytes);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

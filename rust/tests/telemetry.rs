@@ -1,0 +1,105 @@
+//! End-to-end telemetry: drive real codec work through a `Compressor`
+//! session, then check that the global registry covers the instrumented
+//! subsystems and that every exporter's output round-trips through the
+//! in-house JSON parser (`util::json`).
+//!
+//! The Chrome-trace test doubles as the span pipeline's integration check:
+//! runtime toggle on, real workload, drain, schema round-trip. It is the
+//! only test in this binary touching the process-global tracing switch.
+
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::obs::{self, export};
+use zipnn_lp::synthetic;
+use zipnn_lp::util::json::Json;
+
+/// A small chunk-parallel compress + zero-copy decompress round trip — the
+/// same hot paths `compress`/`decompress`/`stats` exercise.
+fn decode_workload() {
+    let data = synthetic::gaussian_bf16_bytes(64 * 1024, 0.02, 5);
+    let session = Compressor::new(
+        CompressOptions::for_format(FloatFormat::Bf16)
+            .with_chunk_size(8192)
+            .with_threads(2),
+    );
+    let blob = session.compress(TensorInput::Tensor(&data)).unwrap();
+    let mut out = vec![0u8; data.len()];
+    session.decompress_into(&blob, &mut out).unwrap();
+    assert_eq!(out, data, "telemetry workload must stay bit-exact");
+}
+
+#[test]
+fn exporters_cover_instrumented_subsystems() {
+    decode_workload();
+    let snap = obs::global().snapshot();
+    // The session and pool hot paths must have reported into the registry.
+    for name in [
+        "codec.compress_ns",
+        "codec.decompress_ns",
+        "codec.bytes_in_total",
+        "exec.tasks_total",
+    ] {
+        assert!(snap.get(name).is_some(), "metric {name} missing from snapshot");
+    }
+
+    // Prometheus text: expected families present, every sample line valid.
+    let prom = export::prometheus_text(&snap);
+    assert!(prom.contains("# TYPE zipnn_codec_compress_ns summary"));
+    assert!(prom.contains("# TYPE zipnn_exec_tasks_total counter"));
+    for line in prom.lines().filter(|l| !l.starts_with('#')) {
+        let mut parts = line.split(' ');
+        assert!(parts.next().unwrap().starts_with("zipnn_"), "line: {line}");
+        assert!(parts.next().unwrap().parse::<f64>().is_ok(), "line: {line}");
+        assert!(parts.next().is_none(), "line: {line}");
+    }
+
+    // JSON document: parses with the in-house parser, typed fields intact.
+    let doc = export::json_document(&snap);
+    let j = Json::parse(&doc).unwrap();
+    assert_eq!(j.field("kind").unwrap().as_str(), Some("zipnn-metrics"));
+    let metrics = j.field("metrics").unwrap();
+    let hist = metrics.field("codec.decompress_ns").unwrap();
+    assert_eq!(hist.field("type").unwrap().as_str(), Some("histogram"));
+    assert!(hist.field("count").unwrap().as_usize().unwrap() >= 1);
+    let tasks = metrics.field("exec.tasks_total").unwrap();
+    assert_eq!(tasks.field("type").unwrap().as_str(), Some("counter"));
+}
+
+#[cfg(feature = "telemetry")]
+#[test]
+fn trace_round_trips_through_chrome_schema() {
+    obs::set_tracing(true);
+    decode_workload();
+    obs::set_tracing(false);
+    let events = obs::take_events();
+    let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+    assert!(names.contains(&"codec.compress"), "spans: {names:?}");
+    assert!(names.contains(&"codec.decompress"), "spans: {names:?}");
+    assert!(names.contains(&"codec.decode_chunk"), "spans: {names:?}");
+
+    let doc = export::chrome_trace(&events);
+    let j = Json::parse(&doc).unwrap();
+    assert_eq!(j.field("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let rows = j.field("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), events.len());
+    for row in rows {
+        assert_eq!(row.field("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(row.field("cat").unwrap().as_str(), Some("zipnn"));
+        assert_eq!(row.field("pid").unwrap().as_usize(), Some(1));
+        assert!(row.field("name").unwrap().as_str().is_some());
+        assert!(row.field("ts").unwrap().as_f64().is_some());
+        assert!(row.field("dur").unwrap().as_f64().is_some());
+    }
+}
+
+#[cfg(not(feature = "telemetry"))]
+#[test]
+fn tracing_is_compiled_out() {
+    // With the feature off the switch is inert, no events exist, and the
+    // metric registry still works (metrics are feature-independent).
+    obs::set_tracing(true);
+    decode_workload();
+    assert!(!obs::tracing_enabled());
+    assert!(obs::take_events().is_empty());
+    assert!(obs::global().snapshot().get("codec.compress_ns").is_some());
+}
