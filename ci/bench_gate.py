@@ -21,7 +21,12 @@ run regresses against the committed baseline:
     or not covering the instrumented subsystems (codec session, worker pool,
     archive reader) with the right metric shapes;
   * (schema >= 3) the measured span-tracing overhead on the decode hot loop
-    exceeding the 1% contract (--span-overhead-max).
+    exceeding the 1% contract (--span-overhead-max);
+  * (schema >= 4) the `entropy_gap` section missing or malformed, any row
+    where the achieved bits/symbol fall below the order-0 Shannon bound
+    (impossible for a lossless coder -- it means the accounting itself
+    broke), or any gap above --gap-max bits/symbol (default 2.0, a
+    conservative ceiling on per-frame overhead amortisation).
 
 Override: set BENCH_GATE_OVERRIDE=1 to demote failures to warnings (exit 0).
 CI wires this to the `bench-override` PR label; use it for known-noisy
@@ -103,6 +108,67 @@ def check_metrics(cur, failures):
     return checks
 
 
+GAP_ROW_FIELDS = {
+    "format",
+    "codec",
+    "kind",
+    "encoding",
+    "n_symbols",
+    "bound_bits",
+    "achieved_bits",
+    "gap_bits",
+    "block_bits",
+    "overhead_bytes",
+}
+
+
+def check_entropy_gap(cur, failures, gap_max):
+    """Validate the schema-4 entropy_gap section; returns checks performed."""
+    if cur.get("schema", 0) < 4:
+        print("bench-gate: current schema < 4, skipping entropy_gap checks")
+        return 0
+    section = cur.get("entropy_gap")
+    if not isinstance(section, dict):
+        failures.append("entropy_gap: section missing (schema >= 4 requires it)")
+        return 1
+    checks = 1
+    rows = section.get("rows")
+    if not isinstance(rows, list) or not rows:
+        failures.append("entropy_gap: rows missing or empty")
+        return checks
+    eps = 1e-9
+    worst = 0.0
+    for i, row in enumerate(rows):
+        checks += 1
+        if not isinstance(row, dict) or not GAP_ROW_FIELDS <= set(row):
+            failures.append(f"entropy_gap.rows[{i}]: missing fields (need {sorted(GAP_ROW_FIELDS)})")
+            continue
+        label = f"entropy_gap[{row['format']}/{row['codec']}/{row['kind']}/{row['encoding']}]"
+        bound, achieved, gap = row["bound_bits"], row["achieved_bits"], row["gap_bits"]
+        if not all(isinstance(v, (int, float)) for v in (bound, achieved, gap)):
+            failures.append(f"{label}: non-numeric bound/achieved/gap")
+            continue
+        if achieved < bound - eps:
+            failures.append(
+                f"{label}: achieved {achieved} bits/symbol below the Shannon "
+                f"bound {bound} -- lossless accounting is broken"
+            )
+        if gap > gap_max:
+            failures.append(
+                f"{label}: gap {gap} bits/symbol above the --gap-max "
+                f"ceiling {gap_max}"
+            )
+        worst = max(worst, gap)
+    checks += 1
+    reported = section.get("max_gap_bits")
+    if not isinstance(reported, (int, float)) or abs(reported - worst) > 1e-6:
+        failures.append(
+            f"entropy_gap: max_gap_bits {reported} disagrees with the "
+            f"row-wise maximum {worst}"
+        )
+    return checks
+
+
 def check_span_overhead(cur, failures, max_ratio):
     """Enforce the span-overhead contract; returns checks performed."""
     if cur.get("schema", 0) < 3:
@@ -142,6 +208,13 @@ def main():
         default=0.01,
         help="max allowed span-tracing overhead on the decode hot loop, "
         "as a fraction (default 0.01 = 1%%)",
+    )
+    parser.add_argument(
+        "--gap-max",
+        type=float,
+        default=2.0,
+        help="max allowed achieved-vs-Shannon gap per entropy_gap row, "
+        "bits/symbol (default 2.0)",
     )
     parser.add_argument(
         "--fig6",
@@ -231,6 +304,7 @@ def main():
         print("bench-gate: --fig6 not given, skipping fig6_* checks")
     checks += check_metrics(cur, failures)
     checks += check_span_overhead(cur, failures, args.span_overhead_max)
+    checks += check_entropy_gap(cur, failures, args.gap_max)
 
     if failures:
         for f in failures:

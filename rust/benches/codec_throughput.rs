@@ -21,17 +21,24 @@
 //!    runtime tracing disabled vs enabled (same binary, `telemetry` feature
 //!    on). The resulting `overhead_ratio` is the <1% contract
 //!    `ci/bench_gate.py` enforces.
-//! 5. Optional machine-readable output: `--json PATH` writes the
-//!    `BENCH_codec.json` schema documented in the README (schema 3: bench
-//!    rows plus the final metric-registry snapshot and the span-overhead
-//!    measurement), so future PRs can diff ratio/throughput regressions
-//!    (`ci/bench_gate.py` enforces it against `BENCH_baseline.json`).
-//!    `--smoke` shrinks the workload for CI schema checks.
+//! 5. Entropy-gap accounting: every (format, codec) blob re-analysed
+//!    through `zipnn_lp::diag` to report achieved bits/symbol against the
+//!    order-0 Shannon bound per stream kind and encoding. The invariant
+//!    `achieved >= bound` and a conservative max-gap ceiling are enforced
+//!    both here (asserts) and by the CI gate (schema-4 `entropy_gap`).
+//! 6. Optional machine-readable output: `--json PATH` writes the
+//!    `BENCH_codec.json` schema documented in the README (schema 4: bench
+//!    rows, the `entropy_gap` section, the final metric-registry snapshot
+//!    and the span-overhead measurement), so future PRs can diff
+//!    ratio/throughput regressions (`ci/bench_gate.py` enforces it against
+//!    `BENCH_baseline.json`). `--smoke` shrinks the workload for CI schema
+//!    checks.
 //!
 //! Run: `cargo bench --bench codec_throughput -- [--json PATH] [--smoke]`
 
 use zipnn_lp::codec::{Codec, CompressOptions, Compressor, TensorInput};
 use zipnn_lp::container::{ArchiveReader, ArchiveWriter, ReadBacking, TensorMeta};
+use zipnn_lp::diag;
 use zipnn_lp::entropy::Histogram;
 use zipnn_lp::exec::WorkerPool;
 use zipnn_lp::formats::conv::quantize_slice;
@@ -97,6 +104,23 @@ struct ArchiveRow {
 struct StreamDecodeRow {
     threads: usize,
     gibps: f64,
+}
+
+/// One entropy-gap cell: achieved bits/symbol vs the order-0 Shannon
+/// bound for one (format, codec, stream kind, encoding) of a blob, as
+/// measured by `zipnn_lp::diag::analyze_blob`. All `*_bits` fields are
+/// bits per symbol.
+struct GapBenchRow {
+    format: &'static str,
+    codec: &'static str,
+    kind: &'static str,
+    encoding: String,
+    n_symbols: u64,
+    bound_bits: f64,
+    achieved_bits: f64,
+    gap_bits: f64,
+    block_bits: f64,
+    overhead_bytes: u64,
 }
 
 /// Span-tracing cost on the decode hot loop, measured in one binary by
@@ -447,6 +471,93 @@ fn archive_decode_bench(
     (rows, stream_rows)
 }
 
+/// Entropy-gap accounting: compress each format with each backend, then
+/// re-analyse the blob frames through `diag::analyze_blob` to measure how
+/// close the achieved bits/symbol sit to the order-0 Shannon bound of the
+/// encoded symbols. Asserts the same invariants the CI gate enforces on
+/// the schema-4 `entropy_gap` JSON: achieved >= bound on every row, and
+/// the gap stays under a conservative ceiling (frame overhead on these
+/// chunk sizes amortises to well below 2 bits/symbol).
+fn entropy_gap_bench(n_elems: usize) -> Vec<GapBenchRow> {
+    let formats = [
+        ("bf16", FloatFormat::Bf16),
+        ("fp16", FloatFormat::Fp16),
+        ("fp8_e4m3", FloatFormat::Fp8E4M3),
+        ("fp8_e5m2", FloatFormat::Fp8E5M2),
+        ("fp4_e2m1", FloatFormat::Fp4E2M1),
+    ];
+    let mut rows = Vec::new();
+    let mut t = Table::new(&[
+        "format", "codec", "stream", "encoding", "symbols", "bound b/s", "achieved b/s",
+        "gap b/s", "block b/s",
+    ]);
+    for (fname, format) in formats {
+        let data = format_bytes(format, n_elems, 7);
+        for (cname, codec) in
+            [("auto", Codec::Auto), ("huffman", Codec::Huffman), ("rans", Codec::Rans)]
+        {
+            let session =
+                Compressor::new(CompressOptions::for_format(format).with_codec(codec));
+            let blob = session.compress(TensorInput::Tensor(&data)).expect("compress");
+            let tg = diag::analyze_blob(&blob, fname, diag::DEFAULT_BLOCK_SYMBOLS)
+                .expect("analyze");
+            for r in &tg.rows {
+                if r.stat.n_symbols == 0 {
+                    continue;
+                }
+                let s = r.stat;
+                assert!(
+                    s.achieved_bps() >= s.bound_bps() - 1e-9,
+                    "{fname}/{cname}/{}/{}: achieved {} below Shannon bound {}",
+                    r.kind.label(),
+                    r.encoding.label(),
+                    s.achieved_bps(),
+                    s.bound_bps()
+                );
+                assert!(
+                    s.block_bps() <= s.bound_bps() + 1e-9,
+                    "{fname}/{cname}/{}/{}: block probe {} above global bound {}",
+                    r.kind.label(),
+                    r.encoding.label(),
+                    s.block_bps(),
+                    s.bound_bps()
+                );
+                t.row(&[
+                    fname.into(),
+                    cname.into(),
+                    r.kind.label().into(),
+                    r.encoding.label().into(),
+                    s.n_symbols.to_string(),
+                    format!("{:.4}", s.bound_bps()),
+                    format!("{:.4}", s.achieved_bps()),
+                    format!("{:.4}", s.gap_bps()),
+                    format!("{:.4}", s.block_bps()),
+                ]);
+                rows.push(GapBenchRow {
+                    format: fname,
+                    codec: cname,
+                    kind: r.kind.label(),
+                    encoding: r.encoding.label().to_string(),
+                    n_symbols: s.n_symbols,
+                    bound_bits: s.bound_bps(),
+                    achieved_bits: s.achieved_bps(),
+                    gap_bits: s.gap_bps(),
+                    block_bits: s.block_bps(),
+                    overhead_bytes: s.overhead_bytes(),
+                });
+            }
+        }
+    }
+    let max_gap = rows.iter().map(|r| r.gap_bits).fold(0.0f64, f64::max);
+    assert!(max_gap < 2.0, "entropy gap {max_gap} bits/symbol exceeds the 2.0 ceiling");
+    println!("Achieved vs Shannon bound per encoded stream (zipnn_lp::diag):\n{}", t.render());
+    println!(
+        "achieved >= order-0 bound on every row; worst gap {max_gap:.4} bits/symbol \
+         (ceiling 2.0, enforced by ci/bench_gate.py on schema-4 entropy_gap).\n"
+    );
+    rows
+}
+
 /// Span overhead on the decode hot loop: the same `decompress_into`
 /// workload with tracing disabled vs enabled at runtime. The chunk-decode
 /// hot path carries one span per chunk, so the enabled run pays the full
@@ -490,6 +601,7 @@ fn write_json(
     blobs: &[BlobRow],
     archive: &[ArchiveRow],
     stream_decode: &[StreamDecodeRow],
+    gap: &[GapBenchRow],
     span_overhead: &SpanOverhead,
 ) {
     let stream_items: Vec<String> = streams
@@ -536,13 +648,39 @@ fn write_json(
             ])
         })
         .collect();
+    let gap_items: Vec<String> = gap
+        .iter()
+        .map(|r| {
+            jo::obj(&[
+                ("format", jo::string(r.format)),
+                ("codec", jo::string(r.codec)),
+                ("kind", jo::string(r.kind)),
+                ("encoding", jo::string(&r.encoding)),
+                ("n_symbols", jo::uint(r.n_symbols)),
+                ("bound_bits", jo::num(r.bound_bits)),
+                ("achieved_bits", jo::num(r.achieved_bits)),
+                ("gap_bits", jo::num(r.gap_bits)),
+                ("block_bits", jo::num(r.block_bits)),
+                ("overhead_bytes", jo::uint(r.overhead_bytes)),
+            ])
+        })
+        .collect();
+    let max_gap_bits = gap.iter().map(|r| r.gap_bits).fold(0.0f64, f64::max);
     let doc = jo::obj(&[
-        ("schema", jo::uint(3)),
+        ("schema", jo::uint(4)),
         ("bench", jo::string("codec_throughput")),
         ("streams", jo::arr(&stream_items)),
         ("blobs", jo::arr(&blob_items)),
         ("archive", jo::arr(&archive_items)),
         ("stream_decode", jo::arr(&stream_decode_items)),
+        (
+            "entropy_gap",
+            jo::obj(&[
+                ("block_symbols", jo::uint(diag::DEFAULT_BLOCK_SYMBOLS as u64)),
+                ("max_gap_bits", jo::num(max_gap_bits)),
+                ("rows", jo::arr(&gap_items)),
+            ]),
+        ),
         (
             "span_overhead",
             jo::obj(&[
@@ -570,10 +708,11 @@ fn main() {
     // 4 iterations so best-of-N stays noise-robust even in --smoke mode on
     // shared runners (bench_loop reports the minimum).
     let (archive, stream_decode) = archive_decode_bench(archive_mib, iters.max(4));
+    let gap = entropy_gap_bench(elems);
     // Sub-1% measurement: many more iterations than the other sections so
     // min-of-N converges even on noisy shared runners.
     let span_overhead = span_overhead_bench(mib, iters.max(12));
     if let Some(path) = &args.json {
-        write_json(path, &streams, &blobs, &archive, &stream_decode, &span_overhead);
+        write_json(path, &streams, &blobs, &archive, &stream_decode, &gap, &span_overhead);
     }
 }

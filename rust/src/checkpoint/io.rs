@@ -80,8 +80,8 @@ impl StoreFile for RealFile {
 
 /// Process-wide count of real fsyncs (`sync_data` on store files plus
 /// directory fsyncs) — the durability cost the crash-safety protocol pays.
-fn fsync_total() -> &'static std::sync::Arc<crate::metrics::Counter> {
-    static FSYNCS: std::sync::OnceLock<std::sync::Arc<crate::metrics::Counter>> =
+fn fsync_total() -> &'static std::sync::Arc<crate::obs::Counter> {
+    static FSYNCS: std::sync::OnceLock<std::sync::Arc<crate::obs::Counter>> =
         std::sync::OnceLock::new();
     FSYNCS.get_or_init(|| crate::obs::global().counter("ckpt.fsync_total"))
 }

@@ -27,8 +27,7 @@ use crate::codec::{CompressOptions, Compressor, TensorInput};
 use crate::container::{ArchiveReader, ArchiveWriter, TensorMeta};
 use crate::error::{Error, Result};
 use crate::formats::StreamKind;
-use crate::metrics::Counter;
-use crate::obs::{self, Histogram};
+use crate::obs::{self, Counter, Histogram};
 use crate::util::crc32::crc32;
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -197,6 +196,12 @@ impl CheckpointStore {
     /// may be sparse after [`gc`](Self::gc).
     pub fn records(&self) -> &[CkptRecord] {
         &self.manifest.records
+    }
+
+    /// The store's directory: record `file` names ([`CkptRecord::file`])
+    /// are relative to it.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     /// The id the next [`append`](Self::append) will be assigned. Strictly

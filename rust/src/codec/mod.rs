@@ -225,6 +225,11 @@ pub struct CompressOptions {
     pub exponent_only: bool,
     /// Entropy backend policy ([`Codec::Auto`] picks per stream).
     pub codec: Codec,
+    /// Record achieved-vs-Shannon entropy-gap analytics
+    /// ([`crate::diag`]) for every compressed blob into the global
+    /// metrics registry. Off by default: the analysis decodes every
+    /// stream payload, costing roughly one extra decompression pass.
+    pub gap_analytics: bool,
 }
 
 impl CompressOptions {
@@ -250,6 +255,7 @@ impl CompressOptions {
             threads: 1,
             exponent_only: false,
             codec: Codec::Auto,
+            gap_analytics: false,
         }
     }
 
@@ -318,6 +324,25 @@ impl CompressOptions {
     /// ```
     pub fn with_codec(mut self, codec: Codec) -> Self {
         self.codec = codec;
+        self
+    }
+
+    /// Builder-style switch for per-blob entropy-gap analytics. When on,
+    /// every [`Compressor::compress`] call re-derives each stream's
+    /// Shannon bound and records the achieved−bound gap into the global
+    /// metrics registry (`codec.entropy_gap_mbits` histogram plus
+    /// per-kind bound/achieved byte counters).
+    ///
+    /// ```
+    /// use zipnn_lp::codec::CompressOptions;
+    /// use zipnn_lp::formats::FloatFormat;
+    ///
+    /// let opts = CompressOptions::for_format(FloatFormat::Bf16).with_gap_analytics(true);
+    /// assert!(opts.gap_analytics);
+    /// assert!(!CompressOptions::for_format(FloatFormat::Bf16).gap_analytics);
+    /// ```
+    pub fn with_gap_analytics(mut self, on: bool) -> Self {
+        self.gap_analytics = on;
         self
     }
 }

@@ -42,8 +42,7 @@ use crate::error::{Error, Result};
 use crate::exec::{Task, WorkerPool};
 use crate::formats::fp4::{Mxfp4Tensor, Nvfp4Tensor};
 use crate::formats::FloatFormat;
-use crate::metrics::Counter;
-use crate::obs::{self, Histogram};
+use crate::obs::{self, Counter, Histogram};
 use crate::util::crc32::crc32;
 use crate::util::varint;
 use std::collections::VecDeque;
@@ -78,6 +77,16 @@ struct SessionMetrics {
     ///
     /// [`StreamReport::encoding_counts`]: super::chunked::StreamReport::encoding_counts
     encodings: [Arc<Counter>; 6],
+    /// `codec.entropy_gap_mbits` — per-(kind, encoding) achieved−Shannon
+    /// gap in milli-bits/symbol, recorded only when
+    /// [`CompressOptions::gap_analytics`] is on.
+    gap_mbits: Arc<Histogram>,
+    /// `codec.gap_bound_bytes_{exp,sm,payload,scale}_total` — Shannon-bound
+    /// bytes per stream kind (wire-id indexed), gap-analytics only.
+    gap_bound: [Arc<Counter>; 4],
+    /// `codec.gap_achieved_bytes_{exp,sm,payload,scale}_total` — achieved
+    /// frame bytes per stream kind (wire-id indexed), gap-analytics only.
+    gap_achieved: [Arc<Counter>; 4],
 }
 
 impl SessionMetrics {
@@ -90,6 +99,18 @@ impl SessionMetrics {
             "codec.frames.rans_total",
             "codec.frames.rans_dict_total",
         ];
+        const GAP_BOUND_NAMES: [&str; 4] = [
+            "codec.gap_bound_bytes_exp_total",
+            "codec.gap_bound_bytes_sm_total",
+            "codec.gap_bound_bytes_payload_total",
+            "codec.gap_bound_bytes_scale_total",
+        ];
+        const GAP_ACHIEVED_NAMES: [&str; 4] = [
+            "codec.gap_achieved_bytes_exp_total",
+            "codec.gap_achieved_bytes_sm_total",
+            "codec.gap_achieved_bytes_payload_total",
+            "codec.gap_achieved_bytes_scale_total",
+        ];
         let reg = obs::global();
         SessionMetrics {
             compress_ns: reg.histogram("codec.compress_ns"),
@@ -99,6 +120,9 @@ impl SessionMetrics {
             decoded_bytes: reg.counter("codec.decoded_bytes_total"),
             stream_chunks: reg.counter("codec.stream_chunks_total"),
             encodings: std::array::from_fn(|i| reg.counter(ENCODING_NAMES[i])),
+            gap_mbits: reg.histogram("codec.entropy_gap_mbits"),
+            gap_bound: std::array::from_fn(|i| reg.counter(GAP_BOUND_NAMES[i])),
+            gap_achieved: std::array::from_fn(|i| reg.counter(GAP_ACHIEVED_NAMES[i])),
         }
     }
 
@@ -121,6 +145,26 @@ impl SessionMetrics {
     fn record_decompress(&self, ns: u64, decoded: u64) {
         self.decompress_ns.record(ns);
         self.decoded_bytes.add(decoded);
+    }
+
+    /// Entropy-gap attribution for one blob ([`CompressOptions::gap_analytics`]):
+    /// one histogram sample per (kind, encoding) row in milli-bits/symbol,
+    /// plus bound/achieved byte totals per stream kind. FP4 block blobs
+    /// (no symbol streams) and corrupt walks record nothing.
+    fn record_gap(&self, blob: &CompressedBlob) {
+        let Ok(report) = crate::diag::analyze_blob(blob, "", crate::diag::DEFAULT_BLOCK_SYMBOLS)
+        else {
+            return;
+        };
+        for row in &report.rows {
+            if row.stat.n_symbols == 0 {
+                continue;
+            }
+            self.gap_mbits.record((row.stat.gap_bps() * 1000.0).max(0.0) as u64);
+            let k = row.kind.wire_id() as usize;
+            self.gap_bound[k].add((row.stat.bound_bits / 8.0).round() as u64);
+            self.gap_achieved[k].add(row.stat.frame_bytes);
+        }
     }
 }
 
@@ -270,6 +314,9 @@ impl Compressor {
         };
         if let Ok(blob) = &result {
             self.metrics.record_compress(elapsed_ns(start), blob);
+            if self.opts.gap_analytics {
+                self.metrics.record_gap(blob);
+            }
         }
         result
     }
@@ -681,6 +728,32 @@ mod tests {
         assert_eq!(blob.serialize(), legacy.serialize());
         assert_eq!(s.decompress(&blob).unwrap(), data);
         assert_eq!(s.compress_bytes(&data).unwrap().serialize(), legacy.serialize());
+    }
+
+    #[test]
+    fn gap_analytics_records_into_global_registry() {
+        let reg = obs::global();
+        let hist = reg.histogram("codec.entropy_gap_mbits");
+        let bound = reg.counter("codec.gap_bound_bytes_exp_total");
+        let achieved = reg.counter("codec.gap_achieved_bytes_exp_total");
+        let (h0, b0, a0) = (hist.count(), bound.get(), achieved.get());
+
+        let data = synthetic::gaussian_bf16_bytes(20_000, 0.02, 36);
+        let quiet = session(1);
+        quiet.compress(TensorInput::Tensor(&data)).unwrap();
+        assert_eq!(hist.count(), h0, "analytics must be off by default");
+
+        let loud = Compressor::new(
+            CompressOptions::for_format(FloatFormat::Bf16)
+                .with_chunk_size(4096)
+                .with_gap_analytics(true),
+        );
+        let blob = loud.compress(TensorInput::Tensor(&data)).unwrap();
+        assert!(hist.count() > h0);
+        // The registry view keeps the invariant: achieved frame bytes never
+        // undercut the Shannon bound, and never exceed the encoded blob.
+        assert!(achieved.get() - a0 >= bound.get() - b0);
+        assert!(achieved.get() - a0 <= blob.encoded_len() as u64);
     }
 
     #[test]

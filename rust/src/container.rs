@@ -55,8 +55,7 @@ use crate::codec::{
 use crate::error::{Error, Result};
 use crate::exec::WorkerPool;
 use crate::formats::FloatFormat;
-use crate::metrics::Counter;
-use crate::obs::{self, Histogram};
+use crate::obs::{self, Counter, Histogram};
 use crate::util::crc32::crc32;
 use crate::util::varint;
 use std::borrow::Cow;

@@ -21,8 +21,7 @@
 //! On a 1-thread pool `submit` runs the job inline — same results, no
 //! overlap — so callers never special-case the serial configuration.
 
-use crate::metrics::{Counter, Gauge};
-use crate::obs::{self, Histogram};
+use crate::obs::{self, Counter, Gauge, Histogram};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

@@ -86,6 +86,10 @@ pub struct DictionaryManager {
     refresh_slack: f64,
     /// Total number of dictionary rebuilds (observability).
     pub refreshes: u64,
+    /// `kv.dict_drift_mbits` — per-observation dictionary drift
+    /// ([`drift_bits`](Self::drift_bits)) in milli-bits/symbol, recorded
+    /// into the global metrics registry on every [`observe`](Self::observe).
+    drift_mbits: std::sync::Arc<crate::obs::Histogram>,
 }
 
 #[derive(Debug, Default)]
@@ -113,6 +117,7 @@ impl DictionaryManager {
             len_limit,
             refresh_slack,
             refreshes: 0,
+            drift_mbits: crate::obs::global().histogram("kv.dict_drift_mbits"),
         }
     }
 
@@ -203,6 +208,17 @@ impl DictionaryManager {
             .get_mut(layer)
             .ok_or_else(|| Error::KvCache(format!("layer {layer} out of range")))?;
         d.recent.merge(&Histogram::from_bytes(exponent_bytes));
+        // Dictionary-drift metric: KL divergence of the rolling recent
+        // traffic from the current dictionary's implied model. Mirrors
+        // `drift_bits` inline (the registry handle and the layer borrow are
+        // disjoint fields).
+        if let Some(table) = d.tables.last() {
+            if d.recent.total() > 0 && table.covers(&d.recent) {
+                let cross = table.cost_bits(&d.recent) as f64 / d.recent.total() as f64;
+                let drift = cross - d.recent.entropy_bits();
+                self.drift_mbits.record((drift.max(0.0) * 1000.0) as u64);
+            }
+        }
         // Dictionary misses count as 8 bits/symbol pressure.
         let bits = match encoded.encoding {
             StreamEncoding::HuffmanDict | StreamEncoding::RansDict => {
@@ -239,6 +255,27 @@ impl DictionaryManager {
         }
         Ok(false)
     }
+
+    /// How far `layer`'s current dictionary has drifted from the traffic
+    /// observed since the last refresh: expected code length under the
+    /// dictionary minus the entropy of the recent histogram, in
+    /// bits/symbol — the KL divergence `D(recent ‖ dictionary)`. Near 0
+    /// while the dictionary still models the traffic; growth here predicts
+    /// an adaptive refresh before the achieved-ratio trigger fires.
+    ///
+    /// `None` when the layer has no trained table, no traffic since the
+    /// last refresh, or recent traffic contains symbols the dictionary
+    /// cannot code at all (drift is unbounded there; the rolling
+    /// achieved-ratio refresh logic owns that case).
+    pub fn drift_bits(&self, layer: usize) -> Option<f64> {
+        let d = self.per_layer.get(layer)?;
+        let table = d.tables.last()?;
+        if d.recent.total() == 0 || !table.covers(&d.recent) {
+            return None;
+        }
+        let cross = table.cost_bits(&d.recent) as f64 / d.recent.total() as f64;
+        Some(cross - d.recent.entropy_bits())
+    }
 }
 
 /// A sealed (compressed) page.
@@ -261,6 +298,19 @@ impl SealedPage {
     /// Raw (uncompressed) page size in bytes.
     pub fn raw_len(&self) -> usize {
         self.raw_len
+    }
+
+    /// The page's encoded stream frames, in wire order (what
+    /// [`crate::diag::analyze_page`] walks).
+    pub fn streams(&self) -> &[EncodedStream] {
+        &self.streams
+    }
+
+    /// Dictionary version the exponent stream was coded against, or `None`
+    /// when no shared dictionary was used. The version indexes both the
+    /// Huffman and rANS tables of [`DictionaryManager`].
+    pub fn dict_version(&self) -> Option<u32> {
+        self.dict_version
     }
 
     /// Serialize the page for the pool's disk spill file: raw length,
@@ -1217,5 +1267,43 @@ mod tests {
         // After refresh the new dictionary must cover the new symbols.
         let probe = Histogram::from_bytes(&[60u8, 61, 75]);
         assert!(dm.table(0).unwrap().covers(&probe));
+    }
+
+    #[test]
+    fn dictionary_drift_metric_tracks_model_mismatch() {
+        let reg_hist = crate::obs::global().histogram("kv.dict_drift_mbits");
+        let before = reg_hist.count();
+
+        // Huge slack so adaptive refresh never resets `recent` mid-test.
+        let mut dm = DictionaryManager::new(1, 12, 100.0);
+        assert!(dm.drift_bits(0).is_none(), "untrained layer has no drift");
+        let train: Vec<u8> = (0..20_000).map(|i| (i % 8) as u8).collect();
+        dm.train(0, &train).unwrap();
+        assert!(dm.drift_bits(0).is_none(), "no traffic since training");
+
+        let feed = |dm: &mut DictionaryManager, page: &[u8]| {
+            let stream = crate::formats::Stream::new(
+                crate::formats::StreamKind::Exponent,
+                page.to_vec(),
+                8,
+            );
+            let enc = crate::codec::encode_stream(&stream, 12, 0.97, dm.table(0)).unwrap();
+            dm.observe(0, page, &enc).unwrap();
+        };
+
+        // Traffic matching the training distribution: drift stays ~0.
+        let same: Vec<u8> = (0..4096).map(|i| (i % 8) as u8).collect();
+        feed(&mut dm, &same);
+        let small = dm.drift_bits(0).unwrap();
+        assert!(small.abs() < 0.05, "drift {small} on matching traffic");
+
+        // Traffic concentrated on a covered subset: the dictionary's code
+        // lengths stop matching the distribution, so drift must grow.
+        let skewed = vec![0u8; 8192];
+        feed(&mut dm, &skewed);
+        let big = dm.drift_bits(0).unwrap();
+        assert!(big > small + 0.2, "drift {big} should exceed {small}");
+        // Each observe() records one drift sample into the registry.
+        assert!(reg_hist.count() >= before + 2);
     }
 }

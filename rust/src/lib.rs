@@ -71,6 +71,7 @@ pub mod checkpoint;
 pub mod codec;
 pub mod container;
 pub mod coordinator;
+pub mod diag;
 pub mod entropy;
 pub mod error;
 pub mod exec;

@@ -2,7 +2,13 @@
 //!
 //! Subcommands:
 //!
-//! * `compress` / `decompress` / `inspect` — offline tensor-file codec.
+//! * `compress` / `decompress` / `inspect` — offline tensor-file codec
+//!   (`inspect --deep` decodes payloads to add achieved-vs-Shannon gap
+//!   columns).
+//! * `analyze` — entropy-gap attribution ([`zipnn_lp::diag`]) over a blob,
+//!   archive, checkpoint store directory, or K/V spill file: Shannon bound
+//!   vs achieved bits/symbol per stream kind, encoding backend, and tensor,
+//!   with per-block probe headroom and a worst-gap listing.
 //! * `stats` — decode a file end to end and report the metric registry the
 //!   run populated (table, JSON, or Prometheus text).
 //! * `checkpoint` — lifecycle operations on a delta-checkpoint store:
@@ -33,6 +39,7 @@ use zipnn_lp::codec::{
 };
 #[cfg(feature = "pjrt")]
 use zipnn_lp::coordinator::{BatchPolicy, Request, Server};
+use zipnn_lp::diag;
 use zipnn_lp::formats::FloatFormat;
 use zipnn_lp::metrics::Table;
 #[cfg(feature = "pjrt")]
@@ -68,6 +75,7 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
         "compress-model" => cmd_compress_model(&flags),
         "decompress" => cmd_decompress(&flags),
         "inspect" => cmd_inspect(&flags),
+        "analyze" => cmd_analyze(&flags),
         "stats" => cmd_stats(&flags),
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
@@ -126,6 +134,12 @@ SUBCOMMANDS:
   decompress  --input FILE.zlpt|FILE.zlpc [--output FILE|DIR] [--threads 1]
               [--backing auto|mmap|pread]  (archives decode chunk-parallel)
   inspect     --input FILE.zlpt|FILE.zlpc [--backing auto|mmap|pread] [--json]
+              [--deep]  (decode payloads; adds Shannon-bound/gap columns)
+  analyze     --input FILE.zlpt|FILE.zlpc|STORE_DIR|FILE.spill [--json]
+              [--block-symbols 4096] [--top 5]
+              checkpoint dirs: [--format bf16] [--anchor 1000]
+              (entropy-gap attribution: bound vs achieved bits/symbol per
+               tensor, stream kind, and encoding backend)
   stats       --input FILE.zlpt|FILE.zlpc [--threads 1]
               [--backing auto|mmap|pread] [--format table|json|prometheus]
               (decodes the file end to end, then reports the metric registry)
@@ -141,7 +155,7 @@ SUBCOMMANDS:
               [--kv-budget-mib 0 (unbounded)] [--pool-workers 1]
   info        --artifacts DIR
 
-TELEMETRY (compress / decompress / inspect / stats / checkpoint):
+TELEMETRY (compress / decompress / inspect / analyze / stats / checkpoint):
   --metrics-out PATH   write the final metric registry snapshot
                        (.prom -> Prometheus text, else JSON)
   --trace-out PATH     record spans and write Chrome trace_event JSON"
@@ -465,12 +479,20 @@ fn cmd_decompress_archive(
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let input = get(flags, "input")?;
     let json = flags.contains_key("json");
+    let deep = flags.contains_key("deep");
     if &file_magic(input)? == zipnn_lp::container::ARCHIVE_MAGIC {
-        return cmd_inspect_archive(flags, input, json);
+        return cmd_inspect_archive(flags, input, json, deep);
     }
     let blob = CompressedBlob::deserialize(&std::fs::read(input)?)?;
+    // `--deep` decodes every payload to bound it against Shannon —
+    // roughly one extra decompression pass.
+    let gap = if deep && blob.strategy != Strategy::Fp4Block {
+        Some(diag::analyze_blob(&blob, input, diag::DEFAULT_BLOCK_SYMBOLS)?)
+    } else {
+        None
+    };
     if json {
-        return inspect_blob_json(&blob);
+        return inspect_blob_json(&blob, gap.as_ref());
     }
     println!("strategy:  {}", blob.strategy);
     println!("codec:     {}", blob.codec);
@@ -484,24 +506,53 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error
         return Ok(());
     }
     // Per-stream backend observability: which codec each component actually
-    // got, straight from the frame headers (no payload decoding).
-    let mut table = Table::new(&["stream", "original", "encoded", "ratio", "encodings"]);
+    // got, straight from the frame headers (no payload decoding unless
+    // `--deep` asked for the entropy-gap columns).
+    let mut headers = vec!["stream", "original", "encoded", "ratio", "encodings"];
+    if gap.is_some() {
+        headers.extend(["bound b/s", "achieved b/s", "gap b/s"]);
+    }
+    let mut table = Table::new(&headers);
     for r in stream_report(&blob)? {
-        table.row(&[
+        let mut row = vec![
             r.kind.label().to_string(),
             human_bytes(r.original_bytes),
             human_bytes(r.compressed_bytes),
             format!("{:.4}", r.ratio()),
             r.encodings(),
-        ]);
+        ];
+        if let Some(tg) = &gap {
+            let s = kind_stat(tg, r.kind);
+            row.extend([
+                format!("{:.4}", s.bound_bps()),
+                format!("{:.4}", s.achieved_bps()),
+                format!("{:.4}", s.gap_bps()),
+            ]);
+        }
+        table.row(&row);
     }
     println!("{}", table.render());
     Ok(())
 }
 
+/// Merge a [`diag::TensorGap`]'s rows for one stream kind (a blob's kind
+/// may span several encodings across chunks).
+fn kind_stat(tg: &diag::TensorGap, kind: zipnn_lp::formats::StreamKind) -> diag::GapStat {
+    let mut s = diag::GapStat::default();
+    for r in tg.rows.iter().filter(|r| r.kind == kind) {
+        s.merge(&r.stat);
+    }
+    s
+}
+
 /// `inspect --json`: blob metadata rendered through [`zipnn_lp::util::jsonout`],
-/// the same emitter every other machine-readable artifact uses.
-fn inspect_blob_json(blob: &CompressedBlob) -> Result<(), Box<dyn std::error::Error>> {
+/// the same emitter every other machine-readable artifact uses. With
+/// `--deep`, each stream row gains entropy-gap fields and the document an
+/// `entropy_gap` total.
+fn inspect_blob_json(
+    blob: &CompressedBlob,
+    gap: Option<&diag::TensorGap>,
+) -> Result<(), Box<dyn std::error::Error>> {
     use zipnn_lp::util::jsonout;
     // FP4-block layouts carry no per-stream frames; report an empty list.
     let streams: Vec<String> = if blob.strategy == Strategy::Fp4Block {
@@ -510,78 +561,141 @@ fn inspect_blob_json(blob: &CompressedBlob) -> Result<(), Box<dyn std::error::Er
         stream_report(blob)?
             .iter()
             .map(|r| {
-                jsonout::obj(&[
+                let mut fields = vec![
                     ("stream", jsonout::string(r.kind.label())),
                     ("original_bytes", jsonout::uint(r.original_bytes)),
                     ("compressed_bytes", jsonout::uint(r.compressed_bytes)),
                     ("ratio", jsonout::num(r.ratio())),
                     ("encodings", jsonout::string(&r.encodings())),
-                ])
+                ];
+                if let Some(tg) = gap {
+                    let s = kind_stat(tg, r.kind);
+                    fields.push(("bound_bps", jsonout::num(s.bound_bps())));
+                    fields.push(("achieved_bps", jsonout::num(s.achieved_bps())));
+                    fields.push(("gap_bps", jsonout::num(s.gap_bps())));
+                    fields.push((
+                        "block_headroom_bps",
+                        jsonout::num(s.block_headroom_bps()),
+                    ));
+                }
+                jsonout::obj(&fields)
             })
             .collect()
     };
-    println!(
-        "{}",
-        jsonout::obj(&[
-            ("schema", jsonout::uint(1)),
-            ("kind", jsonout::string("zipnn-inspect")),
-            ("strategy", jsonout::string(&blob.strategy.to_string())),
-            ("codec", jsonout::string(&blob.codec.to_string())),
-            ("format", jsonout::string(&blob.format.to_string())),
-            ("original_len", jsonout::uint(blob.original_len as u64)),
-            ("encoded_len", jsonout::uint(blob.encoded_len() as u64)),
-            ("ratio", jsonout::num(blob.ratio())),
-            ("chunk_size", jsonout::uint(blob.chunk_size as u64)),
-            ("chunks", jsonout::uint(blob.chunks.len() as u64)),
-            ("streams", jsonout::arr(&streams)),
-        ])
-    );
+    let mut fields = vec![
+        ("schema", jsonout::uint(1)),
+        ("kind", jsonout::string("zipnn-inspect")),
+        ("strategy", jsonout::string(&blob.strategy.to_string())),
+        ("codec", jsonout::string(&blob.codec.to_string())),
+        ("format", jsonout::string(&blob.format.to_string())),
+        ("original_len", jsonout::uint(blob.original_len as u64)),
+        ("encoded_len", jsonout::uint(blob.encoded_len() as u64)),
+        ("ratio", jsonout::num(blob.ratio())),
+        ("chunk_size", jsonout::uint(blob.chunk_size as u64)),
+        ("chunks", jsonout::uint(blob.chunks.len() as u64)),
+        ("streams", jsonout::arr(&streams)),
+    ];
+    if let Some(tg) = gap {
+        fields.push(("entropy_gap", gap_stat_json(&tg.total())));
+    }
+    println!("{}", jsonout::obj(&fields));
     Ok(())
 }
 
+/// One [`diag::GapStat`] as a JSON object (shared by `inspect --deep
+/// --json` and `analyze --json`).
+fn gap_stat_json(s: &diag::GapStat) -> String {
+    use zipnn_lp::util::jsonout;
+    jsonout::obj(&[
+        ("n_frames", jsonout::uint(s.n_frames)),
+        ("n_symbols", jsonout::uint(s.n_symbols)),
+        ("frame_bytes", jsonout::uint(s.frame_bytes)),
+        ("payload_bytes", jsonout::uint(s.payload_bytes)),
+        ("overhead_bytes", jsonout::uint(s.overhead_bytes())),
+        ("bound_bps", jsonout::num(s.bound_bps())),
+        ("achieved_bps", jsonout::num(s.achieved_bps())),
+        ("gap_bps", jsonout::num(s.gap_bps())),
+        ("block_bps", jsonout::num(s.block_bps())),
+        ("block_headroom_bps", jsonout::num(s.block_headroom_bps())),
+    ])
+}
+
 /// Archive inspection: directory metadata only — no chunk is read, which
-/// is the whole point of the trailing-footer format.
+/// is the whole point of the trailing-footer format. `--deep` gives up
+/// that property deliberately: it reads and decodes every chunked tensor
+/// to report its achieved-vs-Shannon gap.
 fn cmd_inspect_archive(
     flags: &HashMap<String, String>,
     input: &str,
     json: bool,
+    deep: bool,
 ) -> Result<(), Box<dyn std::error::Error>> {
     use zipnn_lp::container::{ArchiveReader, ReadBacking};
     let backing: ReadBacking = get_or(flags, "backing", "auto").parse()?;
     let reader = ArchiveReader::open_with(std::path::Path::new(input), backing)?;
     if json {
-        return inspect_archive_json(&reader);
+        return inspect_archive_json(&reader, deep);
     }
     println!("archive:   v{} ({} backing)", reader.version(), reader.backing_kind());
     println!("tensors:   {}", reader.len());
     println!("original:  {}", human_bytes(reader.total_original()));
     println!("encoded:   {}", human_bytes(reader.total_encoded()));
     println!("ratio:     {:.4}", reader.ratio());
-    let mut table =
-        Table::new(&["tensor", "format", "strategy", "codec", "chunks", "ratio"]);
+    let mut headers = vec!["tensor", "format", "strategy", "codec", "chunks", "ratio"];
+    if deep {
+        headers.extend(["bound b/s", "achieved b/s", "gap b/s"]);
+    }
+    let mut table = Table::new(&headers);
     for e in reader.entries() {
         let ratio = if e.original_len == 0 {
             1.0
         } else {
             e.data_len() as f64 / e.original_len as f64
         };
-        table.row(&[
+        let mut row = vec![
             e.meta.name.clone(),
             e.format.to_string(),
             e.strategy.to_string(),
             e.codec.to_string(),
             e.chunks.len().to_string(),
             format!("{ratio:.4}"),
-        ]);
+        ];
+        if deep {
+            row.extend(match archive_entry_gap(&reader, e)? {
+                Some(s) => [
+                    format!("{:.4}", s.bound_bps()),
+                    format!("{:.4}", s.achieved_bps()),
+                    format!("{:.4}", s.gap_bps()),
+                ],
+                None => ["-".to_string(), "-".to_string(), "-".to_string()],
+            });
+        }
+        table.row(&row);
     }
     println!("{}", table.render());
     Ok(())
 }
 
+/// One archive entry's merged gap stat; `None` for FP4-block entries (no
+/// symbol streams to bound).
+fn archive_entry_gap(
+    reader: &zipnn_lp::container::ArchiveReader,
+    entry: &zipnn_lp::container::TensorEntry,
+) -> Result<Option<diag::GapStat>, Box<dyn std::error::Error>> {
+    if entry.strategy == Strategy::Fp4Block {
+        return Ok(None);
+    }
+    let blob = reader.read_blob(&entry.meta.name)?;
+    let tg = diag::analyze_blob(&blob, &entry.meta.name, diag::DEFAULT_BLOCK_SYMBOLS)?;
+    Ok(Some(tg.total()))
+}
+
 /// `inspect --json` for archives: directory metadata through
-/// [`zipnn_lp::util::jsonout`] (still no chunk reads).
+/// [`zipnn_lp::util::jsonout`] (no chunk reads unless `--deep` asks for
+/// the per-entry entropy-gap stats).
 fn inspect_archive_json(
     reader: &zipnn_lp::container::ArchiveReader,
+    deep: bool,
 ) -> Result<(), Box<dyn std::error::Error>> {
     use zipnn_lp::util::jsonout;
     let mut entries: Vec<String> = Vec::new();
@@ -591,7 +705,7 @@ fn inspect_archive_json(
         } else {
             e.data_len() as f64 / e.original_len as f64
         };
-        entries.push(jsonout::obj(&[
+        let mut fields = vec![
             ("name", jsonout::string(&e.meta.name)),
             ("format", jsonout::string(&e.format.to_string())),
             ("strategy", jsonout::string(&e.strategy.to_string())),
@@ -600,7 +714,15 @@ fn inspect_archive_json(
             ("original_len", jsonout::uint(e.original_len as u64)),
             ("encoded_len", jsonout::uint(e.data_len())),
             ("ratio", jsonout::num(ratio)),
-        ]));
+        ];
+        if deep {
+            fields.push(match archive_entry_gap(reader, e)? {
+                Some(s) => ("entropy_gap", gap_stat_json(&s)),
+                // FP4-block entries carry no symbol streams: null, not 0s.
+                None => ("entropy_gap", "null".to_string()),
+            });
+        }
+        entries.push(jsonout::obj(&fields));
     }
     println!(
         "{}",
@@ -614,6 +736,191 @@ fn inspect_archive_json(
             ("encoded_bytes", jsonout::uint(reader.total_encoded())),
             ("ratio", jsonout::num(reader.ratio())),
             ("entries", jsonout::arr(&entries)),
+        ])
+    );
+    Ok(())
+}
+
+/// `analyze`: entropy-gap attribution over whatever `--input` is — a blob,
+/// an archive, a checkpoint store directory, or a K/V pool spill file —
+/// routed by directory-ness, then file magic, then blob-parse fallback.
+fn cmd_analyze(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let input = get(flags, "input")?;
+    let block_symbols: usize = get_or(flags, "block-symbols", "4096").parse()?;
+    let top: usize = get_or(flags, "top", "5").parse()?;
+    let json = flags.contains_key("json");
+    let path = std::path::Path::new(input);
+    let (source, report) = if path.is_dir() {
+        let format: FloatFormat = get_or(flags, "format", "bf16").parse()?;
+        let anchor: usize = get_or(flags, "anchor", "1000").parse()?;
+        let store = CheckpointStore::open(path, CompressOptions::for_format(format), anchor)?;
+        ("checkpoint", diag::analyze_checkpoint(&store, block_symbols)?)
+    } else if &file_magic(input)? == zipnn_lp::container::ARCHIVE_MAGIC {
+        let reader = zipnn_lp::container::ArchiveReader::open(path)?;
+        ("archive", diag::analyze_archive(&reader, block_symbols)?)
+    } else if let Ok(blob) = CompressedBlob::deserialize(&std::fs::read(input)?) {
+        let tg = diag::analyze_blob(&blob, input, block_symbols)?;
+        ("blob", diag::GapReport { tensors: vec![tg], block_symbols })
+    } else {
+        // Not a blob and not an archive: a K/V pool spill file (flat
+        // sequence of sealed-page records, no magic by design).
+        ("kv-spill", diag::analyze_spill_file(path, block_symbols)?)
+    };
+    if json {
+        return analyze_json(source, &report, top);
+    }
+    println!("source:       {source} ({} tensor(s))", report.tensors.len());
+    println!("block probe:  {} symbols/block", report.block_symbols);
+    let stat_cells = |s: &diag::GapStat| {
+        [
+            s.n_symbols.to_string(),
+            format!("{:.4}", s.bound_bps()),
+            format!("{:.4}", s.achieved_bps()),
+            format!("{:.4}", s.gap_bps()),
+            format!("{:.4}", s.block_headroom_bps()),
+            human_bytes(s.overhead_bytes()),
+        ]
+    };
+    let headers = [
+        "symbols",
+        "bound b/s",
+        "achieved b/s",
+        "gap b/s",
+        "block headroom",
+        "overhead",
+    ];
+    let mut table = Table::new(
+        &[&["tensor", "stream", "encoding"][..], &headers[..]].concat(),
+    );
+    for tg in &report.tensors {
+        for r in &tg.rows {
+            let mut row = vec![
+                tg.name.clone(),
+                r.kind.label().to_string(),
+                r.encoding.label().to_string(),
+            ];
+            row.extend(stat_cells(&r.stat));
+            table.row(&row);
+        }
+    }
+    println!("{}", table.render());
+    let mut rollup = Table::new(&[&["rollup"][..], &headers[..]].concat());
+    for (kind, s) in report.by_kind() {
+        let mut row = vec![format!("kind {}", kind.label())];
+        row.extend(stat_cells(&s));
+        rollup.row(&row);
+    }
+    for (encoding, s) in report.by_encoding() {
+        let mut row = vec![format!("encoding {}", encoding.label())];
+        row.extend(stat_cells(&s));
+        rollup.row(&row);
+    }
+    let mut row = vec!["total".to_string()];
+    row.extend(stat_cells(&report.total()));
+    rollup.row(&row);
+    println!("{}", rollup.render());
+    if report.skipped_frames() > 0 {
+        println!(
+            "note: {} dictionary-coded frame(s) skipped (shared table not \
+             available from this source)",
+            report.skipped_frames()
+        );
+    }
+    if top > 0 && !report.tensors.is_empty() {
+        let mut worst = Table::new(&["worst gap", "stream", "encoding", "gap b/s", "symbols"]);
+        for w in report.worst(top) {
+            worst.row(&[
+                w.tensor.clone(),
+                w.kind.label().to_string(),
+                w.encoding.label().to_string(),
+                format!("{:.4}", w.stat.gap_bps()),
+                w.stat.n_symbols.to_string(),
+            ]);
+        }
+        println!("{}", worst.render());
+    }
+    Ok(())
+}
+
+/// `analyze --json`: the full report through [`zipnn_lp::util::jsonout`].
+fn analyze_json(
+    source: &str,
+    report: &diag::GapReport,
+    top: usize,
+) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::util::jsonout;
+    let tensors: Vec<String> = report
+        .tensors
+        .iter()
+        .map(|tg| {
+            let rows: Vec<String> = tg
+                .rows
+                .iter()
+                .map(|r| {
+                    jsonout::obj(&[
+                        ("kind", jsonout::string(r.kind.label())),
+                        ("encoding", jsonout::string(r.encoding.label())),
+                        ("stat", gap_stat_json(&r.stat)),
+                    ])
+                })
+                .collect();
+            jsonout::obj(&[
+                ("name", jsonout::string(&tg.name)),
+                ("format", jsonout::string(&tg.format)),
+                ("strategy", jsonout::string(&tg.strategy)),
+                ("codec", jsonout::string(&tg.codec)),
+                ("original_bytes", jsonout::uint(tg.original_bytes)),
+                ("skipped_frames", jsonout::uint(tg.skipped_frames)),
+                ("rows", jsonout::arr(&rows)),
+            ])
+        })
+        .collect();
+    let by_kind: Vec<String> = report
+        .by_kind()
+        .iter()
+        .map(|(k, s)| {
+            jsonout::obj(&[
+                ("kind", jsonout::string(k.label())),
+                ("stat", gap_stat_json(s)),
+            ])
+        })
+        .collect();
+    let by_encoding: Vec<String> = report
+        .by_encoding()
+        .iter()
+        .map(|(e, s)| {
+            jsonout::obj(&[
+                ("encoding", jsonout::string(e.label())),
+                ("stat", gap_stat_json(s)),
+            ])
+        })
+        .collect();
+    let worst: Vec<String> = report
+        .worst(top)
+        .iter()
+        .map(|w| {
+            jsonout::obj(&[
+                ("tensor", jsonout::string(&w.tensor)),
+                ("kind", jsonout::string(w.kind.label())),
+                ("encoding", jsonout::string(w.encoding.label())),
+                ("gap_bps", jsonout::num(w.stat.gap_bps())),
+                ("n_symbols", jsonout::uint(w.stat.n_symbols)),
+            ])
+        })
+        .collect();
+    println!(
+        "{}",
+        jsonout::obj(&[
+            ("schema", jsonout::uint(1)),
+            ("kind", jsonout::string("zipnn-analyze")),
+            ("source", jsonout::string(source)),
+            ("block_symbols", jsonout::uint(report.block_symbols as u64)),
+            ("skipped_frames", jsonout::uint(report.skipped_frames())),
+            ("tensors", jsonout::arr(&tensors)),
+            ("by_kind", jsonout::arr(&by_kind)),
+            ("by_encoding", jsonout::arr(&by_encoding)),
+            ("total", gap_stat_json(&report.total())),
+            ("worst", jsonout::arr(&worst)),
         ])
     );
     Ok(())

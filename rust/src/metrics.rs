@@ -4,9 +4,11 @@
 //! [`Timer`] / [`time_it`] give wall-clock measurements; [`bench_loop`]
 //! repeats a closure and reports the minimum (noise-robust on shared
 //! machines) alongside the mean; [`Table`] renders the aligned
-//! paper-figure-style rows every bench binary prints. [`Counter`] and
-//! [`Gauge`] are the lock-free observability primitives behind the shared
-//! K/V pool's eviction/spill/reload accounting ([`crate::pool`]).
+//! paper-figure-style rows every bench binary prints.
+//!
+//! The lock-free [`Counter`] and [`Gauge`] primitives moved into
+//! [`crate::obs`] when telemetry became a subsystem; the re-exports here
+//! are deprecated and kept only so downstream imports keep compiling.
 //!
 //! ```
 //! use zipnn_lp::metrics::Table;
@@ -16,86 +18,12 @@
 //! assert!(t.render().contains("| exponent | 0.31"));
 //! ```
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-/// A monotonically increasing event counter, safe to bump from any thread.
-///
-/// Used by the shared K/V pool for eviction / spill / reload totals; reads
-/// never take a lock, so counters can be sampled while workers are active.
-#[derive(Debug, Default)]
-pub struct Counter(AtomicU64);
-
-impl Counter {
-    /// A counter starting at zero.
-    pub fn new() -> Self {
-        Counter(AtomicU64::new(0))
-    }
-
-    /// Add one event.
-    pub fn incr(&self) {
-        self.0.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Add `n` events.
-    pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Ordering::Relaxed);
-    }
-
-    /// Current total.
-    pub fn get(&self) -> u64 {
-        self.0.load(Ordering::Relaxed)
-    }
-}
-
-/// A gauge tracking a current value **and** its all-time high-water mark.
-///
-/// The pool uses one for in-memory cache bytes: the high-water mark is the
-/// quantity the budgeted-serving bench asserts never exceeds the byte
-/// budget (zero budget violations).
-#[derive(Debug, Default)]
-pub struct Gauge {
-    value: AtomicU64,
-    high: AtomicU64,
-}
-
-impl Gauge {
-    /// A gauge starting at zero.
-    pub fn new() -> Self {
-        Gauge { value: AtomicU64::new(0), high: AtomicU64::new(0) }
-    }
-
-    /// Increase the value by `n`, updating the high-water mark. Returns the
-    /// new value.
-    pub fn add(&self, n: u64) -> u64 {
-        let v = self.value.fetch_add(n, Ordering::SeqCst) + n;
-        self.high.fetch_max(v, Ordering::SeqCst);
-        v
-    }
-
-    /// Decrease the value by `n` (saturating at zero). Returns the new value.
-    pub fn sub(&self, n: u64) -> u64 {
-        let mut cur = self.value.load(Ordering::SeqCst);
-        loop {
-            let next = cur.saturating_sub(n);
-            match self.value.compare_exchange_weak(cur, next, Ordering::SeqCst, Ordering::SeqCst)
-            {
-                Ok(_) => return next,
-                Err(observed) => cur = observed,
-            }
-        }
-    }
-
-    /// Current value.
-    pub fn get(&self) -> u64 {
-        self.value.load(Ordering::SeqCst)
-    }
-
-    /// All-time maximum the value ever reached.
-    pub fn high_water(&self) -> u64 {
-        self.high.load(Ordering::SeqCst)
-    }
-}
+#[deprecated(since = "0.1.0", note = "moved to crate::obs::Counter")]
+pub use crate::obs::Counter;
+#[deprecated(since = "0.1.0", note = "moved to crate::obs::Gauge")]
+pub use crate::obs::Gauge;
 
 /// A simple wall-clock timer.
 #[derive(Debug)]
@@ -242,49 +170,6 @@ mod tests {
         }
         assert!(first >= 0.0);
         assert!(second > first, "timer went backwards: {first} -> {second}");
-    }
-
-    #[test]
-    fn counter_accumulates() {
-        let c = Counter::new();
-        c.incr();
-        c.add(4);
-        assert_eq!(c.get(), 5);
-    }
-
-    #[test]
-    fn gauge_tracks_high_water() {
-        let g = Gauge::new();
-        assert_eq!(g.add(10), 10);
-        assert_eq!(g.add(5), 15);
-        assert_eq!(g.sub(12), 3);
-        assert_eq!(g.add(2), 5);
-        assert_eq!(g.get(), 5);
-        assert_eq!(g.high_water(), 15);
-        // Saturating underflow must not wrap.
-        assert_eq!(g.sub(100), 0);
-        assert_eq!(g.high_water(), 15);
-    }
-
-    #[test]
-    fn gauge_concurrent_updates_balance() {
-        use std::sync::Arc;
-        let g = Arc::new(Gauge::new());
-        let mut handles = Vec::new();
-        for _ in 0..4 {
-            let g = Arc::clone(&g);
-            handles.push(std::thread::spawn(move || {
-                for _ in 0..1000 {
-                    g.add(3);
-                    g.sub(3);
-                }
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        assert_eq!(g.get(), 0);
-        assert!(g.high_water() >= 3);
     }
 
     #[test]

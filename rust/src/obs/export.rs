@@ -190,6 +190,94 @@ mod tests {
     }
 
     #[test]
+    fn empty_registry_exports_cleanly() {
+        let snap = Registry::new().snapshot();
+        assert_eq!(prometheus_text(&snap), "");
+        assert_eq!(json_fragment(&snap), "{}");
+        let doc = json_document(&snap);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.field("kind").unwrap().as_str(), Some("zipnn-metrics"));
+        assert!(j.field("metrics").is_some());
+    }
+
+    #[test]
+    fn single_sample_histogram_collapses_quantiles() {
+        let reg = Registry::new();
+        reg.histogram("one.ns").record(640);
+        let snap = reg.snapshot();
+        let hist = match snap.get("one.ns") {
+            Some(MetricValue::Histogram(s)) => *s,
+            other => panic!("unexpected {other:?}"),
+        };
+        // With one sample every order statistic is that sample (up to the
+        // power-of-two bucket the exporter reports from).
+        assert_eq!(hist.count, 1);
+        assert_eq!(hist.min, hist.max);
+        assert_eq!(hist.p50, hist.p95);
+        assert_eq!(hist.p95, hist.p99);
+        assert_eq!(hist.p99, hist.max);
+        let doc = json_document(&snap);
+        let j = Json::parse(&doc).unwrap();
+        let h = j.field("metrics").unwrap().field("one.ns").unwrap();
+        assert_eq!(h.field("count").unwrap().as_usize(), Some(1));
+        assert_eq!(h.field("p50").unwrap(), h.field("max").unwrap());
+    }
+
+    #[test]
+    fn prometheus_names_sanitize_dotted_metrics() {
+        let reg = Registry::new();
+        reg.counter("kv.pool-0.reloads_total").incr();
+        reg.counter("a.b.c").incr();
+        let text = prometheus_text(&reg.snapshot());
+        // Dots and dashes both map to underscores under the zipnn_ prefix;
+        // every emitted family name stays within the Prometheus grammar.
+        assert!(text.contains("zipnn_kv_pool_0_reloads_total 1\n"));
+        assert!(text.contains("zipnn_a_b_c 1\n"));
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let name = line.split(' ').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "unsanitized family name: {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_of_overlapping_families_keeps_both_sorted() {
+        // Two registries exporting the same metric name (e.g. two scoped
+        // pool registries): merge keeps both entries, sorted, rather than
+        // silently summing or dropping one.
+        let a = Registry::new();
+        a.counter("pool.evictions_total").add(3);
+        a.counter("zz.total").incr();
+        let b = Registry::new();
+        b.counter("pool.evictions_total").add(5);
+        b.counter("aa.total").incr();
+        let merged = a.snapshot().merge(b.snapshot());
+        let names: Vec<&str> = merged.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["aa.total", "pool.evictions_total", "pool.evictions_total", "zz.total"]
+        );
+        let values: Vec<u64> = merged
+            .entries
+            .iter()
+            .filter(|e| e.name == "pool.evictions_total")
+            .map(|e| match e.value {
+                MetricValue::Counter(v) => v,
+                _ => panic!("not a counter"),
+            })
+            .collect();
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![3, 5]);
+        // The exporters render both samples (duplicate families are the
+        // scrape consumer's problem to label, not silently lost data).
+        let text = prometheus_text(&merged);
+        assert_eq!(text.matches("zipnn_pool_evictions_total ").count(), 2);
+    }
+
+    #[test]
     fn chrome_trace_schema_round_trips() {
         let events = [
             SpanEvent { name: "codec.decode_chunk", start_ns: 1_500, dur_ns: 2_000, thread: 0 },

@@ -1,7 +1,7 @@
 //! Lock-free latency/size histogram with power-of-two buckets.
 //!
 //! [`Histogram`] is the third registry primitive next to
-//! [`crate::metrics::Counter`] and [`crate::metrics::Gauge`]: recording is a
+//! [`super::Counter`] and [`super::Gauge`]: recording is a
 //! handful of relaxed atomic adds (no lock, no allocation), so it can sit on
 //! per-chunk hot paths, and reads never block writers. Values bucket by
 //! their bit width (bucket `b` covers `[2^(b-1), 2^b - 1]`), which gives

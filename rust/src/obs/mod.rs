@@ -16,8 +16,9 @@
 //! # Registry model
 //!
 //! A [`Registry`] is a named directory of the three lock-free primitives:
-//! [`Counter`] and [`Gauge`] (from [`crate::metrics`]) plus the
-//! power-of-two-bucket [`Histogram`]. Handles are `Arc`s fetched once at
+//! [`Counter`] and [`Gauge`] plus the power-of-two-bucket [`Histogram`]
+//! (all defined here; `crate::metrics` keeps deprecated re-exports of the
+//! first two). Handles are `Arc`s fetched once at
 //! construction time ([`Registry::counter`] & co.); the registry lock is
 //! touched only at registration and snapshot time, never on the metric hot
 //! path. [`global()`] is the process-wide default registry; components
@@ -45,14 +46,15 @@
 //! loadable in `chrome://tracing` / Perfetto. With the default `telemetry`
 //! cargo feature disabled, spans compile to no-ops (see [`span`]).
 
+mod counters;
 pub mod export;
 mod histogram;
 mod span;
 
+pub use counters::{Counter, Gauge};
 pub use histogram::{Histogram, HistogramSummary};
 pub use span::{dropped_events, set_tracing, take_events, tracing_enabled, SpanEvent, SpanGuard};
 
-use crate::metrics::{Counter, Gauge};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 

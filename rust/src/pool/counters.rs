@@ -4,7 +4,7 @@ use crate::util::human_bytes;
 use std::fmt;
 
 /// A point-in-time snapshot of the pool's eviction / spill / budget state,
-/// taken lock-free from [`crate::metrics::Counter`] / [`crate::metrics::Gauge`]
+/// taken lock-free from [`crate::obs::Counter`] / [`crate::obs::Gauge`]
 /// primitives (plus one brief ledger lock for the spill-file figures).
 ///
 /// The **high-water mark** is the budget-violation detector: the pool

@@ -65,8 +65,7 @@ pub use spill::{SpillFile, SpillIo};
 
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCacheConfig, KvCacheStats, PagedKvCache, SealedPage, SpilledHandle};
-use crate::metrics::{Counter, Gauge};
-use crate::obs::Registry;
+use crate::obs::{Counter, Gauge, Registry};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, MutexGuard};

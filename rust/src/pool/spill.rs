@@ -21,7 +21,7 @@
 //!   different sequences overlap instead of serializing on the lock.
 
 use crate::error::{Error, Result};
-use crate::metrics::Gauge;
+use crate::obs::Gauge;
 use crate::util::crc32::crc32;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};

@@ -39,9 +39,16 @@ pub fn uint(v: u64) -> String {
 }
 
 /// Render an object from `(key, pre-rendered value)` pairs.
+///
+/// Keys are emitted in sorted (byte-lexicographic) order regardless of the
+/// order the caller lists them, so every document built here — `analyze
+/// --json`, `BENCH_*.json`, metric snapshots — is byte-diffable across
+/// runs and across call sites that assemble fields differently.
 pub fn obj(fields: &[(&str, String)]) -> String {
-    let body: Vec<String> =
-        fields.iter().map(|(k, v)| format!("{}: {v}", string(k))).collect();
+    let mut body: Vec<(&str, String)> =
+        fields.iter().map(|(k, v)| (*k, format!("{}: {v}", string(k)))).collect();
+    body.sort_by(|a, b| a.0.cmp(b.0));
+    let body: Vec<String> = body.into_iter().map(|(_, rendered)| rendered).collect();
     format!("{{{}}}", body.join(", "))
 }
 
@@ -69,6 +76,24 @@ mod tests {
         assert_eq!(j.field("ratio").unwrap().as_f64(), Some(0.3125));
         let rows = j.field("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows[1].field("x").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn object_keys_emit_in_sorted_order() {
+        // Byte-diffability contract: the same fields in any declaration
+        // order must render to the identical document.
+        let a = obj(&[("zeta", uint(1)), ("alpha", uint(2)), ("mid", string("x"))]);
+        let b = obj(&[("mid", string("x")), ("zeta", uint(1)), ("alpha", uint(2))]);
+        assert_eq!(a, b);
+        assert_eq!(a, r#"{"alpha": 2, "mid": "x", "zeta": 1}"#);
+        // Nested objects sort independently of their parents.
+        let nested = obj(&[("outer_b", a.clone()), ("outer_a", uint(0))]);
+        assert!(nested.starts_with(r#"{"outer_a": 0, "outer_b": {"alpha""#));
+        let j = Json::parse(&nested).unwrap();
+        assert_eq!(
+            j.field("outer_b").unwrap().field("zeta").unwrap().as_usize(),
+            Some(1)
+        );
     }
 
     #[test]
