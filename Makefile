@@ -27,6 +27,7 @@ bench-json:
 	$(CARGO) bench --bench codec_throughput -- --smoke --json BENCH_codec.json
 	$(CARGO) bench --bench kv_cache -- --json BENCH_kv.json
 	$(CARGO) bench --bench fig6_delta_checkpoints -- --smoke --json BENCH_fig6.json
+	$(CARGO) bench --bench serve_throughput -- --smoke --json BENCH_serve.json
 
 # Enforce the committed perf contract against the latest bench-json run
 # (ratio regressions >1%, decode-throughput drops >20%, parallel-decode
@@ -34,7 +35,8 @@ bench-json:
 # `bench-override` PR label) demotes failures to warnings.
 bench-gate: bench-json
 	$(PYTHON) ci/bench_gate.py --baseline BENCH_baseline.json \
-		--current BENCH_codec.json --fig6 BENCH_fig6.json
+		--current BENCH_codec.json --fig6 BENCH_fig6.json \
+		--serve BENCH_serve.json
 
 doc:
 	$(CARGO) doc --no-deps

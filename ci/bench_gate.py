@@ -26,7 +26,13 @@ run regresses against the committed baseline:
     where the achieved bits/symbol fall below the order-0 Shannon bound
     (impossible for a lossless coder -- it means the accounting itself
     broke), or any gap above --gap-max bits/symbol (default 2.0, a
-    conservative ceiling on per-frame overhead amortisation).
+    conservative ceiling on per-frame overhead amortisation);
+  * (--serve) any serve row regressing its `gibps` floor, the baseline's
+    `min_speedup` floor on the clients=4 mmap row not met (the
+    distribution-server acceptance: aggregate pull throughput must scale
+    >= 2x from 1 to 4 concurrent clients on the mmap backing), or the
+    serve bench's embedded metric snapshot showing zero served requests /
+    any 5xx responses.
 
 Override: set BENCH_GATE_OVERRIDE=1 to demote failures to warnings (exit 0).
 CI wires this to the `bench-override` PR label; use it for known-noisy
@@ -169,6 +175,32 @@ def check_entropy_gap(cur, failures, gap_max):
     return checks
 
 
+def check_serve_metrics(serve_doc, failures):
+    """Sanity-check the serve bench's embedded registry snapshot: the
+    server must actually have served (request/byte counters moved) and
+    must not have errored (zero 5xx). Returns checks performed."""
+    metrics = serve_doc.get("metrics")
+    if not isinstance(metrics, dict):
+        failures.append("serve: embedded registry snapshot missing or not an object")
+        return 1
+    checks = 0
+    for name in ("serve.requests_model_total", "serve.bytes_sent_total"):
+        checks += 1
+        value = metrics.get(name)
+        if not isinstance(value, dict) or value.get("type") != "counter":
+            failures.append(f"serve metrics[{name}]: required counter absent")
+        elif not value.get("value", 0) > 0:
+            failures.append(f"serve metrics[{name}]: never moved during the bench")
+    checks += 1
+    errors = metrics.get("serve.responses_5xx_total")
+    if isinstance(errors, dict) and errors.get("value", 0) > 0:
+        failures.append(
+            f"serve metrics[serve.responses_5xx_total]: {errors.get('value')} "
+            "server errors during the bench"
+        )
+    return checks
+
+
 def check_span_overhead(cur, failures, max_ratio):
     """Enforce the span-overhead contract; returns checks performed."""
     if cur.get("schema", 0) < 3:
@@ -222,10 +254,21 @@ def main():
         help="path to BENCH_fig6.json; enables the fig6_* checks "
         "(checkpoint restore/compaction floors)",
     )
+    parser.add_argument(
+        "--serve",
+        default=None,
+        help="path to BENCH_serve.json; enables the serve checks "
+        "(distribution-server throughput floors and the 1->4 client "
+        "scaling acceptance)",
+    )
     args = parser.parse_args()
 
     base = load(args.baseline)
     cur = load(args.current)
+    serve_doc = None
+    if args.serve:
+        serve_doc = load(args.serve)
+        cur["serve"] = serve_doc.get("serve", [])
     if args.fig6:
         fig6 = load(args.fig6)
         # Merge the fig6 document's sections into the current doc under
@@ -302,6 +345,11 @@ def main():
         )
     else:
         print("bench-gate: --fig6 not given, skipping fig6_* checks")
+    if serve_doc is not None:
+        check_rows("serve", ("backing", "clients"), throughput_keys=("gibps",))
+        checks += check_serve_metrics(serve_doc, failures)
+    else:
+        print("bench-gate: --serve not given, skipping serve checks")
     checks += check_metrics(cur, failures)
     checks += check_span_overhead(cur, failures, args.span_overhead_max)
     checks += check_entropy_gap(cur, failures, args.gap_max)

@@ -1,0 +1,201 @@
+//! Bench: model-distribution server throughput — concurrent full pulls of
+//! one archive over loopback HTTP, across client counts and read backings.
+//!
+//! The claim under test is the serve subsystem's design premise: on the
+//! mmap backing every connection streams borrowed slices out of the shared
+//! page cache, so aggregate throughput *scales* with concurrent clients
+//! instead of serializing on a per-connection copy. The `clients=4` mmap
+//! row's `speedup_vs_serial` (vs `clients=1`, same backing) is the
+//! acceptance number `ci/bench_gate.py --serve` enforces against
+//! `BENCH_baseline.json` (floor: 2.0x). The pread backing is measured
+//! alongside as the copying comparison point.
+//!
+//! Every client's first pull is verified bit-exact against the archive
+//! file; later pulls are length-checked (the server has no per-request
+//! variation to hide behind — same bytes, same ETag).
+//!
+//! `--json PATH` writes the `BENCH_serve.json` schema documented in the
+//! README; `--smoke` shrinks the workload for CI schema checks.
+//!
+//! Run: `cargo bench --bench serve_throughput -- [--json PATH] [--smoke]`
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use zipnn_lp::codec::{CompressOptions, Compressor, TensorInput};
+use zipnn_lp::container::{ArchiveWriter, ReadBacking, TensorMeta};
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::metrics::Table;
+use zipnn_lp::obs;
+use zipnn_lp::serve::{serve, ModelRegistry, ServeOptions};
+use zipnn_lp::synthetic;
+use zipnn_lp::util::jsonout as jo;
+
+struct Args {
+    json: Option<String>,
+    smoke: bool,
+}
+
+fn parse_args() -> Args {
+    let mut out = Args { json: None, smoke: false };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => out.json = args.next(),
+            "--smoke" => out.smoke = true,
+            _ => {} // cargo bench passes its own flags; ignore them
+        }
+    }
+    out
+}
+
+/// One measured (backing, clients) cell.
+struct ServeRow {
+    backing: &'static str,
+    clients: usize,
+    /// Aggregate response-body throughput across all clients, GiB/s.
+    gibps: f64,
+    /// This row's throughput over the same backing's `clients=1` row.
+    speedup_vs_serial: f64,
+}
+
+/// One full `GET /models/m.zlp` — returns the response body.
+fn pull(addr: SocketAddr) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(b"GET /models/m.zlp HTTP/1.1\r\nhost: bench\r\n\r\n")
+        .expect("send request");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let head = &raw[..raw.len().min(32)];
+    assert!(raw.starts_with(b"HTTP/1.1 200"), "expected 200, got head {head:?}");
+    let pos = raw.windows(4).position(|w| w == b"\r\n\r\n").expect("head terminator");
+    raw.split_off(pos + 4)
+}
+
+/// `clients` threads each pull the model `pulls` times; returns aggregate
+/// GiB/s of body bytes. The barrier lines every thread up on the same
+/// starting gun so the wall clock covers only concurrent pulling.
+fn measure(addr: SocketAddr, file: &Arc<Vec<u8>>, clients: usize, pulls: usize) -> f64 {
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let barrier = Arc::clone(&barrier);
+            let file = Arc::clone(file);
+            std::thread::spawn(move || {
+                barrier.wait();
+                for i in 0..pulls {
+                    let body = pull(addr);
+                    if i == 0 {
+                        assert_eq!(body, *file, "served bytes must match the archive");
+                    } else {
+                        assert_eq!(body.len(), file.len());
+                    }
+                }
+            })
+        })
+        .collect();
+    barrier.wait();
+    let start = Instant::now();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let total_bytes = (clients * pulls * file.len()) as f64;
+    total_bytes / elapsed / (1024.0 * 1024.0 * 1024.0)
+}
+
+fn main() {
+    let args = parse_args();
+    // Raw BF16 elements in the archived tensor and pulls per client.
+    let (elems, pulls, client_counts): (usize, usize, &[usize]) = if args.smoke {
+        (512 * 1024, 2, &[1, 4])
+    } else {
+        (16 * 1024 * 1024, 6, &[1, 2, 4, 8])
+    };
+
+    let dir = std::env::temp_dir().join("zipnn_lp_bench_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("m_{}.zlp", std::process::id()));
+    let data = synthetic::gaussian_bf16_bytes(elems, 0.02, 77);
+    let session =
+        Compressor::new(CompressOptions::for_format(FloatFormat::Bf16).with_threads(4));
+    let blob = session.compress(TensorInput::Tensor(&data)).expect("compress");
+    let mut writer = ArchiveWriter::create(&path).expect("create archive");
+    writer
+        .add(TensorMeta { name: "weights".into(), shape: vec![elems as u64] }, &blob)
+        .expect("add");
+    writer.finish().expect("finish");
+    let file = Arc::new(std::fs::read(&path).expect("read archive back"));
+    println!(
+        "serving one archive: {} raw -> {} on disk\n",
+        zipnn_lp::util::human_bytes(data.len() as u64),
+        zipnn_lp::util::human_bytes(file.len() as u64),
+    );
+
+    let mut rows: Vec<ServeRow> = Vec::new();
+    let mut table = Table::new(&["backing", "clients", "GiB/s", "speedup"]);
+    for (bname, backing) in [("mmap", ReadBacking::Mmap), ("pread", ReadBacking::Pread)] {
+        // Fresh server per backing; model name = file name within `dir`.
+        let mut only = ModelRegistry::new();
+        let reader =
+            zipnn_lp::container::ArchiveReader::open_with(&path, backing).expect("open");
+        assert_eq!(reader.backing_kind(), bname, "requested backing must be honored");
+        only.insert("m.zlp", reader).expect("register");
+        let opts = ServeOptions { workers: 8, ..ServeOptions::default() };
+        let server = serve(only, &opts).expect("serve");
+        let addr = server.addr();
+        pull(addr); // warm: page cache populated, listener exercised
+
+        let mut serial_gibps = 0.0f64;
+        for &clients in client_counts {
+            let gibps = measure(addr, &file, clients, pulls);
+            if clients == 1 {
+                serial_gibps = gibps;
+            }
+            let speedup = if serial_gibps > 0.0 { gibps / serial_gibps } else { 0.0 };
+            table.row(&[
+                bname.into(),
+                clients.to_string(),
+                format!("{gibps:.3}"),
+                format!("{speedup:.2}x"),
+            ]);
+            rows.push(ServeRow { backing: bname, clients, gibps, speedup_vs_serial: speedup });
+        }
+        drop(server); // graceful stop before the next backing rebinds
+    }
+    println!("Concurrent full pulls over loopback ({pulls} per client):\n{}", table.render());
+    println!(
+        "acceptance: clients=4 mmap speedup_vs_serial >= 2.0 \
+         (enforced by ci/bench_gate.py --serve against BENCH_baseline.json).\n"
+    );
+
+    if let Some(path) = &args.json {
+        let items: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                jo::obj(&[
+                    ("backing", jo::string(r.backing)),
+                    ("clients", jo::uint(r.clients as u64)),
+                    ("gibps", jo::num(r.gibps)),
+                    ("speedup_vs_serial", jo::num(r.speedup_vs_serial)),
+                ])
+            })
+            .collect();
+        let doc = jo::obj(&[
+            ("schema", jo::uint(1)),
+            ("bench", jo::string("serve_throughput")),
+            ("file_len", jo::uint(file.len() as u64)),
+            ("pulls_per_client", jo::uint(pulls as u64)),
+            ("serve", jo::arr(&items)),
+            // Registry snapshot after all pulls: the gate checks the serve.*
+            // counters actually moved (requests, bytes, zero 5xx).
+            ("metrics", obs::export::json_fragment(&obs::global().snapshot())),
+        ]);
+        std::fs::write(path, doc + "\n").expect("write bench json");
+        println!("wrote {path}");
+    }
+    std::fs::remove_file(&path).ok();
+}

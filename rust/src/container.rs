@@ -560,12 +560,28 @@ mod mmap {
             offset: i64,
         ) -> *mut core::ffi::c_void;
         fn munmap(addr: *mut core::ffi::c_void, len: usize) -> core::ffi::c_int;
+        fn madvise(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            advice: core::ffi::c_int,
+        ) -> core::ffi::c_int;
     }
 
     /// PROT_READ — identical on Linux and the BSDs/macOS.
     const PROT_READ: core::ffi::c_int = 1;
     /// MAP_PRIVATE — identical on Linux and the BSDs/macOS.
     const MAP_PRIVATE: core::ffi::c_int = 2;
+    /// MADV_SEQUENTIAL — identical on Linux and the BSDs/macOS.
+    const MADV_SEQUENTIAL: core::ffi::c_int = 2;
+    /// MADV_WILLNEED — identical on Linux and the BSDs/macOS.
+    const MADV_WILLNEED: core::ffi::c_int = 3;
+    /// Page size assumed for aligning madvise regions. 4 KiB divides every
+    /// real page size on the supported targets (x86_64: 4K; aarch64: 4K,
+    /// 16K, or 64K) — rounding down to a 4 KiB boundary can therefore land
+    /// mid-page on exotic configurations, in which case madvise(2) returns
+    /// EINVAL and [`MmapFile::advise`] reports `false`; the hint is
+    /// best-effort by contract.
+    const PAGE_ALIGN: usize = 4096;
 
     /// Whether this build can memory-map archives.
     pub const SUPPORTED: bool = true;
@@ -623,6 +639,32 @@ mod mmap {
             // bytes, valid until Drop.
             unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
         }
+
+        /// Advise the kernel about the access pattern of `len` bytes at
+        /// `offset` within the mapping (`sequential: false` = WILLNEED
+        /// prefetch, `true` = SEQUENTIAL readahead). The region is widened
+        /// down to a page boundary as madvise(2) requires. Purely a hint:
+        /// returns whether the kernel accepted it; reads are correct either
+        /// way.
+        pub fn advise(&self, offset: usize, len: usize, sequential: bool) -> bool {
+            if len == 0 || offset >= self.len {
+                return false;
+            }
+            let len = len.min(self.len - offset);
+            let aligned_off = offset - offset % PAGE_ALIGN;
+            let aligned_len = len + (offset - aligned_off);
+            let advice = if sequential { MADV_SEQUENTIAL } else { MADV_WILLNEED };
+            // SAFETY: `aligned_off + aligned_len <= self.len` by the clamps
+            // above, so the advised region stays inside the live mapping.
+            let rc = unsafe {
+                madvise(
+                    self.ptr.as_ptr().add(aligned_off).cast(),
+                    aligned_len,
+                    advice,
+                )
+            };
+            rc == 0
+        }
     }
 
     impl Drop for MmapFile {
@@ -660,6 +702,11 @@ mod mmap {
         pub fn as_slice(&self) -> &[u8] {
             &[]
         }
+
+        /// No mapping, no hint to give.
+        pub fn advise(&self, _offset: usize, _len: usize, _sequential: bool) -> bool {
+            false
+        }
     }
 }
 
@@ -688,6 +735,25 @@ pub struct ArchiveReader {
     entries: BTreeMap<String, TensorEntry>,
     backing: Backing,
     version: u16,
+    /// Total archive size in bytes (the serialized v1 buffer for v1 files).
+    file_len: u64,
+    /// CRC32 the v2 tail carries over the footer (for v1: over the whole
+    /// serialized buffer). A cheap, already-verified strong identity for the
+    /// exact bytes on disk — the distribution server uses it as an ETag.
+    footer_crc: u32,
+}
+
+/// Access-pattern hint for [`ArchiveReader::advise`]: forwarded to
+/// `madvise(2)` on the mmap backing, ignored (reported unsupported)
+/// elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadAdvice {
+    /// The region will be read soon — ask the kernel to prefetch it
+    /// (`MADV_WILLNEED`).
+    WillNeed,
+    /// The region will be read front-to-back — ask for aggressive
+    /// readahead (`MADV_SEQUENTIAL`).
+    Sequential,
 }
 
 impl ArchiveReader {
@@ -735,6 +801,8 @@ impl ArchiveReader {
         file.seek(std::io::SeekFrom::Start(0))?;
         let mut buf = Vec::new();
         file.read_to_end(&mut buf)?;
+        let file_len = buf.len() as u64;
+        let content_crc = crc32(&buf);
         let archive = Archive::deserialize(&buf)?;
         let mut entries = BTreeMap::new();
         let mut data = BTreeMap::new();
@@ -758,6 +826,8 @@ impl ArchiveReader {
             entries,
             backing: Backing::Memory(data),
             version: ARCHIVE_VERSION,
+            file_len,
+            footer_crc: content_crc,
         })
     }
 
@@ -932,7 +1002,7 @@ impl ArchiveReader {
                 Err(_) => Backing::File(PreadFile(file)),
             },
         };
-        Ok(ArchiveReader { entries, backing, version: ARCHIVE_VERSION_V2 })
+        Ok(ArchiveReader { entries, backing, version: ARCHIVE_VERSION_V2, file_len, footer_crc })
     }
 
     /// Wire version of the opened file (1 or 2).
@@ -949,6 +1019,70 @@ impl ArchiveReader {
             Backing::File(_) => "pread",
             Backing::Memory(_) => "memory",
         }
+    }
+
+    /// Total size of the archive file in bytes.
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+
+    /// The CRC32 the v2 tail carries over the directory footer (already
+    /// verified at open). For v1 files: the CRC32 of the whole serialized
+    /// buffer. Together with [`file_len`](Self::file_len) this identifies
+    /// the exact bytes on disk — the distribution server derives its strong
+    /// ETag from it.
+    pub fn footer_crc(&self) -> u32 {
+        self.footer_crc
+    }
+
+    /// Raw archive-file bytes at absolute offset `offset`: the wire bytes
+    /// as stored (header, encoded chunks, footer, tail), *not* decompressed
+    /// tensor data. This is the distribution server's read surface — HTTP
+    /// `Range:` requests map onto it directly. Served as a borrowed mmap
+    /// slice or one positioned read; v1 archives (loaded per-tensor, no
+    /// byte-addressable file image) are rejected.
+    pub fn read_file_range(&self, offset: u64, len: usize) -> Result<Cow<'_, [u8]>> {
+        if (len as u64) > self.file_len || offset > self.file_len - len as u64 {
+            return Err(Error::InvalidInput(format!(
+                "file range {offset}(+{len}) outside archive of {} bytes",
+                self.file_len
+            )));
+        }
+        match &self.backing {
+            Backing::Mmap(m) => m.span(offset, len),
+            Backing::File(file) => file.span(offset, len),
+            Backing::Memory(_) => Err(Error::InvalidInput(
+                "raw byte serving needs a v2 archive (v1 files are loaded per-tensor)".into(),
+            )),
+        }
+    }
+
+    /// Hint the kernel about an upcoming read of `len` archive-file bytes
+    /// at absolute offset `offset`. Only the mmap backing has a mapping to
+    /// advise; returns whether a hint was actually issued (false on pread /
+    /// memory backings, out-of-range regions, or kernel rejection). Purely
+    /// best-effort: reads behave identically either way.
+    pub fn advise(&self, offset: u64, len: usize, advice: ReadAdvice) -> bool {
+        match &self.backing {
+            Backing::Mmap(m) => {
+                let Ok(offset) = usize::try_from(offset) else {
+                    return false;
+                };
+                m.advise(offset, len, advice == ReadAdvice::Sequential)
+            }
+            Backing::File(_) | Backing::Memory(_) => false,
+        }
+    }
+
+    /// [`advise`](Self::advise) for the whole encoded data region of tensor
+    /// `name` — the cold-cache prefetch hint for an imminent whole-tensor
+    /// restore.
+    pub fn advise_tensor(&self, name: &str, advice: ReadAdvice) -> Result<bool> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Container(format!("no tensor '{name}'")))?;
+        Ok(self.advise(entry.data_offset, entry.data_len() as usize, advice))
     }
 
     /// Tensor names in sorted order.
@@ -1138,6 +1272,10 @@ impl ArchiveReader {
                 entry.original_len
             )));
         }
+        // Cold-cache prefetch: the chunks below will fault the whole data
+        // region in arbitrary worker order, so tell the kernel up front to
+        // read it ahead as one run instead of chunk-sized random faults.
+        self.advise(entry.data_offset, entry.data_len() as usize, ReadAdvice::WillNeed);
         let mut enc_offs = Vec::with_capacity(entry.chunks.len());
         let mut enc_off = 0u64;
         for c in &entry.chunks {
@@ -1582,6 +1720,73 @@ mod tests {
         archive.insert(TensorMeta { name: "t".into(), shape: vec![50, 2] }, blob);
         assert_eq!(archive.len(), 1);
         assert_eq!(archive.get("t").unwrap().0.shape, vec![50, 2]);
+    }
+
+    #[test]
+    fn file_range_serves_raw_archive_bytes() {
+        let (archive, _) = sample_archive();
+        let path = tmpfile("file_range");
+        archive.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        for backing in [ReadBacking::Auto, ReadBacking::Pread] {
+            let reader = ArchiveReader::open_with(&path, backing).unwrap();
+            assert_eq!(reader.file_len(), good.len() as u64);
+            // Whole file, one span.
+            let all = reader.read_file_range(0, good.len()).unwrap();
+            assert_eq!(all[..], good[..], "{backing:?} full");
+            // Interior range crossing the header into chunk data.
+            let mid = reader.read_file_range(5, 100).unwrap();
+            assert_eq!(mid[..], good[5..105], "{backing:?} mid");
+            // Tail range (the 16-byte v2 tail itself).
+            let tail_off = good.len() - ARCHIVE_TAIL_LEN;
+            let tail = reader.read_file_range(tail_off as u64, ARCHIVE_TAIL_LEN).unwrap();
+            assert_eq!(tail[..], good[tail_off..], "{backing:?} tail");
+            // Out of range in offset or length.
+            assert!(reader.read_file_range(good.len() as u64, 1).is_err());
+            assert!(reader.read_file_range(0, good.len() + 1).is_err());
+            assert!(reader.read_file_range(u64::MAX, 1).is_err());
+            // The footer CRC the tail carries is what footer_crc() reports.
+            let tail_crc = u32::from_le_bytes(tail[8..12].try_into().unwrap());
+            assert_eq!(reader.footer_crc(), tail_crc, "{backing:?} crc");
+        }
+        // v1: no byte-addressable file image, but identity is still exposed.
+        let v1_path = tmpfile("file_range_v1");
+        let v1_bytes = archive.serialize();
+        std::fs::write(&v1_path, &v1_bytes).unwrap();
+        let v1 = ArchiveReader::open(&v1_path).unwrap();
+        assert_eq!(v1.file_len(), v1_bytes.len() as u64);
+        assert_eq!(v1.footer_crc(), crc32(&v1_bytes));
+        assert!(v1.read_file_range(0, 4).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&v1_path).ok();
+    }
+
+    #[test]
+    fn advise_is_best_effort_and_backing_dependent() {
+        let (archive, raw) = sample_archive();
+        let path = tmpfile("advise");
+        archive.save(&path).unwrap();
+        let pread = ArchiveReader::open_with(&path, ReadBacking::Pread).unwrap();
+        // No mapping to advise: always reported unsupported, reads still work.
+        assert!(!pread.advise(0, 4096, ReadAdvice::WillNeed));
+        assert!(!pread.advise_tensor(&raw[0].0, ReadAdvice::Sequential).unwrap());
+        assert_eq!(pread.read_tensor(&raw[0].0).unwrap(), raw[0].1);
+        if MMAP_SUPPORTED {
+            let mapped = ArchiveReader::open_with(&path, ReadBacking::Mmap).unwrap();
+            // Page-aligned whole-file hint: the kernel accepts it.
+            assert!(mapped.advise(0, mapped.file_len() as usize, ReadAdvice::Sequential));
+            // Unaligned interior region is aligned down internally.
+            assert!(mapped.advise(5, 100, ReadAdvice::WillNeed));
+            // Out-of-mapping or empty regions: no hint, no panic.
+            assert!(!mapped.advise(mapped.file_len(), 1, ReadAdvice::WillNeed));
+            assert!(!mapped.advise(0, 0, ReadAdvice::WillNeed));
+            for (name, data) in &raw {
+                assert!(mapped.advise_tensor(name, ReadAdvice::WillNeed).unwrap());
+                assert_eq!(&mapped.read_tensor(name).unwrap(), data, "after advise {name}");
+            }
+            assert!(mapped.advise_tensor("missing", ReadAdvice::WillNeed).is_err());
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

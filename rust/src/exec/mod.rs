@@ -149,6 +149,10 @@ pub struct WorkerPool {
     shared: Arc<(Mutex<Queue>, Condvar)>,
     handles: Vec<JoinHandle<()>>,
     batches: AtomicUsize,
+    /// Owned [`submit`](Self::submit) jobs accepted but not yet finished.
+    /// Shared with the job wrappers (an `Arc`, not a pool field read, so the
+    /// decrement survives the pool being dropped while jobs drain).
+    inflight: Arc<AtomicUsize>,
 }
 
 impl WorkerPool {
@@ -162,7 +166,13 @@ impl WorkerPool {
             let shared = Arc::clone(&shared);
             handles.push(std::thread::spawn(move || worker_loop(&shared)));
         }
-        WorkerPool { threads, shared, handles, batches: AtomicUsize::new(0) }
+        WorkerPool {
+            threads,
+            shared,
+            handles,
+            batches: AtomicUsize::new(0),
+            inflight: Arc::new(AtomicUsize::new(0)),
+        }
     }
 
     /// A pool that always runs serially (no spawned threads).
@@ -180,6 +190,15 @@ impl WorkerPool {
     /// batches).
     pub fn parallel_batches(&self) -> usize {
         self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Owned [`submit`](Self::submit) jobs accepted and not yet finished
+    /// (queued or executing; [`run`](Self::run) batches are not counted —
+    /// they block their caller and cannot accumulate). This is the
+    /// admission-control signal: the distribution server compares it
+    /// against its connection cap before accepting another connection.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
     }
 
     /// Execute `n_jobs` jobs, `f(i)` for each index, returning results in
@@ -266,13 +285,21 @@ impl WorkerPool {
             state: Mutex::new(TaskState::Pending),
             done: Condvar::new(),
         });
+        let inflight = Arc::clone(&self.inflight);
+        inflight.fetch_add(1, Ordering::SeqCst);
         if self.threads <= 1 {
-            TaskShared::finish(&shared, catch_unwind(AssertUnwindSafe(|| timed_job(f))));
+            let result = catch_unwind(AssertUnwindSafe(|| timed_job(f)));
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            TaskShared::finish(&shared, result);
             return Task { shared, queue: std::sync::Weak::new() };
         }
         let job_shared = Arc::clone(&shared);
         let job: Job = Box::new(move || {
             let result = catch_unwind(AssertUnwindSafe(|| timed_job(f)));
+            // Decrement before publishing the result, and unconditionally on
+            // panic: a slot must never leak, or the server's admission
+            // control would wedge shut.
+            inflight.fetch_sub(1, Ordering::SeqCst);
             TaskShared::finish(&job_shared, result);
         });
         let (queue, available) = &*self.shared;
@@ -536,6 +563,41 @@ mod tests {
         let serial_before = m.tasks_total.get();
         WorkerPool::serial().run(3, |i| i);
         assert!(m.tasks_total.get() >= serial_before + 3);
+    }
+
+    #[test]
+    fn inflight_tracks_submitted_jobs_and_survives_panics() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.inflight(), 0);
+        // A job blocked on a gate holds its slot; release drains it.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let t = pool.submit(move || {
+            let (open, cv) = &*g;
+            let mut open = open.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        assert_eq!(pool.inflight(), 1);
+        {
+            let (open, cv) = &*gate;
+            *open.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        t.wait();
+        assert_eq!(pool.inflight(), 0);
+        // Panicking jobs release their slot too.
+        let t = pool.submit(|| panic!("slot boom"));
+        assert!(catch_unwind(AssertUnwindSafe(move || t.wait())).is_err());
+        assert_eq!(pool.inflight(), 0);
+        // run() batches never count: they block the caller.
+        pool.run(4, |i| i);
+        assert_eq!(pool.inflight(), 0);
+        // Serial pools account through the inline path.
+        let serial = WorkerPool::serial();
+        serial.submit(|| ()).wait();
+        assert_eq!(serial.inflight(), 0);
     }
 
     #[test]

@@ -61,7 +61,9 @@
 //! worker, and many tensors pack into a random-access archive via
 //! [`container::ArchiveWriter`] / [`container::ArchiveReader`]. The
 //! pre-session free functions (`codec::compress_tensor`,
-//! `codec::decompress_tensor`, …) remain as thin wrappers.
+//! `codec::decompress_tensor`, …) remain as thin wrappers. On top of the
+//! archive, [`serve`] runs a dependency-free HTTP/1.1 distribution server
+//! with ranged, resumable pulls (`zipnn-lp serve-models`).
 
 #![warn(missing_docs)]
 
@@ -84,6 +86,7 @@ pub mod obs;
 pub mod pool;
 pub mod rans;
 pub mod runtime;
+pub mod serve;
 pub mod synthetic;
 pub mod util;
 

@@ -79,6 +79,7 @@ fn run(args: Vec<String>) -> Result<(), Box<dyn std::error::Error>> {
         "stats" => cmd_stats(&flags),
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
+        "serve-models" => cmd_serve_models(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -128,6 +129,8 @@ SUBCOMMANDS:
   compress    --input FILE --format bf16|fp8|fp4|fp32|fp16 [--output FILE]
               [--chunk-kib 256] [--threads 1] [--exponent-only]
               [--codec auto|huffman|rans|raw]
+              [--archive]  (emit a one-tensor v2 archive .zlp instead of a
+               .zlpt blob — the format serve-models distributes)
   compress-model --input model.safetensors [--output model.zlpc]
               [--threads 1] [--codec auto|huffman|rans|raw]
               (per-tensor, HF safetensors)
@@ -153,6 +156,11 @@ SUBCOMMANDS:
   serve       --artifacts DIR [--requests 8] [--new-tokens 24]
               [--kv-format bf16|fp8|e5m2] [--no-compression] [--seed 0]
               [--kv-budget-mib 0 (unbounded)] [--pool-workers 1]
+  serve-models --root DIR [--addr 127.0.0.1:8323] [--workers 4]
+              [--max-conns 64] [--backing auto|mmap|pread]
+              (HTTP/1.1 model-distribution server over the .zlp archives in
+               --root: GET /models/<name> with Range/If-Range resume,
+               GET /models/<name>/manifest, GET /metrics)
   info        --artifacts DIR
 
 TELEMETRY (compress / decompress / inspect / analyze / stats / checkpoint):
@@ -170,7 +178,10 @@ fn parse_flags(rest: &[String]) -> Result<HashMap<String, String>, String> {
             return Err(format!("expected --flag, got '{k}'"));
         };
         // Boolean flags.
-        if matches!(key, "exponent-only" | "no-compression" | "keep-bases" | "deep" | "json") {
+        if matches!(
+            key,
+            "exponent-only" | "no-compression" | "keep-bases" | "deep" | "json" | "archive"
+        ) {
             map.insert(key.to_string(), "true".to_string());
             continue;
         }
@@ -296,11 +307,24 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::erro
     let t = zipnn_lp::metrics::Timer::new();
     let blob = session.compress(TensorInput::Tensor(&data))?;
     let secs = t.secs();
-    let out_path = flags
-        .get("output")
-        .cloned()
-        .unwrap_or_else(|| format!("{input}.zlpt"));
-    std::fs::write(&out_path, blob.serialize())?;
+    // `--archive` wraps the blob in a one-tensor v2 archive (.zlp): the
+    // random-access format `serve-models` distributes and `decompress`
+    // unpacks chunk-parallel.
+    let as_archive = flags.contains_key("archive");
+    let out_path = flags.get("output").cloned().unwrap_or_else(|| {
+        format!("{input}.{}", if as_archive { "zlp" } else { "zlpt" })
+    });
+    if as_archive {
+        use zipnn_lp::container::{ArchiveWriter, TensorMeta};
+        let mut writer = ArchiveWriter::create(std::path::Path::new(&out_path))?;
+        writer.add(
+            TensorMeta { name: "data".into(), shape: vec![data.len() as u64] },
+            &blob,
+        )?;
+        writer.finish()?;
+    } else {
+        std::fs::write(&out_path, blob.serialize())?;
+    }
     println!(
         "{} -> {} ({} -> {}, ratio {:.4}, {:.1} MiB/s)",
         input,
@@ -999,6 +1023,45 @@ fn print_snapshot_table(snap: &zipnn_lp::obs::Snapshot) {
         }
     }
     println!("{}", table.render());
+}
+
+fn cmd_serve_models(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    use zipnn_lp::container::ReadBacking;
+    use zipnn_lp::serve::{serve, ModelRegistry, ServeOptions};
+
+    let root = PathBuf::from(get(flags, "root")?);
+    let addr = get_or(flags, "addr", "127.0.0.1:8323");
+    let backing: ReadBacking = get_or(flags, "backing", "auto").parse()?;
+    let workers: usize = get_or(flags, "workers", "4").parse()?;
+    let max_conns: usize = get_or(flags, "max-conns", "64").parse()?;
+
+    let registry = ModelRegistry::open_dir(&root, backing)?;
+    if registry.is_empty() {
+        return Err(format!("no .zlp archives found under {}", root.display()).into());
+    }
+    for name in registry.names() {
+        let reader = registry.get(&name).expect("name came from the registry");
+        println!(
+            "model {name}: {} ({} backing, footer crc {:08x})",
+            human_bytes(reader.file_len()),
+            reader.backing_kind(),
+            reader.footer_crc()
+        );
+    }
+
+    let opts = ServeOptions {
+        addr: addr.to_string(),
+        workers: workers.max(1),
+        max_conns: max_conns.max(1),
+        ..ServeOptions::default()
+    };
+    let handle = serve(registry, &opts)?;
+    // The CI smoke job parses this exact line to learn the bound port, so an
+    // ephemeral `--addr host:0` request still yields a reachable URL.
+    println!("listening on http://{}", handle.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]

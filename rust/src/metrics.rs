@@ -6,9 +6,8 @@
 //! machines) alongside the mean; [`Table`] renders the aligned
 //! paper-figure-style rows every bench binary prints.
 //!
-//! The lock-free [`Counter`] and [`Gauge`] primitives moved into
-//! [`crate::obs`] when telemetry became a subsystem; the re-exports here
-//! are deprecated and kept only so downstream imports keep compiling.
+//! The lock-free counter and gauge primitives live in [`crate::obs`] (they
+//! moved there when telemetry became a subsystem).
 //!
 //! ```
 //! use zipnn_lp::metrics::Table;
@@ -19,11 +18,6 @@
 //! ```
 
 use std::time::{Duration, Instant};
-
-#[deprecated(since = "0.1.0", note = "moved to crate::obs::Counter")]
-pub use crate::obs::Counter;
-#[deprecated(since = "0.1.0", note = "moved to crate::obs::Gauge")]
-pub use crate::obs::Gauge;
 
 /// A simple wall-clock timer.
 #[derive(Debug)]

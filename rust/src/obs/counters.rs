@@ -1,9 +1,8 @@
 //! The two lock-free scalar metric primitives: [`Counter`] and [`Gauge`].
 //!
 //! Both lived in `crate::metrics` before the registry existed; they moved
-//! here when `obs` became the one metrics implementation (the old paths
-//! remain as deprecated re-exports). Reads never take a lock, so either
-//! can be sampled while workers are active.
+//! here when `obs` became the one metrics implementation. Reads never take
+//! a lock, so either can be sampled while workers are active.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

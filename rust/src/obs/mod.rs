@@ -11,14 +11,15 @@
 //! * the [`crate::pool::SharedKvPool`] (evictions/spills/reloads on a
 //!   scoped registry, with [`crate::pool::PoolCounters`] kept as a façade),
 //! * the [`crate::checkpoint::CheckpointStore`] (append/compact/GC/fsck
-//!   durations, fsync counts, recovery events).
+//!   durations, fsync counts, recovery events),
+//! * the [`crate::serve`] distribution server (per-endpoint request/byte
+//!   counters, request latency, in-flight connection gauge).
 //!
 //! # Registry model
 //!
 //! A [`Registry`] is a named directory of the three lock-free primitives:
 //! [`Counter`] and [`Gauge`] plus the power-of-two-bucket [`Histogram`]
-//! (all defined here; `crate::metrics` keeps deprecated re-exports of the
-//! first two). Handles are `Arc`s fetched once at
+//! (all defined here). Handles are `Arc`s fetched once at
 //! construction time ([`Registry::counter`] & co.); the registry lock is
 //! touched only at registration and snapshot time, never on the metric hot
 //! path. [`global()`] is the process-wide default registry; components

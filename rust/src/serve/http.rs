@@ -1,0 +1,404 @@
+//! Minimal HTTP/1.1 plumbing for the distribution server: a bounded,
+//! deadline-guarded request reader, a strict request parser, `Range:`
+//! header interpretation, and response-head rendering.
+//!
+//! Only what serving archives needs is implemented — GET/HEAD requests
+//! without bodies, single byte ranges, `Connection: close` responses — and
+//! everything a client can get wrong maps to a typed [`RequestError`] the
+//! server turns into the right 4xx status. The parser is pure (bytes in,
+//! [`Request`] out), so the malformed-input matrix is unit-testable without
+//! a socket.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Upper bound on a request head (request line + headers + terminator).
+/// Requests still growing past this are answered `431` — an unbounded
+/// buffer would let one slow client allocate without limit.
+pub const MAX_REQUEST_BYTES: usize = 16 * 1024;
+
+/// How a request failed before a route was even resolved. Each variant maps
+/// to one response status (see [`RequestError::status`]).
+#[derive(Debug)]
+pub enum RequestError {
+    /// The client closed (or broke) the connection before completing a
+    /// request head. No response can be delivered; the connection slot is
+    /// simply released.
+    Disconnected,
+    /// The head did not complete before the read deadline — the slow-loris
+    /// guard. Answered `408`.
+    Timeout,
+    /// The head outgrew [`MAX_REQUEST_BYTES`]. Answered `431`.
+    TooLarge,
+    /// Syntactically invalid request line or header. Answered `400`.
+    Malformed(String),
+}
+
+impl RequestError {
+    /// The response status this failure is answered with (`None` when the
+    /// client is already gone and no response can be delivered).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            RequestError::Disconnected => None,
+            RequestError::Timeout => Some(408),
+            RequestError::TooLarge => Some(431),
+            RequestError::Malformed(_) => Some(400),
+        }
+    }
+}
+
+/// One parsed request head.
+#[derive(Debug)]
+pub struct Request {
+    /// Request method, as sent (`GET`, `HEAD`, ...).
+    pub method: String,
+    /// Request target (`/models/llama.zlp`), percent-encoding untouched —
+    /// archive names are restricted to characters that need none.
+    pub target: String,
+    /// Header `(name, value)` pairs in arrival order; names lower-cased.
+    headers: Vec<(String, String)>,
+}
+
+impl Request {
+    /// Case-insensitive single-header lookup (first occurrence wins).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one request head off `stream`, enforcing the byte bound and an
+/// overall deadline (`timeout` from now), then parse it. The read timeout
+/// is re-armed with the *remaining* deadline budget before every `read`, so
+/// a client trickling one byte per second cannot hold the connection open
+/// past `timeout` — the slow-loris guard.
+pub fn read_request(
+    stream: &mut TcpStream,
+    timeout: Duration,
+) -> std::result::Result<Request, RequestError> {
+    let deadline = Instant::now() + timeout;
+    let mut head = Vec::with_capacity(1024);
+    let mut buf = [0u8; 1024];
+    loop {
+        if let Some(end) = find_terminator(&head) {
+            // Anything past the terminator would be a request body (or a
+            // pipelined request); both are rejected in parse_request via
+            // the body-header check, so trailing bytes are simply ignored.
+            return parse_request(&head[..end]);
+        }
+        if head.len() > MAX_REQUEST_BYTES {
+            return Err(RequestError::TooLarge);
+        }
+        let remaining = deadline
+            .checked_duration_since(Instant::now())
+            .ok_or(RequestError::Timeout)?;
+        // set_read_timeout(0) would mean "block forever"; the checked_sub
+        // above guarantees remaining > 0 here.
+        stream.set_read_timeout(Some(remaining)).map_err(|_| RequestError::Disconnected)?;
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                return Err(if head.is_empty() {
+                    RequestError::Disconnected
+                } else {
+                    RequestError::Malformed("request head ends before the blank line".into())
+                });
+            }
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(e) => {
+                return Err(match e.kind() {
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                        RequestError::Timeout
+                    }
+                    _ => RequestError::Disconnected,
+                });
+            }
+        }
+    }
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_terminator(head: &[u8]) -> Option<usize> {
+    head.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse a complete request head (everything before the blank line).
+/// Strict on purpose: a distribution server gains nothing from guessing at
+/// malformed requests, and every rejection is an explicit `400`.
+pub fn parse_request(head: &[u8]) -> std::result::Result<Request, RequestError> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| RequestError::Malformed("request head is not utf-8".into()))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+            _ => {
+                return Err(RequestError::Malformed(format!(
+                    "bad request line '{request_line}'"
+                )))
+            }
+        };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(RequestError::Malformed(format!("bad method '{method}'")));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err(RequestError::Malformed(format!("unsupported version '{version}'")));
+    }
+    if !target.starts_with('/') {
+        return Err(RequestError::Malformed(format!("bad target '{target}'")));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue; // the blank terminator line
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| RequestError::Malformed(format!("header without ':': '{line}'")))?;
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(RequestError::Malformed(format!("bad header name '{name}'")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let request = Request {
+        method: method.to_string(),
+        target: target.to_string(),
+        headers,
+    };
+    // GET/HEAD carry no body and this server defines no other method, so a
+    // declared body is always a protocol error — reject it up front rather
+    // than misparse the body bytes as a second request.
+    if request.header("content-length").is_some_and(|v| v.trim() != "0")
+        || request.header("transfer-encoding").is_some()
+    {
+        return Err(RequestError::Malformed("request bodies are not supported".into()));
+    }
+    Ok(request)
+}
+
+/// Interpretation of a `Range:` header against a `total`-byte resource.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RangeSpec {
+    /// Serve the whole resource (no range, or a range the server elects to
+    /// ignore: syntactically invalid or multi-range, per RFC 9110 both may
+    /// fall back to a full `200` response).
+    Whole,
+    /// Serve `len` bytes from `start` as a `206`.
+    Single {
+        /// First byte offset of the satisfiable range.
+        start: u64,
+        /// Number of bytes to serve (clamped to the resource end).
+        len: u64,
+    },
+    /// Syntactically valid but unsatisfiable (start at/after EOF, or an
+    /// empty suffix): answered `416` with `Content-Range: bytes */total`.
+    Unsatisfiable,
+}
+
+/// Parse a `Range:` header value (e.g. `bytes=0-1023`, `bytes=512-`,
+/// `bytes=-256`) against a resource of `total` bytes.
+pub fn parse_range(value: &str, total: u64) -> RangeSpec {
+    let Some(spec) = value.trim().strip_prefix("bytes=") else {
+        return RangeSpec::Whole; // unknown unit: ignore the header
+    };
+    if spec.contains(',') {
+        return RangeSpec::Whole; // multi-range: full-body fallback
+    }
+    let spec = spec.trim();
+    let Some((lo, hi)) = spec.split_once('-') else {
+        return RangeSpec::Whole; // no '-': not a byte-range spec
+    };
+    if lo.is_empty() {
+        // Suffix form: the final N bytes.
+        let Ok(n) = hi.parse::<u64>() else {
+            return RangeSpec::Whole;
+        };
+        if n == 0 || total == 0 {
+            return RangeSpec::Unsatisfiable;
+        }
+        let len = n.min(total);
+        return RangeSpec::Single { start: total - len, len };
+    }
+    let Ok(start) = lo.parse::<u64>() else {
+        return RangeSpec::Whole;
+    };
+    if start >= total {
+        return RangeSpec::Unsatisfiable;
+    }
+    if hi.is_empty() {
+        // Open-ended form: from `start` to EOF.
+        return RangeSpec::Single { start, len: total - start };
+    }
+    let Ok(end) = hi.parse::<u64>() else {
+        return RangeSpec::Whole;
+    };
+    if end < start {
+        return RangeSpec::Whole; // inverted range: invalid, ignore
+    }
+    let end = end.min(total - 1);
+    RangeSpec::Single { start, len: end - start + 1 }
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        206 => "Partial Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        416 => "Range Not Satisfiable",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Render a response head. Every response is `Connection: close` — one
+/// request per connection keeps the worker-slot accounting trivial (a slot
+/// is exactly one request) and resumable pulls reconnect with `Range:`
+/// anyway.
+pub fn response_head(status: u16, headers: &[(&str, String)]) -> String {
+    let mut out = format!("HTTP/1.1 {status} {}\r\n", status_reason(status));
+    out.push_str("connection: close\r\n");
+    for (name, value) in headers {
+        out.push_str(name);
+        out.push_str(": ");
+        out.push_str(value);
+        out.push_str("\r\n");
+    }
+    out.push_str("\r\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> std::result::Result<Request, RequestError> {
+        parse_request(s.as_bytes())
+    }
+
+    #[test]
+    fn parses_request_line_and_headers() {
+        let r = parse(
+            "GET /models/m.zlp HTTP/1.1\r\nHost: x\r\nRange: bytes=0-5\r\nIf-Range: \"e\"\r\n",
+        )
+        .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.target, "/models/m.zlp");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.header("RANGE"), Some("bytes=0-5"));
+        assert_eq!(r.header("if-range"), Some("\"e\""));
+        assert_eq!(r.header("absent"), None);
+    }
+
+    #[test]
+    fn malformed_request_lines_are_rejected() {
+        for bad in [
+            "",
+            "GET",
+            "GET /x",
+            "GET /x HTTP/1.1 extra",
+            "GET  /x HTTP/1.1", // double space -> empty token
+            "get /x HTTP/1.1",  // lowercase method token
+            "GET x HTTP/1.1",   // target without leading slash
+            "GET /x SPDY/3",    // unsupported protocol
+        ] {
+            assert!(
+                matches!(parse(&format!("{bad}\r\n")), Err(RequestError::Malformed(_))),
+                "accepted: {bad:?}"
+            );
+        }
+        // Raw bytes that are not utf-8 at all.
+        assert!(matches!(
+            parse_request(b"GET /\xff\xfe HTTP/1.1\r\n"),
+            Err(RequestError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn malformed_headers_are_rejected() {
+        for bad in [
+            "GET /x HTTP/1.1\r\nno-colon-here\r\n",
+            "GET /x HTTP/1.1\r\n: empty-name\r\n",
+            "GET /x HTTP/1.1\r\nbad name: v\r\n",
+        ] {
+            assert!(matches!(parse(bad), Err(RequestError::Malformed(_))), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn declared_bodies_are_rejected() {
+        assert!(matches!(
+            parse("GET /x HTTP/1.1\r\nContent-Length: 4\r\n"),
+            Err(RequestError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n"),
+            Err(RequestError::Malformed(_))
+        ));
+        // An explicit zero-length body is indistinguishable from no body.
+        assert!(parse("GET /x HTTP/1.1\r\nContent-Length: 0\r\n").is_ok());
+    }
+
+    #[test]
+    fn range_parsing_covers_every_form() {
+        let total = 1000;
+        assert_eq!(parse_range("bytes=0-99", total), RangeSpec::Single { start: 0, len: 100 });
+        assert_eq!(
+            parse_range("bytes=900-", total),
+            RangeSpec::Single { start: 900, len: 100 }
+        );
+        assert_eq!(
+            parse_range("bytes=-100", total),
+            RangeSpec::Single { start: 900, len: 100 }
+        );
+        // Suffix longer than the resource clamps to the whole resource.
+        assert_eq!(
+            parse_range("bytes=-5000", total),
+            RangeSpec::Single { start: 0, len: 1000 }
+        );
+        // End past EOF clamps.
+        assert_eq!(
+            parse_range("bytes=990-4000", total),
+            RangeSpec::Single { start: 990, len: 10 }
+        );
+        // Unsatisfiable: start at/after EOF, empty suffix, empty resource.
+        assert_eq!(parse_range("bytes=1000-", total), RangeSpec::Unsatisfiable);
+        assert_eq!(parse_range("bytes=2000-3000", total), RangeSpec::Unsatisfiable);
+        assert_eq!(parse_range("bytes=-0", total), RangeSpec::Unsatisfiable);
+        assert_eq!(parse_range("bytes=-10", 0), RangeSpec::Unsatisfiable);
+        // Invalid or unsupported forms fall back to the whole body.
+        for fallback in [
+            "bytes=0-99,200-299", // multi-range
+            "bytes=99-0",         // inverted
+            "bytes=abc-def",
+            "bytes=",
+            "items=0-5", // unknown unit
+        ] {
+            assert_eq!(parse_range(fallback, total), RangeSpec::Whole, "{fallback}");
+        }
+    }
+
+    #[test]
+    fn response_head_renders_status_and_headers() {
+        let head = response_head(206, &[("content-length", "10".to_string())]);
+        assert!(head.starts_with("HTTP/1.1 206 Partial Content\r\n"));
+        assert!(head.contains("connection: close\r\n"));
+        assert!(head.contains("content-length: 10\r\n"));
+        assert!(head.ends_with("\r\n\r\n"));
+    }
+
+    #[test]
+    fn error_statuses_map_per_variant() {
+        assert_eq!(RequestError::Disconnected.status(), None);
+        assert_eq!(RequestError::Timeout.status(), Some(408));
+        assert_eq!(RequestError::TooLarge.status(), Some(431));
+        assert_eq!(RequestError::Malformed(String::new()).status(), Some(400));
+    }
+}

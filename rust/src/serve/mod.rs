@@ -1,0 +1,795 @@
+//! Model-distribution server: ranged, resumable archive pulls over HTTP.
+//!
+//! The v2 archive's trailing chunk directory already makes the file a
+//! random-access artifact; this module puts a **dependency-free HTTP/1.1
+//! server** (std [`TcpListener`] + the existing
+//! [`WorkerPool`](crate::exec::WorkerPool)) in front of a directory of
+//! archives so clients pull models over the network — the paper's headline
+//! transmission-cost story, end to end:
+//!
+//! * `GET /models/<name>` streams the raw archive bytes. On the mmap
+//!   backing every connection serves borrowed slices out of the shared page
+//!   cache — concurrent pulls of one model cost one copy of the file in
+//!   memory, and the read path issues `madvise(SEQUENTIAL)` ahead of the
+//!   stream.
+//! * `Range: bytes=a-b` maps onto byte-range positioned reads
+//!   ([`ArchiveReader::read_file_range`]) with full `206`/`416` semantics,
+//!   so an interrupted pull resumes from where it broke.
+//! * A strong ETag derived from the already-CRC-verified footer
+//!   ([`ArchiveReader::footer_crc`] + file length) travels on every model
+//!   response; clients resume with `If-Range` and a stale validator
+//!   falls back to the full body instead of splicing mismatched bytes.
+//! * `GET /models/<name>/manifest` exposes the chunk directory as JSON —
+//!   everything a client needs to schedule chunk-aligned parallel pulls.
+//! * `GET /metrics` renders the process-wide registry as Prometheus text.
+//!
+//! Robustness is part of the contract: request heads are bounded
+//! ([`http::MAX_REQUEST_BYTES`] → `431`) and deadline-guarded (slow-loris
+//! → `408`), malformed requests get typed 4xx responses, the connection cap
+//! answers `503` instead of queueing without bound, and a client vanishing
+//! mid-transfer releases its slot without poisoning the pool.
+
+pub mod http;
+
+use crate::container::{ArchiveReader, ReadAdvice};
+use crate::error::{Error, Result};
+use crate::exec::WorkerPool;
+use crate::obs::{self, Counter, Gauge, Histogram};
+use crate::util::jsonout as jo;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Bytes handed to the socket per write while streaming a model. Large
+/// enough to amortize syscalls, small enough that a disconnect is noticed
+/// promptly and pread-backed servers never buffer much per connection.
+const STREAM_CHUNK: usize = 256 * 1024;
+
+/// Global-registry handles for server instrumentation, fetched once (the
+/// ROADMAP contract: serving reports through [`crate::obs`], it does not
+/// invent counters).
+struct ServeMetrics {
+    /// `serve.requests_model_total` / `_manifest_total` / `_metrics_total`
+    /// — requests routed per endpoint.
+    model_requests: Arc<Counter>,
+    manifest_requests: Arc<Counter>,
+    metrics_requests: Arc<Counter>,
+    /// `serve.request_model_ns` / `_manifest_ns` / `_metrics_ns` —
+    /// per-endpoint latency, first byte read to last byte written.
+    model_ns: Arc<Histogram>,
+    manifest_ns: Arc<Histogram>,
+    metrics_ns: Arc<Histogram>,
+    /// `serve.bytes_sent_total` — response body bytes that reached the
+    /// socket.
+    bytes_sent: Arc<Counter>,
+    /// `serve.responses_4xx_total` / `serve.responses_5xx_total` — error
+    /// responses by class (including 503 admission rejections).
+    responses_4xx: Arc<Counter>,
+    responses_5xx: Arc<Counter>,
+    /// `serve.rejected_total` — connections answered `503` at the cap.
+    rejected: Arc<Counter>,
+    /// `serve.disconnects_total` — clients that vanished mid-request or
+    /// mid-stream.
+    disconnects: Arc<Counter>,
+    /// `serve.inflight_connections` — accepted connections currently being
+    /// served (gauge with high-water mark).
+    inflight: Arc<Gauge>,
+}
+
+fn serve_metrics() -> &'static ServeMetrics {
+    static METRICS: OnceLock<ServeMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let reg = obs::global();
+        ServeMetrics {
+            model_requests: reg.counter("serve.requests_model_total"),
+            manifest_requests: reg.counter("serve.requests_manifest_total"),
+            metrics_requests: reg.counter("serve.requests_metrics_total"),
+            model_ns: reg.histogram("serve.request_model_ns"),
+            manifest_ns: reg.histogram("serve.request_manifest_ns"),
+            metrics_ns: reg.histogram("serve.request_metrics_ns"),
+            bytes_sent: reg.counter("serve.bytes_sent_total"),
+            responses_4xx: reg.counter("serve.responses_4xx_total"),
+            responses_5xx: reg.counter("serve.responses_5xx_total"),
+            rejected: reg.counter("serve.rejected_total"),
+            disconnects: reg.counter("serve.disconnects_total"),
+            inflight: reg.gauge("serve.inflight_connections"),
+        }
+    })
+}
+
+/// Characters allowed in a served model name. One URL path segment, no
+/// percent-encoding needed, no traversal: names are registry keys, never
+/// filesystem paths at request time.
+fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 256
+        && !name.starts_with('.')
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+/// The set of archives a [`serve`] instance distributes, keyed by the name
+/// clients request as `/models/<name>`.
+///
+/// Readers are [`Arc`]-shared across connections: on the mmap backing all
+/// concurrent pulls of one model serve out of the same file mapping.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<ArchiveReader>>,
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `reader` under `name`. Rejects invalid names (one path
+    /// segment of `[A-Za-z0-9._-]`, no leading dot), duplicates, and v1
+    /// archives — v1 files are loaded per-tensor and have no byte-
+    /// addressable file image to serve ranges from.
+    pub fn insert(&mut self, name: &str, reader: ArchiveReader) -> Result<()> {
+        if !valid_model_name(name) {
+            return Err(Error::InvalidInput(format!("invalid model name '{name}'")));
+        }
+        if reader.backing_kind() == "memory" {
+            return Err(Error::InvalidInput(format!(
+                "model '{name}': raw byte serving needs a v2 archive on a file backing"
+            )));
+        }
+        if self.models.contains_key(name) {
+            return Err(Error::InvalidInput(format!("duplicate model name '{name}'")));
+        }
+        self.models.insert(name.to_string(), Arc::new(reader));
+        Ok(())
+    }
+
+    /// Open every `*.zlp` file directly under `root` (file name = model
+    /// name) with the given backing. Strict: a `.zlp` file that fails to
+    /// open, or is a v1 archive, fails the whole scan — a distribution
+    /// server silently dropping models is worse than one that refuses to
+    /// start.
+    pub fn open_dir(root: &Path, backing: crate::container::ReadBacking) -> Result<Self> {
+        let mut registry = Self::new();
+        let mut paths: Vec<_> = std::fs::read_dir(root)?
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .filter(|p| p.is_file() && p.extension().is_some_and(|e| e == "zlp"))
+            .collect();
+        paths.sort();
+        for path in paths {
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .ok_or_else(|| {
+                    Error::InvalidInput(format!("unservable file name: {}", path.display()))
+                })?
+                .to_string();
+            let reader = ArchiveReader::open_with(&path, backing)?;
+            registry.insert(&name, reader)?;
+        }
+        Ok(registry)
+    }
+
+    /// Look up a model by name.
+    pub fn get(&self, name: &str) -> Option<&Arc<ArchiveReader>> {
+        self.models.get(name)
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// True when no models are registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+/// Configuration for [`serve`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks an ephemeral port —
+    /// read the real one off [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Concurrent connection handlers (pool helper threads). `0` clamps to
+    /// 1. The accept thread itself never serves requests.
+    pub workers: usize,
+    /// Admission cap: accepted-but-unfinished connections beyond this are
+    /// answered `503` immediately instead of queueing without bound. `0`
+    /// clamps to 1.
+    pub max_conns: usize,
+    /// Slow-loris guard: a request head that has not completed within this
+    /// budget is answered `408`.
+    pub header_timeout: Duration,
+    /// Per-write stall guard while streaming a body: a client that stops
+    /// reading for longer than this is treated as disconnected, releasing
+    /// the worker slot.
+    pub write_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            max_conns: 64,
+            header_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared state every connection handler sees.
+struct ServeContext {
+    registry: ModelRegistry,
+    header_timeout: Duration,
+    write_timeout: Duration,
+}
+
+/// Handle to a running [`serve`] instance. Dropping it stops the server:
+/// the accept loop exits, queued connections drain, and worker threads
+/// join.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight connections, join
+    /// every thread. Idempotent.
+    pub fn stop(&mut self) {
+        let Some(handle) = self.accept.take() else {
+            return;
+        };
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept(2) call with one throwaway connection aimed at
+        // the loopback of whatever family we bound.
+        let ip: IpAddr = match self.addr {
+            SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        };
+        let _ = TcpStream::connect_timeout(
+            &SocketAddr::new(ip, self.addr.port()),
+            Duration::from_secs(1),
+        );
+        let _ = handle.join();
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl std::fmt::Debug for ServerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerHandle").field("addr", &self.addr).finish()
+    }
+}
+
+/// Start serving `registry` per `opts`; returns once the listener is bound
+/// (requests are handled on background threads from then on).
+pub fn serve(registry: ModelRegistry, opts: &ServeOptions) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&opts.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let ctx = Arc::new(ServeContext {
+        registry,
+        header_timeout: opts.header_timeout,
+        write_timeout: opts.write_timeout,
+    });
+    let accept_stop = Arc::clone(&stop);
+    let workers = opts.workers.max(1);
+    let max_conns = opts.max_conns.max(1);
+    let accept = std::thread::spawn(move || {
+        // workers + 1: the accept thread counts as the pool's implicit
+        // calling thread but never runs connection jobs, so `workers`
+        // helpers do the serving.
+        let pool = WorkerPool::new(workers + 1);
+        accept_loop(&listener, &pool, &ctx, &accept_stop, max_conns);
+        // Pool drop drains any still-queued connections and joins helpers;
+        // in-flight responses finish before stop() returns.
+    });
+    Ok(ServerHandle { addr, stop, accept: Some(accept) })
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    pool: &WorkerPool,
+    ctx: &Arc<ServeContext>,
+    stop: &AtomicBool,
+    max_conns: usize,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                // Transient accept failures (EMFILE under load, EINTR) must
+                // not kill the server; re-check stop and go around.
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return; // the shutdown self-connect (or racing client) — drop it
+        }
+        if pool.inflight() >= max_conns {
+            let m = serve_metrics();
+            m.rejected.incr();
+            m.responses_5xx.incr();
+            reject_busy(stream, ctx.write_timeout);
+            continue;
+        }
+        let ctx = Arc::clone(ctx);
+        // The Task handle is dropped deliberately: the job owns everything
+        // it needs and its result is (); panics are contained by the pool.
+        drop(pool.submit(move || handle_connection(stream, &ctx)));
+    }
+}
+
+/// Answer `503` on the accept thread without taking a worker slot. Best
+/// effort: the head fits any socket send buffer, and a client that cannot
+/// take even that is simply dropped.
+fn reject_busy(mut stream: TcpStream, write_timeout: Duration) {
+    let _ = stream.set_write_timeout(Some(write_timeout));
+    let body = "server at connection capacity, retry\n";
+    let head = http::response_head(
+        503,
+        &[
+            ("content-type", "text/plain; charset=utf-8".to_string()),
+            ("content-length", body.len().to_string()),
+            ("retry-after", "1".to_string()),
+        ],
+    );
+    let _ = stream.write_all(head.as_bytes()).and_then(|()| stream.write_all(body.as_bytes()));
+}
+
+/// Decrements `serve.inflight_connections` when the handler returns by any
+/// path — early error, panic unwinding through the pool's catch, or normal
+/// completion.
+struct InflightGuard;
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        serve_metrics().inflight.sub(1);
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, ctx: &ServeContext) {
+    let _span = crate::span!("serve.request");
+    let m = serve_metrics();
+    m.inflight.add(1);
+    let _guard = InflightGuard;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(ctx.write_timeout));
+    let request = match http::read_request(&mut stream, ctx.header_timeout) {
+        Ok(request) => request,
+        Err(e) => {
+            match e.status() {
+                Some(status) => {
+                    let detail = match e {
+                        http::RequestError::Malformed(ref why) => why.clone(),
+                        _ => http::status_reason(status).to_string(),
+                    };
+                    respond_error(&mut stream, status, &detail);
+                }
+                None => m.disconnects.incr(),
+            }
+            return;
+        }
+    };
+    route(&mut stream, ctx, &request);
+}
+
+/// Write an error response with a one-line plain-text body; counts the
+/// response class. Write failures mean the client is gone — counted, not
+/// propagated.
+fn respond_error(stream: &mut TcpStream, status: u16, detail: &str) {
+    let m = serve_metrics();
+    if status >= 500 {
+        m.responses_5xx.incr();
+    } else {
+        m.responses_4xx.incr();
+    }
+    let body = format!("{} {}: {detail}\n", status, http::status_reason(status));
+    let mut headers = vec![
+        ("content-type", "text/plain; charset=utf-8".to_string()),
+        ("content-length", body.len().to_string()),
+    ];
+    if status == 405 {
+        headers.push(("allow", "GET, HEAD".to_string()));
+    }
+    let head = http::response_head(status, &headers);
+    if stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body.as_bytes()))
+        .is_err()
+    {
+        m.disconnects.incr();
+    }
+}
+
+fn route(stream: &mut TcpStream, ctx: &ServeContext, request: &http::Request) {
+    let m = serve_metrics();
+    let head_only = match request.method.as_str() {
+        "GET" => false,
+        "HEAD" => true,
+        other => {
+            respond_error(stream, 405, &format!("method '{other}' not supported"));
+            return;
+        }
+    };
+    let start = Instant::now();
+    let target = request.target.as_str();
+    if target == "/metrics" {
+        m.metrics_requests.incr();
+        serve_metrics_page(stream, head_only);
+        m.metrics_ns.record(elapsed_ns(start));
+        return;
+    }
+    if target == "/models" {
+        m.manifest_requests.incr();
+        serve_model_list(stream, ctx, head_only);
+        m.manifest_ns.record(elapsed_ns(start));
+        return;
+    }
+    if let Some(rest) = target.strip_prefix("/models/") {
+        if let Some(name) = rest.strip_suffix("/manifest") {
+            m.manifest_requests.incr();
+            serve_manifest(stream, ctx, name, head_only);
+            m.manifest_ns.record(elapsed_ns(start));
+            return;
+        }
+        m.model_requests.incr();
+        serve_model(stream, ctx, rest, request, head_only);
+        m.model_ns.record(elapsed_ns(start));
+        return;
+    }
+    respond_error(stream, 404, &format!("no route for '{target}'"));
+}
+
+fn elapsed_ns(start: Instant) -> u64 {
+    u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Strong ETag for an archive: footer CRC (verified at open) + file length
+/// identify the exact bytes on disk, so a resumed pull can trust
+/// `If-Range` matches against it.
+fn model_etag(reader: &ArchiveReader) -> String {
+    format!("\"zlps-{:08x}-{:x}\"", reader.footer_crc(), reader.file_len())
+}
+
+/// Write a fully-buffered response (manifest JSON, metrics text).
+fn respond_body(stream: &mut TcpStream, content_type: &str, body: &[u8], head_only: bool) {
+    let m = serve_metrics();
+    let head = http::response_head(
+        200,
+        &[
+            ("content-type", content_type.to_string()),
+            ("content-length", body.len().to_string()),
+        ],
+    );
+    let result = stream.write_all(head.as_bytes()).and_then(|()| {
+        if head_only {
+            return Ok(());
+        }
+        stream.write_all(body)?;
+        m.bytes_sent.add(body.len() as u64);
+        Ok(())
+    });
+    if result.is_err() {
+        m.disconnects.incr();
+    }
+}
+
+fn serve_metrics_page(stream: &mut TcpStream, head_only: bool) {
+    let text = obs::export::prometheus_text(&obs::global().snapshot());
+    respond_body(stream, "text/plain; charset=utf-8", text.as_bytes(), head_only);
+}
+
+fn serve_model_list(stream: &mut TcpStream, ctx: &ServeContext, head_only: bool) {
+    let rows: Vec<String> = ctx
+        .registry
+        .names()
+        .iter()
+        .map(|name| {
+            let reader = ctx.registry.get(name).expect("listed name resolves");
+            jo::obj(&[
+                ("name", jo::string(name)),
+                ("file_len", jo::uint(reader.file_len())),
+                ("etag", jo::string(&model_etag(reader))),
+                ("tensors", jo::uint(reader.len() as u64)),
+            ])
+        })
+        .collect();
+    let body = jo::obj(&[("models", jo::arr(&rows))]);
+    respond_body(stream, "application/json", body.as_bytes(), head_only);
+}
+
+/// The chunk directory as JSON: per tensor, where its encoded chunks live
+/// in the file and what they decode to — enough for a client to schedule
+/// chunk-aligned parallel range pulls and to know the decoded layout.
+fn serve_manifest(stream: &mut TcpStream, ctx: &ServeContext, name: &str, head_only: bool) {
+    let Some(reader) = ctx.registry.get(name) else {
+        respond_error(stream, 404, &format!("no model '{name}'"));
+        return;
+    };
+    let tensors: Vec<String> = reader
+        .entries()
+        .map(|e| {
+            let shape: Vec<String> = e.meta.shape.iter().map(|&d| jo::uint(d)).collect();
+            jo::obj(&[
+                ("name", jo::string(&e.meta.name)),
+                ("shape", jo::arr(&shape)),
+                ("format", jo::string(e.format.name())),
+                ("codec", jo::string(e.codec.name())),
+                ("strategy", jo::string(e.strategy.name())),
+                ("original_len", jo::uint(e.original_len as u64)),
+                ("chunk_size", jo::uint(e.chunk_size as u64)),
+                ("data_offset", jo::uint(e.data_offset)),
+                ("data_len", jo::uint(e.data_len())),
+                ("n_chunks", jo::uint(e.chunks.len() as u64)),
+            ])
+        })
+        .collect();
+    let body = jo::obj(&[
+        ("name", jo::string(name)),
+        ("etag", jo::string(&model_etag(reader))),
+        ("file_len", jo::uint(reader.file_len())),
+        ("footer_crc", jo::uint(u64::from(reader.footer_crc()))),
+        ("version", jo::uint(u64::from(reader.version()))),
+        ("backing", jo::string(reader.backing_kind())),
+        ("total_original", jo::uint(reader.total_original())),
+        ("total_encoded", jo::uint(reader.total_encoded())),
+        ("tensors", jo::arr(&tensors)),
+    ]);
+    respond_body(stream, "application/json", body.as_bytes(), head_only);
+}
+
+/// Stream archive bytes: `200` whole-file, `206` single range, `416`
+/// unsatisfiable — with `If-Range` downgrading a stale resume to the full
+/// body.
+fn serve_model(
+    stream: &mut TcpStream,
+    ctx: &ServeContext,
+    name: &str,
+    request: &http::Request,
+    head_only: bool,
+) {
+    let m = serve_metrics();
+    let Some(reader) = ctx.registry.get(name) else {
+        respond_error(stream, 404, &format!("no model '{name}'"));
+        return;
+    };
+    let total = reader.file_len();
+    let etag = model_etag(reader);
+    let mut range = match request.header("range") {
+        Some(value) => http::parse_range(value, total),
+        None => http::RangeSpec::Whole,
+    };
+    if !matches!(range, http::RangeSpec::Whole) {
+        if let Some(validator) = request.header("if-range") {
+            if validator != etag {
+                // The client's partial copy is of different bytes; splicing
+                // a range onto it would corrupt the pull. Full body instead.
+                range = http::RangeSpec::Whole;
+            }
+        }
+    }
+    let (status, start, len) = match range {
+        http::RangeSpec::Unsatisfiable => {
+            m.responses_4xx.incr();
+            let head = http::response_head(
+                416,
+                &[
+                    ("content-range", format!("bytes */{total}")),
+                    ("content-length", "0".to_string()),
+                    ("etag", etag),
+                ],
+            );
+            if stream.write_all(head.as_bytes()).is_err() {
+                m.disconnects.incr();
+            }
+            return;
+        }
+        http::RangeSpec::Whole => (200, 0u64, total),
+        http::RangeSpec::Single { start, len } => (206, start, len),
+    };
+    let mut headers = vec![
+        ("content-type", "application/octet-stream".to_string()),
+        ("content-length", len.to_string()),
+        ("accept-ranges", "bytes".to_string()),
+        ("etag", etag),
+    ];
+    if status == 206 {
+        headers.push(("content-range", format!("bytes {start}-{}/{total}", start + len - 1)));
+    }
+    let head = http::response_head(status, &headers);
+    if stream.write_all(head.as_bytes()).is_err() {
+        m.disconnects.incr();
+        return;
+    }
+    if head_only || len == 0 {
+        return;
+    }
+    // The whole response region is about to be read front-to-back: tell the
+    // kernel (mmap backing) to read it ahead instead of faulting per chunk.
+    reader.advise(start, len as usize, ReadAdvice::Sequential);
+    let mut offset = start;
+    let end = start + len;
+    while offset < end {
+        let step = STREAM_CHUNK.min((end - offset) as usize);
+        let bytes = match reader.read_file_range(offset, step) {
+            Ok(bytes) => bytes,
+            Err(_) => {
+                // The range was validated against file_len, so this is the
+                // storage failing underneath us mid-response. The head is
+                // already on the wire: all we can do is stop short, which
+                // the client detects as a content-length mismatch.
+                m.responses_5xx.incr();
+                return;
+            }
+        };
+        if stream.write_all(&bytes).is_err() {
+            // Client went away (or stalled past the write timeout): release
+            // the slot quietly. This must never unwind — a disconnect is
+            // routine, not a pool-poisoning event.
+            m.disconnects.incr();
+            return;
+        }
+        m.bytes_sent.add(step as u64);
+        offset += step as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{compress_tensor, CompressOptions};
+    use crate::container::{Archive, ReadBacking, TensorMeta};
+    use crate::formats::FloatFormat;
+    use crate::synthetic;
+    use std::io::Read;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("zipnn_lp_test_serve")
+            .join(format!("{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_archive(path: &Path, seed: u64) -> Vec<u8> {
+        let mut archive = Archive::new();
+        for (i, name) in ["wq", "wk"].iter().enumerate() {
+            let data = synthetic::gaussian_bf16_bytes(2000 + i * 256, 0.02, seed + i as u64);
+            let blob =
+                compress_tensor(&data, &CompressOptions::for_format(FloatFormat::Bf16)).unwrap();
+            let meta = TensorMeta { name: name.to_string(), shape: vec![data.len() as u64 / 2] };
+            archive.insert(meta, blob);
+        }
+        archive.save(path).unwrap();
+        std::fs::read(path).unwrap()
+    }
+
+    /// One request, whole response (head + body) as raw bytes.
+    fn raw_request(addr: SocketAddr, request: &str) -> Vec<u8> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(request.as_bytes()).unwrap();
+        let mut out = Vec::new();
+        stream.read_to_end(&mut out).unwrap();
+        out
+    }
+
+    fn body_of(response: &[u8]) -> &[u8] {
+        let pos = response.windows(4).position(|w| w == b"\r\n\r\n").expect("head terminator");
+        &response[pos + 4..]
+    }
+
+    fn status_of(response: &[u8]) -> u16 {
+        let line = std::str::from_utf8(&response[..response.len().min(64)]).unwrap();
+        line.split(' ').nth(1).unwrap().parse().unwrap()
+    }
+
+    #[test]
+    fn registry_validates_names_and_backings() {
+        let dir = tmpdir("registry");
+        let path = dir.join("m.zlp");
+        write_archive(&path, 1);
+        let mut registry = ModelRegistry::new();
+        let open = || ArchiveReader::open(&path).unwrap();
+        for bad in ["", "a/b", "../m", ".hidden", "na me", "x\u{e9}"] {
+            assert!(registry.insert(bad, open()).is_err(), "accepted name {bad:?}");
+        }
+        registry.insert("m.zlp", open()).unwrap();
+        assert!(registry.insert("m.zlp", open()).is_err(), "duplicate accepted");
+        // v1 archives (memory backing) are rejected.
+        let v1_path = dir.join("v1.bin");
+        let mut v1 = Archive::new();
+        let data = synthetic::gaussian_bf16_bytes(500, 0.02, 9);
+        let blob =
+            compress_tensor(&data, &CompressOptions::for_format(FloatFormat::Bf16)).unwrap();
+        v1.insert(TensorMeta { name: "t".into(), shape: vec![500] }, blob);
+        std::fs::write(&v1_path, v1.serialize()).unwrap();
+        let v1_reader = ArchiveReader::open(&v1_path).unwrap();
+        assert!(registry.insert("v1", v1_reader).is_err(), "v1 accepted");
+        assert_eq!(registry.names(), vec!["m.zlp".to_string()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_dir_scans_zlp_files_only() {
+        let dir = tmpdir("open_dir");
+        write_archive(&dir.join("a.zlp"), 2);
+        write_archive(&dir.join("b.zlp"), 3);
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        let registry = ModelRegistry::open_dir(&dir, ReadBacking::Auto).unwrap();
+        assert_eq!(registry.names(), vec!["a.zlp".to_string(), "b.zlp".to_string()]);
+        assert_eq!(registry.len(), 2);
+        // A corrupt .zlp fails the whole scan.
+        std::fs::write(dir.join("junk.zlp"), b"not an archive").unwrap();
+        assert!(ModelRegistry::open_dir(&dir, ReadBacking::Auto).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serves_full_ranged_and_metrics_over_loopback() {
+        let dir = tmpdir("e2e");
+        let file = write_archive(&dir.join("m.zlp"), 4);
+        let registry = ModelRegistry::open_dir(&dir, ReadBacking::Auto).unwrap();
+        let opts = ServeOptions { workers: 2, ..ServeOptions::default() };
+        let mut server = serve(registry, &opts).unwrap();
+        let addr = server.addr();
+
+        // Full pull is bit-exact.
+        let full = raw_request(addr, "GET /models/m.zlp HTTP/1.1\r\nhost: t\r\n\r\n");
+        assert_eq!(status_of(&full), 200);
+        assert_eq!(body_of(&full), &file[..]);
+        // Ranged pull returns exactly the slice, 206.
+        let ranged = raw_request(
+            addr,
+            "GET /models/m.zlp HTTP/1.1\r\nhost: t\r\nrange: bytes=10-49\r\n\r\n",
+        );
+        assert_eq!(status_of(&ranged), 206);
+        assert_eq!(body_of(&ranged), &file[10..50]);
+        // Unknown model 404s; unknown route 404s; POST 405s.
+        assert_eq!(
+            status_of(&raw_request(addr, "GET /models/nope HTTP/1.1\r\n\r\n")),
+            404
+        );
+        assert_eq!(status_of(&raw_request(addr, "GET /elsewhere HTTP/1.1\r\n\r\n")), 404);
+        assert_eq!(status_of(&raw_request(addr, "POST /models/m.zlp HTTP/1.1\r\n\r\n")), 405);
+        // Metrics endpoint renders the registry (our own counters included).
+        let metrics = raw_request(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+        assert_eq!(status_of(&metrics), 200);
+        let text = String::from_utf8(body_of(&metrics).to_vec()).unwrap();
+        assert!(text.contains("serve_requests_model_total"), "metrics body:\n{text}");
+        server.stop();
+        // Idempotent stop, and the port is released for rebinding.
+        server.stop();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

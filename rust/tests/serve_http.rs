@@ -1,0 +1,380 @@
+//! End-to-end tests for the model-distribution server (`zipnn_lp::serve`)
+//! over real loopback sockets: full and ranged pulls, the resume protocol
+//! (`ETag` + `If-Range`), protocol-error responses (400/408/416/431/503),
+//! and the robustness contract — a client vanishing mid-stream must not
+//! poison the worker pool.
+//!
+//! The HTTP parser's unit tests live in `src/serve/http.rs`; everything
+//! here goes through a `TcpStream` so the deadline/limit handling and the
+//! response framing are exercised for real.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use zipnn_lp::codec::{compress_tensor, CompressOptions};
+use zipnn_lp::container::{Archive, ReadBacking, TensorMeta};
+use zipnn_lp::formats::FloatFormat;
+use zipnn_lp::serve::{serve, ModelRegistry, ServeOptions, ServerHandle};
+use zipnn_lp::synthetic;
+use zipnn_lp::util::json::Json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("zipnn_lp_itest_serve")
+        .join(format!("{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a v2 archive with `elems` BF16 values and return its raw file
+/// bytes — the ground truth every pull is compared against.
+fn write_archive(path: &Path, elems: usize, seed: u64) -> Vec<u8> {
+    let data = synthetic::gaussian_bf16_bytes(elems, 0.02, seed);
+    let blob = compress_tensor(&data, &CompressOptions::for_format(FloatFormat::Bf16)).unwrap();
+    let mut archive = Archive::new();
+    archive.insert(TensorMeta { name: "data".into(), shape: vec![elems as u64] }, blob);
+    archive.save(path).unwrap();
+    std::fs::read(path).unwrap()
+}
+
+/// Start a server over a fresh one-archive directory; returns the ground
+/// truth bytes too. Callers own the handle (drop stops the server).
+fn start(tag: &str, elems: usize, opts: ServeOptions) -> (ServerHandle, Vec<u8>, PathBuf) {
+    let dir = tmpdir(tag);
+    let file = write_archive(&dir.join("m.zlp"), elems, 7);
+    let registry = ModelRegistry::open_dir(&dir, ReadBacking::Auto).unwrap();
+    let server = serve(registry, &opts).unwrap();
+    (server, file, dir)
+}
+
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn parse_response(raw: &[u8]) -> Response {
+    let pos = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response head terminator");
+    let head = std::str::from_utf8(&raw[..pos]).unwrap();
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .unwrap()
+        .split(' ')
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .unwrap();
+    let headers = lines
+        .map(|line| {
+            let (k, v) = line.split_once(':').expect("header colon");
+            (k.to_ascii_lowercase(), v.trim().to_string())
+        })
+        .collect();
+    Response { status, headers, body: raw[pos + 4..].to_vec() }
+}
+
+/// One request → full response (the server always closes after one).
+fn request(addr: SocketAddr, raw: &str) -> Response {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut out = Vec::new();
+    stream.read_to_end(&mut out).unwrap();
+    parse_response(&out)
+}
+
+fn get(addr: SocketAddr, target: &str, extra: &str) -> Response {
+    request(addr, &format!("GET {target} HTTP/1.1\r\nhost: t\r\n{extra}\r\n"))
+}
+
+#[test]
+fn full_and_head_pulls_are_bit_exact() {
+    let (server, file, dir) = start("full", 4000, ServeOptions::default());
+    let addr = server.addr();
+
+    let full = get(addr, "/models/m.zlp", "");
+    assert_eq!(full.status, 200);
+    assert_eq!(full.body, file, "full pull must be bit-exact");
+    assert_eq!(full.header("content-length"), Some(file.len().to_string().as_str()));
+    assert_eq!(full.header("accept-ranges"), Some("bytes"));
+    let etag = full.header("etag").expect("model responses carry an ETag").to_string();
+    assert!(etag.starts_with("\"zlps-"), "strong quoted validator, got {etag}");
+
+    let head = request(addr, "HEAD /models/m.zlp HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(head.status, 200);
+    assert!(head.body.is_empty(), "HEAD must not carry a body");
+    assert_eq!(head.header("content-length"), Some(file.len().to_string().as_str()));
+    assert_eq!(head.header("etag"), Some(etag.as_str()));
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn range_semantics_cover_206_416_and_fallbacks() {
+    let (server, file, dir) = start("ranges", 4000, ServeOptions::default());
+    let addr = server.addr();
+    let total = file.len();
+
+    // Closed range and open-ended suffix both return exactly the slice.
+    let mid = get(addr, "/models/m.zlp", "range: bytes=100-299\r\n");
+    assert_eq!(mid.status, 206);
+    assert_eq!(mid.body, &file[100..300]);
+    assert_eq!(
+        mid.header("content-range"),
+        Some(format!("bytes 100-299/{total}").as_str())
+    );
+    let tail = get(addr, "/models/m.zlp", &format!("range: bytes={}-\r\n", total - 64));
+    assert_eq!(tail.status, 206);
+    assert_eq!(tail.body, &file[total - 64..]);
+    let suffix = get(addr, "/models/m.zlp", "range: bytes=-32\r\n");
+    assert_eq!(suffix.status, 206);
+    assert_eq!(suffix.body, &file[total - 32..]);
+
+    // Start past EOF and an empty suffix are unsatisfiable: 416 with the
+    // total advertised so the client can retry sensibly.
+    for bad in [format!("range: bytes={total}-\r\n"), "range: bytes=-0\r\n".to_string()] {
+        let r = get(addr, "/models/m.zlp", &bad);
+        assert_eq!(r.status, 416, "expected 416 for {bad:?}");
+        assert_eq!(r.header("content-range"), Some(format!("bytes */{total}").as_str()));
+        assert!(r.body.is_empty());
+    }
+
+    // Multi-range and syntactic junk fall back to the full body (RFC 9110
+    // lets a server ignore Range) — never an error, never a short read.
+    for fallback in ["range: bytes=0-1,3-4\r\n", "range: bytes=abc\r\n", "range: elephants=0-1\r\n"]
+    {
+        let r = get(addr, "/models/m.zlp", fallback);
+        assert_eq!(r.status, 200, "expected full-body fallback for {fallback:?}");
+        assert_eq!(r.body, file);
+    }
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn interrupted_pull_resumes_bit_exactly_via_if_range() {
+    let (server, file, dir) = start("resume", 60_000, ServeOptions::default());
+    let addr = server.addr();
+
+    // Pull the whole model but sever the connection after ~16 KiB of body:
+    // a genuine mid-transfer interruption, not a polite ranged request.
+    let keep = 16 * 1024;
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(b"GET /models/m.zlp HTTP/1.1\r\nhost: t\r\n\r\n")
+        .unwrap();
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        let got = stream.read(&mut chunk).unwrap();
+        assert!(got > 0, "server closed before the interruption point");
+        raw.extend_from_slice(&chunk[..got]);
+        let head_end = raw.windows(4).position(|w| w == b"\r\n\r\n");
+        if head_end.is_some_and(|pos| raw.len() - (pos + 4) >= keep) {
+            break;
+        }
+    }
+    drop(stream); // interrupt mid-stream
+    let first = parse_response(&raw);
+    assert_eq!(first.status, 200);
+    let etag = first.header("etag").unwrap().to_string();
+    let mut assembled = first.body[..keep].to_vec();
+
+    // Resume from where it broke, conditioned on the validator. Fresh ETag
+    // → 206 continuation; append and the result must be the archive.
+    let resume = get(
+        addr,
+        "/models/m.zlp",
+        &format!("range: bytes={keep}-\r\nif-range: {etag}\r\n"),
+    );
+    assert_eq!(resume.status, 206);
+    assembled.extend_from_slice(&resume.body);
+    assert_eq!(assembled, file, "interrupted-and-resumed pull must be bit-exact");
+
+    // A stale validator must NOT be spliced: the server downgrades to the
+    // full body so the client rebuilds from scratch.
+    let stale = get(
+        addr,
+        "/models/m.zlp",
+        &format!("range: bytes={keep}-\r\nif-range: \"zlps-00000000-0\"\r\n"),
+    );
+    assert_eq!(stale.status, 200);
+    assert_eq!(stale.body, file);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_and_model_list_parse_and_match_the_file() {
+    let (server, file, dir) = start("manifest", 4000, ServeOptions::default());
+    let addr = server.addr();
+    let etag = get(addr, "/models/m.zlp", "").header("etag").unwrap().to_string();
+
+    let manifest = get(addr, "/models/m.zlp/manifest", "");
+    assert_eq!(manifest.status, 200);
+    assert_eq!(manifest.header("content-type"), Some("application/json"));
+    let doc = Json::parse(std::str::from_utf8(&manifest.body).unwrap()).unwrap();
+    assert_eq!(doc.field("name").unwrap().as_str(), Some("m.zlp"));
+    assert_eq!(doc.field("etag").unwrap().as_str(), Some(etag.as_str()));
+    assert_eq!(doc.field("file_len").unwrap().as_usize(), Some(file.len()));
+    assert_eq!(doc.field("version").unwrap().as_usize(), Some(2));
+    let tensors = doc.field("tensors").unwrap().as_arr().unwrap();
+    assert_eq!(tensors.len(), 1);
+    let t = &tensors[0];
+    assert_eq!(t.field("name").unwrap().as_str(), Some("data"));
+    assert!(t.field("n_chunks").unwrap().as_usize().unwrap() >= 1);
+    // The advertised chunk region must lie inside the served file — that is
+    // what makes chunk-aligned parallel range pulls schedulable.
+    let off = t.field("data_offset").unwrap().as_usize().unwrap();
+    let len = t.field("data_len").unwrap().as_usize().unwrap();
+    assert!(off + len <= file.len(), "chunk region {off}+{len} exceeds {}", file.len());
+
+    let list = get(addr, "/models", "");
+    assert_eq!(list.status, 200);
+    let doc = Json::parse(std::str::from_utf8(&list.body).unwrap()).unwrap();
+    let models = doc.field("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].field("name").unwrap().as_str(), Some("m.zlp"));
+    assert_eq!(models[0].field("etag").unwrap().as_str(), Some(etag.as_str()));
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn protocol_errors_get_typed_responses() {
+    let opts = ServeOptions { header_timeout: Duration::from_millis(300), ..Default::default() };
+    let (server, _file, dir) = start("errors", 2000, opts);
+    let addr = server.addr();
+
+    // Malformed request line → 400.
+    assert_eq!(request(addr, "NOTAREQUEST\r\n\r\n").status, 400);
+    assert_eq!(request(addr, "get /models HTTP/1.1\r\n\r\n").status, 400);
+    // Declared body → 400 (this server serves, it does not ingest).
+    assert_eq!(
+        request(addr, "GET /models HTTP/1.1\r\ncontent-length: 3\r\n\r\nabc").status,
+        400
+    );
+    // Unsupported method → 405 with Allow.
+    let post = request(addr, "POST /models/m.zlp HTTP/1.1\r\n\r\n");
+    assert_eq!(post.status, 405);
+    assert_eq!(post.header("allow"), Some("GET, HEAD"));
+    // Unknown route / unknown model → 404.
+    assert_eq!(get(addr, "/elsewhere", "").status, 404);
+    assert_eq!(get(addr, "/models/ghost", "").status, 404);
+
+    // Slow loris: an unterminated head past the deadline → 408.
+    let mut slow = TcpStream::connect(addr).unwrap();
+    slow.write_all(b"GET /models/m.zlp HTTP/1.1\r\nx-slow: yes").unwrap();
+    let mut out = Vec::new();
+    slow.read_to_end(&mut out).unwrap();
+    assert_eq!(parse_response(&out).status, 408);
+
+    // Oversized head → 431 without waiting for a terminator.
+    let mut big = TcpStream::connect(addr).unwrap();
+    big.write_all(b"GET /models/m.zlp HTTP/1.1\r\n").unwrap();
+    let filler = format!("x-filler: {}\r\n", "a".repeat(1000));
+    for _ in 0..20 {
+        if big.write_all(filler.as_bytes()).is_err() {
+            break; // server already answered and closed; fine
+        }
+    }
+    let mut out = Vec::new();
+    big.read_to_end(&mut out).unwrap();
+    assert_eq!(parse_response(&out).status, 431);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_stream_disconnect_does_not_poison_the_pool() {
+    // Large enough that the server cannot fit the whole body into socket
+    // buffers: the client's early close surfaces as a write error inside
+    // the streaming loop, on a worker thread.
+    let (server, file, dir) = start("disconnect", 1_500_000, ServeOptions::default());
+    let addr = server.addr();
+
+    for _ in 0..3 {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"GET /models/m.zlp HTTP/1.1\r\nhost: t\r\n\r\n")
+            .unwrap();
+        let mut chunk = [0u8; 8192];
+        let got = stream.read(&mut chunk).unwrap();
+        assert!(got > 0);
+        drop(stream); // vanish with most of the body unsent
+    }
+    // Every worker that served a vanished client must have released its
+    // slot: a full pull still succeeds and is still bit-exact.
+    let full = get(addr, "/models/m.zlp", "");
+    assert_eq!(full.status, 200);
+    assert_eq!(full.body, file);
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn connection_cap_answers_503_and_recovers() {
+    let opts = ServeOptions { workers: 1, max_conns: 1, ..Default::default() };
+    let (server, file, dir) = start("cap", 2000, opts);
+    let addr = server.addr();
+
+    // Occupy the single slot with a deliberately unfinished request head
+    // (the handler sits in its read deadline), then probe: the next
+    // connection must be rejected immediately with 503, not queued.
+    let mut holder = TcpStream::connect(addr).unwrap();
+    holder.write_all(b"GET /models/m.zlp HTTP/1.1\r\n").unwrap();
+    let busy = get(addr, "/models/m.zlp", "");
+    assert_eq!(busy.status, 503);
+    assert_eq!(busy.header("retry-after"), Some("1"));
+
+    // Release the slot; the server must recover to full service. The
+    // handler notices the close on its next buffered read.
+    drop(holder);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = get(addr, "/models/m.zlp", "");
+        if r.status == 200 {
+            assert_eq!(r.body, file);
+            break;
+        }
+        assert_eq!(r.status, 503, "only busy rejections expected while draining");
+        assert!(std::time::Instant::now() < deadline, "slot never released");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn metrics_endpoint_reports_serve_counters() {
+    let (server, _file, dir) = start("metrics", 2000, ServeOptions::default());
+    let addr = server.addr();
+    assert_eq!(get(addr, "/models/m.zlp", "").status, 200);
+
+    let metrics = get(addr, "/metrics", "");
+    assert_eq!(metrics.status, 200);
+    let text = String::from_utf8(metrics.body).unwrap();
+    for needle in [
+        "zipnn_serve_requests_model_total",
+        "zipnn_serve_bytes_sent_total",
+        "zipnn_serve_inflight_connections",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
