@@ -31,12 +31,15 @@ bench-json:
 
 # Enforce the committed perf contract against the latest bench-json run
 # (ratio regressions >1%, decode-throughput drops >20%, parallel-decode
-# speedup floor). CI runs this on every push; BENCH_GATE_OVERRIDE=1 (the
-# `bench-override` PR label) demotes failures to warnings.
+# speedup floor, kv snapshot reader-scaling floor + budget invariant).
+# CI runs this on every push; BENCH_GATE_OVERRIDE=1 (the `bench-override`
+# PR label) demotes failures to warnings. The gate's own fixture tests run
+# first so a broken gate can't wave a regression through.
 bench-gate: bench-json
+	$(PYTHON) ci/test_bench_gate.py
 	$(PYTHON) ci/bench_gate.py --baseline BENCH_baseline.json \
 		--current BENCH_codec.json --fig6 BENCH_fig6.json \
-		--serve BENCH_serve.json
+		--serve BENCH_serve.json --kv BENCH_kv.json
 
 doc:
 	$(CARGO) doc --no-deps

@@ -32,7 +32,14 @@ run regresses against the committed baseline:
     distribution-server acceptance: aggregate pull throughput must scale
     >= 2x from 1 to 4 concurrent clients on the mmap backing), or the
     serve bench's embedded metric snapshot showing zero served requests /
-    any 5xx responses.
+    any 5xx responses;
+  * (--kv) the K/V pool contract, self-contained floors with no baseline
+    rows: the lock-free snapshot read path must scale (`speedup_vs_1` at
+    4 readers >= --kv-speedup-floor, default 2.0 -- the epoch-based read
+    acceptance), the budgeted pool must never have violated its budget
+    (`high_water_bytes <= budget_bytes`, stash-pinned pages included),
+    and the snapshot counters must have moved (a silent read path is a
+    regression even if throughput looks fine).
 
 Override: set BENCH_GATE_OVERRIDE=1 to demote failures to warnings (exit 0).
 CI wires this to the `bench-override` PR label; use it for known-noisy
@@ -201,6 +208,74 @@ def check_serve_metrics(serve_doc, failures):
     return checks
 
 
+KV_SCALE_FIELDS = {"readers", "mibps", "speedup_vs_1"}
+
+
+def check_kv(kv_doc, failures, speedup_floor):
+    """Validate BENCH_kv.json (schema >= 2). Unlike the codec sections these
+    are self-contained floors, not baseline comparisons: reader-scaling
+    numbers come from whatever runner CI lands on, so the contract is the
+    shape of the curve (4 snapshot readers >= `speedup_floor` x one reader)
+    and the budget invariant, not absolute throughput. Returns checks
+    performed."""
+    checks = 1
+    if kv_doc.get("schema", 0) < 2:
+        failures.append(
+            f"kv: schema {kv_doc.get('schema')} < 2 "
+            "(reader_scaling requires the schema-2 layout)"
+        )
+        return checks
+    rows = kv_doc.get("reader_scaling")
+    checks += 1
+    if not isinstance(rows, list) or not rows:
+        failures.append("kv: reader_scaling section missing or empty")
+        return checks
+    by_readers = {}
+    for i, row in enumerate(rows):
+        checks += 1
+        if not isinstance(row, dict) or not KV_SCALE_FIELDS <= set(row):
+            failures.append(
+                f"kv.reader_scaling[{i}]: missing fields "
+                f"(need {sorted(KV_SCALE_FIELDS)})"
+            )
+            continue
+        by_readers[row["readers"]] = row
+    checks += 1
+    row4 = by_readers.get(4)
+    if row4 is None:
+        failures.append("kv: no reader_scaling row at 4 readers (the acceptance point)")
+    else:
+        speedup = row4.get("speedup_vs_1")
+        if not isinstance(speedup, (int, float)) or speedup < speedup_floor:
+            failures.append(
+                f"kv: speedup_vs_1 {speedup} at 4 readers below the "
+                f"{speedup_floor}x lock-free read-scaling floor"
+            )
+    pool = kv_doc.get("pool")
+    checks += 1
+    if not isinstance(pool, dict):
+        failures.append("kv: pool section missing")
+        return checks
+    budget = pool.get("budget_bytes")
+    high = pool.get("high_water_bytes")
+    checks += 1
+    if not all(isinstance(v, (int, float)) for v in (budget, high)):
+        failures.append("kv: pool budget_bytes/high_water_bytes missing or non-numeric")
+    elif high > budget:
+        failures.append(
+            f"kv: pool high_water_bytes {high} exceeded budget_bytes {budget} "
+            "(budget violation -- the evictor's stash accounting broke)"
+        )
+    for name in ("snapshots", "snapshot_reads"):
+        checks += 1
+        value = pool.get(name)
+        if not isinstance(value, (int, float)) or not value > 0:
+            failures.append(
+                f"kv: pool.{name} never moved -- the snapshot read path went silent"
+            )
+    return checks
+
+
 def check_span_overhead(cur, failures, max_ratio):
     """Enforce the span-overhead contract; returns checks performed."""
     if cur.get("schema", 0) < 3:
@@ -260,6 +335,20 @@ def main():
         help="path to BENCH_serve.json; enables the serve checks "
         "(distribution-server throughput floors and the 1->4 client "
         "scaling acceptance)",
+    )
+    parser.add_argument(
+        "--kv",
+        default=None,
+        help="path to BENCH_kv.json; enables the K/V pool checks "
+        "(lock-free snapshot reader-scaling floor and the budget "
+        "high-water invariant)",
+    )
+    parser.add_argument(
+        "--kv-speedup-floor",
+        type=float,
+        default=2.0,
+        help="min speedup_vs_1 required at 4 snapshot readers in the kv "
+        "reader-scaling sweep (default 2.0)",
     )
     args = parser.parse_args()
 
@@ -350,6 +439,10 @@ def main():
         checks += check_serve_metrics(serve_doc, failures)
     else:
         print("bench-gate: --serve not given, skipping serve checks")
+    if args.kv:
+        checks += check_kv(load(args.kv), failures, args.kv_speedup_floor)
+    else:
+        print("bench-gate: --kv not given, skipping kv checks")
     checks += check_metrics(cur, failures)
     checks += check_span_overhead(cur, failures, args.span_overhead_max)
     checks += check_entropy_gap(cur, failures, args.gap_max)

@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Fixture tests for ci/bench_gate.py, focused on the --kv checks.
+
+The gate is the enforcement point for the K/V pool acceptance criteria
+(lock-free snapshot reader scaling >= 2x at 4 readers, zero budget
+violations), so the gate itself gets tested: each case writes a small
+synthetic BENCH_*.json fixture to a temp dir and runs the real script as a
+subprocess, asserting on exit code and stderr. Stdlib only -- run directly
+(`python3 ci/test_bench_gate.py`) or under pytest.
+"""
+
+import copy
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+import unittest
+
+GATE = pathlib.Path(__file__).resolve().parent / "bench_gate.py"
+
+# A minimal baseline/current pair that sails through the codec checks, so
+# the --kv outcome alone decides the exit code. Schema 2 predates the
+# embedded-metrics (3) and entropy-gap (4) contracts, which the gate
+# explicitly skips below those versions.
+CODEC_DOC = {
+    "schema": 2,
+    "streams": [
+        {
+            "format": "bf16",
+            "stream": "exponent",
+            "codec": "huffman",
+            "ratio": 0.55,
+            "decode_mibps": 900.0,
+        }
+    ],
+    "blobs": [],
+    "archive": [],
+    "stream_decode": [],
+}
+
+# A healthy kv document: 4-reader speedup over the floor, high water under
+# budget, snapshot counters moved.
+KV_OK = {
+    "schema": 2,
+    "bench": "kv_cache",
+    "sweep": [],
+    "pool": {
+        "budget_bytes": 49152,
+        "high_water_bytes": 47000,
+        "spilled_bytes": 120000,
+        "evictions": 40,
+        "spills": 30,
+        "reloads": 25,
+        "snapshots": 96,
+        "snapshot_reads": 192,
+        "spill_bytes_written": 120000,
+        "spill_bytes_read": 100000,
+        "spill_read_concurrency": 2,
+    },
+    "reader_scaling": [
+        {"readers": 1, "mib": 24.0, "secs": 0.1, "mibps": 240.0, "speedup_vs_1": 1.0},
+        {"readers": 2, "mib": 48.0, "secs": 0.11, "mibps": 436.0, "speedup_vs_1": 1.8},
+        {"readers": 4, "mib": 96.0, "secs": 0.12, "mibps": 800.0, "speedup_vs_1": 3.3},
+        {"readers": 8, "mib": 192.0, "secs": 0.2, "mibps": 960.0, "speedup_vs_1": 4.0},
+    ],
+}
+
+
+class BenchGateKvTest(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.dir = pathlib.Path(self._tmp.name)
+        self.addCleanup(self._tmp.cleanup)
+
+    def write(self, name, doc):
+        path = self.dir / name
+        path.write_text(json.dumps(doc), encoding="utf-8")
+        return str(path)
+
+    def run_gate(self, kv_doc, extra_args=(), env_override=None):
+        baseline = self.write("baseline.json", CODEC_DOC)
+        current = self.write("current.json", CODEC_DOC)
+        args = [
+            sys.executable,
+            str(GATE),
+            "--baseline",
+            baseline,
+            "--current",
+            current,
+        ]
+        if kv_doc is not None:
+            args += ["--kv", self.write("kv.json", kv_doc)]
+        args += list(extra_args)
+        env = dict(os.environ)
+        env.pop("BENCH_GATE_OVERRIDE", None)
+        if env_override:
+            env.update(env_override)
+        return subprocess.run(args, capture_output=True, text=True, env=env)
+
+    def test_healthy_kv_passes(self):
+        proc = self.run_gate(KV_OK)
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("bench-gate OK", proc.stdout)
+
+    def test_kv_omitted_is_skipped(self):
+        proc = self.run_gate(None)
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("--kv not given", proc.stdout)
+
+    def test_low_speedup_at_4_readers_fails(self):
+        doc = copy.deepcopy(KV_OK)
+        for row in doc["reader_scaling"]:
+            if row["readers"] == 4:
+                row["speedup_vs_1"] = 1.4
+        proc = self.run_gate(doc)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("below the 2.0x lock-free read-scaling floor", proc.stderr)
+
+    def test_speedup_floor_is_tunable(self):
+        doc = copy.deepcopy(KV_OK)
+        for row in doc["reader_scaling"]:
+            if row["readers"] == 4:
+                row["speedup_vs_1"] = 1.4
+        proc = self.run_gate(doc, extra_args=["--kv-speedup-floor", "1.2"])
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+
+    def test_budget_violation_fails(self):
+        doc = copy.deepcopy(KV_OK)
+        doc["pool"]["high_water_bytes"] = doc["pool"]["budget_bytes"] + 1
+        proc = self.run_gate(doc)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("exceeded budget_bytes", proc.stderr)
+
+    def test_missing_4_reader_row_fails(self):
+        doc = copy.deepcopy(KV_OK)
+        doc["reader_scaling"] = [
+            r for r in doc["reader_scaling"] if r["readers"] != 4
+        ]
+        proc = self.run_gate(doc)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("no reader_scaling row at 4 readers", proc.stderr)
+
+    def test_silent_snapshot_counters_fail(self):
+        doc = copy.deepcopy(KV_OK)
+        doc["pool"]["snapshot_reads"] = 0
+        proc = self.run_gate(doc)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("pool.snapshot_reads never moved", proc.stderr)
+
+    def test_old_schema_fails(self):
+        doc = copy.deepcopy(KV_OK)
+        doc["schema"] = 1
+        proc = self.run_gate(doc)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("schema", proc.stderr)
+
+    def test_override_demotes_kv_failure(self):
+        doc = copy.deepcopy(KV_OK)
+        doc["pool"]["high_water_bytes"] = doc["pool"]["budget_bytes"] + 1
+        proc = self.run_gate(doc, env_override={"BENCH_GATE_OVERRIDE": "1"})
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("OVERRIDDEN", proc.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -2,7 +2,7 @@
 //! serving-latency overhead of on-the-fly compression, and budgeted
 //! multi-sequence serving through the shared K/V pool.
 //!
-//! Three parts:
+//! Four parts:
 //!  1. Ratio sweep on synthetic K/V tensors (BF16 and FP8 E4M3; per-channel
 //!     structured + peaked distributions) — the §4.3 bands.
 //!  2. Budgeted multi-sequence serving: ≥ 8 concurrent sequences appending
@@ -10,7 +10,12 @@
 //!     raw cache footprint, forcing LRU spills to disk. Asserts zero budget
 //!     violations (in-memory high-water mark ≤ budget) and bit-exact reads
 //!     after every spill → reload round trip.
-//!  3. End-to-end serving latency with the real AOT model, codec ON vs OFF
+//!  3. Reader scaling: 1/2/4/8 concurrent readers decode a fixed sealed
+//!     set through pinned `KvSnapshot` handles. Since snapshot reads take
+//!     no lock, throughput should scale with readers (up to the core
+//!     count) — the `ci/bench_gate.py --kv` floor asserts ≥2x at 4
+//!     readers on multi-core CI runners.
+//!  4. End-to-end serving latency with the real AOT model, codec ON vs OFF
 //!     — the §5.2 "without significant overhead" claim. Skipped when
 //!     artifacts/ is missing.
 //!
@@ -176,12 +181,19 @@ fn budgeted_pool(args: &PoolBenchArgs) -> (PoolCounters, u64) {
                             shadows.entry((seq, layer)).or_default().extend_from_slice(&kv);
                         }
                     }
-                    // Periodic reads force spill → reload round trips and
-                    // verify them bit-exactly.
+                    // Periodic snapshot reads force spill → reload round
+                    // trips and verify them bit-exactly. One snapshot pins
+                    // a whole sequence; each layer then decodes lock-free.
                     if t % 64 == 63 {
-                        for (&(seq, layer), shadow) in &shadows {
-                            let got = pool.read(seq, layer).expect("read");
-                            assert_eq!(&got, shadow, "seq {seq} layer {layer} t {t}");
+                        for &seq in &mine {
+                            let snap = pool.snapshot(seq).expect("snapshot");
+                            for layer in 0..n_layers {
+                                let got = snap.read(layer).expect("read");
+                                assert_eq!(
+                                    &got, &shadows[&(seq, layer)],
+                                    "seq {seq} layer {layer} t {t}"
+                                );
+                            }
                         }
                     }
                 }
@@ -211,6 +223,107 @@ fn budgeted_pool(args: &PoolBenchArgs) -> (PoolCounters, u64) {
         human_bytes(budget)
     );
     (c, budget)
+}
+
+/// One measured reader-count row of the scaling scenario, kept for `--json`.
+struct ScaleRow {
+    readers: usize,
+    mib: f64,
+    secs: f64,
+    mibps: f64,
+    /// Throughput relative to the single-reader row (1.0 for it).
+    speedup_vs_1: f64,
+}
+
+/// Part 3: reader scaling over a fixed sealed set. Each reader pins one
+/// `KvSnapshot` per sequence up front, then loops zero-copy `read_into`
+/// decodes — the pure lock-free path. Aggregate decode throughput at
+/// 1/2/4/8 readers shows whether reads scale with cores instead of
+/// serializing on the old per-sequence mutexes (first pass per reader is
+/// verified bit-exact against shadows).
+fn reader_scaling() -> Vec<ScaleRow> {
+    println!("reader scaling — concurrent snapshot decodes over a fixed sealed set");
+    let n_layers = 2usize;
+    let n_seqs = 4usize;
+    let tokens_per_seq = 256usize;
+    let mut cfg = KvCacheConfig::new(n_layers, 64 * 2, FloatFormat::Bf16);
+    cfg.page_tokens = 32;
+    let pool = SharedKvPool::new(PoolConfig::new(cfg.clone())).expect("pool");
+    let mut shadows: std::collections::BTreeMap<(u64, usize), Vec<u8>> =
+        std::collections::BTreeMap::new();
+    for t in 0..tokens_per_seq {
+        for seq in 0..n_seqs as u64 {
+            for layer in 0..n_layers {
+                let seed = seq * 7_001 + (t as u64) * 17 + layer as u64;
+                let kv = synthetic::kv_token_bytes(&cfg, seed);
+                pool.append_token(seq, layer, &kv).expect("append");
+                shadows.entry((seq, layer)).or_default().extend_from_slice(&kv);
+            }
+        }
+    }
+    pool.seal_all().expect("seal");
+    let passes = 24usize;
+    let pass_bytes: usize = shadows.values().map(Vec::len).sum();
+    let buf_len = tokens_per_seq * 2 * cfg.bytes_per_token;
+    let mut rows: Vec<ScaleRow> = Vec::new();
+    let mut table = Table::new(&["readers", "decoded", "secs", "MiB/s", "speedup vs 1"]);
+    for &readers in &[1usize, 2, 4, 8] {
+        let timer = Timer::new();
+        std::thread::scope(|scope| {
+            for _ in 0..readers {
+                let pool = &pool;
+                let shadows = &shadows;
+                scope.spawn(move || {
+                    // Snapshot once per sequence; the hot loop below never
+                    // touches a lock again.
+                    let snaps: Vec<_> = (0..n_seqs as u64)
+                        .map(|seq| pool.snapshot(seq).expect("snapshot"))
+                        .collect();
+                    let mut buf = vec![0u8; buf_len];
+                    for pass in 0..passes {
+                        for snap in &snaps {
+                            for layer in 0..n_layers {
+                                let n = snap.read_into(layer, &mut buf).expect("read");
+                                if pass == 0 {
+                                    assert_eq!(
+                                        &buf[..n],
+                                        &shadows[&(snap.seq(), layer)][..],
+                                        "seq {} layer {layer}",
+                                        snap.seq()
+                                    );
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let secs = timer.secs();
+        let mib = (readers * passes * pass_bytes) as f64 / (1024.0 * 1024.0);
+        let mibps = mib / secs;
+        let speedup = match rows.first() {
+            Some(base) => mibps / base.mibps,
+            None => 1.0,
+        };
+        table.row(&[
+            readers.to_string(),
+            format!("{mib:.0} MiB"),
+            format!("{secs:.3}"),
+            format!("{mibps:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(ScaleRow { readers, mib, secs, mibps, speedup_vs_1: speedup });
+    }
+    println!("{}", table.render());
+    let c = pool.counters();
+    assert_eq!(c.evictions, 0, "unbounded scaling pool must never evict: {c}");
+    println!(
+        "snapshots {} lock-free reads {} (cores available: {})\n",
+        c.snapshots,
+        c.snapshot_reads,
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    );
+    rows
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -268,9 +381,16 @@ fn serving_overhead() {
     println!("paper §5.2: static-dict compression reduces memory 20–30% without significant overhead.");
 }
 
-/// Serialize the sweep + pool figures into the documented `BENCH_kv.json`
-/// schema (see README §Bench trajectory).
-fn write_json(path: &str, sweep: &[SweepRow], pool: &PoolCounters, budget: u64) {
+/// Serialize the sweep + pool + reader-scaling figures into the documented
+/// `BENCH_kv.json` schema (see README §Bench trajectory). Schema 2 added
+/// the `reader_scaling` rows and the snapshot counters.
+fn write_json(
+    path: &str,
+    sweep: &[SweepRow],
+    pool: &PoolCounters,
+    budget: u64,
+    scaling: &[ScaleRow],
+) {
     let sweep_items: Vec<String> = sweep
         .iter()
         .map(|r| {
@@ -290,15 +410,30 @@ fn write_json(path: &str, sweep: &[SweepRow], pool: &PoolCounters, budget: u64) 
         ("evictions", jo::uint(pool.evictions)),
         ("spills", jo::uint(pool.spills)),
         ("reloads", jo::uint(pool.reloads)),
+        ("snapshots", jo::uint(pool.snapshots)),
+        ("snapshot_reads", jo::uint(pool.snapshot_reads)),
         ("spill_bytes_written", jo::uint(pool.spill_bytes_written)),
         ("spill_bytes_read", jo::uint(pool.spill_bytes_read)),
         ("spill_read_concurrency", jo::uint(pool.spill_read_concurrency)),
     ]);
+    let scaling_items: Vec<String> = scaling
+        .iter()
+        .map(|r| {
+            jo::obj(&[
+                ("readers", jo::uint(r.readers as u64)),
+                ("mib", jo::num(r.mib)),
+                ("secs", jo::num(r.secs)),
+                ("mibps", jo::num(r.mibps)),
+                ("speedup_vs_1", jo::num(r.speedup_vs_1)),
+            ])
+        })
+        .collect();
     let doc = jo::obj(&[
-        ("schema", jo::uint(1)),
+        ("schema", jo::uint(2)),
         ("bench", jo::string("kv_cache")),
         ("sweep", jo::arr(&sweep_items)),
         ("pool", pool_obj),
+        ("reader_scaling", jo::arr(&scaling_items)),
     ]);
     std::fs::write(path, doc + "\n").expect("write bench json");
     println!("wrote {path}");
@@ -308,8 +443,9 @@ fn main() {
     let args = parse_pool_args();
     let sweep = ratio_sweep();
     let (pool_counters, budget) = budgeted_pool(&args);
+    let scaling = reader_scaling();
     serving_overhead();
     if let Some(path) = &args.json {
-        write_json(path, &sweep, &pool_counters, budget);
+        write_json(path, &sweep, &pool_counters, budget, &scaling);
     }
 }

@@ -251,12 +251,17 @@ impl<M: DecoderModel> Scheduler<M> {
                     .collect();
                 fan_out(&self.workers, &jobs, |&(slot, seq_id, n_cached)| {
                     let mut per_layer = Vec::with_capacity(l);
+                    // One pinned snapshot per job: the sequence lock is taken
+                    // once here, and every per-layer read below decodes
+                    // lock-free from the captured pages, so jobs contend on
+                    // nothing while they Huffman-decode.
+                    let snap = pool.snapshot(seq_id)?;
                     // One reusable decode buffer per job: the zero-copy
                     // read_into path kills the per-layer allocation the old
                     // pool.read exhibited.
                     let mut bytes = vec![0u8; n_cached * 2 * bpt];
                     for layer in 0..l {
-                        let n = pool.read_into(seq_id, layer, &mut bytes)?;
+                        let n = snap.read_into(layer, &mut bytes)?;
                         debug_assert_eq!(n, n_cached * 2 * bpt);
                         let mut k_rows = vec![0f32; n_cached * d];
                         let mut v_rows = vec![0f32; n_cached * d];

@@ -23,6 +23,7 @@ use crate::huffman::{CodeTable, DEFAULT_CODE_LEN_LIMIT};
 use crate::rans::FreqTable;
 use crate::util::varint;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Cache geometry and codec settings.
 #[derive(Clone, Debug)]
@@ -95,11 +96,13 @@ pub struct DictionaryManager {
 #[derive(Debug, Default)]
 struct LayerDict {
     /// All table versions ever built for this layer. Sealed pages reference
-    /// a version index, so adaptive refresh can never orphan a page.
-    tables: Vec<CodeTable>,
+    /// a version index, so adaptive refresh can never orphan a page. Tables
+    /// are `Arc`-shared so snapshot handles can decode against them after
+    /// the cache lock is released.
+    tables: Vec<Arc<CodeTable>>,
     /// rANS frequency tables, in lockstep with `tables` (same version
     /// indices; `None` when the training histogram was empty).
-    rans_tables: Vec<Option<FreqTable>>,
+    rans_tables: Vec<Option<Arc<FreqTable>>>,
     /// Expected bits/symbol at build time of the current table.
     build_bps: f64,
     /// Rolling recent histogram (reset at refresh).
@@ -136,9 +139,9 @@ impl DictionaryManager {
         } else {
             8.0
         };
-        d.tables.push(table);
+        d.tables.push(Arc::new(table));
         d.rans_tables.push(if hist.total() > 0 {
-            Some(FreqTable::from_histogram(&hist)?)
+            Some(Arc::new(FreqTable::from_histogram(&hist)?))
         } else {
             None
         });
@@ -152,7 +155,7 @@ impl DictionaryManager {
     pub fn current(&self, layer: usize) -> Option<(u32, &CodeTable)> {
         self.per_layer
             .get(layer)
-            .and_then(|d| d.tables.last().map(|t| ((d.tables.len() - 1) as u32, t)))
+            .and_then(|d| d.tables.last().map(|t| ((d.tables.len() - 1) as u32, &**t)))
     }
 
     /// Current dictionary tables (both backends) for a layer, with their
@@ -165,8 +168,8 @@ impl DictionaryManager {
         let version = d.tables.len().checked_sub(1)?;
         Some((
             version as u32,
-            &d.tables[version],
-            d.rans_tables.get(version).and_then(|t| t.as_ref()),
+            &*d.tables[version],
+            d.rans_tables.get(version).and_then(|t| t.as_deref()),
         ))
     }
 
@@ -182,7 +185,10 @@ impl DictionaryManager {
 
     /// A specific historical dictionary version.
     pub fn table_version(&self, layer: usize, version: u32) -> Option<&CodeTable> {
-        self.per_layer.get(layer).and_then(|d| d.tables.get(version as usize))
+        self.per_layer
+            .get(layer)
+            .and_then(|d| d.tables.get(version as usize))
+            .map(|t| &**t)
     }
 
     /// A specific historical rANS dictionary version.
@@ -190,7 +196,28 @@ impl DictionaryManager {
         self.per_layer
             .get(layer)
             .and_then(|d| d.rans_tables.get(version as usize))
-            .and_then(|t| t.as_ref())
+            .and_then(|t| t.as_deref())
+    }
+
+    /// Shared handle on a historical dictionary version, for decode paths
+    /// that outlive the borrow on this manager (snapshot reads).
+    pub fn table_version_shared(&self, layer: usize, version: u32) -> Option<Arc<CodeTable>> {
+        self.per_layer
+            .get(layer)
+            .and_then(|d| d.tables.get(version as usize))
+            .cloned()
+    }
+
+    /// Shared handle on a historical rANS dictionary version.
+    pub fn rans_table_version_shared(
+        &self,
+        layer: usize,
+        version: u32,
+    ) -> Option<Arc<FreqTable>> {
+        self.per_layer
+            .get(layer)
+            .and_then(|d| d.rans_tables.get(version as usize))
+            .and_then(|t| t.clone())
     }
 
     /// Record an observed page encoding; triggers adaptive refresh when the
@@ -240,8 +267,8 @@ impl DictionaryManager {
             // failure is a real bug, not a silent dictionary downgrade.
             let rans_table = FreqTable::from_histogram(&d.recent)?;
             d.build_bps = table.cost_bits(&d.recent) as f64 / d.recent.total() as f64;
-            d.tables.push(table);
-            d.rans_tables.push(Some(rans_table));
+            d.tables.push(Arc::new(table));
+            d.rans_tables.push(Some(Arc::new(rans_table)));
             d.recent = Histogram::new();
             d.rolling_bits = 0.0;
             d.rolling_syms = 0.0;
@@ -394,13 +421,93 @@ pub struct SealEvent {
     pub encoded_len: usize,
 }
 
-/// One (sequence, layer) page list entry.
+/// One (sequence, layer) page list entry. Sealed pages are immutable and
+/// `Arc`-published: snapshot handles and the pool's spill writer share the
+/// same allocation instead of cloning the encoded bytes.
 #[derive(Debug)]
 enum Page {
     Hot(Vec<u8>),
-    Sealed(SealedPage),
+    Sealed(Arc<SealedPage>),
     /// Encoded bytes live in the pool's spill file.
     Spilled(SpilledHandle),
+}
+
+/// One page view inside a [`LayerSnapshot`]: a frozen copy of the hot tail,
+/// or a shared handle on an immutable sealed page together with the
+/// dictionary tables its streams were coded against (resolved at snapshot
+/// time, so decode needs no lock and no [`DictionaryManager`] borrow).
+#[derive(Clone, Debug)]
+enum SnapPage {
+    Hot(Arc<[u8]>),
+    Sealed {
+        page: Arc<SealedPage>,
+        huffman: Option<Arc<CodeTable>>,
+        rans: Option<Arc<FreqTable>>,
+    },
+}
+
+/// A self-contained, immutable view of one (sequence, layer) stream at the
+/// moment it was taken. Cloning is cheap (`Arc` bumps); reads decode from
+/// the captured pages and tables only, so they never touch the cache or any
+/// lock, and they stay bit-exact even if the underlying page is later
+/// evicted, spilled, or the sequence keeps appending.
+#[derive(Clone, Debug)]
+pub struct LayerSnapshot {
+    format: FloatFormat,
+    pages: Vec<SnapPage>,
+    raw_len: usize,
+}
+
+impl LayerSnapshot {
+    /// Logical byte length of the captured stream — what
+    /// [`read_into`](Self::read_into)'s buffer must hold.
+    pub fn len(&self) -> usize {
+        self.raw_len
+    }
+
+    /// True when the captured stream holds no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.raw_len == 0
+    }
+
+    /// Decode the captured stream into `out` (exactly [`len`](Self::len)
+    /// bytes). Lock-free: touches only the snapshot's own pages and tables.
+    pub fn read_into(&self, out: &mut [u8]) -> Result<usize> {
+        if out.len() != self.raw_len {
+            return Err(Error::InvalidInput(format!(
+                "output buffer is {} bytes, snapshot stream is {}",
+                out.len(),
+                self.raw_len
+            )));
+        }
+        let mut off = 0usize;
+        for p in &self.pages {
+            match p {
+                SnapPage::Hot(h) => {
+                    out[off..off + h.len()].copy_from_slice(h);
+                    off += h.len();
+                }
+                SnapPage::Sealed { page, huffman, rans } => {
+                    unseal_resolved_into(
+                        self.format,
+                        page,
+                        huffman.as_deref(),
+                        rans.as_deref(),
+                        &mut out[off..off + page.raw_len],
+                    )?;
+                    off += page.raw_len;
+                }
+            }
+        }
+        Ok(off)
+    }
+
+    /// Allocating convenience over [`read_into`](Self::read_into).
+    pub fn read(&self) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; self.raw_len];
+        self.read_into(&mut out)?;
+        Ok(out)
+    }
 }
 
 /// Aggregate cache statistics.
@@ -619,7 +726,7 @@ impl PagedKvCache {
         }
         let sealed = seal_bytes(config, dict, layer, &raw, stats)?;
         let delta = (raw.len(), sealed.encoded_len());
-        pages[idx] = Page::Sealed(sealed);
+        pages[idx] = Page::Sealed(Arc::new(sealed));
         Ok(Some(delta))
     }
 
@@ -703,12 +810,18 @@ impl PagedKvCache {
         Ok(off)
     }
 
-    /// Clone the sealed page at `page_idx` of (sequence, layer) — the first
-    /// half of a pool eviction (serialize + write to the spill file before
-    /// [`mark_spilled`](Self::mark_spilled) drops the resident copy).
-    pub fn sealed_page(&self, seq: u64, layer: usize, page_idx: usize) -> Result<SealedPage> {
+    /// Shared handle on the sealed page at `page_idx` of (sequence, layer) —
+    /// the first half of a pool eviction (serialize + write to the spill
+    /// file before [`mark_spilled`](Self::mark_spilled) drops the resident
+    /// entry). No byte copy: the caller shares the page's `Arc` allocation.
+    pub fn sealed_page(
+        &self,
+        seq: u64,
+        layer: usize,
+        page_idx: usize,
+    ) -> Result<Arc<SealedPage>> {
         match self.pages.get(&(seq, layer)).and_then(|p| p.get(page_idx)) {
-            Some(Page::Sealed(sp)) => Ok(sp.clone()),
+            Some(Page::Sealed(sp)) => Ok(Arc::clone(sp)),
             Some(_) => Err(Error::KvCache(format!(
                 "page {page_idx} of seq {seq} layer {layer} is not sealed"
             ))),
@@ -718,16 +831,18 @@ impl PagedKvCache {
         }
     }
 
-    /// Replace a sealed page with a spill placeholder, dropping its encoded
-    /// bytes from memory. The caller must already have written the page to
-    /// the spill file under `handle.slot`.
+    /// Replace a sealed page with a spill placeholder, dropping the cache's
+    /// reference to its encoded bytes. The caller must already have written
+    /// the page to the spill file under `handle.slot`. Returns the displaced
+    /// `Arc`: its strong count tells the pool whether a live snapshot still
+    /// pins the bytes (count > 1) or the memory is actually freed.
     pub fn mark_spilled(
         &mut self,
         seq: u64,
         layer: usize,
         page_idx: usize,
         handle: SpilledHandle,
-    ) -> Result<()> {
+    ) -> Result<Arc<SealedPage>> {
         let page = self
             .pages
             .get_mut(&(seq, layer))
@@ -737,10 +852,10 @@ impl PagedKvCache {
             })?;
         match page {
             Page::Sealed(sp) => {
-                let encoded = sp.encoded_len() as u64;
+                let displaced = Arc::clone(sp);
+                self.resident -= displaced.encoded_len() as u64;
                 *page = Page::Spilled(handle);
-                self.resident -= encoded;
-                Ok(())
+                Ok(displaced)
             }
             _ => Err(Error::KvCache(format!(
                 "page {page_idx} of seq {seq} layer {layer} is not sealed"
@@ -767,7 +882,9 @@ impl PagedKvCache {
         match page {
             Page::Spilled(_) => {
                 let encoded = sealed.encoded_len() as u64;
-                *page = Page::Sealed(sealed);
+                // A fresh Arc on purpose: any stash entry for the page's
+                // previous life must stay independently reclaimable.
+                *page = Page::Sealed(Arc::new(sealed));
                 self.resident += encoded;
                 Ok(())
             }
@@ -775,6 +892,52 @@ impl PagedKvCache {
                 "page {page_idx} of seq {seq} layer {layer} is not spilled"
             ))),
         }
+    }
+
+    /// True when (sequence, layer) has a page list (i.e. at least one token
+    /// was ever appended to it).
+    pub fn has_list(&self, seq: u64, layer: usize) -> bool {
+        self.pages.contains_key(&(seq, layer))
+    }
+
+    /// Capture a self-contained [`LayerSnapshot`] of (sequence, layer):
+    /// hot tails are frozen by copy, sealed pages are shared by `Arc`, and
+    /// dictionary tables are resolved now so later reads decode without
+    /// borrowing this cache. Every page must be resident — the pool reloads
+    /// spilled pages first.
+    pub fn snapshot_list(&self, seq: u64, layer: usize) -> Result<LayerSnapshot> {
+        let pages = self
+            .pages
+            .get(&(seq, layer))
+            .ok_or_else(|| Error::KvCache(format!("no cache for seq {seq} layer {layer}")))?;
+        let mut views = Vec::with_capacity(pages.len());
+        let mut raw_len = 0usize;
+        for p in pages {
+            match p {
+                Page::Hot(h) => {
+                    raw_len += h.len();
+                    views.push(SnapPage::Hot(Arc::from(h.as_slice())));
+                }
+                Page::Sealed(sp) => {
+                    raw_len += sp.raw_len;
+                    let (huffman, rans) = match sp.dict_version {
+                        Some(v) => (
+                            self.dict.table_version_shared(layer, v),
+                            self.dict.rans_table_version_shared(layer, v),
+                        ),
+                        None => (None, None),
+                    };
+                    views.push(SnapPage::Sealed { page: Arc::clone(sp), huffman, rans });
+                }
+                Page::Spilled(h) => {
+                    return Err(Error::KvCache(format!(
+                        "page in spill slot {} is not resident; snapshot through SharedKvPool",
+                        h.slot
+                    )));
+                }
+            }
+        }
+        Ok(LayerSnapshot { format: self.config.format, pages: views, raw_len })
     }
 
     /// Spill placeholders in a (sequence, layer) page list, as
@@ -907,6 +1070,8 @@ fn seal_bytes(
 
 /// Decompress one sealed page straight into `dst` (exactly `raw_len`
 /// bytes) — the allocation-lean path behind [`PagedKvCache::read_into`].
+/// Resolves the page's dictionary versions against `dict`, then defers to
+/// [`unseal_resolved_into`].
 fn unseal_bytes_into(
     config: &KvCacheConfig,
     dict: &DictionaryManager,
@@ -914,43 +1079,50 @@ fn unseal_bytes_into(
     page: &SealedPage,
     dst: &mut [u8],
 ) -> Result<()> {
+    let (huffman, rans) = match page.dict_version {
+        Some(v) => (dict.table_version(layer, v), dict.rans_table_version(layer, v)),
+        None => (None, None),
+    };
+    unseal_resolved_into(config.format, page, huffman, rans, dst)
+}
+
+/// Decode core shared by the locked read path and [`LayerSnapshot`]: the
+/// dictionary tables are already resolved, so this borrows nothing but the
+/// page and the tables — snapshot reads run it with zero locks held.
+fn unseal_resolved_into(
+    format: FloatFormat,
+    page: &SealedPage,
+    huffman: Option<&CodeTable>,
+    rans: Option<&FreqTable>,
+    dst: &mut [u8],
+) -> Result<()> {
     let mut set = StreamSet { streams: Vec::new(), n_elements: page.n_elements, original_bytes: page.raw_len };
     for enc in &page.streams {
         let kind = crate::formats::StreamKind::from_wire_id(enc.kind_id)
             .ok_or_else(|| Error::KvCache("bad stream kind in sealed page".into()))?;
-        let version_for = |what: &str| {
-            page.dict_version
-                .ok_or_else(|| Error::KvCache(format!("sealed page missing {what} version")))
-        };
         let dicts = match enc.encoding {
-            StreamEncoding::HuffmanDict => {
-                let version = version_for("dict")?;
-                StreamDicts {
-                    huffman: Some(dict.table_version(layer, version).ok_or_else(|| {
-                        Error::KvCache(format!(
-                            "dictionary v{version} for layer {layer} missing"
-                        ))
-                    })?),
-                    rans: None,
-                }
-            }
-            StreamEncoding::RansDict => {
-                let version = version_for("rANS dict")?;
-                StreamDicts {
-                    huffman: None,
-                    rans: Some(dict.rans_table_version(layer, version).ok_or_else(|| {
-                        Error::KvCache(format!(
-                            "rANS dictionary v{version} for layer {layer} missing"
-                        ))
-                    })?),
-                }
-            }
+            StreamEncoding::HuffmanDict => StreamDicts {
+                huffman: Some(huffman.ok_or_else(|| {
+                    Error::KvCache(
+                        "sealed page needs a Huffman dictionary that is unavailable".into(),
+                    )
+                })?),
+                rans: None,
+            },
+            StreamEncoding::RansDict => StreamDicts {
+                huffman: None,
+                rans: Some(rans.ok_or_else(|| {
+                    Error::KvCache(
+                        "sealed page needs a rANS dictionary that is unavailable".into(),
+                    )
+                })?),
+            },
             _ => StreamDicts::default(),
         };
         let bytes = decode_stream_dicts(enc, dicts)?;
         set.streams.push(crate::formats::Stream::new(kind, bytes, enc.native_bits));
     }
-    merge_streams_into(config.format, &set, dst)
+    merge_streams_into(format, &set, dst)
 }
 
 #[cfg(test)]
@@ -1162,6 +1334,44 @@ mod tests {
         cache.restore_page(e.seq, e.layer, e.page_idx, back).unwrap();
         assert_eq!(cache.read(e.seq, e.layer).unwrap(), expect);
         assert_eq!(cache.resident_bytes(), before);
+    }
+
+    #[test]
+    fn layer_snapshot_is_point_in_time_and_self_contained() {
+        let config = bf16_config();
+        let mut cache = PagedKvCache::new(config.clone());
+        let mut expect = Vec::new();
+        for t in 0..40 {
+            let kv = token_bytes(&config, t);
+            cache.append_token(6, 0, &kv).unwrap();
+            expect.extend_from_slice(&kv);
+        }
+        let events = cache.seal_all_tracked().unwrap();
+        let snap = cache.snapshot_list(6, 0).unwrap();
+        assert_eq!(snap.len(), expect.len());
+        assert_eq!(snap.read().unwrap(), expect);
+        let clone = snap.clone();
+        // Later appends do not show up in the captured view...
+        cache.append_token(6, 0, &token_bytes(&config, 99)).unwrap();
+        assert_eq!(snap.read().unwrap(), expect);
+        // ...and neither does spilling a page out from under it: the
+        // snapshot's Arc keeps the sealed bytes alive and decodable.
+        let e = events[0];
+        let raw_page = config.page_tokens * 2 * config.bytes_per_token;
+        cache
+            .mark_spilled(
+                e.seq,
+                e.layer,
+                e.page_idx,
+                SpilledHandle { slot: 0, encoded_len: e.encoded_len, raw_len: raw_page },
+            )
+            .unwrap();
+        assert_eq!(clone.read().unwrap(), expect);
+        // A fresh snapshot of a list holding a spilled page is refused (the
+        // pool reloads before snapshotting), and buffer sizes are checked.
+        assert!(cache.snapshot_list(6, 0).is_err());
+        let mut wrong = vec![0u8; expect.len() + 1];
+        assert!(snap.read_into(&mut wrong).is_err());
     }
 
     #[test]

@@ -73,6 +73,13 @@ impl Gauge {
         }
     }
 
+    /// Set the value outright (for derived quantities like an epoch lag,
+    /// where deltas make no sense), updating the high-water mark.
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::SeqCst);
+        self.high.fetch_max(v, Ordering::SeqCst);
+    }
+
     /// Current value.
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::SeqCst)
@@ -108,6 +115,15 @@ mod tests {
         // Saturating underflow must not wrap.
         assert_eq!(g.sub(100), 0);
         assert_eq!(g.high_water(), 15);
+        // set() replaces the value and keeps feeding the high-water mark.
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        assert_eq!(g.high_water(), 15);
+        g.set(40);
+        assert_eq!(g.high_water(), 40);
+        g.set(0);
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.high_water(), 40);
     }
 
     #[test]

@@ -1,20 +1,24 @@
 //! Observability snapshot for the shared K/V pool.
 
+use crate::obs::{MetricValue, Snapshot};
 use crate::util::human_bytes;
 use std::fmt;
 
-/// A point-in-time snapshot of the pool's eviction / spill / budget state,
-/// taken lock-free from [`crate::obs::Counter`] / [`crate::obs::Gauge`]
-/// primitives (plus one brief ledger lock for the spill-file figures).
+/// A typed, point-in-time view of the pool's eviction / spill / snapshot /
+/// budget state, built from the pool's scoped [`crate::obs::Registry`]
+/// snapshot — the registry is the authoritative metrics surface; this
+/// struct only names its entries for programmatic assertions.
 ///
 /// The **high-water mark** is the budget-violation detector: the pool
-/// reserves headroom *before* every byte enters memory, so
+/// reserves headroom *before* every byte enters memory, and stash-pinned
+/// pages keep charging the budget until reclaim, so
 /// `high_water_bytes <= budget_bytes` proves the budget was never exceeded,
 /// even transiently — the property the budgeted-serving bench asserts.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PoolCounters {
     /// Sealed pages dropped from memory (spilled or re-dropped after a
-    /// reload; a page evicted twice counts twice).
+    /// reload; a page evicted twice counts twice). Includes pages retired
+    /// into the epoch stash.
     pub evictions: u64,
     /// Page records written to the spill file. At most one per page:
     /// sealed pages are immutable, so a reloaded page's disk copy stays
@@ -22,11 +26,23 @@ pub struct PoolCounters {
     pub spills: u64,
     /// Page records read back from the spill file.
     pub reloads: u64,
-    /// Bytes currently resident (hot raw + sealed encoded) across all
-    /// sequences.
+    /// [`KvSnapshot`](crate::pool::KvSnapshot) handles ever created.
+    pub snapshots: u64,
+    /// Lock-free reads served through snapshot handles.
+    pub snapshot_reads: u64,
+    /// Bytes currently resident (hot raw + sealed encoded + stash-pinned)
+    /// across all sequences.
     pub in_memory_bytes: u64,
     /// All-time maximum of `in_memory_bytes`.
     pub high_water_bytes: u64,
+    /// Bytes currently parked in the epoch stash: evicted pages live
+    /// snapshots still pin. A subset of `in_memory_bytes`.
+    pub stash_bytes: u64,
+    /// Stash entries reclaimed (pages whose last pinned reader released).
+    pub stash_reclaims: u64,
+    /// How far the oldest live snapshot pin trails the retirement clock
+    /// (0 with no readers).
+    pub epoch_lag: u64,
     /// Encoded bytes currently parked in the spill file.
     pub spilled_bytes: u64,
     /// Total bytes ever written to the spill file.
@@ -41,7 +57,51 @@ pub struct PoolCounters {
     pub budget_bytes: Option<u64>,
 }
 
+/// Counter total by name, 0 when absent.
+fn counter(snap: &Snapshot, name: &str) -> u64 {
+    match snap.get(name) {
+        Some(MetricValue::Counter(n)) => *n,
+        _ => 0,
+    }
+}
+
+/// Gauge (value, high-water) by name, (0, 0) when absent.
+fn gauge(snap: &Snapshot, name: &str) -> (u64, u64) {
+    match snap.get(name) {
+        Some(MetricValue::Gauge { value, high_water }) => (*value, *high_water),
+        _ => (0, 0),
+    }
+}
+
 impl PoolCounters {
+    /// Build the typed view from a pool registry snapshot. Metric names are
+    /// the ones [`SharedKvPool::registry`](crate::pool::SharedKvPool::registry)
+    /// documents; anything missing reads as zero.
+    pub fn from_snapshot(snap: &Snapshot, budget_bytes: Option<u64>) -> Self {
+        let (in_memory, high_water) = gauge(snap, "pool.in_memory_bytes");
+        let (stash, _) = gauge(snap, "pool.stash_bytes");
+        let (lag, _) = gauge(snap, "pool.epoch_lag");
+        let (spilled, _) = gauge(snap, "pool.spilled_bytes");
+        let (_, read_concurrency) = gauge(snap, "pool.spill_read_concurrency");
+        PoolCounters {
+            evictions: counter(snap, "pool.evictions_total"),
+            spills: counter(snap, "pool.spills_total"),
+            reloads: counter(snap, "pool.reloads_total"),
+            snapshots: counter(snap, "pool.snapshots_total"),
+            snapshot_reads: counter(snap, "pool.snapshot_reads_total"),
+            in_memory_bytes: in_memory,
+            high_water_bytes: high_water,
+            stash_bytes: stash,
+            stash_reclaims: counter(snap, "pool.stash_reclaimed_pages_total"),
+            epoch_lag: lag,
+            spilled_bytes: spilled,
+            spill_bytes_written: counter(snap, "pool.spill_bytes_written_total"),
+            spill_bytes_read: counter(snap, "pool.spill_bytes_read_total"),
+            spill_read_concurrency: read_concurrency,
+            budget_bytes,
+        }
+    }
+
     /// True iff the in-memory high-water mark stayed within the budget for
     /// the whole life of the pool (trivially true when unbounded).
     pub fn within_budget(&self) -> bool {
@@ -60,15 +120,19 @@ impl fmt::Display for PoolCounters {
         };
         write!(
             f,
-            "budget {} | in-memory {} (high water {}) | spilled {} | \
-             evictions {} spills {} reloads {}",
+            "budget {} | in-memory {} (high water {}, stash {}) | spilled {} | \
+             evictions {} spills {} reloads {} | snapshots {} reads {} lag {}",
             budget,
             human_bytes(self.in_memory_bytes),
             human_bytes(self.high_water_bytes),
+            human_bytes(self.stash_bytes),
             human_bytes(self.spilled_bytes),
             self.evictions,
             self.spills,
             self.reloads,
+            self.snapshots,
+            self.snapshot_reads,
+            self.epoch_lag,
         )
     }
 }
@@ -76,6 +140,7 @@ impl fmt::Display for PoolCounters {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::Registry;
 
     #[test]
     fn within_budget_logic() {
@@ -102,5 +167,41 @@ mod tests {
         assert!(s.contains("evictions 7"));
         assert!(s.contains("high water 4.00 KiB"));
         assert!(s.contains("8.00 KiB"));
+    }
+
+    #[test]
+    fn from_snapshot_maps_registry_names() {
+        let reg = Registry::new();
+        reg.counter("pool.evictions_total").add(3);
+        reg.counter("pool.snapshots_total").add(2);
+        reg.counter("pool.snapshot_reads_total").add(9);
+        reg.counter("pool.stash_reclaimed_pages_total").add(1);
+        reg.counter("pool.spill_bytes_written_total").add(700);
+        let g = reg.gauge("pool.in_memory_bytes");
+        g.add(500);
+        g.sub(100);
+        reg.gauge("pool.stash_bytes").add(64);
+        reg.gauge("pool.epoch_lag").set(2);
+        let sp = reg.gauge("pool.spill_read_concurrency");
+        sp.add(4);
+        sp.sub(4);
+        let c = PoolCounters::from_snapshot(&reg.snapshot(), Some(512));
+        assert_eq!(c.evictions, 3);
+        assert_eq!(c.snapshots, 2);
+        assert_eq!(c.snapshot_reads, 9);
+        assert_eq!(c.stash_reclaims, 1);
+        assert_eq!(c.spill_bytes_written, 700);
+        assert_eq!(c.in_memory_bytes, 400);
+        assert_eq!(c.high_water_bytes, 500);
+        assert_eq!(c.stash_bytes, 64);
+        assert_eq!(c.epoch_lag, 2);
+        // Concurrency reports the high-water mark, not the instant value.
+        assert_eq!(c.spill_read_concurrency, 4);
+        assert_eq!(c.budget_bytes, Some(512));
+        assert!(c.within_budget());
+        // Missing metrics read as zero rather than erroring.
+        let empty = PoolCounters::from_snapshot(&Registry::new().snapshot(), None);
+        assert_eq!(empty.reloads, 0);
+        assert_eq!(empty.spilled_bytes, 0);
     }
 }

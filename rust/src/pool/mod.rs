@@ -23,16 +23,40 @@
 //! evictor frees are *credited to that evictor* and settled against its
 //! reservation in a single locked step, so concurrent reservations can
 //! never race freed headroom away from the thread that did the evicting.
+//! A sealed page retired while a live snapshot still pins it is **not**
+//! credited: its bytes stay physically resident in the epoch stash (below)
+//! and keep charging the budget until the last pinned reader releases them,
+//! so the high-water proof stays honest under lock-free readers.
+//!
+//! # Reads: snapshots and epochs
+//!
+//! Reads go through [`SharedKvPool::snapshot`], which returns a
+//! [`KvSnapshot`] — a cheap, `Clone + Send`, point-in-time view of one
+//! sequence. Taking the snapshot holds the sequence lock once (reloading
+//! any spilled pages and capturing `Arc`s of the immutable sealed pages
+//! plus their dictionary tables); every read on the handle after that is
+//! **lock-free**: entropy decode touches only the captured `Arc`s.
+//!
+//! Eviction never blocks or invalidates a reader, RustDB-`pstore` style:
+//! each snapshot **pins** the pool epoch at creation. When the evictor
+//! retires a sealed page that a snapshot still references (`Arc` strong
+//! count > 1 under the victim's sequence lock), it bumps the epoch and
+//! parks the page in a time-stamped **stash** instead of freeing it. A
+//! stash entry is reclaimed — and only then credited back to the budget —
+//! once no live pin predates its retirement epoch (pin → retire →
+//! reclaim). `pool.epoch_lag` gauges how far the oldest pin trails the
+//! current epoch.
 //!
 //! # Concurrency
 //!
 //! Per-sequence caches live behind their own mutexes, so codec work
-//! (sealing on append, entropy decode on read) for different sequences runs
-//! genuinely in parallel; a single ledger mutex serializes the cheap parts
-//! (byte accounting, LRU ordering, spill-slot extents). Lock order is
-//! `sequence -> ledger`; eviction, which needs a *victim's* sequence lock
-//! while scanning under the ledger, only ever `try_lock`s it and skips busy
-//! victims, so no cycle — and no deadlock — is possible.
+//! (sealing on append, snapshot materialization) for different sequences
+//! runs genuinely in parallel; a single ledger mutex serializes the cheap
+//! parts (byte accounting, LRU ordering, spill-slot extents, the stash).
+//! Lock order is `sequence -> readers -> ledger` (a DAG); eviction, which
+//! needs a *victim's* sequence lock while scanning under the ledger, only
+//! ever `try_lock`s it and skips busy victims, so no cycle — and no
+//! deadlock — is possible.
 //!
 //! Spill-file **I/O runs outside the ledger mutex**: the ledger only hosts
 //! the extent allocator ([`SpillFile`]), which hands out positioned
@@ -64,10 +88,13 @@ pub use counters::PoolCounters;
 pub use spill::{SpillFile, SpillIo};
 
 use crate::error::{Error, Result};
-use crate::kvcache::{KvCacheConfig, KvCacheStats, PagedKvCache, SealedPage, SpilledHandle};
+use crate::kvcache::{
+    KvCacheConfig, KvCacheStats, LayerSnapshot, PagedKvCache, SealedPage, SpilledHandle,
+};
 use crate::obs::{Counter, Gauge, Registry};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 /// (sequence, layer, page index) — stable identity of a sealed page.
@@ -103,9 +130,24 @@ impl PoolConfig {
     }
 }
 
+/// A sealed page the evictor retired while a live [`KvSnapshot`] still
+/// pinned it. The bytes stay resident (and budget-charged) until every pin
+/// predating `retired_at` is released; then the entry is dropped and its
+/// bytes credited back.
+#[derive(Debug)]
+struct StashEntry {
+    /// Keeps the page allocation alive; never handed out again (restores
+    /// build a fresh `Arc`), only dropped at reclaim.
+    #[allow(dead_code)]
+    page: Arc<SealedPage>,
+    bytes: u64,
+    retired_at: u64,
+}
+
 /// Everything the cheap single mutex protects: the sequence registry, the
-/// LRU ordering, and the spill-slot allocator (extents + directory — the
-/// disk I/O itself happens outside, on the shared [`SpillIo`] handle).
+/// LRU ordering, the epoch stash, and the spill-slot allocator (extents +
+/// directory — the disk I/O itself happens outside, on the shared
+/// [`SpillIo`] handle).
 #[derive(Debug)]
 struct Ledger {
     seqs: BTreeMap<u64, Arc<Mutex<PagedKvCache>>>,
@@ -118,6 +160,8 @@ struct Ledger {
     slot_of: BTreeMap<PageKey, u64>,
     clock: u64,
     spill: SpillFile,
+    /// Pages retired while snapshot-pinned, awaiting epoch reclaim.
+    stash: Vec<StashEntry>,
 }
 
 impl Ledger {
@@ -149,26 +193,47 @@ pub struct SharedKvPool {
     training: Mutex<Vec<Vec<u8>>>,
     /// Scoped metric registry: each pool owns its own so the budget tests'
     /// exact per-pool assertions can never see another pool's traffic. The
-    /// handles below are fetched from it once at construction.
+    /// registry is **authoritative** — [`counters`](Self::counters) is a
+    /// typed view built from its snapshot. The handles below are fetched
+    /// from it once at construction.
     registry: Registry,
     in_memory: Arc<Gauge>,
     evictions: Arc<Counter>,
     spills: Arc<Counter>,
     reloads: Arc<Counter>,
+    snapshots: Arc<Counter>,
+    snapshot_reads: Arc<Counter>,
+    stash_bytes: Arc<Gauge>,
+    stash_reclaims: Arc<Counter>,
+    epoch_lag: Arc<Gauge>,
+    /// Monotone retirement clock: bumped every time a pinned page is
+    /// stashed. Snapshots pin the value current at creation.
+    epoch: AtomicU64,
+    /// Pinned epoch -> live snapshot count. Its own small mutex (lock order
+    /// `sequence -> readers -> ledger`).
+    readers: Mutex<BTreeMap<u64, usize>>,
+    /// Cached smallest pinned epoch (`u64::MAX` when no reader is live), so
+    /// retire/reclaim read it without the `readers` lock.
+    min_pinned: AtomicU64,
 }
 
 impl SharedKvPool {
     /// Create a pool.
     pub fn new(config: PoolConfig) -> Result<Arc<Self>> {
-        let spill = match &config.spill_path {
-            Some(p) => SpillFile::create(p)?,
-            None => SpillFile::temp()?,
-        };
         let registry = Registry::new();
+        let spill = match &config.spill_path {
+            Some(p) => SpillFile::create(p, &registry)?,
+            None => SpillFile::temp(&registry)?,
+        };
         let in_memory = registry.gauge("pool.in_memory_bytes");
         let evictions = registry.counter("pool.evictions_total");
         let spills = registry.counter("pool.spills_total");
         let reloads = registry.counter("pool.reloads_total");
+        let snapshots = registry.counter("pool.snapshots_total");
+        let snapshot_reads = registry.counter("pool.snapshot_reads_total");
+        let stash_bytes = registry.gauge("pool.stash_bytes");
+        let stash_reclaims = registry.counter("pool.stash_reclaimed_pages_total");
+        let epoch_lag = registry.gauge("pool.epoch_lag");
         Ok(Arc::new(SharedKvPool {
             config: config.cache,
             budget: config.budget_bytes,
@@ -179,6 +244,7 @@ impl SharedKvPool {
                 slot_of: BTreeMap::new(),
                 clock: 0,
                 spill,
+                stash: Vec::new(),
             }),
             training: Mutex::new(Vec::new()),
             registry,
@@ -186,14 +252,28 @@ impl SharedKvPool {
             evictions,
             spills,
             reloads,
+            snapshots,
+            snapshot_reads,
+            stash_bytes,
+            stash_reclaims,
+            epoch_lag,
+            epoch: AtomicU64::new(0),
+            readers: Mutex::new(BTreeMap::new()),
+            min_pinned: AtomicU64::new(u64::MAX),
         }))
     }
 
-    /// The pool's scoped metric registry (`pool.in_memory_bytes`,
-    /// `pool.evictions_total`, `pool.spills_total`, `pool.reloads_total`).
-    /// Snapshot it and [`merge`](crate::obs::Snapshot::merge) into the
-    /// global snapshot for export; [`counters`](Self::counters) remains the
-    /// typed façade over the same handles.
+    /// The pool's scoped metric registry — the one metrics surface. Budget
+    /// and LRU state (`pool.in_memory_bytes`, `pool.evictions_total`,
+    /// `pool.spills_total`, `pool.reloads_total`), spill traffic
+    /// (`pool.spilled_bytes`, `pool.spill_bytes_written_total`,
+    /// `pool.spill_bytes_read_total`, `pool.spill_read_concurrency`), and
+    /// the snapshot read path (`pool.snapshots_total`,
+    /// `pool.snapshot_reads_total`, `pool.stash_bytes`,
+    /// `pool.stash_reclaimed_pages_total`, `pool.epoch_lag`). Snapshot it
+    /// and [`merge`](crate::obs::Snapshot::merge) into the global snapshot
+    /// for export; [`counters`](Self::counters) is a typed view over the
+    /// same snapshot.
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
@@ -265,7 +345,7 @@ impl SharedKvPool {
         // Reserve headroom before the bytes enter memory. We do not hold the
         // sequence lock yet, so eviction may even pick this sequence's own
         // cold pages.
-        self.reserve_headroom(need, None, None);
+        self.reserve_headroom(need, None);
         let mut cache = arc.lock().unwrap();
         let before = cache.resident_bytes();
         let sealed = cache.append_token_tracked(seq, layer, kv_bytes);
@@ -282,35 +362,121 @@ impl SharedKvPool {
         }
     }
 
-    /// Read the full K/V byte stream for (sequence, layer) bit-exactly,
-    /// reloading (and CRC-verifying) any spilled pages first. The pages of
-    /// the list being read are excluded from eviction for the duration, so
-    /// the read always completes in one pass.
-    pub fn read(&self, seq: u64, layer: usize) -> Result<Vec<u8>> {
+    /// Capture a pinned, point-in-time [`KvSnapshot`] of every layer of
+    /// `seq` — **the** read entry point. Holds the sequence lock once:
+    /// spilled pages are reloaded (CRC-verified), sealed pages and their
+    /// dictionary tables are captured as `Arc`s, and the pool epoch is
+    /// pinned. Every read on the returned handle is then lock-free and
+    /// bit-exact as of this moment, no matter what eviction, spilling, or
+    /// further appends do to the sequence afterwards.
+    pub fn snapshot(self: &Arc<Self>, seq: u64) -> Result<KvSnapshot> {
         let arc = self.seq_cache(seq)?;
         let mut cache = arc.lock().unwrap();
-        self.reload_spilled(seq, layer, &mut cache)?;
-        // Entropy decode outside the ledger lock: reads of different
-        // sequences decompress in parallel.
-        cache.read(seq, layer)
+        // Pin before materializing: a page this snapshot has already
+        // captured can then never be reclaimed out from under it, even if
+        // reloading a later layer retires it into the stash.
+        let epoch = self.pin_epoch();
+        let built = (|| -> Result<Vec<Option<LayerSnapshot>>> {
+            let mut layers = Vec::with_capacity(self.config.n_layers);
+            for layer in 0..self.config.n_layers {
+                if !cache.has_list(seq, layer) {
+                    layers.push(None);
+                    continue;
+                }
+                self.reload_spilled(seq, layer, &mut cache)?;
+                layers.push(Some(cache.snapshot_list(seq, layer)?));
+            }
+            Ok(layers)
+        })();
+        drop(cache);
+        match built {
+            Ok(layers) => {
+                self.snapshots.incr();
+                Ok(KvSnapshot {
+                    inner: Arc::new(SnapshotInner {
+                        pool: Arc::clone(self),
+                        seq,
+                        epoch,
+                        layers,
+                        reads: Arc::clone(&self.snapshot_reads),
+                    }),
+                })
+            }
+            Err(e) => {
+                self.unpin_epoch(epoch);
+                Err(e)
+            }
+        }
     }
 
-    /// Zero-copy read: like [`read`](Self::read) but decodes into `out`
-    /// (exactly [`read_len`](Self::read_len) bytes), so steady-state
-    /// decode loops reuse one buffer instead of allocating per read.
-    pub fn read_into(&self, seq: u64, layer: usize, out: &mut [u8]) -> Result<usize> {
-        let arc = self.seq_cache(seq)?;
-        let mut cache = arc.lock().unwrap();
-        self.reload_spilled(seq, layer, &mut cache)?;
-        cache.read_into(seq, layer, out)
+    /// Pin the current epoch for a new snapshot: stash entries retired at
+    /// any later epoch stay alive until this pin is released.
+    fn pin_epoch(&self) -> u64 {
+        let mut readers = self.readers.lock().unwrap();
+        let e = self.epoch.load(Ordering::SeqCst);
+        *readers.entry(e).or_insert(0) += 1;
+        let min = *readers.keys().next().expect("just inserted");
+        self.min_pinned.store(min, Ordering::SeqCst);
+        drop(readers);
+        self.update_epoch_lag();
+        e
     }
 
-    /// Logical byte length of the (sequence, layer) stream — the buffer
-    /// size [`read_into`](Self::read_into) requires.
-    pub fn read_len(&self, seq: u64, layer: usize) -> Result<usize> {
-        let arc = self.seq_cache(seq)?;
-        let guard = arc.lock().unwrap();
-        guard.read_len(seq, layer)
+    /// Release a snapshot's pin and reclaim whatever the stash no longer
+    /// needs to keep alive.
+    fn unpin_epoch(&self, epoch: u64) {
+        let mut readers = self.readers.lock().unwrap();
+        if let Some(n) = readers.get_mut(&epoch) {
+            *n -= 1;
+            if *n == 0 {
+                readers.remove(&epoch);
+            }
+        }
+        let min = readers.keys().next().copied().unwrap_or(u64::MAX);
+        self.min_pinned.store(min, Ordering::SeqCst);
+        drop(readers);
+        self.update_epoch_lag();
+        let mut led = self.ledger.lock().unwrap();
+        self.reclaim_stash(&mut led);
+    }
+
+    /// `pool.epoch_lag`: how far the oldest live pin trails the retirement
+    /// clock (0 with no readers) — a growing lag means some snapshot is
+    /// holding retired pages, and their bytes, alive.
+    fn update_epoch_lag(&self) {
+        let min = self.min_pinned.load(Ordering::SeqCst);
+        let lag = if min == u64::MAX {
+            0
+        } else {
+            self.epoch.load(Ordering::SeqCst).saturating_sub(min)
+        };
+        self.epoch_lag.set(lag);
+    }
+
+    /// Drop every stash entry no live pin can still observe
+    /// (`retired_at <= min_pinned`), crediting its bytes back to the
+    /// budget. Called under the ledger lock.
+    fn reclaim_stash(&self, led: &mut Ledger) {
+        if led.stash.is_empty() {
+            return;
+        }
+        let min = self.min_pinned.load(Ordering::SeqCst);
+        let mut freed = 0u64;
+        let mut pages = 0u64;
+        led.stash.retain(|e| {
+            if e.retired_at <= min {
+                freed += e.bytes;
+                pages += 1;
+                false
+            } else {
+                true
+            }
+        });
+        if pages > 0 {
+            self.in_memory.sub(freed);
+            self.stash_bytes.sub(freed);
+            self.stash_reclaims.add(pages);
+        }
     }
 
     /// Reload every spilled page of a (sequence, layer) list and mark the
@@ -318,9 +484,11 @@ impl SharedKvPool {
     fn reload_spilled(&self, seq: u64, layer: usize, cache: &mut PagedKvCache) -> Result<()> {
         for (idx, handle) in cache.spilled_pages(seq, layer) {
             let need = handle.encoded_len as u64;
-            // Make headroom (evicting if the budget demands it; this list's
-            // pages are pinned) and take the reservation atomically.
-            self.reserve_headroom(need, Some((seq, &mut *cache)), Some((seq, layer)));
+            // Make headroom (evicting if the budget demands it; the whole
+            // sequence being materialized is pinned — a snapshot needs all
+            // its layers resident at once) and take the reservation
+            // atomically.
+            self.reserve_headroom(need, Some(seq));
             // Locate the extent under a brief ledger lock; the disk read and
             // CRC check run *outside* it, so reloads of different sequences
             // overlap on the spill file.
@@ -392,15 +560,31 @@ impl SharedKvPool {
         let cache = arc.lock().unwrap();
         let resident = cache.resident_bytes();
         let mut led = self.ledger.lock().unwrap();
-        self.in_memory.sub(resident);
         let keys: Vec<PageKey> = led
             .tick_of
             .range((seq, 0, 0)..=(seq, usize::MAX, usize::MAX))
             .map(|(k, _)| *k)
             .collect();
+        // Sealed pages a live snapshot still pins outlive the sequence:
+        // they move to the epoch stash — still physically resident, still
+        // budget-charged — instead of being credited now, exactly like a
+        // pinned page eviction. (Hot pages are never pinned: snapshots copy
+        // them at capture.)
+        let mut pinned: u64 = 0;
         for key in keys {
             led.untrack(&key);
+            let Ok(page) = cache.sealed_page(key.0, key.1, key.2) else { continue };
+            // Our handle + the cache's = 2; anything above is a snapshot.
+            if Arc::strong_count(&page) > 2 {
+                let retired_at = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+                let bytes = page.encoded_len() as u64;
+                pinned += bytes;
+                self.stash_bytes.add(bytes);
+                led.stash.push(StashEntry { page, bytes, retired_at });
+            }
         }
+        self.in_memory.sub(resident.saturating_sub(pinned));
+        self.update_epoch_lag();
         let slots: Vec<(PageKey, u64)> = led
             .slot_of
             .range((seq, 0, 0)..=(seq, usize::MAX, usize::MAX))
@@ -436,29 +620,11 @@ impl SharedKvPool {
         total
     }
 
-    /// Observability snapshot (evictions, spills, reloads, high-water).
+    /// Observability snapshot (evictions, spills, reloads, snapshots,
+    /// high-water, stash/epoch state) — a typed view over
+    /// [`registry`](Self::registry), which is the authoritative surface.
     pub fn counters(&self) -> PoolCounters {
-        let (spilled_bytes, written, read, concurrency) = {
-            let led = self.ledger.lock().unwrap();
-            (
-                led.spill.live_bytes(),
-                led.spill.bytes_written(),
-                led.spill.bytes_read(),
-                led.spill.io().max_concurrent_reads(),
-            )
-        };
-        PoolCounters {
-            evictions: self.evictions.get(),
-            spills: self.spills.get(),
-            reloads: self.reloads.get(),
-            in_memory_bytes: self.in_memory.get(),
-            high_water_bytes: self.in_memory.high_water(),
-            spilled_bytes,
-            spill_bytes_written: written,
-            spill_bytes_read: read,
-            spill_read_concurrency: concurrency,
-            budget_bytes: self.budget,
-        }
+        PoolCounters::from_snapshot(&self.registry.snapshot(), self.budget)
     }
 
     /// Apply the difference between the reserved headroom and what an
@@ -484,17 +650,12 @@ impl SharedKvPool {
     /// this call and settled against the reservation in one locked step, so
     /// concurrent reservations cannot steal the headroom it frees.
     ///
-    /// `current` lends the caller's already-locked cache so same-sequence
-    /// victims need no second lock; `exclude` pins the (sequence, layer)
-    /// list a read is materializing. Victims whose sequence lock is busy are
-    /// skipped (and re-marked hot), never waited on — see the module docs on
-    /// lock order.
-    fn reserve_headroom(
-        &self,
-        need: u64,
-        mut current: Option<(u64, &mut PagedKvCache)>,
-        exclude: Option<(u64, usize)>,
-    ) {
+    /// `exclude` pins every page of the sequence a snapshot is
+    /// materializing (the snapshot needs the whole sequence resident, and
+    /// its own lock is already held — a `try_lock` on it would self-skip
+    /// anyway). Victims whose sequence lock is busy are skipped (and
+    /// re-marked hot), never waited on — see the module docs on lock order.
+    fn reserve_headroom(&self, need: u64, exclude: Option<u64>) {
         let Some(budget) = self.budget else {
             self.in_memory.add(need);
             return;
@@ -504,6 +665,9 @@ impl SharedKvPool {
         let mut attempts: Option<usize> = None;
         loop {
             let mut led = self.ledger.lock().unwrap();
+            // Stash entries whose pins have since released are free bytes:
+            // harvest them before (and instead of) evicting more pages.
+            self.reclaim_stash(&mut led);
             let left = attempts.get_or_insert_with(|| led.lru.len() + 8);
             let fits = self.in_memory.get() + need <= budget.saturating_add(credit);
             if fits || *left == 0 {
@@ -522,27 +686,18 @@ impl SharedKvPool {
             };
             led.lru.remove(&tick);
             led.tick_of.remove(&key);
-            if let Some((ex_seq, ex_layer)) = exclude {
-                if key.0 == ex_seq && key.1 == ex_layer {
-                    led.touch(key); // pinned by the in-flight read
-                    continue;
-                }
+            if Some(key.0) == exclude {
+                led.touch(key); // pinned by the in-flight snapshot build
+                continue;
             }
-            match &mut current {
-                Some((cur_seq, cache)) if *cur_seq == key.0 => {
-                    credit += self.evict_victim(led, &mut **cache, key);
+            let Some(arc) = led.seqs.get(&key.0).cloned() else { continue };
+            match arc.try_lock() {
+                Ok(mut guard) => {
+                    credit += self.evict_victim(led, &mut guard, key);
                 }
-                _ => {
-                    let Some(arc) = led.seqs.get(&key.0).cloned() else { continue };
-                    match arc.try_lock() {
-                        Ok(mut guard) => {
-                            credit += self.evict_victim(led, &mut guard, key);
-                        }
-                        Err(_) => {
-                            // Busy victim: skip, re-mark hot, try a colder one.
-                            led.touch(key);
-                        }
-                    }
+                Err(_) => {
+                    // Busy victim: skip, re-mark hot, try a colder one.
+                    led.touch(key);
                 }
             }
         }
@@ -550,8 +705,10 @@ impl SharedKvPool {
 
     /// Move one sealed page of `cache` (whose sequence lock the caller
     /// holds) to the spill file, performing the disk write *outside* the
-    /// ledger. Returns the encoded bytes freed from memory (0 if the page
-    /// was not actually sealed+resident or the spill write failed).
+    /// ledger. Returns the encoded bytes freed from memory — 0 if the page
+    /// was not actually sealed+resident, the spill write failed, **or** a
+    /// live snapshot still pins the page: then the bytes move to the epoch
+    /// stash instead of being freed, and are credited only at reclaim.
     fn evict_victim(
         &self,
         led: MutexGuard<'_, Ledger>,
@@ -605,11 +762,110 @@ impl SharedKvPool {
             }
         };
         let handle = SpilledHandle { slot, encoded_len, raw_len };
-        if cache.mark_spilled(seq, layer, idx, handle).is_err() {
+        // Drop our own Arc before the pin check: after `mark_spilled` the
+        // only remaining strong counts are live snapshots' (new snapshots of
+        // this sequence are excluded by the sequence lock we hold).
+        drop(page);
+        let Ok(displaced) = cache.mark_spilled(seq, layer, idx, handle) else {
             return 0;
-        }
+        };
         self.evictions.incr();
-        encoded_len as u64
+        if Arc::strong_count(&displaced) > 1 {
+            // A live snapshot still reads these bytes: retire into the stash
+            // at a fresh epoch and credit nothing — the budget keeps
+            // charging them until the last pre-retirement pin releases.
+            let retired_at = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+            let bytes = encoded_len as u64;
+            self.stash_bytes.add(bytes);
+            self.ledger
+                .lock()
+                .unwrap()
+                .stash
+                .push(StashEntry { page: displaced, bytes, retired_at });
+            self.update_epoch_lag();
+            0
+        } else {
+            encoded_len as u64
+        }
+    }
+}
+
+/// Shared state of one snapshot; clones of a [`KvSnapshot`] share it, and
+/// the epoch pin is released exactly once, when the last clone drops.
+#[derive(Debug)]
+struct SnapshotInner {
+    pool: Arc<SharedKvPool>,
+    seq: u64,
+    epoch: u64,
+    /// One entry per layer; `None` where the sequence has no data.
+    layers: Vec<Option<LayerSnapshot>>,
+    reads: Arc<Counter>,
+}
+
+impl Drop for SnapshotInner {
+    fn drop(&mut self) {
+        self.pool.unpin_epoch(self.epoch);
+    }
+}
+
+/// A pinned, point-in-time, lock-free read handle over one sequence of a
+/// [`SharedKvPool`] — the result of [`SharedKvPool::snapshot`].
+///
+/// Cheap to `Clone` (an `Arc` bump) and `Send`, so the decode fan-out hands
+/// one clone to each worker. Reads ([`read_into`](Self::read_into),
+/// [`read`](Self::read)) entropy-decode straight from the captured
+/// immutable pages without taking any pool or sequence lock, and stay
+/// bit-exact no matter what eviction, spilling, or further appends happen
+/// after the snapshot was taken. Dropping the last clone releases the epoch
+/// pin, letting the pool reclaim any pages the evictor stashed meanwhile.
+#[derive(Clone, Debug)]
+pub struct KvSnapshot {
+    inner: Arc<SnapshotInner>,
+}
+
+impl KvSnapshot {
+    /// The sequence this snapshot captured.
+    pub fn seq(&self) -> u64 {
+        self.inner.seq
+    }
+
+    /// The pool epoch pinned at creation (diagnostics; compare with
+    /// `pool.epoch_lag`).
+    pub fn epoch(&self) -> u64 {
+        self.inner.epoch
+    }
+
+    fn layer(&self, layer: usize) -> Result<&LayerSnapshot> {
+        self.inner
+            .layers
+            .get(layer)
+            .and_then(|l| l.as_ref())
+            .ok_or_else(|| {
+                Error::Pool(format!("no cache for seq {} layer {layer}", self.inner.seq))
+            })
+    }
+
+    /// Logical byte length of the captured (sequence, layer) stream — the
+    /// buffer size [`read_into`](Self::read_into) requires.
+    pub fn len(&self, layer: usize) -> Result<usize> {
+        Ok(self.layer(layer)?.len())
+    }
+
+    /// Lock-free, bit-exact read of the captured layer stream into `out`
+    /// (exactly [`len`](Self::len) bytes). Returns the bytes written.
+    pub fn read_into(&self, layer: usize, out: &mut [u8]) -> Result<usize> {
+        self.reads_incr();
+        self.layer(layer)?.read_into(out)
+    }
+
+    /// Allocating variant of [`read_into`](Self::read_into).
+    pub fn read(&self, layer: usize) -> Result<Vec<u8>> {
+        self.reads_incr();
+        self.layer(layer)?.read()
+    }
+
+    fn reads_incr(&self) {
+        self.inner.reads.incr();
     }
 }
 
@@ -635,9 +891,11 @@ mod tests {
     fn budget_forces_spill_reads_bit_exact() {
         let config = bf16_config();
         // Hot working set: 3 seqs x 2 layers x 8-token pages x 256 B/token
-        // = 12 KiB. 64 KiB leaves room for one fully materialized read list
-        // (~32 KiB) while staying far below the ~240 KiB raw footprint.
-        let budget = 64 * 1024;
+        // = 12 KiB. A snapshot materializes *every* layer of its sequence
+        // at once (~64 KiB raw for one sequence here), so 96 KiB leaves
+        // room for one fully resident sequence while staying far below the
+        // ~240 KiB raw footprint.
+        let budget = 96 * 1024;
         let pool =
             SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
         let mut shadows: BTreeMap<(u64, usize), Vec<u8>> = BTreeMap::new();
@@ -650,15 +908,23 @@ mod tests {
                 }
             }
             if t % 40 == 39 {
-                for (&(seq, layer), shadow) in &shadows {
-                    assert_eq!(&pool.read(seq, layer).unwrap(), shadow, "t={t}");
+                for seq in 1..=3u64 {
+                    let snap = pool.snapshot(seq).unwrap();
+                    for layer in 0..2usize {
+                        assert_eq!(
+                            &snap.read(layer).unwrap(),
+                            &shadows[&(seq, layer)],
+                            "t={t} seq={seq} layer={layer}"
+                        );
+                    }
                 }
             }
         }
         let c = pool.counters();
         assert!(c.spills > 0, "budget never forced a spill: {c}");
-        assert!(c.reloads > 0, "reads never reloaded a spilled page: {c}");
+        assert!(c.reloads > 0, "snapshots never reloaded a spilled page: {c}");
         assert!(c.evictions >= c.spills);
+        assert!(c.snapshots > 0 && c.snapshot_reads > 0, "read path untracked: {c}");
         assert!(c.within_budget(), "budget violated: {c}");
         assert!(c.high_water_bytes <= budget);
         let stats = pool.stats();
@@ -667,8 +933,9 @@ mod tests {
         assert_eq!(pool.token_count(1, 0), 160);
         // The zero-copy path reloads spilled pages just the same.
         for (&(seq, layer), shadow) in &shadows {
-            let mut buf = vec![0u8; pool.read_len(seq, layer).unwrap()];
-            pool.read_into(seq, layer, &mut buf).unwrap();
+            let snap = pool.snapshot(seq).unwrap();
+            let mut buf = vec![0u8; snap.len(layer).unwrap()];
+            snap.read_into(layer, &mut buf).unwrap();
             assert_eq!(&buf, shadow, "read_into seq {seq} layer {layer}");
         }
         assert!(pool.counters().within_budget(), "{}", pool.counters());
@@ -684,17 +951,24 @@ mod tests {
             pool.append_token(5, 1, &kv).unwrap();
             shadow.extend_from_slice(&kv);
         }
-        assert_eq!(pool.read(5, 1).unwrap(), shadow);
+        let snap = pool.snapshot(5).unwrap();
+        assert_eq!(snap.seq(), 5);
+        assert_eq!(snap.read(1).unwrap(), shadow);
         // Zero-copy read path agrees bit for bit and validates its buffer.
-        let mut buf = vec![0u8; pool.read_len(5, 1).unwrap()];
-        pool.read_into(5, 1, &mut buf).unwrap();
+        let mut buf = vec![0u8; snap.len(1).unwrap()];
+        snap.read_into(1, &mut buf).unwrap();
         assert_eq!(buf, shadow);
         let mut short = vec![0u8; buf.len() - 1];
-        assert!(pool.read_into(5, 1, &mut short).is_err());
+        assert!(snap.read_into(1, &mut short).is_err());
+        // Layer 0 never saw data: the handle says so instead of panicking.
+        assert!(snap.read(0).is_err());
+        drop(snap);
         let c = pool.counters();
         assert_eq!(c.evictions, 0);
         assert_eq!(c.spills, 0);
         assert_eq!(c.reloads, 0);
+        assert_eq!(c.snapshots, 1);
+        assert_eq!(c.epoch_lag, 0);
         assert!(c.within_budget());
         assert_eq!(c.in_memory_bytes, pool.stats().resident_bytes);
     }
@@ -712,10 +986,18 @@ mod tests {
                     .unwrap();
             }
         }
+        // Exercise the read path so its metrics are non-trivially non-zero.
+        let handle = pool.snapshot(9).unwrap();
+        handle.read(0).unwrap();
+        handle.read(1).unwrap();
+        drop(handle);
         let c = pool.counters();
+        assert_eq!(c.snapshots, 1);
+        assert_eq!(c.snapshot_reads, 2);
         let snap = pool.registry().snapshot();
         // Exact equality is safe here: the registry is scoped per pool, so
-        // no other test's traffic can leak into it.
+        // no other test's traffic can leak into it — and `counters()` is by
+        // construction a view over this same registry.
         match snap.get("pool.evictions_total") {
             Some(&MetricValue::Counter(n)) => assert_eq!(n, c.evictions),
             other => panic!("unexpected {other:?}"),
@@ -728,11 +1010,23 @@ mod tests {
             Some(&MetricValue::Counter(n)) => assert_eq!(n, c.reloads),
             other => panic!("unexpected {other:?}"),
         }
+        match snap.get("pool.snapshots_total") {
+            Some(&MetricValue::Counter(n)) => assert_eq!(n, c.snapshots),
+            other => panic!("unexpected {other:?}"),
+        }
+        match snap.get("pool.snapshot_reads_total") {
+            Some(&MetricValue::Counter(n)) => assert_eq!(n, c.snapshot_reads),
+            other => panic!("unexpected {other:?}"),
+        }
         match snap.get("pool.in_memory_bytes") {
             Some(&MetricValue::Gauge { value, high_water }) => {
                 assert_eq!(value, c.in_memory_bytes);
                 assert_eq!(high_water, c.high_water_bytes);
             }
+            other => panic!("unexpected {other:?}"),
+        }
+        match snap.get("pool.stash_bytes") {
+            Some(&MetricValue::Gauge { value, .. }) => assert_eq!(value, c.stash_bytes),
             other => panic!("unexpected {other:?}"),
         }
     }
@@ -757,10 +1051,13 @@ mod tests {
         let after = pool.counters();
         assert!(after.in_memory_bytes < before);
         assert_eq!(pool.sequences(), vec![2]);
-        assert!(pool.read(1, 0).is_err());
+        assert!(pool.snapshot(1).is_err());
         assert_eq!(pool.token_count(1, 0), 0);
         // Seq 2 still reads back fine after its neighbour vanished.
-        assert_eq!(pool.read(2, 0).unwrap().len(), 80 * 2 * config.bytes_per_token);
+        assert_eq!(
+            pool.snapshot(2).unwrap().read(0).unwrap().len(),
+            80 * 2 * config.bytes_per_token
+        );
     }
 
     #[test]
@@ -798,7 +1095,7 @@ mod tests {
             shadow.extend_from_slice(&kv);
         }
         pool.seal_all().unwrap();
-        assert_eq!(pool.read(1, 0).unwrap(), shadow);
+        assert_eq!(pool.snapshot(1).unwrap().read(0).unwrap(), shadow);
         let stats = pool.stats();
         assert!(stats.exp_ratio() < 0.7, "trained dict exp ratio {}", stats.exp_ratio());
     }
@@ -810,7 +1107,9 @@ mod tests {
         // deserialize → decode unchanged.
         let mut config = bf16_config();
         config.codec = crate::codec::Codec::Rans;
-        let budget = 32 * 1024;
+        // Snapshots materialize the whole sequence (one layer here,
+        // ~30 KiB raw), so the budget leaves room for that plus hot pages.
+        let budget = 40 * 1024;
         let pool =
             SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
         let mut shadows: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
@@ -824,7 +1123,7 @@ mod tests {
         let c = pool.counters();
         assert!(c.spills > 0, "scenario must spill: {c}");
         for (&seq, shadow) in &shadows {
-            assert_eq!(&pool.read(seq, 0).unwrap(), shadow, "seq {seq}");
+            assert_eq!(&pool.snapshot(seq).unwrap().read(0).unwrap(), shadow, "seq {seq}");
         }
         assert!(pool.counters().reloads > 0);
         assert!(pool.counters().within_budget(), "{}", pool.counters());
@@ -873,7 +1172,8 @@ mod tests {
                     let barrier = &barrier;
                     scope.spawn(move || {
                         barrier.wait();
-                        assert_eq!(&pool.read(seq, 0).unwrap(), shadow, "seq {seq}");
+                        let snap = pool.snapshot(seq).unwrap();
+                        assert_eq!(&snap.read(0).unwrap(), shadow, "seq {seq}");
                     });
                 }
             });
@@ -893,5 +1193,51 @@ mod tests {
             cores < 2 || c.spill_read_concurrency >= 2,
             "spill reads never overlapped across {rounds} rounds on {cores} cores: {c}"
         );
+    }
+
+    #[test]
+    fn snapshot_survives_eviction_and_stash_reclaims() {
+        let config = bf16_config();
+        // Small enough that flooding a second sequence must evict the
+        // first one's pages out from under its live snapshot.
+        let budget = 32 * 1024;
+        let pool =
+            SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
+        let mut shadow = Vec::new();
+        for t in 0..64u64 {
+            let kv = token_bytes(&config, 3_000 + t);
+            pool.append_token(1, 0, &kv).unwrap();
+            shadow.extend_from_slice(&kv);
+        }
+        let snap = pool.snapshot(1).unwrap();
+        assert_eq!(snap.read(0).unwrap(), shadow);
+        // Flood: 240 tokens x 256 B = 60 KiB raw on a 32 KiB budget. The
+        // evictor must retire seq 1's pages, but the snapshot pins them —
+        // into the stash they go, uncredited.
+        for t in 0..240u64 {
+            pool.append_token(2, 0, &token_bytes(&config, 9_000 + t)).unwrap();
+        }
+        let mid = pool.counters();
+        assert!(mid.evictions > 0, "flood never evicted: {mid}");
+        assert!(mid.stash_bytes > 0, "pinned eviction never stashed: {mid}");
+        assert!(mid.epoch_lag > 0, "pin should trail the retirement clock: {mid}");
+        // The snapshot still reads the retired pages bit-exactly, lock-free.
+        assert_eq!(snap.read(0).unwrap(), shadow);
+        // A clone shares the pin: dropping the original frees nothing yet.
+        let clone = snap.clone();
+        drop(snap);
+        assert!(pool.counters().stash_bytes > 0, "{}", pool.counters());
+        assert_eq!(clone.read(0).unwrap(), shadow);
+        // Last handle gone -> pin released -> stash reclaimed and credited.
+        drop(clone);
+        let end = pool.counters();
+        assert_eq!(end.stash_bytes, 0, "stash not reclaimed: {end}");
+        assert!(end.stash_reclaims > 0, "{end}");
+        assert_eq!(end.epoch_lag, 0, "{end}");
+        assert!(end.within_budget(), "budget violated: {end}");
+        // The evicted pages went to disk as usual: a fresh snapshot reloads
+        // them and still agrees with the shadow.
+        assert_eq!(pool.snapshot(1).unwrap().read(0).unwrap(), shadow);
+        assert!(pool.counters().within_budget(), "{}", pool.counters());
     }
 }

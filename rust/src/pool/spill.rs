@@ -21,7 +21,7 @@
 //!   different sequences overlap instead of serializing on the lock.
 
 use crate::error::{Error, Result};
-use crate::obs::Gauge;
+use crate::obs::{Counter, Gauge, Registry};
 use crate::util::crc32::crc32;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
@@ -41,17 +41,19 @@ struct Slot {
 ///
 /// All methods take `&self`: positioned I/O has no cursor, so any number of
 /// threads may read and write disjoint extents concurrently. Traffic
-/// counters are atomics for the same reason.
+/// figures live in the owning pool's scoped registry
+/// (`pool.spill_bytes_written_total`, `pool.spill_bytes_read_total`,
+/// `pool.spill_read_concurrency`) so there is one metrics surface.
 #[derive(Debug)]
 pub struct SpillIo {
     file: File,
     path: PathBuf,
     remove_on_drop: bool,
-    bytes_written: AtomicU64,
-    bytes_read: AtomicU64,
+    bytes_written: Arc<Counter>,
+    bytes_read: Arc<Counter>,
     /// Concurrent `read_record` calls in flight; the high-water mark proves
     /// (in tests) that reloads genuinely overlap off the ledger mutex.
-    concurrent_reads: Gauge,
+    concurrent_reads: Arc<Gauge>,
     /// Serializes seek+read/write on targets without positioned I/O.
     #[cfg(not(unix))]
     cursor: std::sync::Mutex<()>,
@@ -73,7 +75,7 @@ impl SpillIo {
             f.seek(SeekFrom::Start(offset))?;
             f.write_all(buf)?;
         }
-        self.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.bytes_written.add(buf.len() as u64);
         Ok(())
     }
 
@@ -94,7 +96,7 @@ impl SpillIo {
         });
         self.concurrent_reads.sub(1);
         let buf = result?;
-        self.bytes_read.fetch_add(len, Ordering::Relaxed);
+        self.bytes_read.add(len);
         Ok(buf)
     }
 
@@ -141,6 +143,9 @@ impl Drop for SpillIo {
 #[derive(Debug)]
 pub struct SpillFile {
     io: Arc<SpillIo>,
+    /// Bytes currently parked in live slots (`pool.spilled_bytes` in the
+    /// owning registry), maintained at reserve/free.
+    live: Arc<Gauge>,
     /// File length high-water mark (append offset).
     end: u64,
     slots: BTreeMap<u64, Slot>,
@@ -153,22 +158,23 @@ pub struct SpillFile {
 }
 
 impl SpillFile {
-    /// Create (or truncate) a spill file at `path`.
-    pub fn create(path: &Path) -> Result<Self> {
-        Self::create_inner(path, false)
+    /// Create (or truncate) a spill file at `path`, reporting its traffic
+    /// into `registry` (the owning pool's scoped registry).
+    pub fn create(path: &Path, registry: &Registry) -> Result<Self> {
+        Self::create_inner(path, false, registry)
     }
 
     /// Create a uniquely named spill file in the OS temp directory, removed
     /// when the last handle drops.
-    pub fn temp() -> Result<Self> {
+    pub fn temp(registry: &Registry) -> Result<Self> {
         static SEQ: AtomicU64 = AtomicU64::new(0);
         let n = SEQ.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir()
             .join(format!("zipnn-lp-pool-{}-{}.spill", std::process::id(), n));
-        Self::create_inner(&path, true)
+        Self::create_inner(&path, true, registry)
     }
 
-    fn create_inner(path: &Path, remove_on_drop: bool) -> Result<Self> {
+    fn create_inner(path: &Path, remove_on_drop: bool, registry: &Registry) -> Result<Self> {
         let file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -180,12 +186,13 @@ impl SpillFile {
                 file,
                 path: path.to_path_buf(),
                 remove_on_drop,
-                bytes_written: AtomicU64::new(0),
-                bytes_read: AtomicU64::new(0),
-                concurrent_reads: Gauge::new(),
+                bytes_written: registry.counter("pool.spill_bytes_written_total"),
+                bytes_read: registry.counter("pool.spill_bytes_read_total"),
+                concurrent_reads: registry.gauge("pool.spill_read_concurrency"),
                 #[cfg(not(unix))]
                 cursor: std::sync::Mutex::new(()),
             }),
+            live: registry.gauge("pool.spilled_bytes"),
             end: 0,
             slots: BTreeMap::new(),
             free_extents: BTreeMap::new(),
@@ -228,6 +235,7 @@ impl SpillFile {
         let slot = self.next_slot;
         self.next_slot += 1;
         self.slots.insert(slot, Slot { offset, len: need, crc });
+        self.live.add(need);
         Ok((slot, offset, self.io.clone()))
     }
 
@@ -266,6 +274,7 @@ impl SpillFile {
     /// bound). Unknown slots are ignored (freeing is idempotent).
     pub fn free(&mut self, slot: u64) {
         if let Some(s) = self.slots.remove(&slot) {
+            self.live.sub(s.len);
             self.insert_free(s.offset, s.len);
         }
     }
@@ -324,12 +333,12 @@ impl SpillFile {
 
     /// Total record bytes ever written (spill write traffic).
     pub fn bytes_written(&self) -> u64 {
-        self.io.bytes_written.load(Ordering::Relaxed)
+        self.io.bytes_written.get()
     }
 
     /// Total record bytes ever read back (reload traffic).
     pub fn bytes_read(&self) -> u64 {
-        self.io.bytes_read.load(Ordering::Relaxed)
+        self.io.bytes_read.get()
     }
 }
 
@@ -339,7 +348,7 @@ mod tests {
 
     #[test]
     fn write_read_roundtrip_with_crc() {
-        let mut f = SpillFile::temp().unwrap();
+        let mut f = SpillFile::temp(&Registry::new()).unwrap();
         let a: Vec<u8> = (0..300u32).map(|i| (i * 7) as u8).collect();
         let b: Vec<u8> = (0..100u32).map(|i| (i * 13 + 1) as u8).collect();
         let sa = f.write(&a).unwrap();
@@ -357,7 +366,7 @@ mod tests {
 
     #[test]
     fn freed_extents_reused_and_coalesced() {
-        let mut f = SpillFile::temp().unwrap();
+        let mut f = SpillFile::temp(&Registry::new()).unwrap();
         let a = f.write(&[1u8; 300]).unwrap(); // 0..300
         let b = f.write(&[2u8; 300]).unwrap(); // 300..600
         let c = f.write(&[3u8; 300]).unwrap(); // 600..900
@@ -390,7 +399,7 @@ mod tests {
     #[test]
     fn reserve_then_positioned_write_out_of_band() {
         // The pool's eviction path: reserve under a lock, write without it.
-        let mut f = SpillFile::temp().unwrap();
+        let mut f = SpillFile::temp(&Registry::new()).unwrap();
         let rec: Vec<u8> = (0..500u32).map(|i| (i * 3) as u8).collect();
         let (slot, offset, io) = f.reserve(rec.len(), crc32(&rec)).unwrap();
         // Nothing written yet, but the slot is addressable.
@@ -408,7 +417,7 @@ mod tests {
 
     #[test]
     fn unknown_slot_rejected() {
-        let mut f = SpillFile::temp().unwrap();
+        let mut f = SpillFile::temp(&Registry::new()).unwrap();
         assert!(f.read(42).is_err());
         assert!(f.write(&[]).is_err());
     }
@@ -417,7 +426,7 @@ mod tests {
     fn temp_file_removed_on_drop() {
         let path;
         {
-            let mut f = SpillFile::temp().unwrap();
+            let mut f = SpillFile::temp(&Registry::new()).unwrap();
             f.write(&[1, 2, 3]).unwrap();
             path = f.path().to_path_buf();
             assert!(path.exists());

@@ -3,21 +3,28 @@
 //!
 //! The central invariant: against a **shadow uncompressed cache** (a plain
 //! `Vec<u8>` per (sequence, layer)), every pool read is bit-exact — across
-//! random interleavings of appends, reads, and sequence evictions, for BF16
-//! and FP8 E4M3, under a budget small enough that pages constantly spill to
-//! disk and reload. Also checked: the in-memory high-water mark respects
-//! the budget (single-threaded schedules have no busy-victim corner), and
-//! concurrent appenders/readers on a shared pool stay bit-exact.
+//! random interleavings of appends, snapshot reads, and sequence evictions,
+//! for BF16 and FP8 E4M3, under a budget small enough that pages constantly
+//! spill to disk and reload. Readers hold live [`KvSnapshot`]s across the
+//! churn: a held snapshot must keep reading its *capture-time* bytes
+//! bit-exactly no matter how many seal/evict/spill-reload cycles (or even
+//! whole-sequence evictions) happen after it was taken, and the in-memory
+//! high-water mark must still respect the budget — the evictor's credited
+//! headroom has to account for stash-pinned pages.
 
 use std::collections::BTreeMap;
 use zipnn_lp::formats::FloatFormat;
 use zipnn_lp::kvcache::KvCacheConfig;
-use zipnn_lp::pool::{PoolConfig, SharedKvPool};
+use zipnn_lp::pool::{KvSnapshot, PoolConfig, SharedKvPool};
 use zipnn_lp::synthetic;
 use zipnn_lp::util::rng::Rng;
 
 const N_LAYERS: usize = 2;
 const LIVE_SEQS: usize = 5;
+/// Live pinned snapshots held across operations at any one time. Each can
+/// pin its whole sequence's encoded pages into the stash, so the budget
+/// headroom math below must cover `MAX_HELD` stashed sequences.
+const MAX_HELD: usize = 2;
 
 fn config_for(format: FloatFormat) -> KvCacheConfig {
     let elem = FloatFormat::byte_width(format).unwrap_or(1);
@@ -30,13 +37,46 @@ fn token_bytes(config: &KvCacheConfig, seed: u64) -> Vec<u8> {
     synthetic::kv_token_bytes(config, seed)
 }
 
-/// Randomly interleave appends / reads / sequence evictions across ≥ 4 live
-/// sequences, asserting every read against the shadow cache.
+/// A pinned snapshot plus the shadow bytes at its capture instant: later
+/// appends/evictions must never leak into its reads.
+struct Held {
+    snap: KvSnapshot,
+    frozen: BTreeMap<usize, Vec<u8>>,
+}
+
+/// Every layer of a snapshot must match the given per-layer shadows, and
+/// absent layers must error rather than fabricate bytes.
+fn assert_snapshot_matches(snap: &KvSnapshot, shadows: &BTreeMap<usize, Vec<u8>>, ctx: &str) {
+    for layer in 0..N_LAYERS {
+        match shadows.get(&layer) {
+            Some(shadow) => {
+                assert_eq!(&snap.read(layer).unwrap(), shadow, "{ctx} layer {layer}");
+            }
+            None => assert!(snap.read(layer).is_err(), "{ctx} layer {layer}"),
+        }
+    }
+}
+
+/// Per-layer shadow slices for one sequence, cloned (the capture-time
+/// freeze a `Held` snapshot is checked against).
+fn freeze_seq(
+    shadows: &BTreeMap<(u64, usize), Vec<u8>>,
+    seq: u64,
+) -> BTreeMap<usize, Vec<u8>> {
+    (0..N_LAYERS)
+        .filter_map(|layer| shadows.get(&(seq, layer)).map(|s| (layer, s.clone())))
+        .collect()
+}
+
+/// Randomly interleave appends / snapshot reads / held-snapshot churn /
+/// sequence evictions across ≥ 4 live sequences, asserting every read
+/// against the shadow cache.
 fn run_interleaved(format: FloatFormat, seed: u64) {
     let config = config_for(format);
-    // Must cover the hot pages (10 lists x <= 2 KiB) plus one materialized
-    // read list, while staying far below the ~hundreds-of-KiB raw total so
-    // eviction runs constantly.
+    // Must cover the hot pages (10 lists x <= 2 KiB), one fully
+    // materialized sequence (snapshots reside whole sequences), and up to
+    // MAX_HELD stash-pinned sequences, while staying far enough below the
+    // raw total that eviction runs constantly.
     let budget = 128 * 1024;
     let pool =
         SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
@@ -44,25 +84,55 @@ fn run_interleaved(format: FloatFormat, seed: u64) {
     let mut shadows: BTreeMap<(u64, usize), Vec<u8>> = BTreeMap::new();
     let mut live: Vec<u64> = (1..=LIVE_SEQS as u64).collect();
     let mut next_seq = LIVE_SEQS as u64 + 1;
+    let mut held: Vec<Held> = Vec::new();
     let mut reads = 0u64;
+    let mut held_checks = 0u64;
     for step in 0..3000u64 {
         let op = rng.below(100);
         let seq = live[rng.below(live.len() as u64) as usize];
         let layer = rng.below(N_LAYERS as u64) as usize;
-        if op < 62 {
+        if op < 60 {
             let kv = token_bytes(&config, step * 7919 + seq * 131 + layer as u64);
             pool.append_token(seq, layer, &kv).unwrap();
             shadows.entry((seq, layer)).or_default().extend_from_slice(&kv);
-        } else if op < 97 {
-            match shadows.get(&(seq, layer)) {
-                Some(shadow) => {
-                    assert_eq!(&pool.read(seq, layer).unwrap(), shadow, "step {step}");
+        } else if op < 81 {
+            // Fresh snapshot: point-in-time view of the *current* shadows.
+            match pool.snapshot(seq) {
+                Ok(snap) => {
+                    assert_snapshot_matches(&snap, &freeze_seq(&shadows, seq), "fresh");
                     reads += 1;
                 }
-                None => assert!(pool.read(seq, layer).is_err(), "step {step}"),
+                Err(_) => {
+                    let has_data =
+                        (0..N_LAYERS).any(|l| shadows.contains_key(&(seq, l)));
+                    assert!(!has_data, "step {step}: snapshot refused a live seq {seq}");
+                }
+            }
+        } else if op < 88 {
+            // Pin a snapshot and hold it across future churn (drop-verify
+            // the oldest first if the ring is full).
+            if held.len() == MAX_HELD {
+                let old = held.remove(0);
+                assert_snapshot_matches(&old.snap, &old.frozen, "retiring held");
+                held_checks += 1;
+            }
+            if let Ok(snap) = pool.snapshot(seq) {
+                held.push(Held { snap, frozen: freeze_seq(&shadows, seq) });
+            }
+        } else if op < 97 {
+            // Re-verify a random held snapshot mid-flight: appends, spills,
+            // reloads, and evictions since capture must not show through.
+            // Its clone must agree and share the pin.
+            if !held.is_empty() {
+                let h = &held[rng.below(held.len() as u64) as usize];
+                let dup = h.snap.clone();
+                assert_snapshot_matches(&h.snap, &h.frozen, "held");
+                assert_snapshot_matches(&dup, &h.frozen, "held clone");
+                held_checks += 1;
             }
         } else {
-            // Retire one sequence, admit a fresh one (session churn).
+            // Retire one sequence, admit a fresh one (session churn). Held
+            // snapshots of the retired sequence stay readable.
             pool.evict_sequence(seq);
             shadows.retain(|&(s, _), _| s != seq);
             live.retain(|&s| s != seq);
@@ -70,18 +140,29 @@ fn run_interleaved(format: FloatFormat, seed: u64) {
             next_seq += 1;
         }
     }
-    // Final sweep: everything still live must read back bit-exactly.
-    for (&(seq, layer), shadow) in &shadows {
-        assert_eq!(&pool.read(seq, layer).unwrap(), shadow, "final seq {seq}");
+    // Final sweep: everything still live must read back bit-exactly, and
+    // every held snapshot must still serve its capture-time bytes.
+    for seq in shadows.keys().map(|&(s, _)| s).collect::<std::collections::BTreeSet<_>>() {
+        let snap = pool.snapshot(seq).unwrap();
+        assert_snapshot_matches(&snap, &freeze_seq(&shadows, seq), "final");
+    }
+    for h in held.drain(..) {
+        assert_snapshot_matches(&h.snap, &h.frozen, "final held");
+        held_checks += 1;
     }
     let c = pool.counters();
     assert!(reads > 100, "schedule degenerate: only {reads} reads");
+    assert!(held_checks > 20, "schedule degenerate: only {held_checks} held checks");
     assert!(c.spills > 0, "budget never forced a spill: {c}");
     assert!(c.reloads > 0, "no spill → reload round trip exercised: {c}");
     assert!(
         c.within_budget(),
-        "single-threaded schedule must never violate the budget: {c}"
+        "schedule must never violate the budget, stash included: {c}"
     );
+    // All pins are gone: the stash must be fully reclaimed and the epoch
+    // clock no longer trailed.
+    assert_eq!(c.stash_bytes, 0, "stash never drained: {c}");
+    assert_eq!(c.epoch_lag, 0, "epoch lag with no live readers: {c}");
 }
 
 #[test]
@@ -96,11 +177,15 @@ fn prop_interleaved_ops_bit_exact_fp8_e4m3() {
 
 #[test]
 fn prop_concurrent_sequences_bit_exact() {
-    // 8 sequences on 4 threads sharing one budgeted pool: every thread
+    // 8 big sequences on 4 threads sharing one budgeted pool: every thread
     // checks its own sequences against private shadows while eviction
-    // steals pages across threads.
+    // steals pages across threads. Each thread additionally pins a small
+    // dedicated sequence via a snapshot held for the whole run — its pages
+    // are prime eviction victims (coldest in the LRU), so the evictor must
+    // route them through the stash, keep them budget-charged, and the
+    // held snapshot must stay bit-exact to the end.
     let config = config_for(FloatFormat::Bf16);
-    let budget = 160 * 1024;
+    let budget = 256 * 1024;
     let pool =
         SharedKvPool::new(PoolConfig::new(config.clone()).with_budget(budget)).unwrap();
     let n_threads = 4u64;
@@ -112,6 +197,19 @@ fn prop_concurrent_sequences_bit_exact() {
             scope.spawn(move || {
                 let seqs: Vec<u64> =
                     (0..per_thread).map(|i| 1 + w * per_thread + i).collect();
+                // The small pinned sequence: 16 tokens (~4 KiB raw) on one
+                // layer, snapshotted before the churn starts.
+                let pin_seq = 100 + w;
+                let mut pin_shadow: BTreeMap<(u64, usize), Vec<u8>> = BTreeMap::new();
+                for t in 0..16u64 {
+                    let kv = token_bytes(config, pin_seq * 999_983 + t);
+                    pool.append_token(pin_seq, 0, &kv).unwrap();
+                    pin_shadow.entry((pin_seq, 0)).or_default().extend_from_slice(&kv);
+                }
+                let held = Held {
+                    snap: pool.snapshot(pin_seq).unwrap(),
+                    frozen: freeze_seq(&pin_shadow, pin_seq),
+                };
                 let mut shadows: BTreeMap<(u64, usize), Vec<u8>> = BTreeMap::new();
                 for t in 0..220u64 {
                     for &seq in &seqs {
@@ -123,17 +221,23 @@ fn prop_concurrent_sequences_bit_exact() {
                         }
                     }
                     if t % 50 == 49 {
-                        for (&(seq, layer), shadow) in &shadows {
-                            assert_eq!(
-                                &pool.read(seq, layer).unwrap(),
-                                shadow,
-                                "seq {seq} layer {layer} t {t}"
+                        for &seq in &seqs {
+                            let snap = pool.snapshot(seq).unwrap();
+                            assert_snapshot_matches(
+                                &snap,
+                                &freeze_seq(&shadows, seq),
+                                "round",
                             );
                         }
+                        // The pinned snapshot must read its capture-time
+                        // bytes no matter what the churn evicted meanwhile.
+                        assert_snapshot_matches(&held.snap, &held.frozen, "held round");
                     }
                 }
-                for (&(seq, layer), shadow) in &shadows {
-                    assert_eq!(&pool.read(seq, layer).unwrap(), shadow);
+                assert_snapshot_matches(&held.snap, &held.frozen, "held final");
+                for &seq in &seqs {
+                    let snap = pool.snapshot(seq).unwrap();
+                    assert_snapshot_matches(&snap, &freeze_seq(&shadows, seq), "final");
                 }
             });
         }
@@ -141,6 +245,8 @@ fn prop_concurrent_sequences_bit_exact() {
     let c = pool.counters();
     assert!(c.spills > 0, "concurrent scenario never spilled: {c}");
     assert!(c.reloads > 0, "concurrent scenario never reloaded: {c}");
-    // 8 seqs x 2 layers x 220 tokens x 256 B = 880 KiB raw >> 160 KiB.
+    assert!(c.within_budget(), "budget violated under concurrent readers: {c}");
+    assert_eq!(c.stash_bytes, 0, "stash never drained: {c}");
+    // 8 seqs x 2 layers x 220 tokens x 256 B = 880 KiB raw >> 256 KiB.
     assert!(pool.stats().raw_bytes > budget);
 }
